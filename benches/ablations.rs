@@ -1,0 +1,125 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Copy vs SaveRevert** (paper §4.1's trade-off) on three learners
+//!    with different undo cost profiles: PEGASOS (dense model → snapshot),
+//!    perceptron (sparse mistake log), online k-means (per-point O(d) log
+//!    vs O(K·d) copy).
+//! 2. **Parallel TreeCV fork depth** — speedup vs the sequential engine.
+//! 3. **Randomized vs fixed feeding order** — the constant-factor overhead
+//!    the paper quotes (≈2× for TreeCV, ≈1.5× for standard).
+//!
+//! Run: `cargo bench --bench ablations` (env `ABL_N` to resize).
+
+use treecv::benchkit::Bench;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::parallel::ParallelTreeCv;
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::{CvEngine, Strategy};
+use treecv::data::synth::{SyntheticBlobs, SyntheticCovertype};
+use treecv::learner::kmeans::OnlineKMeans;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::perceptron::Perceptron;
+
+fn main() {
+    let n: usize = std::env::var("ABL_N").ok().and_then(|v| v.parse().ok()).unwrap_or(65_536);
+    let k = 64;
+    let mut bench = Bench::default();
+
+    // --- 1. Copy vs SaveRevert ------------------------------------------
+    println!("== strategy ablation (k = {k}, n = {n}) ==");
+    let cover = SyntheticCovertype::new(n, 42).generate();
+    let folds = Folds::new(n, k, 7);
+
+    let pegasos = Pegasos::new(cover.d, 1e-5);
+    for (name, strat) in [("copy", Strategy::Copy), ("save_revert", Strategy::SaveRevert)] {
+        bench.run(&format!("pegasos/{name}"), || {
+            std::hint::black_box(
+                TreeCv::new(strat, Ordering::Fixed, 1).run(&pegasos, &cover, &folds),
+            );
+        });
+    }
+    let perceptron = Perceptron::new(cover.d);
+    for (name, strat) in [("copy", Strategy::Copy), ("save_revert", Strategy::SaveRevert)] {
+        bench.run(&format!("perceptron/{name}"), || {
+            std::hint::black_box(
+                TreeCv::new(strat, Ordering::Fixed, 1).run(&perceptron, &cover, &folds),
+            );
+        });
+    }
+    let blobs = SyntheticBlobs::new(n, 16, 8, 42).generate();
+    let kmeans = OnlineKMeans::new(16, 8);
+    for (name, strat) in [("copy", Strategy::Copy), ("save_revert", Strategy::SaveRevert)] {
+        bench.run(&format!("kmeans/{name}"), || {
+            std::hint::black_box(
+                TreeCv::new(strat, Ordering::Fixed, 1).run(&kmeans, &blobs, &folds),
+            );
+        });
+    }
+
+    // Copy-cost accounting (bytes snapshotted vs restores).
+    let copy_res = TreeCv::new(Strategy::Copy, Ordering::Fixed, 1).run(&kmeans, &blobs, &folds);
+    let sr_res =
+        TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 1).run(&kmeans, &blobs, &folds);
+    println!(
+        "kmeans copy: {} copies / {:.1} KB snapshotted; save_revert: {} restores / 0 snapshot bytes",
+        copy_res.ops.model_copies,
+        copy_res.ops.bytes_copied as f64 / 1e3,
+        sr_res.ops.model_restores
+    );
+
+    // --- 2. Parallel fork depth ------------------------------------------
+    println!("\n== parallel fork-depth ablation (pegasos, k = {k}) ==");
+    let seq = bench.run("parallel/depth0(seq)", || {
+        std::hint::black_box(
+            TreeCv::new(Strategy::Copy, Ordering::Fixed, 1).run(&pegasos, &cover, &folds),
+        );
+    });
+    let t_seq = seq.median();
+    for depth in [1usize, 2, 3, 4] {
+        let s = bench.run(&format!("parallel/depth{depth}"), || {
+            std::hint::black_box(
+                ParallelTreeCv::new(Ordering::Fixed, 1, depth).run(&pegasos, &cover, &folds),
+            );
+        });
+        println!("  depth {depth}: speedup {:.2}x", t_seq / s.median());
+    }
+
+    // --- 3. Randomized-order overhead ------------------------------------
+    println!("\n== ordering ablation (pegasos, k = {k}) ==");
+    let t_fixed = bench
+        .run("ordering/treecv-fixed", || {
+            std::hint::black_box(
+                TreeCv::new(Strategy::Copy, Ordering::Fixed, 1).run(&pegasos, &cover, &folds),
+            );
+        })
+        .median();
+    let t_rand = bench
+        .run("ordering/treecv-randomized", || {
+            std::hint::black_box(
+                TreeCv::new(Strategy::Copy, Ordering::Randomized, 1).run(&pegasos, &cover, &folds),
+            );
+        })
+        .median();
+    let s_fixed = bench
+        .run("ordering/standard-fixed", || {
+            std::hint::black_box(
+                StandardCv::new(Ordering::Fixed, 1).run(&pegasos, &cover, &folds),
+            );
+        })
+        .median();
+    let s_rand = bench
+        .run("ordering/standard-randomized", || {
+            std::hint::black_box(
+                StandardCv::new(Ordering::Randomized, 1).run(&pegasos, &cover, &folds),
+            );
+        })
+        .median();
+    println!(
+        "randomized overhead: treecv {:.2}x (paper ~2x), standard {:.2}x (paper ~1.5x)",
+        t_rand / t_fixed,
+        s_rand / s_fixed
+    );
+
+    println!("\nCSV summary:\n{}", bench.csv());
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate the paper's Figure 2 — running time of TreeCV and
+//! standard k-CV as a function of n, for PEGASOS (top row) and LSQSGD
+//! (bottom row), in all three columns:
+//!   left   — k ∈ {5,10,100}, fixed order
+//!   middle — k ∈ {5,10,100}, randomized order
+//!   right  — LOOCV (log-scale runtime; standard only up to n = 10,000)
+//!
+//! Emits one CSV block per (task, panel). Env overrides: `FIG2_MAX_N`,
+//! `FIG2_REPS`.
+
+use treecv::config::Task;
+use treecv::coordinator::paper::{self, Panel};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let max_n = env_usize("FIG2_MAX_N", 100_000);
+    let reps = env_usize("FIG2_REPS", 3);
+    let ns = paper::default_ns(max_n);
+    // LOOCV panel: k = n makes the standard method Θ(n²) — cap its sweep
+    // like the paper did, but let TreeCV go to max_n.
+    for task in [Task::Pegasos, Task::Lsqsgd] {
+        for panel in [Panel::Fixed, Panel::Randomized, Panel::Loocv] {
+            println!("# figure2 task={} panel={:?} reps={reps}", task.name(), panel);
+            let out = paper::figure2(task, panel, &ns, reps, 42).expect("figure2");
+            print!("{}", out.render_csv());
+            // Shape report for the k-sweep panels: at the largest n, the
+            // standard/treecv time ratio should grow with k.
+            if !matches!(panel, Panel::Loocv) {
+                let n = *ns.last().unwrap();
+                for k in [5usize, 10, 100] {
+                    let get = |series: &str| {
+                        out.rows
+                            .iter()
+                            .find(|r| r.n == n && r.k == k && r.series.starts_with(series))
+                            .map(|r| r.mean_wall_secs)
+                    };
+                    if let (Some(t), Some(s)) = (get("treecv"), get("standard")) {
+                        println!(
+                            "# shape n={n} k={k}: standard/treecv = {:.2}x (theory ~ {:.2}x)",
+                            s / t.max(1e-12),
+                            k as f64 / ((2 * k) as f64).log2()
+                        );
+                    }
+                }
+            }
+            println!();
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Bench: the PJRT runtime path — per-block execution cost of the AOT
+//! JAX/Pallas artifacts vs the pure-Rust learners, and the end-to-end
+//! TreeCV crossover. Quantifies the FFI + interpret-mode-kernel overhead
+//! so DESIGN.md §Perf can state when each path wins.
+//!
+//! Requires `make artifacts`; exits cleanly when missing.
+
+use treecv::benchkit::Bench;
+use treecv::cv::folds::Folds;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::CvEngine;
+use treecv::data::synth::SyntheticCovertype;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::IncrementalLearner;
+use treecv::runtime::xla_learner::XlaPegasos;
+use treecv::runtime::{artifacts_available, Manifest, PjrtRuntime};
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("SKIP runtime_xla bench: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load_default().expect("manifest");
+    let mut bench = Bench::default();
+
+    let n = 8_192;
+    let data = SyntheticCovertype::new(n, 42).generate();
+    let idx: Vec<u32> = (0..n as u32).collect();
+    let lambda = 1e-4;
+
+    let xla = XlaPegasos::from_manifest(&rt, &manifest, data.d, lambda).unwrap();
+    let rust = Pegasos::new(data.d, lambda);
+
+    // Per-pass update throughput.
+    let x_upd = bench
+        .run("update-pass/xla(b256)", || {
+            let mut m = xla.init();
+            xla.update(&mut m, &data, &idx);
+            std::hint::black_box(&m);
+        })
+        .median();
+    let r_upd = bench
+        .run("update-pass/rust", || {
+            let mut m = rust.init();
+            rust.update(&mut m, &data, &idx);
+            std::hint::black_box(&m);
+        })
+        .median();
+    println!(
+        "update: xla {:.1} kpts/s vs rust {:.1} kpts/s ({:.1}x overhead — interpret-mode pallas + per-block FFI)",
+        n as f64 / x_upd / 1e3,
+        n as f64 / r_upd / 1e3,
+        x_upd / r_upd
+    );
+
+    // Evaluation throughput (the mat-vec kernel).
+    let mut xm = xla.init();
+    xla.update(&mut xm, &data, &idx);
+    let x_eval = bench
+        .run("eval-pass/xla(b256)", || {
+            std::hint::black_box(xla.evaluate(&xm, &data, &idx));
+        })
+        .median();
+    let mut rm = rust.init();
+    rust.update(&mut rm, &data, &idx);
+    let r_eval = bench
+        .run("eval-pass/rust", || {
+            std::hint::black_box(rust.evaluate(&rm, &data, &idx));
+        })
+        .median();
+    println!(
+        "eval:   xla {:.1} kpts/s vs rust {:.1} kpts/s",
+        n as f64 / x_eval / 1e3,
+        n as f64 / r_eval / 1e3
+    );
+
+    // End-to-end TreeCV over each learner.
+    let folds = Folds::new(n, 16, 7);
+    bench.run("treecv-k16/xla", || {
+        std::hint::black_box(TreeCv::default().run(&xla, &data, &folds));
+    });
+    bench.run("treecv-k16/rust", || {
+        std::hint::black_box(TreeCv::default().run(&rust, &data, &folds));
+    });
+
+    println!("\nCSV summary:\n{}", bench.csv());
+}

@@ -1,0 +1,72 @@
+//! Bench: Theorem 3 / Corollary 4 — TreeCV's total work and wall time
+//! scale as O(log k) times a single training, while the standard method
+//! scales linearly in k. Sweeps k at fixed n and reports measured
+//! update-points against the (1+c)·n·log₂(2k) bound, plus wall-time
+//! ratios to a single training run.
+//!
+//! Run: `cargo bench --bench scaling_k` (env `SCALING_N` to resize).
+
+use treecv::benchkit::Bench;
+use treecv::cv::folds::Folds;
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::CvEngine;
+use treecv::data::synth::SyntheticCovertype;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::IncrementalLearner;
+
+fn main() {
+    let n: usize =
+        std::env::var("SCALING_N").ok().and_then(|v| v.parse().ok()).unwrap_or(131_072);
+    let data = SyntheticCovertype::new(n, 42).generate();
+    let learner = Pegasos::new(data.d, 1e-5);
+    let mut bench = Bench::default();
+
+    // Single-training baseline T_L.
+    let idx: Vec<u32> = (0..n as u32).collect();
+    let single = bench.run("single-training", || {
+        let mut m = learner.init();
+        learner.update(&mut m, &data, &idx);
+        std::hint::black_box(&m);
+    });
+    let t_single = single.median();
+
+    println!();
+    println!(
+        "{:>6} | {:>13} | {:>13} | {:>9} | {:>11} | {:>11} | {:>9}",
+        "k", "tree pts", "n*log2(2k)", "tree T/TL", "log2(2k)", "std T/TL", "std/tree"
+    );
+    for k in [2usize, 4, 8, 16, 32, 64, 128, 256, 1024] {
+        let folds = Folds::new(n, k, 7);
+        let tree = TreeCv::default().run(&learner, &data, &folds);
+        let tree_t = {
+            let s = bench.run(&format!("treecv-k{k}"), || {
+                std::hint::black_box(TreeCv::default().run(&learner, &data, &folds));
+            });
+            s.median()
+        };
+        // Standard gets expensive fast; skip wall-time above k=64.
+        let std_t = if k <= 64 {
+            let s = bench.run(&format!("standard-k{k}"), || {
+                std::hint::black_box(StandardCv::default().run(&learner, &data, &folds));
+            });
+            Some(s.median())
+        } else {
+            None
+        };
+        let bound = n as f64 * ((2 * k) as f64).log2();
+        assert!(tree.ops.points_updated as f64 <= bound + 1.0, "Thm 3 violated at k={k}");
+        println!(
+            "{:>6} | {:>13} | {:>13.0} | {:>9.2} | {:>11.2} | {:>11} | {:>9}",
+            k,
+            tree.ops.points_updated,
+            bound,
+            tree_t / t_single,
+            ((2 * k) as f64).log2(),
+            std_t.map(|t| format!("{:.2}", t / t_single)).unwrap_or_else(|| "-".into()),
+            std_t.map(|t| format!("{:.2}x", t / tree_t)).unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!();
+    println!("CSV summary:\n{}", bench.csv());
+}

@@ -1,0 +1,43 @@
+//! Scratch perf driver (used by the §Perf pass): single-training +
+//! treecv-k64 timings on demand. Not part of the documented examples.
+use treecv::cv::folds::Folds;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::CvEngine;
+use treecv::data::synth::SyntheticCovertype;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::IncrementalLearner;
+use std::time::Instant;
+fn main() {
+    let n = 131_072;
+    let data = SyntheticCovertype::new(n, 42).generate();
+    let l = Pegasos::new(data.d, 1e-5);
+    let idx: Vec<u32> = (0..n as u32).collect();
+    // warm
+    let mut m = l.init();
+    l.update(&mut m, &data, &idx);
+    let mut best = f64::INFINITY;
+    for _ in 0..7 {
+        let t = Instant::now();
+        let mut m = l.init();
+        l.update(&mut m, &data, &idx);
+        std::hint::black_box(&m);
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    println!("single-training best: {best:.5}s ({:.1} Mpts/s)", n as f64/best/1e6);
+    let folds = Folds::new(n, 64, 7);
+    let mut bestt = f64::INFINITY;
+    for _ in 0..5 {
+        let t = Instant::now();
+        std::hint::black_box(TreeCv::default().run(&l, &data, &folds));
+        bestt = bestt.min(t.elapsed().as_secs_f64());
+    }
+    println!("treecv-k64 best: {bestt:.5}s");
+    let folds = Folds::new_sorted(n, 64, 7);
+    let mut bests = f64::INFINITY;
+    for _ in 0..5 {
+        let t = Instant::now();
+        std::hint::black_box(TreeCv::default().run(&l, &data, &folds));
+        bests = bests.min(t.elapsed().as_secs_f64());
+    }
+    println!("treecv-k64 sorted-chunks best: {bests:.5}s");
+}

@@ -1,0 +1,48 @@
+//! Quickstart: compute a 10-fold CV estimate for PEGASOS with TreeCV and
+//! compare against the standard k-repetition method.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use treecv::cv::folds::Folds;
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::CvEngine;
+use treecv::data::synth::SyntheticCovertype;
+use treecv::learner::pegasos::Pegasos;
+
+fn main() {
+    // 1. A dataset: 20k covertype-like points (54 features, ±1 labels).
+    let n = 20_000;
+    let data = SyntheticCovertype::new(n, 42).generate();
+
+    // 2. An incremental learner: linear PEGASOS SVM.
+    let learner = Pegasos::new(data.d, 1e-4);
+
+    // 3. A fold assignment: k = 10 equal chunks.
+    let folds = Folds::new(n, 10, 7);
+
+    // 4. TreeCV (the paper's algorithm) vs the standard method.
+    let tree = TreeCv::default().run(&learner, &data, &folds);
+    let standard = StandardCv::default().run(&learner, &data, &folds);
+
+    println!("10-fold CV misclassification estimates (n = {n}):");
+    println!(
+        "  treecv   : {:.4}  ({:>8} update-points, {:.3}s)",
+        tree.estimate,
+        tree.ops.points_updated,
+        tree.wall.as_secs_f64()
+    );
+    println!(
+        "  standard : {:.4}  ({:>8} update-points, {:.3}s)",
+        standard.estimate,
+        standard.ops.points_updated,
+        standard.wall.as_secs_f64()
+    );
+    println!(
+        "  work ratio standard/treecv = {:.2}x (theory: k/log2(2k) = {:.2}x)",
+        standard.ops.points_updated as f64 / tree.ops.points_updated as f64,
+        10.0 / (20f64).log2()
+    );
+    assert!((tree.estimate - standard.estimate).abs() < 0.05);
+    println!("estimates agree — quickstart OK");
+}

@@ -1,0 +1,65 @@
+//! The full three-layer pipeline, end to end: the Rust TreeCV coordinator
+//! (L3) drives a learner whose chunk update and evaluation execute the
+//! AOT-compiled JAX + Pallas artifacts (L2/L1) through PJRT — Python never
+//! runs. Cross-checks the XLA-backed estimate against the pure-Rust
+//! learner.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example xla_pipeline`
+
+use treecv::cv::folds::Folds;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::CvEngine;
+use treecv::data::synth::{SyntheticCovertype, SyntheticYearMsd};
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::pegasos::Pegasos;
+use treecv::runtime::xla_learner::{XlaLsqSgd, XlaPegasos};
+use treecv::runtime::{artifacts_available, Manifest, PjrtRuntime};
+
+fn main() -> treecv::Result<()> {
+    if !artifacts_available() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = PjrtRuntime::cpu()?;
+    let manifest = Manifest::load_default()?;
+    println!("PJRT platform: {} — {} programs in manifest", rt.platform(), manifest.programs.len());
+
+    // --- PEGASOS task (covertype-like, d=54) -----------------------------
+    let n = 4_096;
+    let k = 8;
+    let data = SyntheticCovertype::new(n, 42).generate();
+    let folds = Folds::new(n, k, 7);
+    let lambda = 1e-3;
+
+    let xla = XlaPegasos::from_manifest(&rt, &manifest, data.d, lambda)?;
+    let t0 = std::time::Instant::now();
+    let xla_res = TreeCv::default().run(&xla, &data, &folds);
+    let xla_secs = t0.elapsed().as_secs_f64();
+
+    let rust = Pegasos::new(data.d, lambda);
+    let t0 = std::time::Instant::now();
+    let rust_res = TreeCv::default().run(&rust, &data, &folds);
+    let rust_secs = t0.elapsed().as_secs_f64();
+
+    println!("PEGASOS {k}-fold CV, n = {n} (block size {}):", xla.block());
+    println!("  xla/pallas learner : estimate {:.4}  ({:.3}s)", xla_res.estimate, xla_secs);
+    println!("  pure-rust learner  : estimate {:.4}  ({:.3}s)", rust_res.estimate, rust_secs);
+    assert!((xla_res.estimate - rust_res.estimate).abs() < 0.02);
+
+    // --- LSQSGD task (yearmsd-like, d=90) --------------------------------
+    let data = SyntheticYearMsd::new(n, 43).generate();
+    let folds = Folds::new(n, k, 8);
+    let alpha = 1.0 / (n as f64).sqrt();
+    let xla = XlaLsqSgd::from_manifest(&rt, &manifest, data.d, alpha)?;
+    let xla_res = TreeCv::default().run(&xla, &data, &folds);
+    let rust = LsqSgd::new(data.d, alpha);
+    let rust_res = TreeCv::default().run(&rust, &data, &folds);
+    println!("LSQSGD {k}-fold CV, n = {n}:");
+    println!("  xla/pallas learner : estimate {:.5}", xla_res.estimate);
+    println!("  pure-rust learner  : estimate {:.5}", rust_res.estimate);
+    assert!((xla_res.estimate - rust_res.estimate).abs() < 0.005);
+
+    println!("three-layer pipeline OK — L3 rust coordinator → PJRT → L2 jax → L1 pallas");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernels for LSQSGD (robust-SA least squares): masked
+sequential chunk update (with unit-ball projection and running average)
+and masked squared-error evaluation.
+
+Same VMEM/MXU structure as `pegasos.py`: one (B, d) block per call, the
+update a latency-bound sequential scan over rows with the (w, wavg, t)
+carry held in the output refs, the evaluation a single mat-vec + masked
+reduction. interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lsqsgd_update_kernel(
+    w_ref, wavg_ref, t_ref, alpha_ref, x_ref, y_ref, mask_ref, wo_ref, wao_ref, to_ref
+):
+    """Sequential masked LSQSGD scan; carry = (wo, wao, to) refs."""
+    wo_ref[...] = w_ref[...]
+    wao_ref[...] = wavg_ref[...]
+    to_ref[...] = t_ref[...]
+    alpha = alpha_ref[0]
+    b = x_ref.shape[0]
+
+    def body(i, _):
+        m = mask_ref[i]
+        w = wo_ref[...]
+        wavg = wao_ref[...]
+        t = to_ref[0] + m
+        x = x_ref[i, :]
+        resid = jnp.dot(w, x) - y_ref[i]
+        stepped = w - alpha * 2.0 * resid * x
+        # Project onto the unit l2 ball.
+        nrm2 = jnp.dot(stepped, stepped)
+        scale = jnp.where(nrm2 > 1.0, jax.lax.rsqrt(nrm2), 1.0)
+        projected = stepped * scale
+        new_avg = wavg + (projected - wavg) / t
+        keep = m > 0.0
+        wo_ref[...] = jnp.where(keep, projected, w)
+        wao_ref[...] = jnp.where(keep, new_avg, wavg)
+        to_ref[0] = jnp.where(keep, t, to_ref[0])
+        return 0
+
+    jax.lax.fori_loop(0, b, body, 0)
+
+
+def _lsqsgd_eval_kernel(wavg_ref, x_ref, y_ref, mask_ref, out_ref):
+    """Masked sum of squared errors: one mat-vec + reduction."""
+    pred = x_ref[...] @ wavg_ref[...]
+    err = pred - y_ref[...]
+    out_ref[0] = jnp.sum(err * err * mask_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "dim"))
+def lsqsgd_update(w, wavg, t, alpha, x, y, mask, *, block, dim):
+    """L2 entry point: masked LSQSGD chunk update via the Pallas kernel."""
+    t1 = jnp.reshape(t, (1,)).astype(jnp.float32)
+    a1 = jnp.reshape(alpha, (1,)).astype(jnp.float32)
+    w_out, wavg_out, t_out = pl.pallas_call(
+        _lsqsgd_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((dim,), jnp.float32),
+            jax.ShapeDtypeStruct((dim,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(w, wavg, t1, a1, x, y, mask)
+    return w_out, wavg_out, t_out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "dim"))
+def lsqsgd_eval(wavg, x, y, mask, *, block, dim):
+    """L2 entry point: masked SSE via the Pallas kernel."""
+    sse = pl.pallas_call(
+        _lsqsgd_eval_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(wavg, x, y, mask)
+    return sse[0]

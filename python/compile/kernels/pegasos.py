@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernels for PEGASOS: masked sequential chunk update and
+masked chunk evaluation.
+
+Hardware adaptation (DESIGN.md §3): the paper's experiments are CPU, so
+there is no GPU code to port; the kernels are still *structured* for TPU.
+The whole working set of one call -- a (B, d) tile of rows, the (d,)
+weight vector, labels and mask -- is a single VMEM-resident block
+(BlockSpec with no grid): for the shipped shapes (B=256, d<=90 f32) that
+is ~96 KiB, far under the ~16 MiB VMEM budget, so the HBM<->VMEM schedule
+is one load + one store per call. The update kernel is a sequential scan
+(SGD's loop-carried dependence; its roofline is latency-, not
+throughput-bound), with each step doing one fused dot product + axpy on
+the VMEM-held weights. The evaluation kernel has no loop-carried state:
+it is a (B, d) x (d,) mat-vec -- the MXU-shaped part -- plus a masked
+reduction.
+
+interpret=True everywhere: real TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pegasos_update_kernel(w_ref, t_ref, lam_ref, x_ref, y_ref, mask_ref, wo_ref, to_ref):
+    """Sequential masked PEGASOS scan over the B rows of the block.
+
+    State lives in the *output* refs (wo, to), which double as the scan
+    carry: they are initialized from the inputs and updated in place per
+    row. Masked rows are no-ops (t does not advance).
+    """
+    wo_ref[...] = w_ref[...]
+    to_ref[...] = t_ref[...]
+    lam = lam_ref[0]
+    b = x_ref.shape[0]
+
+    def body(i, _):
+        m = mask_ref[i]
+        w = wo_ref[...]
+        t = to_ref[0] + m  # advances only on real rows
+        x = x_ref[i, :]
+        yv = y_ref[i]
+        margin = yv * jnp.dot(w, x)
+        shrink = 1.0 - 1.0 / t
+        eta = 1.0 / (lam * t)
+        coeff = jnp.where(margin < 1.0, eta * yv, 0.0)
+        new_w = shrink * w + coeff * x
+        keep = m > 0.0
+        wo_ref[...] = jnp.where(keep, new_w, w)
+        to_ref[0] = jnp.where(keep, t, to_ref[0])
+        return 0
+
+    jax.lax.fori_loop(0, b, body, 0)
+
+
+def _pegasos_eval_kernel(w_ref, x_ref, y_ref, mask_ref, out_ref):
+    """Masked misclassification count: one mat-vec + reduction."""
+    scores = x_ref[...] @ w_ref[...]
+    pred = jnp.where(scores >= 0.0, 1.0, -1.0)
+    wrong = jnp.where(pred != y_ref[...], 1.0, 0.0)
+    out_ref[0] = jnp.sum(wrong * mask_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "dim"))
+def pegasos_update(w, t, lam, x, y, mask, *, block, dim):
+    """L2 entry point: masked PEGASOS chunk update via the Pallas kernel.
+
+    Scalars arrive rank-0 (that is what the Rust runtime feeds) and are
+    lifted to (1,) for the kernel.
+    """
+    t1 = jnp.reshape(t, (1,)).astype(jnp.float32)
+    lam1 = jnp.reshape(lam, (1,)).astype(jnp.float32)
+    w_out, t_out = pl.pallas_call(
+        _pegasos_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((dim,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(w, t1, lam1, x, y, mask)
+    return w_out, t_out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "dim"))
+def pegasos_eval(w, x, y, mask, *, block, dim):
+    """L2 entry point: masked misclassification count via the Pallas kernel."""
+    errs = pl.pallas_call(
+        _pegasos_eval_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(w, x, y, mask)
+    return errs[0]

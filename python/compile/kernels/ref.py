@@ -1,0 +1,90 @@
+"""Pure-NumPy oracles for the Pallas kernels (Layer 1 correctness ground
+truth).
+
+These mirror, step for step, the math the kernels implement:
+
+* PEGASOS chunk update (Shalev-Shwartz et al. 2011, "last hypothesis"):
+  per point t += 1; margin = y.<w,x>; w <- (1 - 1/t) w; on margin < 1
+  additionally w += (1/(lambda t)) y x. Masked (padding) rows are skipped
+  entirely -- they advance neither t nor w.
+* PEGASOS chunk evaluation: masked misclassification count of sign(<w,x>)
+  (ties predict +1, matching the Rust learner).
+* LSQSGD chunk update (Nemirovski et al. 2009 robust SA): per point
+  w <- Pi_{||.||<=1}(w - alpha * 2(<w,x> - y) x); running average
+  wavg += (w - wavg)/t.
+* LSQSGD chunk evaluation: masked sum of squared errors of <wavg, x>.
+
+Everything is float32 to match both the artifacts and the Rust learners.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+F32 = np.float32
+
+
+def pegasos_update_ref(w, t, lam, x, y, mask):
+    """Reference PEGASOS chunk update.
+
+    Args:
+      w: (d,) float32 weights.
+      t: scalar float32 step counter (points consumed so far).
+      lam: scalar float32 regularizer.
+      x: (B, d) float32 rows.
+      y: (B,) float32 labels in {+1, -1} (arbitrary on masked rows).
+      mask: (B,) float32 validity (1 = real row, 0 = padding).
+
+    Returns:
+      (w', t') after consuming the masked chunk in row order.
+    """
+    w = np.array(w, dtype=F32).copy()
+    t = F32(t)
+    lam = F32(lam)
+    for i in range(x.shape[0]):
+        if mask[i] == 0:
+            continue
+        t = F32(t + F32(1.0))
+        xi = x[i].astype(F32)
+        margin = F32(y[i]) * F32(np.dot(w, xi))
+        shrink = F32(1.0) - F32(1.0) / t
+        eta = F32(1.0) / (lam * t)
+        w = (shrink * w).astype(F32)
+        if margin < F32(1.0):
+            w = (w + eta * F32(y[i]) * xi).astype(F32)
+    return w, t
+
+
+def pegasos_eval_ref(w, x, y, mask):
+    """Masked misclassification count (not rate) for sign(<w,x>)."""
+    scores = x.astype(F32) @ np.asarray(w, dtype=F32)
+    pred = np.where(scores >= 0, F32(1.0), F32(-1.0))
+    wrong = (pred != y.astype(F32)).astype(F32)
+    return F32(np.sum(wrong * mask.astype(F32)))
+
+
+def lsqsgd_update_ref(w, wavg, t, alpha, x, y, mask):
+    """Reference LSQSGD chunk update; returns (w', wavg', t')."""
+    w = np.array(w, dtype=F32).copy()
+    wavg = np.array(wavg, dtype=F32).copy()
+    t = F32(t)
+    alpha = F32(alpha)
+    for i in range(x.shape[0]):
+        if mask[i] == 0:
+            continue
+        t = F32(t + F32(1.0))
+        xi = x[i].astype(F32)
+        resid = F32(np.dot(w, xi)) - F32(y[i])
+        w = (w - alpha * F32(2.0) * resid * xi).astype(F32)
+        nrm2 = float(np.dot(w.astype(np.float64), w.astype(np.float64)))
+        if nrm2 > 1.0:
+            w = (w / F32(np.sqrt(nrm2))).astype(F32)
+        wavg = (wavg + (w - wavg) / t).astype(F32)
+    return w, wavg, t
+
+
+def lsqsgd_eval_ref(wavg, x, y, mask):
+    """Masked sum of squared errors (not mean) of <wavg, x>."""
+    pred = x.astype(F32) @ np.asarray(wavg, dtype=F32)
+    err = (pred - y.astype(F32)).astype(F32)
+    return F32(np.sum(err * err * mask.astype(F32)))

@@ -1,0 +1,101 @@
+"""Layer 2: the jitted JAX programs the Rust runtime executes, built on the
+Layer-1 Pallas kernels.
+
+Each program family is a function of fixed (block, dim) shape:
+
+* ``pegasos_update(w, t, lam, x, y, mask) -> (w', t')``
+* ``pegasos_eval(w, x, y, mask) -> err_count``
+* ``lsqsgd_update(w, wavg, t, alpha, x, y, mask) -> (w', wavg', t')``
+* ``lsqsgd_eval(wavg, x, y, mask) -> sse``
+
+``aot.py`` lowers these once per shape variant to HLO text under
+``artifacts/``; they are never imported at runtime. The functions return
+tuples so the lowered programs have a uniform tuple ABI on the Rust side
+(``Literal::to_tuple``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import lsqsgd as lsqsgd_k
+from compile.kernels import pegasos as pegasos_k
+
+F32 = jnp.float32
+
+
+def make_specs(block: int, dim: int):
+    """ShapeDtypeStructs for one (block, dim) variant, keyed by input name."""
+    return {
+        "w": jax.ShapeDtypeStruct((dim,), F32),
+        "wavg": jax.ShapeDtypeStruct((dim,), F32),
+        "t": jax.ShapeDtypeStruct((), F32),
+        "lam": jax.ShapeDtypeStruct((), F32),
+        "alpha": jax.ShapeDtypeStruct((), F32),
+        "x": jax.ShapeDtypeStruct((block, dim), F32),
+        "y": jax.ShapeDtypeStruct((block,), F32),
+        "mask": jax.ShapeDtypeStruct((block,), F32),
+    }
+
+
+def pegasos_update_fn(block: int, dim: int):
+    """(w, t, lam, x, y, mask) -> (w', t')."""
+
+    def fn(w, t, lam, x, y, mask):
+        w2, t2 = pegasos_k.pegasos_update(w, t, lam, x, y, mask, block=block, dim=dim)
+        return (w2, t2)
+
+    return fn
+
+
+def pegasos_eval_fn(block: int, dim: int):
+    """(w, x, y, mask) -> (masked error count,)."""
+
+    def fn(w, x, y, mask):
+        return (pegasos_k.pegasos_eval(w, x, y, mask, block=block, dim=dim),)
+
+    return fn
+
+
+def lsqsgd_update_fn(block: int, dim: int):
+    """(w, wavg, t, alpha, x, y, mask) -> (w', wavg', t')."""
+
+    def fn(w, wavg, t, alpha, x, y, mask):
+        w2, wavg2, t2 = lsqsgd_k.lsqsgd_update(
+            w, wavg, t, alpha, x, y, mask, block=block, dim=dim
+        )
+        return (w2, wavg2, t2)
+
+    return fn
+
+
+def lsqsgd_eval_fn(block: int, dim: int):
+    """(wavg, x, y, mask) -> (masked SSE,)."""
+
+    def fn(wavg, x, y, mask):
+        return (lsqsgd_k.lsqsgd_eval(wavg, x, y, mask, block=block, dim=dim),)
+
+    return fn
+
+
+def program_table(block: int, dim: int):
+    """All programs for one (block, dim): name -> (fn, arg spec names)."""
+    return {
+        f"pegasos_update_b{block}_d{dim}": (
+            pegasos_update_fn(block, dim),
+            ["w", "t", "lam", "x", "y", "mask"],
+        ),
+        f"pegasos_eval_b{block}_d{dim}": (
+            pegasos_eval_fn(block, dim),
+            ["w", "x", "y", "mask"],
+        ),
+        f"lsqsgd_update_b{block}_d{dim}": (
+            lsqsgd_update_fn(block, dim),
+            ["w", "wavg", "t", "alpha", "x", "y", "mask"],
+        ),
+        f"lsqsgd_eval_b{block}_d{dim}": (
+            lsqsgd_eval_fn(block, dim),
+            ["wavg", "x", "y", "mask"],
+        ),
+    }

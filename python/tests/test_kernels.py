@@ -1,0 +1,187 @@
+"""Layer-1 correctness: Pallas kernels (interpret mode) vs the pure-NumPy
+oracles in ``compile.kernels.ref`` — the core correctness signal for the
+compute hot path, swept over shapes/masks/values with hypothesis.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lsqsgd as lsqsgd_k
+from compile.kernels import pegasos as pegasos_k
+from compile.kernels import ref
+
+RTOL = 2e-4  # f32 sequential scans; tolerances include reassociation slack
+ATOL = 1e-5
+
+
+def make_case(rng, block, dim, mask_kind="mixed"):
+    x = rng.normal(size=(block, dim)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=block).astype(np.float32)
+    if mask_kind == "full":
+        mask = np.ones(block, dtype=np.float32)
+    elif mask_kind == "empty":
+        mask = np.zeros(block, dtype=np.float32)
+    else:
+        mask = (rng.random(block) < 0.7).astype(np.float32)
+    w = (0.1 * rng.normal(size=dim)).astype(np.float32)
+    return w, x, y, mask
+
+
+class TestPegasosUpdate:
+    @pytest.mark.parametrize("block,dim", [(4, 3), (8, 6), (16, 54), (5, 7)])
+    @pytest.mark.parametrize("mask_kind", ["full", "mixed", "empty"])
+    def test_matches_ref(self, block, dim, mask_kind):
+        rng = np.random.default_rng(block * 1000 + dim)
+        w, x, y, mask = make_case(rng, block, dim, mask_kind)
+        t0, lam = np.float32(17.0), np.float32(1e-3)
+        got_w, got_t = pegasos_k.pegasos_update(w, t0, lam, x, y, mask, block=block, dim=dim)
+        want_w, want_t = ref.pegasos_update_ref(w, t0, lam, x, y, mask)
+        np.testing.assert_allclose(np.asarray(got_w), want_w, rtol=RTOL, atol=ATOL)
+        assert float(got_t) == float(want_t)
+
+    def test_fresh_model_first_step(self):
+        # Fresh model (w=0, t=0): margin 0 < 1, shrink factor (1-1/1) = 0,
+        # so after the first real row w = (1/λ)·y·x exactly.
+        block, dim = 4, 3
+        x = np.eye(block, dim, dtype=np.float32)
+        y = np.ones(block, dtype=np.float32)
+        mask = np.array([1, 0, 0, 0], dtype=np.float32)
+        w0 = np.zeros(dim, dtype=np.float32)
+        lam = np.float32(0.5)
+        got_w, got_t = pegasos_k.pegasos_update(
+            w0, np.float32(0.0), lam, x, y, mask, block=block, dim=dim
+        )
+        assert float(got_t) == 1.0
+        np.testing.assert_allclose(np.asarray(got_w), [2.0, 0.0, 0.0], rtol=1e-6)
+
+    def test_masked_rows_do_not_advance_t(self):
+        rng = np.random.default_rng(5)
+        w, x, y, mask = make_case(rng, 8, 4, "mixed")
+        t0 = np.float32(3.0)
+        _, got_t = pegasos_k.pegasos_update(w, t0, np.float32(0.1), x, y, mask, block=8, dim=4)
+        assert float(got_t) == float(t0) + float(mask.sum())
+
+    def test_incremental_composition(self):
+        # Two half-block updates == one concatenated update (same mask).
+        rng = np.random.default_rng(6)
+        dim = 5
+        w, x, y, mask = make_case(rng, 8, dim, "full")
+        lam = np.float32(0.05)
+        w_full, t_full = pegasos_k.pegasos_update(
+            w, np.float32(0.0), lam, x, y, mask, block=8, dim=dim
+        )
+        w_a, t_a = pegasos_k.pegasos_update(
+            w, np.float32(0.0), lam, x[:4], y[:4], mask[:4], block=4, dim=dim
+        )
+        w_b, t_b = pegasos_k.pegasos_update(
+            np.asarray(w_a), t_a, lam, x[4:], y[4:], mask[4:], block=4, dim=dim
+        )
+        assert float(t_b) == float(t_full)
+        np.testing.assert_allclose(np.asarray(w_b), np.asarray(w_full), rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        block=st.integers(2, 12),
+        dim=st.integers(1, 16),
+        seed=st.integers(0, 2**32 - 1),
+        lam=st.floats(1e-4, 1.0),
+        t0=st.floats(0.0, 1e4),
+    )
+    def test_hypothesis_sweep(self, block, dim, seed, lam, t0):
+        rng = np.random.default_rng(seed)
+        w, x, y, mask = make_case(rng, block, dim)
+        got_w, got_t = pegasos_k.pegasos_update(
+            w, np.float32(t0), np.float32(lam), x, y, mask, block=block, dim=dim
+        )
+        want_w, want_t = ref.pegasos_update_ref(w, np.float32(t0), np.float32(lam), x, y, mask)
+        np.testing.assert_allclose(np.asarray(got_w), want_w, rtol=1e-3, atol=1e-4)
+        assert float(got_t) == float(want_t)
+
+
+class TestPegasosEval:
+    @pytest.mark.parametrize("block,dim", [(4, 3), (16, 54), (7, 9)])
+    @pytest.mark.parametrize("mask_kind", ["full", "mixed", "empty"])
+    def test_matches_ref(self, block, dim, mask_kind):
+        rng = np.random.default_rng(block + dim)
+        w, x, y, mask = make_case(rng, block, dim, mask_kind)
+        got = pegasos_k.pegasos_eval(w, x, y, mask, block=block, dim=dim)
+        want = ref.pegasos_eval_ref(w, x, y, mask)
+        assert float(got) == pytest.approx(float(want), abs=1e-6)
+
+    def test_tie_predicts_positive(self):
+        # score exactly 0 → predict +1 (matches the Rust learner).
+        w = np.zeros(3, dtype=np.float32)
+        x = np.ones((2, 3), dtype=np.float32)
+        y = np.array([1.0, -1.0], dtype=np.float32)
+        mask = np.ones(2, dtype=np.float32)
+        got = pegasos_k.pegasos_eval(w, x, y, mask, block=2, dim=3)
+        assert float(got) == 1.0  # only the −1 row is wrong
+
+
+class TestLsqsgdUpdate:
+    @pytest.mark.parametrize("block,dim", [(4, 3), (8, 6), (16, 90)])
+    @pytest.mark.parametrize("mask_kind", ["full", "mixed", "empty"])
+    def test_matches_ref(self, block, dim, mask_kind):
+        rng = np.random.default_rng(block * 7 + dim)
+        w, x, y, mask = make_case(rng, block, dim, mask_kind)
+        y = rng.random(block).astype(np.float32)  # regression targets in [0,1]
+        wavg = (0.05 * rng.normal(size=dim)).astype(np.float32)
+        t0, alpha = np.float32(9.0), np.float32(0.05)
+        got = lsqsgd_k.lsqsgd_update(w, wavg, t0, alpha, x, y, mask, block=block, dim=dim)
+        want = ref.lsqsgd_update_ref(w, wavg, t0, alpha, x, y, mask)
+        np.testing.assert_allclose(np.asarray(got[0]), want[0], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(np.asarray(got[1]), want[1], rtol=RTOL, atol=ATOL)
+        assert float(got[2]) == float(want[2])
+
+    def test_projection_keeps_unit_ball(self):
+        rng = np.random.default_rng(11)
+        block, dim = 16, 6
+        w, x, y, mask = make_case(rng, block, dim, "full")
+        y = (10.0 * rng.random(block)).astype(np.float32)  # big targets force steps
+        wavg = np.zeros(dim, dtype=np.float32)
+        got_w, _, _ = lsqsgd_k.lsqsgd_update(
+            w, wavg, np.float32(0.0), np.float32(0.9), x, y, mask, block=block, dim=dim
+        )
+        assert float(np.linalg.norm(np.asarray(got_w))) <= 1.0 + 1e-5
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        block=st.integers(2, 10),
+        dim=st.integers(1, 12),
+        seed=st.integers(0, 2**32 - 1),
+        alpha=st.floats(1e-3, 0.5),
+    )
+    def test_hypothesis_sweep(self, block, dim, seed, alpha):
+        rng = np.random.default_rng(seed)
+        w, x, y, mask = make_case(rng, block, dim)
+        y = rng.random(block).astype(np.float32)
+        wavg = (0.05 * rng.normal(size=dim)).astype(np.float32)
+        got = lsqsgd_k.lsqsgd_update(
+            w, wavg, np.float32(2.0), np.float32(alpha), x, y, mask, block=block, dim=dim
+        )
+        want = ref.lsqsgd_update_ref(w, wavg, np.float32(2.0), np.float32(alpha), x, y, mask)
+        np.testing.assert_allclose(np.asarray(got[0]), want[0], rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(got[1]), want[1], rtol=1e-3, atol=1e-4)
+
+
+class TestLsqsgdEval:
+    @pytest.mark.parametrize("block,dim", [(4, 3), (16, 90), (9, 5)])
+    def test_matches_ref(self, block, dim):
+        rng = np.random.default_rng(block * 13 + dim)
+        w, x, _, mask = make_case(rng, block, dim)
+        y = rng.random(block).astype(np.float32)
+        got = lsqsgd_k.lsqsgd_eval(w, x, y, mask, block=block, dim=dim)
+        want = ref.lsqsgd_eval_ref(w, x, y, mask)
+        assert float(got) == pytest.approx(float(want), rel=1e-5, abs=1e-6)
+
+    def test_empty_mask_is_zero(self):
+        dim, block = 4, 6
+        w = np.ones(dim, dtype=np.float32)
+        x = np.ones((block, dim), dtype=np.float32)
+        y = np.zeros(block, dtype=np.float32)
+        mask = np.zeros(block, dtype=np.float32)
+        got = lsqsgd_k.lsqsgd_eval(w, x, y, mask, block=block, dim=dim)
+        assert float(got) == 0.0

@@ -1,0 +1,165 @@
+//! In-tree micro-benchmark harness (the offline environment vendors no
+//! criterion). Benches under `benches/` are `harness = false` binaries that
+//! drive [`Bench`]: warmup, repeated timed samples, and a summary with
+//! median / mean / std / min, plus CSV emission so EXPERIMENTS.md rows are
+//! copy-pasteable. Deliberately simple — the experiments here measure
+//! milliseconds-to-seconds-scale end-to-end CV runs, not nanosecond ops.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's samples.
+#[derive(Debug, Clone)]
+pub struct Samples {
+    pub name: String,
+    pub secs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn median(&self) -> f64 {
+        let mut s = self.secs.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let n = s.len();
+        if n == 0 {
+            return 0.0;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.secs.is_empty() {
+            return 0.0;
+        }
+        self.secs.iter().sum::<f64>() / self.secs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.secs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.secs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.secs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} median {:>10.4}s  mean {:>10.4}s ± {:>8.4}  min {:>10.4}s  ({} samples)",
+            self.name,
+            self.median(),
+            self.mean(),
+            self.std(),
+            self.min(),
+            self.secs.len()
+        )
+    }
+}
+
+/// The harness: configure via env (`BENCH_SAMPLES`, `BENCH_WARMUP`) or
+/// builder methods.
+pub struct Bench {
+    samples: usize,
+    warmup: usize,
+    results: Vec<Samples>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        let samples = std::env::var("BENCH_SAMPLES").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+        let warmup = std::env::var("BENCH_WARMUP").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+        Self { samples, warmup, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(samples: usize, warmup: usize) -> Self {
+        Self { samples, warmup, results: Vec::new() }
+    }
+
+    /// Time `f` (which must do one full unit of work per call).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Samples {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut secs = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            f();
+            secs.push(t.elapsed().as_secs_f64());
+        }
+        let s = Samples { name: name.to_string(), secs };
+        println!("{}", s.summary());
+        self.results.push(s);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally measured duration series (e.g. from an engine's
+    /// own wall-clock) under a name.
+    pub fn record(&mut self, name: &str, durations: &[Duration]) -> &Samples {
+        let s = Samples {
+            name: name.to_string(),
+            secs: durations.iter().map(|d| d.as_secs_f64()).collect(),
+        };
+        println!("{}", s.summary());
+        self.results.push(s);
+        self.results.last().unwrap()
+    }
+
+    /// All results as CSV (name, median, mean, std, min, samples).
+    pub fn csv(&self) -> String {
+        let mut s = String::from("name,median_s,mean_s,std_s,min_s,samples\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{}\n",
+                r.name,
+                r.median(),
+                r.mean(),
+                r.std(),
+                r.min(),
+                r.secs.len()
+            ));
+        }
+        s
+    }
+
+    pub fn results(&self) -> &[Samples] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statistics() {
+        let s = Samples { name: "x".into(), secs: vec![1.0, 2.0, 3.0, 4.0] };
+        assert_eq!(s.median(), 2.5);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_collects_samples() {
+        let mut b = Bench::new(3, 1);
+        let mut calls = 0u32;
+        b.run("noop", || calls += 1);
+        assert_eq!(calls, 4); // 1 warmup + 3 samples
+        assert_eq!(b.results()[0].secs.len(), 3);
+        assert!(b.csv().contains("noop"));
+    }
+
+    #[test]
+    fn median_odd() {
+        let s = Samples { name: "x".into(), secs: vec![3.0, 1.0, 2.0] };
+        assert_eq!(s.median(), 2.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! TOML-subset parser for config files (`key = value` lines).
+//!
+//! Supported values: double-quoted strings (with `\"`, `\\`, `\n`, `\t`
+//! escapes), integers, floats (including scientific notation), booleans,
+//! and flat arrays of the above. `#` starts a comment; blank lines are
+//! skipped. No tables/nesting — the experiment configs are flat.
+
+use crate::Result;
+use anyhow::bail;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize_array(&self) -> Result<Vec<usize>> {
+        match self {
+            Value::Array(items) => items.iter().map(|v| v.as_usize()).collect(),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed file: ordered `(key, value)` pairs.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub entries: Vec<(String, Value)>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+/// Parse config text.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut table = Table::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got `{raw}`", lineno + 1);
+        };
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            bail!("line {}: bad key `{key}`", lineno + 1);
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        if table.get(key).is_some() {
+            bail!("line {}: duplicate key `{key}`", lineno + 1);
+        }
+        table.entries.push((key.to_string(), value));
+    }
+    Ok(table)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string `{s}`");
+        };
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("unterminated array `{s}`");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>> = split_top_level(inner).iter().map(|p| parse_value(p)).collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+/// Split array contents on commas (no nested arrays in the subset, but
+/// respect quoted strings).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => escaped = false,
+        }
+    }
+    parts.push(s[start..].trim());
+    parts
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some(other) => bail!("bad escape `\\{other}`"),
+            None => bail!("dangling backslash"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let t = parse("a = 1\nb = -2.5\nc = \"hi\"\nd = true\ne = 1e-6\n").unwrap();
+        assert_eq!(t.get("a"), Some(&Value::Int(1)));
+        assert_eq!(t.get("b"), Some(&Value::Float(-2.5)));
+        assert_eq!(t.get("c"), Some(&Value::Str("hi".into())));
+        assert_eq!(t.get("d"), Some(&Value::Bool(true)));
+        assert_eq!(t.get("e"), Some(&Value::Float(1e-6)));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = parse("ks = [5, 10, 100]\nempty = []\n").unwrap();
+        assert_eq!(t.get("ks").unwrap().as_usize_array().unwrap(), vec![5, 10, 100]);
+        assert_eq!(t.get("empty"), Some(&Value::Array(vec![])));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let t = parse("# header\n\na = 1 # trailing\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(t.get("a"), Some(&Value::Int(1)));
+        assert_eq!(t.get("b").unwrap().as_str().unwrap(), "x # not a comment");
+    }
+
+    #[test]
+    fn string_escapes() {
+        let t = parse(r#"s = "a\"b\\c\nd""#).unwrap();
+        assert_eq!(t.get("s").unwrap().as_str().unwrap(), "a\"b\\c\nd");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("just words\n").is_err());
+        assert!(parse("a = \n").is_err());
+        assert!(parse("a = [1, 2\n").is_err());
+        assert!(parse("a = \"unterminated\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("bad key = 1\n").is_err());
+    }
+
+    #[test]
+    fn value_accessors_type_check() {
+        assert!(Value::Int(-1).as_usize().is_err());
+        assert!(Value::Str("x".into()).as_f64().is_err());
+        assert!(Value::Int(3).as_f64().is_ok());
+        assert!(Value::Int(3).as_str().is_err());
+    }
+}

@@ -1,0 +1,320 @@
+//! Experiment configuration: a small TOML-subset file format with CLI
+//! overrides.
+//!
+//! Every experiment the CLI can run is described by an [`ExperimentConfig`]
+//! — task (learner + dataset), CV engine, fold counts, ordering, strategy,
+//! repetitions, seeds, dataset sizes — so runs are reproducible from a
+//! checked-in file. The parser ([`kv`]) is in-tree (no external TOML crate
+//! in this offline environment) and supports the subset the configs need:
+//! `key = value` lines with strings, integers, floats, booleans and flat
+//! arrays, plus `#` comments.
+
+pub mod kv;
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// Which (learner, dataset, loss) triple to run — the paper's two
+/// experimental tasks plus the extra learners this library ships.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// PEGASOS on covertype-like data, misclassification loss (Table 2 top).
+    Pegasos,
+    /// LSQSGD on yearmsd-like data, squared loss (Table 2 bottom).
+    Lsqsgd,
+    /// Online K-means on Gaussian blobs, quantization loss (Table 1 row 3).
+    Kmeans,
+    /// Histogram density on a 1-D mixture, NLL (Table 1 row 4).
+    Density,
+    /// Gaussian naive Bayes on covertype-like data (mergeable baseline).
+    NaiveBayes,
+    /// Online ridge on yearmsd-like data (exact-LOOCV comparator).
+    Ridge,
+}
+
+impl Task {
+    pub fn all() -> &'static [Task] {
+        &[Task::Pegasos, Task::Lsqsgd, Task::Kmeans, Task::Density, Task::NaiveBayes, Task::Ridge]
+    }
+
+    pub fn parse(s: &str) -> Result<Task> {
+        Ok(match s {
+            "pegasos" => Task::Pegasos,
+            "lsqsgd" => Task::Lsqsgd,
+            "kmeans" => Task::Kmeans,
+            "density" => Task::Density,
+            "naive_bayes" | "naive-bayes" => Task::NaiveBayes,
+            "ridge" => Task::Ridge,
+            other => bail!("unknown task `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Pegasos => "pegasos",
+            Task::Lsqsgd => "lsqsgd",
+            Task::Kmeans => "kmeans",
+            Task::Density => "density",
+            Task::NaiveBayes => "naive_bayes",
+            Task::Ridge => "ridge",
+        }
+    }
+}
+
+/// CV engine selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Treecv,
+    Standard,
+    ParallelTreecv,
+    /// Izbicki fold-merging (mergeable learners only).
+    Merge,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "treecv" => Engine::Treecv,
+            "standard" => Engine::Standard,
+            "parallel_treecv" | "parallel-treecv" | "parallel" => Engine::ParallelTreecv,
+            "merge" => Engine::Merge,
+            other => bail!("unknown engine `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Treecv => "treecv",
+            Engine::Standard => "standard",
+            Engine::ParallelTreecv => "parallel_treecv",
+            Engine::Merge => "merge",
+        }
+    }
+}
+
+/// Feeding-order policy (paper §5 fixed vs randomized).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrderingCfg {
+    Fixed,
+    Randomized,
+}
+
+impl OrderingCfg {
+    pub fn parse(s: &str) -> Result<OrderingCfg> {
+        Ok(match s {
+            "fixed" => OrderingCfg::Fixed,
+            "randomized" => OrderingCfg::Randomized,
+            other => bail!("unknown ordering `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrderingCfg::Fixed => "fixed",
+            OrderingCfg::Randomized => "randomized",
+        }
+    }
+}
+
+impl From<OrderingCfg> for crate::cv::folds::Ordering {
+    fn from(o: OrderingCfg) -> Self {
+        match o {
+            OrderingCfg::Fixed => crate::cv::folds::Ordering::Fixed,
+            OrderingCfg::Randomized => crate::cv::folds::Ordering::Randomized,
+        }
+    }
+}
+
+/// Model-preservation strategy (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyCfg {
+    Copy,
+    SaveRevert,
+}
+
+impl StrategyCfg {
+    pub fn parse(s: &str) -> Result<StrategyCfg> {
+        Ok(match s {
+            "copy" => StrategyCfg::Copy,
+            "save_revert" | "save-revert" => StrategyCfg::SaveRevert,
+            other => bail!("unknown strategy `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyCfg::Copy => "copy",
+            StrategyCfg::SaveRevert => "save_revert",
+        }
+    }
+}
+
+impl From<StrategyCfg> for crate::cv::Strategy {
+    fn from(s: StrategyCfg) -> Self {
+        match s {
+            StrategyCfg::Copy => crate::cv::Strategy::Copy,
+            StrategyCfg::SaveRevert => crate::cv::Strategy::SaveRevert,
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub task: Task,
+    pub engine: Engine,
+    pub ordering: OrderingCfg,
+    pub strategy: StrategyCfg,
+    /// Dataset size.
+    pub n: usize,
+    /// Fold counts to run; `0` means LOOCV (k = n).
+    pub ks: Vec<usize>,
+    /// Independent repetitions per (k,) cell.
+    pub repetitions: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// PEGASOS regularizer.
+    pub lambda: f64,
+    /// LSQSGD step size; `0.0` means the paper's n^{-1/2} rule.
+    pub alpha: f64,
+    /// Optional LIBSVM file to load instead of the synthetic dataset.
+    pub data_path: Option<String>,
+    /// Output JSON path (None = stdout only).
+    pub out: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            task: Task::Pegasos,
+            engine: Engine::Treecv,
+            ordering: OrderingCfg::Fixed,
+            strategy: StrategyCfg::Copy,
+            n: 20_000,
+            ks: vec![5, 10, 100],
+            repetitions: 20,
+            seed: 42,
+            lambda: 1e-6,
+            alpha: 0.0,
+            data_path: None,
+            out: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a config file (TOML-subset; see [`kv`]).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from config text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let table = kv::parse(text)?;
+        let mut cfg = Self::default();
+        for (key, value) in &table.entries {
+            match key.as_str() {
+                "task" => cfg.task = Task::parse(value.as_str()?)?,
+                "engine" => cfg.engine = Engine::parse(value.as_str()?)?,
+                "ordering" => cfg.ordering = OrderingCfg::parse(value.as_str()?)?,
+                "strategy" => cfg.strategy = StrategyCfg::parse(value.as_str()?)?,
+                "n" => cfg.n = value.as_usize()?,
+                "ks" => cfg.ks = value.as_usize_array()?,
+                "repetitions" => cfg.repetitions = value.as_usize()?,
+                "seed" => cfg.seed = value.as_usize()? as u64,
+                "lambda" => cfg.lambda = value.as_f64()?,
+                "alpha" => cfg.alpha = value.as_f64()?,
+                "data_path" => cfg.data_path = Some(value.as_str()?.to_string()),
+                "out" => cfg.out = Some(value.as_str()?.to_string()),
+                other => bail!("unknown config key `{other}`"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to config-file text (round-trip support / `--dump-config`).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("task = \"{}\"\n", self.task.name()));
+        s.push_str(&format!("engine = \"{}\"\n", self.engine.name()));
+        s.push_str(&format!("ordering = \"{}\"\n", self.ordering.name()));
+        s.push_str(&format!("strategy = \"{}\"\n", self.strategy.name()));
+        s.push_str(&format!("n = {}\n", self.n));
+        s.push_str(&format!(
+            "ks = [{}]\n",
+            self.ks.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(", ")
+        ));
+        s.push_str(&format!("repetitions = {}\n", self.repetitions));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("lambda = {:e}\n", self.lambda));
+        s.push_str(&format!("alpha = {}\n", self.alpha));
+        if let Some(p) = &self.data_path {
+            s.push_str(&format!("data_path = \"{p}\"\n"));
+        }
+        if let Some(p) = &self.out {
+            s.push_str(&format!("out = \"{p}\"\n"));
+        }
+        s
+    }
+
+    /// Effective LSQSGD step size for a training-set size.
+    pub fn effective_alpha(&self, train_n: usize) -> f64 {
+        if self.alpha > 0.0 {
+            self.alpha
+        } else {
+            1.0 / (train_n as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_text() {
+        let cfg = ExperimentConfig::default();
+        let text = cfg.to_text();
+        let back = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(back.n, cfg.n);
+        assert_eq!(back.ks, cfg.ks);
+        assert_eq!(back.task, cfg.task);
+        assert_eq!(back.lambda, cfg.lambda);
+    }
+
+    #[test]
+    fn partial_config_fills_defaults() {
+        let cfg = ExperimentConfig::parse("task = \"lsqsgd\"\nn = 500\nks = [0]\n").unwrap();
+        assert_eq!(cfg.task, Task::Lsqsgd);
+        assert_eq!(cfg.n, 500);
+        assert_eq!(cfg.ks, vec![0]);
+        assert_eq!(cfg.repetitions, ExperimentConfig::default().repetitions);
+    }
+
+    #[test]
+    fn alpha_rule() {
+        let cfg = ExperimentConfig { alpha: 0.0, ..Default::default() };
+        assert!((cfg.effective_alpha(10_000) - 0.01).abs() < 1e-12);
+        let cfg = ExperimentConfig { alpha: 0.5, ..Default::default() };
+        assert_eq!(cfg.effective_alpha(10_000), 0.5);
+    }
+
+    #[test]
+    fn rejects_bad_task_and_key() {
+        assert!(ExperimentConfig::parse("task = \"nope\"\n").is_err());
+        assert!(ExperimentConfig::parse("wat = 3\n").is_err());
+    }
+
+    #[test]
+    fn parses_every_enum() {
+        for t in ["pegasos", "lsqsgd", "kmeans", "density", "naive_bayes", "ridge"] {
+            assert!(Task::parse(t).is_ok(), "{t}");
+        }
+        for e in ["treecv", "standard", "parallel_treecv", "merge"] {
+            assert!(Engine::parse(e).is_ok(), "{e}");
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Experiment orchestration: turns an [`ExperimentConfig`] into datasets,
+//! learners and engine runs, and collects Table-2-style cell reports.
+//! This is the layer the CLI (`rust/src/main.rs`), the examples and the
+//! benches all drive, so every experiment in EXPERIMENTS.md is a function
+//! call away.
+
+pub mod paper;
+
+use crate::config::{Engine, ExperimentConfig, Task};
+use crate::cv::folds::{Folds, Ordering};
+use crate::cv::mergecv::MergeCv;
+use crate::cv::stats::{run_repetitions, EngineKind, RepetitionResult, RepetitionSpec};
+use crate::cv::Strategy;
+use crate::data::synth::{
+    SyntheticBlobs, SyntheticCovertype, SyntheticMixture1d, SyntheticYearMsd,
+};
+use crate::data::{libsvm, Dataset};
+use crate::learner::histdensity::HistogramDensity;
+use crate::learner::kmeans::OnlineKMeans;
+use crate::learner::lsqsgd::LsqSgd;
+use crate::learner::naive_bayes::GaussianNb;
+use crate::learner::pegasos::Pegasos;
+use crate::learner::ridge::OnlineRidge;
+use crate::learner::{IncrementalLearner, MergeableLearner};
+use crate::metrics::OpCounts;
+use crate::Result;
+use anyhow::bail;
+
+/// One (task, engine, k) cell of results.
+#[derive(Debug, Clone)]
+pub struct CellReport {
+    pub task: Task,
+    pub engine: Engine,
+    /// Effective fold count (LOOCV is reported as n).
+    pub k: usize,
+    pub n: usize,
+    pub repetitions: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub mean_wall_secs: f64,
+    pub ops: OpCounts,
+}
+
+impl CellReport {
+    fn from_rep(task: Task, engine: Engine, n: usize, rep: &RepetitionResult) -> Self {
+        Self {
+            task,
+            engine,
+            k: rep.spec.k,
+            n,
+            repetitions: rep.spec.repetitions,
+            mean: rep.mean,
+            std: rep.std,
+            mean_wall_secs: rep.mean_wall_secs,
+            ops: rep.ops.clone(),
+        }
+    }
+}
+
+/// Build the dataset for a task (synthetic unless `data_path` is given).
+pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
+    if let Some(path) = &cfg.data_path {
+        let binarize = matches!(cfg.task, Task::Pegasos | Task::NaiveBayes).then_some(1.0);
+        let mut data = libsvm::load(std::path::Path::new(path), None, binarize)?;
+        match cfg.task {
+            Task::Pegasos | Task::NaiveBayes => {
+                data.scale_to_unit_variance();
+            }
+            Task::Lsqsgd | Task::Ridge => {
+                data.scale_targets_to_unit_interval();
+            }
+            _ => {}
+        }
+        let n = cfg.n.min(data.n);
+        return Ok(data.take(n));
+    }
+    Ok(match cfg.task {
+        Task::Pegasos | Task::NaiveBayes => SyntheticCovertype::new(cfg.n, cfg.seed).generate(),
+        Task::Lsqsgd | Task::Ridge => SyntheticYearMsd::new(cfg.n, cfg.seed).generate(),
+        Task::Kmeans => SyntheticBlobs::new(cfg.n, 8, 5, cfg.seed).generate(),
+        Task::Density => SyntheticMixture1d::new(cfg.n, cfg.seed).generate(),
+    })
+}
+
+fn engine_kind(engine: Engine) -> Result<EngineKind> {
+    Ok(match engine {
+        Engine::Treecv => EngineKind::TreeCv,
+        Engine::Standard => EngineKind::Standard,
+        Engine::ParallelTreecv => EngineKind::ParallelTreeCv,
+        Engine::Merge => bail!("merge engine is dispatched separately"),
+    })
+}
+
+fn run_cells<L>(learner: &L, data: &Dataset, cfg: &ExperimentConfig) -> Result<Vec<CellReport>>
+where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    let mut out = Vec::new();
+    for &k_raw in &cfg.ks {
+        let k = if k_raw == 0 { data.n } else { k_raw };
+        if k > data.n {
+            bail!("k = {k} exceeds n = {}", data.n);
+        }
+        let spec = RepetitionSpec {
+            engine: engine_kind(cfg.engine)?,
+            ordering: Ordering::from(cfg.ordering),
+            strategy: Strategy::from(cfg.strategy),
+            k,
+            repetitions: cfg.repetitions,
+            seed: cfg.seed,
+        };
+        let rep = run_repetitions(learner, data, &spec);
+        out.push(CellReport::from_rep(cfg.task, cfg.engine, data.n, &rep));
+    }
+    Ok(out)
+}
+
+fn run_merge_cells<L: MergeableLearner>(
+    learner: &L,
+    data: &Dataset,
+    cfg: &ExperimentConfig,
+) -> Result<Vec<CellReport>> {
+    let mut out = Vec::new();
+    for &k_raw in &cfg.ks {
+        let k = if k_raw == 0 { data.n } else { k_raw };
+        if k > data.n {
+            bail!("k = {k} exceeds n = {}", data.n);
+        }
+        let mut stats = crate::metrics::RunningStats::default();
+        let mut wall = std::time::Duration::ZERO;
+        let mut ops = OpCounts::default();
+        for r in 0..cfg.repetitions {
+            let rep_seed = cfg.seed.wrapping_add(r as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let folds = Folds::new(data.n, k, rep_seed);
+            let res = MergeCv.run(learner, data, &folds);
+            stats.push(res.estimate);
+            wall += res.wall;
+            ops = res.ops;
+        }
+        out.push(CellReport {
+            task: cfg.task,
+            engine: Engine::Merge,
+            k,
+            n: data.n,
+            repetitions: cfg.repetitions,
+            mean: stats.mean(),
+            std: stats.std(),
+            mean_wall_secs: wall.as_secs_f64() / cfg.repetitions.max(1) as f64,
+            ops,
+        });
+    }
+    Ok(out)
+}
+
+/// Run the experiment described by `cfg` and return one report per k.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Vec<CellReport>> {
+    let data = build_dataset(cfg)?;
+    let d = data.d;
+    // The paper sets α from the full-data n; we do the same.
+    let alpha = cfg.effective_alpha(data.n);
+
+    if cfg.engine == Engine::Merge {
+        return match cfg.task {
+            Task::NaiveBayes => run_merge_cells(&GaussianNb::new(d), &data, cfg),
+            Task::Density => run_merge_cells(&HistogramDensity::new(-8.0, 8.0, 64), &data, cfg),
+            Task::Ridge => run_merge_cells(&OnlineRidge::new(d, 1.0), &data, cfg),
+            t => bail!("task {t:?} is not mergeable (Izbicki's assumption does not hold)"),
+        };
+    }
+
+    match cfg.task {
+        Task::Pegasos => run_cells(&Pegasos::new(d, cfg.lambda), &data, cfg),
+        Task::Lsqsgd => run_cells(&LsqSgd::new(d, alpha), &data, cfg),
+        Task::Kmeans => run_cells(&OnlineKMeans::new(d, 5), &data, cfg),
+        Task::Density => run_cells(&HistogramDensity::new(-8.0, 8.0, 64), &data, cfg),
+        Task::NaiveBayes => run_cells(&GaussianNb::new(d), &data, cfg),
+        Task::Ridge => run_cells(&OnlineRidge::new(d, 1.0), &data, cfg),
+    }
+}
+
+/// Pretty-print reports as an aligned text table (the CLI's default output).
+pub fn format_table(reports: &[CellReport]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<12} {:<16} {:>8} {:>9} {:>5} {:>12} {:>12} {:>12} {:>14}\n",
+        "task", "engine", "k", "n", "reps", "mean", "std", "wall(s)", "pts_updated"
+    ));
+    for r in reports {
+        s.push_str(&format!(
+            "{:<12} {:<16} {:>8} {:>9} {:>5} {:>12.6} {:>12.6} {:>12.4} {:>14}\n",
+            r.task.name(),
+            r.engine.name(),
+            r.k,
+            r.n,
+            r.repetitions,
+            r.mean,
+            r.std,
+            r.mean_wall_secs,
+            r.ops.points_updated,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OrderingCfg, StrategyCfg};
+
+    fn tiny_cfg(task: Task, engine: Engine) -> ExperimentConfig {
+        ExperimentConfig {
+            task,
+            engine,
+            ordering: OrderingCfg::Fixed,
+            strategy: StrategyCfg::Copy,
+            n: 200,
+            ks: vec![5],
+            repetitions: 3,
+            seed: 1,
+            lambda: 1e-4,
+            alpha: 0.0,
+            data_path: None,
+            out: None,
+        }
+    }
+
+    #[test]
+    fn runs_every_task_with_treecv() {
+        for &task in Task::all() {
+            let cfg = tiny_cfg(task, Engine::Treecv);
+            let reports = run_experiment(&cfg).unwrap();
+            assert_eq!(reports.len(), 1, "{task:?}");
+            assert!(reports[0].mean.is_finite(), "{task:?}");
+        }
+    }
+
+    #[test]
+    fn loocv_k_zero_expands_to_n() {
+        let mut cfg = tiny_cfg(Task::Density, Engine::Treecv);
+        cfg.ks = vec![0];
+        cfg.repetitions = 1;
+        let reports = run_experiment(&cfg).unwrap();
+        assert_eq!(reports[0].k, 200);
+    }
+
+    #[test]
+    fn merge_engine_rejects_nonmergeable() {
+        let cfg = tiny_cfg(Task::Pegasos, Engine::Merge);
+        assert!(run_experiment(&cfg).is_err());
+    }
+
+    #[test]
+    fn merge_engine_works_for_naive_bayes() {
+        let cfg = tiny_cfg(Task::NaiveBayes, Engine::Merge);
+        let reports = run_experiment(&cfg).unwrap();
+        assert!(reports[0].mean.is_finite());
+        assert_eq!(reports[0].ops.points_updated, 200);
+    }
+
+    #[test]
+    fn oversized_k_is_an_error() {
+        let mut cfg = tiny_cfg(Task::Pegasos, Engine::Treecv);
+        cfg.ks = vec![9999];
+        assert!(run_experiment(&cfg).is_err());
+    }
+
+    #[test]
+    fn table_formatting_contains_rows() {
+        let cfg = tiny_cfg(Task::Pegasos, Engine::Treecv);
+        let reports = run_experiment(&cfg).unwrap();
+        let table = format_table(&reports);
+        assert!(table.contains("pegasos"));
+        assert!(table.contains("treecv"));
+    }
+}

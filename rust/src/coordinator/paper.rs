@@ -1,0 +1,537 @@
+//! Paper-shaped outputs: every table and figure in the paper's evaluation
+//! section (§5) has a generator here that prints the same rows/series the
+//! paper reports. The CLI subcommands and the criterion benches both call
+//! these, so EXPERIMENTS.md numbers are regenerable from one place.
+
+use super::{run_experiment, CellReport};
+use crate::config::{Engine, ExperimentConfig, OrderingCfg, Task};
+use crate::cv::exact;
+use crate::cv::folds::Folds;
+use crate::data::synth::SyntheticCovertype;
+use crate::distributed::{Cluster, NetworkModel};
+use crate::learner::pegasos::Pegasos;
+use crate::learner::IncrementalLearner;
+use crate::Result;
+use anyhow::bail;
+
+fn base_cfg(task: Task, n: usize, seed: u64) -> ExperimentConfig {
+    ExperimentConfig { task, n, seed, ..ExperimentConfig::default() }
+}
+
+// ---------------------------------------------------------------------------
+// Table 2
+// ---------------------------------------------------------------------------
+
+/// One Table-2 cell: engine × ordering × k.
+#[derive(Debug, Clone)]
+pub struct Table2Cell {
+    pub k: usize,
+    pub is_loocv: bool,
+    pub engine: Engine,
+    pub ordering: OrderingCfg,
+    pub mean: f64,
+    pub std: f64,
+    pub mean_wall_secs: f64,
+}
+
+/// Full Table-2 reproduction for one task.
+#[derive(Debug, Clone)]
+pub struct Table2Output {
+    pub task: Task,
+    pub n: usize,
+    pub repetitions: usize,
+    pub cells: Vec<Table2Cell>,
+}
+
+/// Reproduce Table 2: for each k, the four columns
+/// (TreeCV × {fixed, randomized}, Standard × {fixed, randomized});
+/// for k = n (LOOCV) the standard columns are N/A, as in the paper.
+pub fn table2(task: Task, n: usize, ks: &[usize], reps: usize, seed: u64) -> Result<Table2Output> {
+    let mut cells = Vec::new();
+    for &k_raw in ks {
+        let is_loocv = k_raw == 0 || k_raw == n;
+        for engine in [Engine::Treecv, Engine::Standard] {
+            if is_loocv && engine == Engine::Standard {
+                continue; // paper: "N/A" — infeasible by construction
+            }
+            for ordering in [OrderingCfg::Fixed, OrderingCfg::Randomized] {
+                let cfg = ExperimentConfig {
+                    engine,
+                    ordering,
+                    ks: vec![k_raw],
+                    repetitions: reps,
+                    ..base_cfg(task, n, seed)
+                };
+                let rep: CellReport = run_experiment(&cfg)?.remove(0);
+                cells.push(Table2Cell {
+                    k: rep.k,
+                    is_loocv,
+                    engine,
+                    ordering,
+                    mean: rep.mean,
+                    std: rep.std,
+                    mean_wall_secs: rep.mean_wall_secs,
+                });
+            }
+        }
+    }
+    Ok(Table2Output { task, n, repetitions: reps, cells })
+}
+
+impl crate::report::ToJson for Table2Output {
+    fn to_json(&self) -> crate::report::Json {
+        use crate::report::Json;
+        Json::obj(vec![
+            ("task", Json::str(self.task.name())),
+            ("n", Json::num(self.n as f64)),
+            ("repetitions", Json::num(self.repetitions as f64)),
+            (
+                "cells",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("k", Json::num(c.k as f64)),
+                                ("is_loocv", Json::Bool(c.is_loocv)),
+                                ("engine", Json::str(c.engine.name())),
+                                ("ordering", Json::str(c.ordering.name())),
+                                ("mean", Json::Num(c.mean)),
+                                ("std", Json::Num(c.std)),
+                                ("mean_wall_secs", Json::Num(c.mean_wall_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl Table2Output {
+    /// Render in the paper's layout (values ×100, like Table 2).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "Table 2 — CV estimates for {:?} (loss ×100), n = {}, {} repetitions\n\
+             {:>8} | {:>22} | {:>22} | {:>22} | {:>22}\n",
+            self.task, self.n, self.repetitions,
+            "k", "TreeCV fixed", "TreeCV randomized", "Standard fixed", "Standard randomized",
+        );
+        let mut ks: Vec<usize> = self.cells.iter().map(|c| c.k).collect();
+        ks.dedup();
+        for k in ks {
+            let cell = |engine: Engine, ordering: OrderingCfg| -> String {
+                self.cells
+                    .iter()
+                    .find(|c| c.k == k && c.engine == engine && c.ordering == ordering)
+                    .map(|c| format!("{:>10.3} ± {:<8.4}", c.mean * 100.0, c.std * 100.0))
+                    .unwrap_or_else(|| format!("{:>22}", "N/A"))
+            };
+            let k_label = if self.cells.iter().any(|c| c.k == k && c.is_loocv) {
+                format!("n={k}")
+            } else {
+                format!("{k}")
+            };
+            s.push_str(&format!(
+                "{:>8} | {} | {} | {} | {}\n",
+                k_label,
+                cell(Engine::Treecv, OrderingCfg::Fixed),
+                cell(Engine::Treecv, OrderingCfg::Randomized),
+                cell(Engine::Standard, OrderingCfg::Fixed),
+                cell(Engine::Standard, OrderingCfg::Randomized),
+            ));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2
+// ---------------------------------------------------------------------------
+
+/// Which column of Figure 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Panel {
+    /// Left column: k ∈ {5,10,100}, fixed order.
+    Fixed,
+    /// Middle column: k ∈ {5,10,100}, randomized order.
+    Randomized,
+    /// Right column: LOOCV (k = n), both orderings, standard only at small n.
+    Loocv,
+}
+
+impl Panel {
+    pub fn parse(s: &str) -> Result<Panel> {
+        Ok(match s {
+            "fixed" => Panel::Fixed,
+            "randomized" => Panel::Randomized,
+            "loocv" => Panel::Loocv,
+            other => bail!("unknown panel `{other}` (fixed|randomized|loocv)"),
+        })
+    }
+}
+
+/// One measured point of a Figure-2 series.
+#[derive(Debug, Clone)]
+pub struct Figure2Row {
+    pub series: String,
+    pub n: usize,
+    pub k: usize,
+    pub mean_wall_secs: f64,
+    pub points_updated: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Figure2Output {
+    pub task: Task,
+    pub panel: Panel,
+    pub rows: Vec<Figure2Row>,
+}
+
+/// Default n-sweep for a maximum size (rough geometric spacing, as in the
+/// paper's n axis).
+pub fn default_ns(max_n: usize) -> Vec<usize> {
+    let mut ns = Vec::new();
+    let mut n = 1_000usize;
+    while n < max_n {
+        ns.push(n);
+        ns.push((n * 2).min(max_n));
+        ns.push((n * 5).min(max_n));
+        n *= 10;
+    }
+    ns.push(max_n);
+    ns.sort_unstable();
+    ns.dedup();
+    ns.retain(|&v| v >= 100);
+    ns
+}
+
+/// Reproduce one Figure-2 panel: runtime vs n for TreeCV and the standard
+/// method. `reps` repetitions are averaged per point (the paper used 100).
+pub fn figure2(
+    task: Task,
+    panel: Panel,
+    ns: &[usize],
+    reps: usize,
+    seed: u64,
+) -> Result<Figure2Output> {
+    let mut rows = Vec::new();
+    let ordering = match panel {
+        Panel::Randomized => OrderingCfg::Randomized,
+        _ => OrderingCfg::Fixed,
+    };
+    match panel {
+        Panel::Fixed | Panel::Randomized => {
+            for &k in &[5usize, 10, 100] {
+                for engine in [Engine::Treecv, Engine::Standard] {
+                    for &n in ns {
+                        if k > n {
+                            continue;
+                        }
+                        let cfg = ExperimentConfig {
+                            engine,
+                            ordering,
+                            ks: vec![k],
+                            repetitions: reps,
+                            ..base_cfg(task, n, seed)
+                        };
+                        let rep = run_experiment(&cfg)?.remove(0);
+                        rows.push(Figure2Row {
+                            series: format!("{engine:?}-k{k}").to_lowercase(),
+                            n,
+                            k,
+                            mean_wall_secs: rep.mean_wall_secs,
+                            points_updated: rep.ops.points_updated,
+                        });
+                    }
+                }
+            }
+        }
+        Panel::Loocv => {
+            for &n in ns {
+                for ordering in [OrderingCfg::Fixed, OrderingCfg::Randomized] {
+                    let cfg = ExperimentConfig {
+                        engine: Engine::Treecv,
+                        ordering,
+                        ks: vec![0],
+                        repetitions: reps,
+                        ..base_cfg(task, n, seed)
+                    };
+                    let rep = run_experiment(&cfg)?.remove(0);
+                    rows.push(Figure2Row {
+                        series: format!("treecv-loocv-{ordering:?}").to_lowercase(),
+                        n,
+                        k: n,
+                        mean_wall_secs: rep.mean_wall_secs,
+                        points_updated: rep.ops.points_updated,
+                    });
+                }
+                // Standard LOOCV is Θ(n²): only run where the paper could
+                // (n ≤ 10,000), so the panel shows the same cut-off.
+                if n <= 10_000 {
+                    for ordering in [OrderingCfg::Fixed, OrderingCfg::Randomized] {
+                        let cfg = ExperimentConfig {
+                            engine: Engine::Standard,
+                            ordering,
+                            ks: vec![0],
+                            repetitions: reps.min(3),
+                            ..base_cfg(task, n, seed)
+                        };
+                        let rep = run_experiment(&cfg)?.remove(0);
+                        rows.push(Figure2Row {
+                            series: format!("standard-loocv-{ordering:?}").to_lowercase(),
+                            n,
+                            k: n,
+                            mean_wall_secs: rep.mean_wall_secs,
+                            points_updated: rep.ops.points_updated,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(Figure2Output { task, panel, rows })
+}
+
+impl Figure2Output {
+    pub fn render_csv(&self) -> String {
+        let mut s = String::from("series,n,k,mean_wall_secs,points_updated\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{},{:.6},{}\n",
+                r.series, r.n, r.k, r.mean_wall_secs, r.points_updated
+            ));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LOOCV headline, distributed report, grid search, selfcheck
+// ---------------------------------------------------------------------------
+
+/// The paper's headline comparison: TreeCV LOOCV at large n versus the
+/// standard method at a small n (the paper: TreeCV at n = 581,012 took a
+/// fraction of the standard method's time at n = 10,000).
+pub fn loocv_headline(task: Task, n: usize, standard_max_n: usize, seed: u64) -> Result<String> {
+    let tree_cfg = ExperimentConfig {
+        engine: Engine::Treecv,
+        ks: vec![0],
+        repetitions: 1,
+        ..base_cfg(task, n, seed)
+    };
+    let tree = run_experiment(&tree_cfg)?.remove(0);
+    let std_cfg = ExperimentConfig {
+        engine: Engine::Standard,
+        ks: vec![0],
+        repetitions: 1,
+        n: standard_max_n,
+        ..base_cfg(task, standard_max_n, seed)
+    };
+    let std_rep = run_experiment(&std_cfg)?.remove(0);
+    let mut s = String::new();
+    s.push_str(&format!("LOOCV headline ({task:?}):\n"));
+    s.push_str(&format!(
+        "  TreeCV   LOOCV @ n={:>8}: {:>10.3}s  estimate={:.6}  ({} update-points)\n",
+        n, tree.mean_wall_secs, tree.mean, tree.ops.points_updated
+    ));
+    s.push_str(&format!(
+        "  Standard LOOCV @ n={:>8}: {:>10.3}s  estimate={:.6}  ({} update-points)\n",
+        standard_max_n, std_rep.mean_wall_secs, std_rep.mean, std_rep.ops.points_updated
+    ));
+    s.push_str(&format!(
+        "  TreeCV at {}x the data runs {:.1}x {} than standard at n={}\n",
+        n / standard_max_n.max(1),
+        if tree.mean_wall_secs > 0.0 {
+            (std_rep.mean_wall_secs / tree.mean_wall_secs).max(
+                tree.mean_wall_secs / std_rep.mean_wall_secs,
+            )
+        } else {
+            f64::INFINITY
+        },
+        if tree.mean_wall_secs <= std_rep.mean_wall_secs { "FASTER" } else { "slower" },
+        standard_max_n
+    ));
+    Ok(s)
+}
+
+/// §4.1 distributed simulation: model-message counts vs the O(k log k)
+/// bound, against the naive data-shipping standard CV.
+pub fn distributed_report(n: usize, ks: &[usize], seed: u64) -> Result<String> {
+    let data = SyntheticCovertype::new(n, seed).generate();
+    let learner = Pegasos::new(data.d, 1e-6);
+    let mut s = String::from(
+        "Distributed TreeCV simulation (model moves, data stays)\n\
+         k, model_msgs, bound_2k_log2k, model_MB, naive_data_MB, sim_net_time_s, naive_net_time_s\n",
+    );
+    for &k in ks {
+        let folds = Folds::new(n, k, seed ^ 0xD157);
+        let cluster = Cluster::new(&data, &folds, NetworkModel::default());
+        let tree = cluster.treecv(&learner);
+        let naive = cluster.standard_naive(&learner);
+        let bound = 2.0 * k as f64 * (((2 * k) as f64).log2() + 1.0) + 2.0 * k as f64;
+        s.push_str(&format!(
+            "{k}, {}, {:.0}, {:.3}, {:.3}, {:.4}, {:.4}\n",
+            tree.comm.model_messages,
+            bound,
+            tree.comm.model_bytes as f64 / 1e6,
+            naive.comm.data_bytes as f64 / 1e6,
+            tree.comm.sim_network_time_s,
+            naive.comm.sim_network_time_s,
+        ));
+    }
+    Ok(s)
+}
+
+/// The intro's motivating workload: tune PEGASOS's λ by k-CV over a grid.
+/// With TreeCV each grid point costs O(n log k) instead of O(nk).
+pub fn grid_search(n: usize, k: usize, log_lambdas: &[f64], seed: u64) -> Result<String> {
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::standard::StandardCv;
+    use crate::cv::CvEngine;
+    let data = SyntheticCovertype::new(n, seed).generate();
+    let folds = Folds::new(n, k, seed ^ 0x617D);
+    let mut s = format!(
+        "Grid search over λ (PEGASOS, n={n}, k={k})\n\
+         log10(lambda), treecv_estimate, treecv_secs, standard_estimate, standard_secs\n"
+    );
+    let mut best = (f64::INFINITY, 0.0f64);
+    let mut tree_total = 0.0;
+    let mut std_total = 0.0;
+    for &ll in log_lambdas {
+        let lambda = 10f64.powf(ll);
+        let learner = Pegasos::new(data.d, lambda);
+        let tree = TreeCv::default().run(&learner, &data, &folds);
+        let std_res = StandardCv::default().run(&learner, &data, &folds);
+        tree_total += tree.wall.as_secs_f64();
+        std_total += std_res.wall.as_secs_f64();
+        if tree.estimate < best.0 {
+            best = (tree.estimate, ll);
+        }
+        s.push_str(&format!(
+            "{ll}, {:.6}, {:.4}, {:.6}, {:.4}\n",
+            tree.estimate,
+            tree.wall.as_secs_f64(),
+            std_res.estimate,
+            std_res.wall.as_secs_f64()
+        ));
+    }
+    s.push_str(&format!(
+        "best: log10(lambda)={} (estimate {:.6}); grid total: treecv {:.3}s vs standard {:.3}s ({:.2}x)\n",
+        best.1,
+        best.0,
+        tree_total,
+        std_total,
+        std_total / tree_total.max(1e-12)
+    ));
+    Ok(s)
+}
+
+/// Smoke-test the PJRT runtime and every artifact in the manifest, and
+/// cross-check the XLA PEGASOS learner against the pure-Rust one.
+pub fn selfcheck() -> Result<()> {
+    use crate::runtime::{xla_learner::XlaPegasos, Manifest, PjrtRuntime};
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = Manifest::load_default()?;
+    println!("manifest: {} programs (jax {})", manifest.programs.len(), manifest.jax_version);
+    for p in &manifest.programs {
+        rt.load(&p.name)?;
+        println!("  compiled {} (B={}, d={})", p.name, p.block, p.dim);
+    }
+    // Cross-check XLA vs Rust PEGASOS on a small run.
+    let d = 54;
+    let data = SyntheticCovertype::new(512, 7).generate();
+    let idx: Vec<u32> = (0..512).collect();
+    let xla_l = XlaPegasos::from_manifest(&rt, &manifest, d, 1e-3)?;
+    let mut xm = xla_l.init();
+    xla_l.update(&mut xm, &data, &idx);
+    let rust_l = Pegasos::new(d, 1e-3);
+    let mut rm = rust_l.init();
+    rust_l.update(&mut rm, &data, &idx);
+    let xla_err = xla_l.evaluate(&xm, &data, &idx);
+    let rust_err = rust_l.evaluate(&rm, &data, &idx);
+    println!("xla pegasos err={xla_err:.6}  rust pegasos err={rust_err:.6}");
+    anyhow::ensure!(
+        (xla_err - rust_err).abs() < 0.02,
+        "XLA and Rust PEGASOS disagree: {xla_err} vs {rust_err}"
+    );
+    println!("selfcheck OK");
+    Ok(())
+}
+
+/// Validate the TreeCV LOOCV against the closed-form ridge LOOCV (§1.1
+/// comparator); returns (treecv, exact) estimates.
+pub fn ridge_exact_comparison(n: usize, d: usize, lambda: f64, seed: u64) -> Result<(f64, f64)> {
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::CvEngine;
+    use crate::learner::ridge::OnlineRidge;
+    let full = crate::data::synth::SyntheticYearMsd::new(n, seed).generate();
+    let mut x = Vec::with_capacity(n * d);
+    for i in 0..n {
+        x.extend_from_slice(&full.row(i as u32)[..d]);
+    }
+    let data = crate::data::Dataset::new(x, full.y.clone(), d);
+    let ex = exact::ridge_loocv(&data, lambda);
+    let learner = OnlineRidge::new(d, lambda);
+    let folds = Folds::loocv(n);
+    let tree = TreeCv::default().run(&learner, &data, &folds);
+    Ok((tree.estimate, ex.estimate))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_ns_monotone() {
+        let ns = default_ns(50_000);
+        assert!(ns.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*ns.last().unwrap(), 50_000);
+        assert!(ns.contains(&1_000));
+    }
+
+    #[test]
+    fn panel_parse() {
+        assert_eq!(Panel::parse("fixed").unwrap(), Panel::Fixed);
+        assert_eq!(Panel::parse("loocv").unwrap(), Panel::Loocv);
+        assert!(Panel::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn table2_small_smoke() {
+        let out = table2(Task::Density, 120, &[4, 0], 2, 3).unwrap();
+        // k=4: 4 cells; k=n (LOOCV): TreeCV only → 2 cells.
+        assert_eq!(out.cells.len(), 6);
+        let render = out.render();
+        assert!(render.contains("n=120"));
+        assert!(render.contains("N/A"));
+    }
+
+    #[test]
+    fn figure2_loocv_small_smoke() {
+        let out = figure2(Task::Density, Panel::Loocv, &[100, 200], 1, 3).unwrap();
+        // 2 ns × (2 treecv + 2 standard) rows.
+        assert_eq!(out.rows.len(), 8);
+        let csv = out.render_csv();
+        assert!(csv.starts_with("series,"));
+    }
+
+    #[test]
+    fn ridge_exact_comparison_agrees() {
+        let (tree, exact) = ridge_exact_comparison(60, 6, 0.5, 9).unwrap();
+        assert!((tree - exact).abs() < 1e-6 * (1.0 + exact), "{tree} vs {exact}");
+    }
+
+    #[test]
+    fn grid_search_smoke() {
+        let s = grid_search(300, 5, &[-4.0, -3.0], 11).unwrap();
+        assert!(s.contains("best:"));
+    }
+
+    #[test]
+    fn distributed_report_smoke() {
+        let s = distributed_report(256, &[4, 8], 12).unwrap();
+        assert!(s.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,227 @@
+//! Closed-form ridge LOOCV — the external correctness comparator from the
+//! classical fast-CV literature the paper reviews (§1.1: Golub, Heath &
+//! Wahba 1979; Pahikkala et al. 2006; Cawley 2006).
+//!
+//! For ridge regression `w = (XᵀX + λI)⁻¹ Xᵀ y` fitted on the full dataset,
+//! the leave-one-out residual has the classic closed form
+//! `y_i − x_iᵀ w_{−i} = e_i / (1 − h_ii)` with leverage
+//! `h_ii = x_iᵀ (XᵀX + λI)⁻¹ x_i` and full-data residual `e_i = y_i − x_iᵀw`.
+//! So `LOOCV = (1/n) Σ (e_i / (1 − h_ii))²` in O(n·d² + d³) — no n-fold
+//! retraining.
+//!
+//! Because [`crate::learner::ridge::OnlineRidge`] is batching-insensitive,
+//! TreeCV's LOOCV with that learner must equal this closed form (paper
+//! Theorem 1 with g ≡ 0, modulo f64 rounding) — an end-to-end validation
+//! of the whole TreeCV pipeline against independent mathematics.
+
+use crate::data::Dataset;
+use crate::learner::linalg;
+
+/// Result of the closed-form computation.
+#[derive(Debug, Clone)]
+pub struct ExactLoocv {
+    /// The LOOCV mean squared error.
+    pub estimate: f64,
+    /// Per-point leave-one-out squared residuals.
+    pub per_point: Vec<f64>,
+    /// Leverages `h_ii` (diagnostics; all in (0, 1) for λ > 0).
+    pub leverage: Vec<f64>,
+}
+
+/// Compute exact ridge LOOCV on the full dataset.
+pub fn ridge_loocv(data: &Dataset, lambda: f64) -> ExactLoocv {
+    let (n, d) = (data.n, data.d);
+    assert!(n > 0 && lambda > 0.0);
+
+    // A = XᵀX + λI, b = Xᵀy in f64.
+    let mut a = vec![0f64; d * d];
+    let mut b = vec![0f64; d];
+    for i in 0..n {
+        let x = data.row(i as u32);
+        let y = data.label(i as u32) as f64;
+        for p in 0..d {
+            let xp = x[p] as f64;
+            b[p] += xp * y;
+            for q in 0..d {
+                a[p * d + q] += xp * (x[q] as f64);
+            }
+        }
+    }
+    for j in 0..d {
+        a[j * d + j] += lambda;
+    }
+
+    let l = linalg::cholesky(&a, d).expect("XᵀX + λI is SPD");
+    let w = linalg::cholesky_solve(&l, d, &b);
+    let a_inv = linalg::cholesky_inverse(&l, d);
+
+    let mut per_point = Vec::with_capacity(n);
+    let mut leverage = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = data.row(i as u32);
+        let y = data.label(i as u32) as f64;
+        // h_ii = xᵀ A⁻¹ x.
+        let mut h = 0f64;
+        for p in 0..d {
+            let mut s = 0f64;
+            for q in 0..d {
+                s += a_inv[p * d + q] * (x[q] as f64);
+            }
+            h += (x[p] as f64) * s;
+        }
+        let pred: f64 = (0..d).map(|j| w[j] * x[j] as f64).sum();
+        let e = y - pred;
+        let loo = e / (1.0 - h);
+        per_point.push(loo * loo);
+        leverage.push(h);
+    }
+    let estimate = per_point.iter().sum::<f64>() / n as f64;
+    ExactLoocv { estimate, per_point, leverage }
+}
+
+/// Generalized cross-validation (Golub, Heath & Wahba 1979; paper §1.1):
+/// the rotation-invariant LOOCV approximation
+/// `V(λ) = n·‖(I − A(λ))y‖² / tr(I − A(λ))²`
+/// with influence matrix `A(λ) = X(XᵀX + λI)⁻¹Xᵀ`. GCV replaces each
+/// leverage `h_ii` by the average `tr(A)/n` — so it equals exact LOOCV
+/// when leverages are homogeneous and deviates otherwise. Provided as a
+/// second classical comparator (and a λ-selection criterion).
+pub fn ridge_gcv(data: &Dataset, lambda: f64) -> f64 {
+    let (n, d) = (data.n, data.d);
+    assert!(n > 0 && lambda > 0.0);
+    let mut a = vec![0f64; d * d];
+    let mut b = vec![0f64; d];
+    for i in 0..n {
+        let x = data.row(i as u32);
+        let y = data.label(i as u32) as f64;
+        for p in 0..d {
+            let xp = x[p] as f64;
+            b[p] += xp * y;
+            for q in 0..d {
+                a[p * d + q] += xp * (x[q] as f64);
+            }
+        }
+    }
+    let gram = a.clone(); // XᵀX before regularization (for the trace)
+    for j in 0..d {
+        a[j * d + j] += lambda;
+    }
+    let l = linalg::cholesky(&a, d).expect("SPD");
+    let w = linalg::cholesky_solve(&l, d, &b);
+    let a_inv = linalg::cholesky_inverse(&l, d);
+    // tr(A(λ)) = tr((XᵀX + λI)⁻¹ XᵀX).
+    let mut trace = 0f64;
+    for p in 0..d {
+        for q in 0..d {
+            trace += a_inv[p * d + q] * gram[q * d + p];
+        }
+    }
+    let mut rss = 0f64;
+    for i in 0..n {
+        let x = data.row(i as u32);
+        let pred: f64 = (0..d).map(|j| w[j] * x[j] as f64).sum();
+        let e = data.label(i as u32) as f64 - pred;
+        rss += e * e;
+    }
+    let denom = (1.0 - trace / n as f64).powi(2);
+    rss / (n as f64 * denom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::Folds;
+    use crate::cv::standard::StandardCv;
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::CvEngine;
+    use crate::data::synth::SyntheticYearMsd;
+    use crate::learner::ridge::OnlineRidge;
+    use crate::learner::IncrementalLearner;
+
+    fn small_data(n: usize, seed: u64) -> Dataset {
+        // Small d keeps the O(n·d²) brute-force comparison cheap.
+        let full = SyntheticYearMsd::new(n, seed).generate();
+        let d = 8;
+        let mut x = Vec::with_capacity(n * d);
+        for i in 0..n {
+            x.extend_from_slice(&full.row(i as u32)[..d]);
+        }
+        Dataset::new(x, full.y.clone(), d)
+    }
+
+    /// Closed form vs brute force: retrain without point i, per i.
+    #[test]
+    fn closed_form_matches_brute_force() {
+        let data = small_data(60, 111);
+        let lambda = 0.5;
+        let exact = ridge_loocv(&data, lambda);
+        let l = OnlineRidge::new(8, lambda);
+        for i in 0..data.n {
+            let idx: Vec<u32> = (0..data.n as u32).filter(|&j| j != i as u32).collect();
+            let mut m = l.init();
+            l.update(&mut m, &data, &idx);
+            let loss = l.loss(&m, &data, i as u32);
+            assert!(
+                (loss - exact.per_point[i]).abs() < 1e-6 * (1.0 + loss),
+                "i={i}: brute {loss} vs closed {}",
+                exact.per_point[i]
+            );
+        }
+    }
+
+    /// Leverages lie in (0, 1) and sum to the effective dof ≤ d.
+    #[test]
+    fn leverages_are_sane() {
+        let data = small_data(100, 112);
+        let exact = ridge_loocv(&data, 1.0);
+        let trace: f64 = exact.leverage.iter().sum();
+        assert!(exact.leverage.iter().all(|&h| h > 0.0 && h < 1.0));
+        assert!(trace <= 8.0 + 1e-9, "trace {trace}");
+    }
+
+    /// GCV approximates exact LOOCV (equality requires homogeneous
+    /// leverages; on i.i.d. Gaussian features they are near-homogeneous).
+    #[test]
+    fn gcv_close_to_exact_loocv() {
+        let data = small_data(200, 114);
+        for lambda in [0.1, 1.0, 10.0] {
+            let exact = ridge_loocv(&data, lambda).estimate;
+            let gcv = ridge_gcv(&data, lambda);
+            assert!(
+                (gcv - exact).abs() < 0.05 * (1.0 + exact),
+                "λ={lambda}: gcv {gcv} vs exact {exact}"
+            );
+        }
+    }
+
+    /// GCV is a valid λ-selection criterion: it prefers moderate λ over a
+    /// degenerate one on noisy data.
+    #[test]
+    fn gcv_penalizes_undersmoothing() {
+        let data = small_data(120, 115);
+        let tiny = ridge_gcv(&data, 1e-9);
+        let moderate = ridge_gcv(&data, 1.0);
+        assert!(moderate <= tiny * 1.05, "moderate {moderate} vs tiny-λ {tiny}");
+    }
+
+    /// The headline validation: TreeCV LOOCV with the incremental ridge
+    /// learner reproduces the closed form (Theorem 1 with g ≡ 0).
+    #[test]
+    fn treecv_loocv_equals_closed_form() {
+        let data = small_data(80, 113);
+        let lambda = 0.7;
+        let exact = ridge_loocv(&data, lambda);
+        let l = OnlineRidge::new(8, lambda);
+        let folds = Folds::loocv(data.n);
+        let tree = TreeCv::default().run(&l, &data, &folds);
+        assert!(
+            (tree.estimate - exact.estimate).abs() < 1e-7 * (1.0 + exact.estimate),
+            "treecv {} vs exact {}",
+            tree.estimate,
+            exact.estimate
+        );
+        // Standard CV agrees too (and with TreeCV, not just in aggregate).
+        let std_res = StandardCv::default().run(&l, &data, &folds);
+        assert!((std_res.estimate - exact.estimate).abs() < 1e-7 * (1.0 + exact.estimate));
+    }
+}

@@ -1,0 +1,213 @@
+//! Fold assignment ("chunks" in the paper) and the data-ordering policies
+//! of §5.
+//!
+//! The paper fixes a partitioning of `{z_1..z_n}` into k chunks, and then
+//! distinguishes two ways of ordering the points fed to an online learner:
+//!
+//! * **fixed** — "a fixed ordering of the chunks and of the samples within
+//!   each chunk"; training on chunks `Z_{i1}..Z_{ij}` concatenates them in
+//!   this hierarchical order.
+//! * **randomized** — "the samples used in a training phase are provided
+//!   in a random order": each training call shuffles the union of the
+//!   chunks it is about to feed.
+
+use crate::metrics::OpCounts;
+use crate::rng::Rng;
+
+/// A partition of `0..n` into `k` chunks of (near-)equal size.
+#[derive(Debug, Clone)]
+pub struct Folds {
+    chunks: Vec<Vec<u32>>,
+    n: usize,
+}
+
+impl Folds {
+    /// Random equal-size partition: shuffle `0..n`, then deal round-robin
+    /// free slices. Sizes differ by at most 1 (the paper's analysis assumes
+    /// `n = k·b`; we support remainders for real data).
+    pub fn new(n: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1 && k <= n, "need 1 <= k ({k}) <= n ({n})");
+        let mut rng = Rng::derive(seed, 0xF01D5);
+        let perm = rng.permutation(n);
+        Self::from_permutation(&perm, k)
+    }
+
+    /// Contiguous partition of the *unshuffled* indices — useful when the
+    /// dataset was already shuffled once up front (paper's fixed layout).
+    pub fn contiguous(n: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= n);
+        let perm: Vec<u32> = (0..n as u32).collect();
+        Self::from_permutation(&perm, k)
+    }
+
+    /// Like [`Folds::new`] (random assignment of points to chunks), but
+    /// with each chunk's indices sorted ascending. The fold *sets* are
+    /// identical in distribution; only the fixed within-chunk order
+    /// changes, which is a valid "fixed ordering" in the paper's sense
+    /// and makes training passes walk the dataset near-sequentially —
+    /// a pure memory-locality optimization (EXPERIMENTS.md §Perf).
+    pub fn new_sorted(n: usize, k: usize, seed: u64) -> Self {
+        let mut f = Self::new(n, k, seed);
+        for c in f.chunks.iter_mut() {
+            c.sort_unstable();
+        }
+        f
+    }
+
+    /// Leave-one-out folds.
+    pub fn loocv(n: usize) -> Self {
+        Self::contiguous(n, n)
+    }
+
+    fn from_permutation(perm: &[u32], k: usize) -> Self {
+        let n = perm.len();
+        let base = n / k;
+        let extra = n % k;
+        let mut chunks = Vec::with_capacity(k);
+        let mut off = 0;
+        for i in 0..k {
+            let len = base + usize::from(i < extra);
+            chunks.push(perm[off..off + len].to_vec());
+            off += len;
+        }
+        debug_assert_eq!(off, n);
+        Self { chunks, n }
+    }
+
+    pub fn k(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The held-out chunk `Z_i`.
+    pub fn chunk(&self, i: usize) -> &[u32] {
+        &self.chunks[i]
+    }
+
+    /// Concatenate chunks `lo..=hi` in hierarchical (fixed) order.
+    pub fn gather_range(&self, lo: usize, hi: usize) -> Vec<u32> {
+        let cap: usize = (lo..=hi).map(|c| self.chunks[c].len()).sum();
+        let mut out = Vec::with_capacity(cap);
+        for c in lo..=hi {
+            out.extend_from_slice(&self.chunks[c]);
+        }
+        out
+    }
+
+    /// Concatenate every chunk except `i` (standard CV's training set),
+    /// fixed order.
+    pub fn gather_except(&self, i: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.n - self.chunks[i].len());
+        for (c, chunk) in self.chunks.iter().enumerate() {
+            if c != i {
+                out.extend_from_slice(chunk);
+            }
+        }
+        out
+    }
+}
+
+/// Fixed vs randomized feeding order (paper §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ordering {
+    Fixed,
+    Randomized,
+}
+
+impl Ordering {
+    /// Apply the policy to a gathered training sequence. `rng` is a
+    /// per-call derived stream so sequential and parallel engines agree.
+    pub fn apply(self, idx: &mut [u32], rng: &mut Rng, ops: &mut OpCounts) {
+        if self == Ordering::Randomized {
+            rng.shuffle(idx);
+            ops.points_permuted += idx.len() as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly_once() {
+        let f = Folds::new(103, 10, 1);
+        assert_eq!(f.k(), 10);
+        let mut seen = vec![false; 103];
+        for i in 0..10 {
+            for &p in f.chunk(i) {
+                assert!(!seen[p as usize], "duplicate {p}");
+                seen[p as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sizes_near_equal() {
+        let f = Folds::new(103, 10, 2);
+        let sizes: Vec<usize> = (0..10).map(|i| f.chunk(i).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| s == 10 || s == 11));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Folds::new(50, 5, 9);
+        let b = Folds::new(50, 5, 9);
+        let c = Folds::new(50, 5, 10);
+        for i in 0..5 {
+            assert_eq!(a.chunk(i), b.chunk(i));
+        }
+        assert!((0..5).any(|i| a.chunk(i) != c.chunk(i)));
+    }
+
+    #[test]
+    fn loocv_is_singletons() {
+        let f = Folds::loocv(7);
+        assert_eq!(f.k(), 7);
+        for i in 0..7 {
+            assert_eq!(f.chunk(i), &[i as u32]);
+        }
+    }
+
+    #[test]
+    fn gather_range_hierarchical_order() {
+        let f = Folds::contiguous(9, 3);
+        assert_eq!(f.gather_range(1, 2), vec![3, 4, 5, 6, 7, 8]);
+        assert_eq!(f.gather_range(0, 0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn gather_except_skips_fold() {
+        let f = Folds::contiguous(6, 3);
+        assert_eq!(f.gather_except(1), vec![0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn ordering_fixed_is_noop() {
+        let mut idx = vec![1u32, 2, 3];
+        let mut rng = Rng::new(1);
+        let mut ops = OpCounts::default();
+        Ordering::Fixed.apply(&mut idx, &mut rng, &mut ops);
+        assert_eq!(idx, vec![1, 2, 3]);
+        assert_eq!(ops.points_permuted, 0);
+    }
+
+    #[test]
+    fn ordering_randomized_permutes_and_counts() {
+        let mut idx: Vec<u32> = (0..100).collect();
+        let orig = idx.clone();
+        let mut rng = Rng::new(1);
+        let mut ops = OpCounts::default();
+        Ordering::Randomized.apply(&mut idx, &mut rng, &mut ops);
+        assert_ne!(idx, orig);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, orig);
+        assert_eq!(ops.points_permuted, 100);
+    }
+}

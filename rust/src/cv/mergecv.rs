@@ -1,0 +1,125 @@
+//! The Izbicki [2013] fold-merging baseline ("algebraic classifiers"),
+//! implemented for learners satisfying its restrictive assumption: models
+//! trained on two datasets can be *merged* in O(model) time into the model
+//! trained on the union ([`MergeableLearner`]).
+//!
+//! Train one model per chunk — O(n) total update work — then build prefix
+//! and suffix merges so each fold's leave-chunk-out model is a single merge
+//! `prefix[i] ⊕ suffix[i+1]`: O(k) merges total, giving the O(n + k)
+//! complexity the paper's related-work section quotes. The paper's point is
+//! that this only works for "simple methods, such as Bayesian
+//! classification" — our [`crate::learner::naive_bayes::GaussianNb`] and
+//! [`crate::learner::histdensity::HistogramDensity`] qualify; PEGASOS and
+//! LSQSGD do not, which is exactly why TreeCV is needed.
+
+use super::folds::Folds;
+use super::CvResult;
+use crate::data::Dataset;
+use crate::learner::MergeableLearner;
+use crate::metrics::{OpCounts, Timer};
+
+/// The fold-merging CV engine.
+#[derive(Debug, Clone, Default)]
+pub struct MergeCv;
+
+impl MergeCv {
+    /// Compute k-CV via per-chunk models and prefix/suffix merging.
+    pub fn run<L: MergeableLearner>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult {
+        let timer = Timer::start();
+        let k = folds.k();
+        let mut ops = OpCounts::default();
+
+        // One model per chunk: total O(n) update points.
+        let chunk_models: Vec<L::Model> = (0..k)
+            .map(|i| {
+                let mut m = learner.init();
+                let idx = folds.chunk(i);
+                learner.update(&mut m, data, idx);
+                ops.update_calls += 1;
+                ops.points_updated += idx.len() as u64;
+                m
+            })
+            .collect();
+
+        // prefix[i] = merge of chunks [0, i); suffix[i] = merge of [i, k).
+        // prefix[0] and suffix[k] are the empty model.
+        let mut prefix: Vec<L::Model> = Vec::with_capacity(k + 1);
+        prefix.push(learner.init());
+        for i in 0..k {
+            let next = learner.merge(&prefix[i], &chunk_models[i]);
+            ops.model_copies += 1; // a merge materializes a model
+            ops.bytes_copied += learner.model_bytes(&next) as u64;
+            prefix.push(next);
+        }
+        let mut suffix: Vec<L::Model> = vec![learner.init(); k + 1];
+        for i in (0..k).rev() {
+            suffix[i] = learner.merge(&chunk_models[i], &suffix[i + 1]);
+            ops.model_copies += 1;
+            ops.bytes_copied += learner.model_bytes(&suffix[i]) as u64;
+        }
+
+        let mut per_fold = vec![0.0; k];
+        for i in 0..k {
+            let model = learner.merge(&prefix[i], &suffix[i + 1]);
+            ops.model_copies += 1;
+            let chunk = folds.chunk(i);
+            per_fold[i] = learner.evaluate(&model, data, chunk);
+            ops.evals += 1;
+            ops.points_evaluated += chunk.len() as u64;
+        }
+        CvResult::from_folds(per_fold, ops, timer.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::standard::StandardCv;
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::CvEngine;
+    use crate::data::synth::{SyntheticCovertype, SyntheticMixture1d};
+    use crate::learner::histdensity::HistogramDensity;
+    use crate::learner::naive_bayes::GaussianNb;
+
+    /// For an exactly-mergeable learner all three engines agree.
+    #[test]
+    fn merge_equals_standard_and_treecv_for_histogram() {
+        let data = SyntheticMixture1d::new(300, 101).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        for k in [2, 4, 10, 30] {
+            let folds = Folds::new(300, k, 102);
+            let merge = MergeCv.run(&l, &data, &folds);
+            let std_res = StandardCv::default().run(&l, &data, &folds);
+            let tree = TreeCv::default().run(&l, &data, &folds);
+            assert_eq!(merge.per_fold, std_res.per_fold, "k={k}");
+            assert_eq!(merge.per_fold, tree.per_fold, "k={k}");
+        }
+    }
+
+    #[test]
+    fn merge_matches_standard_for_naive_bayes() {
+        let data = SyntheticCovertype::new(400, 103).generate();
+        let l = GaussianNb::new(54);
+        let folds = Folds::new(400, 8, 104);
+        let merge = MergeCv.run(&l, &data, &folds);
+        let std_res = StandardCv::default().run(&l, &data, &folds);
+        for (a, b) in merge.per_fold.iter().zip(&std_res.per_fold) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    /// Work accounting: update points are exactly n (each point trained
+    /// once), versus standard CV's k·(n−b).
+    #[test]
+    fn update_work_is_linear_in_n_only() {
+        let data = SyntheticMixture1d::new(200, 105).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 16);
+        for k in [2usize, 10, 50] {
+            let folds = Folds::new(200, k, 106);
+            let res = MergeCv.run(&l, &data, &folds);
+            assert_eq!(res.ops.points_updated, 200, "k={k}");
+            // 2k prefix/suffix merges + k final merges.
+            assert_eq!(res.ops.model_copies, 3 * k as u64);
+        }
+    }
+}

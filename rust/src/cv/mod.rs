@@ -1,0 +1,77 @@
+//! Cross-validation engines.
+//!
+//! * [`treecv`] — the paper's contribution (Algorithm 1): recursive
+//!   tree-structured CV in `O(log k)`-times single-training time.
+//! * [`standard`] — the naive k-repetition baseline the paper compares
+//!   against (train k models from scratch).
+//! * [`parallel`] — threaded TreeCV (paper §4.1's parallelization: one
+//!   thread per subtree, model copied at forks).
+//! * [`mergecv`] — the Izbicki [2013] O(n + k) baseline for *mergeable*
+//!   learners (related-work comparator).
+//! * [`exact`] — closed-form ridge LOOCV (hat-matrix), the external
+//!   correctness comparator from the classical fast-CV literature.
+//! * [`folds`] — fold assignment and the fixed/randomized data-ordering
+//!   policies of the paper's §5.
+//! * [`stats`] — the repetition harness producing Table-2-style
+//!   `mean ± std` rows.
+
+pub mod exact;
+pub mod folds;
+pub mod mergecv;
+pub mod parallel;
+pub mod repeated;
+pub mod standard;
+pub mod stats;
+pub mod treecv;
+
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+use crate::metrics::OpCounts;
+use folds::Folds;
+use std::time::Duration;
+
+/// Result of one CV computation.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    /// The k-CV estimate `R_{k-CV} = (1/k) Σ R_i`.
+    pub estimate: f64,
+    /// Per-fold scores `R_i`.
+    pub per_fold: Vec<f64>,
+    /// Work counters (for the Theorem-3 complexity validation).
+    pub ops: OpCounts,
+    /// Wall-clock time of the computation.
+    pub wall: Duration,
+}
+
+impl CvResult {
+    pub(crate) fn from_folds(per_fold: Vec<f64>, ops: OpCounts, wall: Duration) -> Self {
+        let estimate = if per_fold.is_empty() {
+            0.0
+        } else {
+            per_fold.iter().sum::<f64>() / per_fold.len() as f64
+        };
+        Self { estimate, per_fold, ops, wall }
+    }
+}
+
+/// Common interface over the CV engines, so benches/examples can swap them.
+pub trait CvEngine {
+    /// Engine name for reports.
+    fn engine_name(&self) -> &'static str;
+
+    /// Compute the k-CV estimate of `learner` on `data` under `folds`.
+    fn run<L: IncrementalLearner>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult;
+}
+
+/// How interior TreeCV nodes preserve the incoming model while updating it
+/// twice (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Clone the model before the first child's update ("if the model state
+    /// is compact, copying is a useful strategy").
+    Copy,
+    /// Record the changes made by each update and revert them ("when the
+    /// model undergoes few changes during an update, save/revert might be
+    /// preferred").
+    SaveRevert,
+}

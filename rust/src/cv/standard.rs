@@ -1,0 +1,144 @@
+//! The standard ("naive", k-repetition) CV computation the paper measures
+//! against: train k models independently from scratch, each on all chunks
+//! except one, and evaluate on the held-out chunk. Work is
+//! `k · (n − n/k) = Θ(n·k)` update points versus TreeCV's `O(n log k)`.
+
+use super::folds::{Folds, Ordering};
+use super::CvResult;
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+use crate::metrics::{OpCounts, Timer};
+use crate::rng::Rng;
+
+/// The k-repetition baseline engine.
+#[derive(Debug, Clone)]
+pub struct StandardCv {
+    pub ordering: Ordering,
+    pub seed: u64,
+}
+
+impl Default for StandardCv {
+    fn default() -> Self {
+        Self { ordering: Ordering::Fixed, seed: 0 }
+    }
+}
+
+impl StandardCv {
+    pub fn new(ordering: Ordering, seed: u64) -> Self {
+        Self { ordering, seed }
+    }
+}
+
+impl super::CvEngine for StandardCv {
+    fn engine_name(&self) -> &'static str {
+        "standard"
+    }
+
+    fn run<L: IncrementalLearner>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult {
+        let timer = Timer::start();
+        let k = folds.k();
+        let mut ops = OpCounts::default();
+        let mut per_fold = vec![0.0; k];
+        for i in 0..k {
+            let mut idx = folds.gather_except(i);
+            let mut rng = Rng::derive(self.seed, i as u64);
+            self.ordering.apply(&mut idx, &mut rng, &mut ops);
+            let mut model = learner.init();
+            learner.update(&mut model, data, &idx);
+            ops.update_calls += 1;
+            ops.points_updated += idx.len() as u64;
+            let chunk = folds.chunk(i);
+            per_fold[i] = learner.evaluate(&model, data, chunk);
+            ops.evals += 1;
+            ops.points_evaluated += chunk.len() as u64;
+        }
+        CvResult::from_folds(per_fold, ops, timer.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::CvEngine;
+    use crate::learner::histdensity::HistogramDensity;
+    use crate::learner::multiset::MultisetLearner;
+    use crate::learner::ridge::OnlineRidge;
+    use crate::data::synth::{SyntheticMixture1d, SyntheticYearMsd};
+
+    fn dummy(n: usize) -> Dataset {
+        Dataset::new(vec![0.0; n], vec![0.0; n], 1)
+    }
+
+    /// Theorem 1 with g ≡ 0: for an exactly order/batching-insensitive
+    /// learner, TreeCV reproduces the standard estimate *exactly*.
+    #[test]
+    fn treecv_equals_standard_for_multiset_oracle() {
+        for (n, k) in [(24usize, 4usize), (30, 5), (12, 12), (50, 7)] {
+            let data = dummy(n);
+            let folds = Folds::new(n, k, 81);
+            let l = MultisetLearner::new(1);
+            let std_res = StandardCv::default().run(&l, &data, &folds);
+            let tree_res = TreeCv::default().run(&l, &data, &folds);
+            assert_eq!(std_res.per_fold, tree_res.per_fold, "n={n} k={k}");
+            assert_eq!(std_res.estimate, tree_res.estimate);
+        }
+    }
+
+    /// Same, with a real (histogram-density) learner: bit-for-bit equality.
+    #[test]
+    fn treecv_equals_standard_for_histogram_density() {
+        let data = SyntheticMixture1d::new(400, 82).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        for k in [2, 5, 10, 100, 400] {
+            let folds = Folds::new(400, k, 83);
+            let a = StandardCv::default().run(&l, &data, &folds);
+            let b = TreeCv::default().run(&l, &data, &folds);
+            assert_eq!(a.per_fold, b.per_fold, "k={k}");
+        }
+    }
+
+    /// Ridge is batching-insensitive up to f64 rounding: the two engines
+    /// agree to tight tolerance.
+    #[test]
+    fn treecv_matches_standard_for_ridge() {
+        let data = SyntheticYearMsd::new(150, 84).generate();
+        let l = OnlineRidge::new(90, 1.0);
+        let folds = Folds::new(150, 10, 85);
+        let a = StandardCv::default().run(&l, &data, &folds);
+        let b = TreeCv::default().run(&l, &data, &folds);
+        for (x, y) in a.per_fold.iter().zip(&b.per_fold) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    /// Standard CV's work is k·(n − b) update points.
+    #[test]
+    fn work_is_linear_in_k() {
+        let n = 60;
+        let data = dummy(n);
+        let l = MultisetLearner::new(1);
+        for k in [2usize, 5, 10, 30] {
+            let folds = Folds::new(n, k, 86);
+            let res = StandardCv::default().run(&l, &data, &folds);
+            let expected: u64 =
+                (0..k).map(|i| (n - folds.chunk(i).len()) as u64).sum();
+            assert_eq!(res.ops.points_updated, expected, "k={k}");
+            assert_eq!(res.ops.model_copies, 0);
+        }
+    }
+
+    /// Randomized ordering changes the per-fold sequence but not the
+    /// multiset; for an order-insensitive learner the estimate is unchanged.
+    #[test]
+    fn randomized_invariant_for_order_insensitive_learner() {
+        let data = SyntheticMixture1d::new(200, 87).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(200, 8, 88);
+        let fixed = StandardCv::new(Ordering::Fixed, 1).run(&l, &data, &folds);
+        let rand = StandardCv::new(Ordering::Randomized, 2).run(&l, &data, &folds);
+        assert_eq!(fixed.per_fold, rand.per_fold);
+        assert!(rand.ops.points_permuted > 0);
+        assert_eq!(fixed.ops.points_permuted, 0);
+    }
+}

@@ -1,0 +1,345 @@
+//! TREECV (paper Algorithm 1): tree-structured computation of the k-CV
+//! estimate for incremental learners.
+//!
+//! `TREECV(s, e, f̂_{s..e})` receives a model trained on every chunk
+//! *except* `Z_s..Z_e`. If `s == e` it evaluates the model on the held-out
+//! chunk `Z_s` (computing `R̂_s`). Otherwise it splits at the midpoint
+//! `m = ⌊(s+e)/2⌋`, updates the model with the *second* group
+//! `Z_{m+1}..Z_e` and recurses on `(s, m)`, then — starting again from the
+//! model it received — updates with the *first* group `Z_s..Z_m` and
+//! recurses on `(m+1, e)`. `TREECV(1, k, ∅)` yields `R̂_{k-CV}`.
+//!
+//! Each chunk is added to exactly one model per tree level and the tree has
+//! `⌈log₂ k⌉` levels, so total update work is `O(n log k)` (Theorem 3) and
+//! at most one saved model per level is live at a time, i.e. `O(log k)`
+//! extra storage (§4.1).
+//!
+//! "Starting again from the model it received" is the engine's policy
+//! choice (paper §4.1): [`Strategy::Copy`] snapshots the incoming model;
+//! [`Strategy::SaveRevert`] logs the changes each update makes and reverts
+//! them. With SaveRevert this implementation also reverts the *second*
+//! update before returning, so every call leaves the model exactly as it
+//! found it — that invariant is what makes the recursion compose.
+
+use super::folds::{Folds, Ordering};
+use super::{CvResult, Strategy};
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+use crate::metrics::{OpCounts, Timer};
+use crate::rng::Rng;
+
+/// The TreeCV engine.
+#[derive(Debug, Clone)]
+pub struct TreeCv {
+    /// Model-preservation strategy at interior nodes.
+    pub strategy: Strategy,
+    /// Fixed vs randomized feeding order (paper §5).
+    pub ordering: Ordering,
+    /// Seed for the randomized ordering streams (ignored under Fixed).
+    pub seed: u64,
+}
+
+impl Default for TreeCv {
+    fn default() -> Self {
+        Self { strategy: Strategy::Copy, ordering: Ordering::Fixed, seed: 0 }
+    }
+}
+
+impl TreeCv {
+    pub fn new(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
+        Self { strategy, ordering, seed }
+    }
+
+    /// Gather the points of chunks `lo..=hi` in the engine's feeding order.
+    ///
+    /// The permutation stream is derived from `(seed, node, side)` rather
+    /// than drawn from one sequential stream, so the sequential and
+    /// parallel engines produce *identical* estimates for the same seed.
+    fn gather(
+        &self,
+        folds: &Folds,
+        lo: usize,
+        hi: usize,
+        node_tag: u64,
+        ops: &mut OpCounts,
+    ) -> Vec<u32> {
+        let mut idx = folds.gather_range(lo, hi);
+        let mut rng = Rng::derive(self.seed, node_tag);
+        self.ordering.apply(&mut idx, &mut rng, ops);
+        idx
+    }
+
+    fn recurse<L: IncrementalLearner>(
+        &self,
+        learner: &L,
+        data: &Dataset,
+        folds: &Folds,
+        model: &mut L::Model,
+        s: usize,
+        e: usize,
+        per_fold: &mut [f64],
+        ops: &mut OpCounts,
+    ) {
+        if s == e {
+            let chunk = folds.chunk(s);
+            per_fold[s] = learner.evaluate(model, data, chunk);
+            ops.evals += 1;
+            ops.points_evaluated += chunk.len() as u64;
+            return;
+        }
+        let m = (s + e) / 2;
+        // Unique tags for this node's two update phases (u32 ranges).
+        let tag_right = ((s as u64) << 33) | ((e as u64) << 1);
+        let tag_left = tag_right | 1;
+
+        match self.strategy {
+            Strategy::Copy => {
+                let saved = model.clone();
+                ops.model_copies += 1;
+                ops.bytes_copied += learner.model_bytes(&saved) as u64;
+
+                let right = self.gather(folds, m + 1, e, tag_right, ops);
+                learner.update(model, data, &right);
+                ops.update_calls += 1;
+                ops.points_updated += right.len() as u64;
+                self.recurse(learner, data, folds, model, s, m, per_fold, ops);
+
+                *model = saved;
+                let left = self.gather(folds, s, m, tag_left, ops);
+                learner.update(model, data, &left);
+                ops.update_calls += 1;
+                ops.points_updated += left.len() as u64;
+                self.recurse(learner, data, folds, model, m + 1, e, per_fold, ops);
+            }
+            Strategy::SaveRevert => {
+                let right = self.gather(folds, m + 1, e, tag_right, ops);
+                let undo = learner.update_logged(model, data, &right);
+                ops.update_calls += 1;
+                ops.points_updated += right.len() as u64;
+                self.recurse(learner, data, folds, model, s, m, per_fold, ops);
+                learner.revert(model, data, undo);
+                ops.model_restores += 1;
+
+                let left = self.gather(folds, s, m, tag_left, ops);
+                let undo = learner.update_logged(model, data, &left);
+                ops.update_calls += 1;
+                ops.points_updated += left.len() as u64;
+                self.recurse(learner, data, folds, model, m + 1, e, per_fold, ops);
+                learner.revert(model, data, undo);
+                ops.model_restores += 1;
+            }
+        }
+    }
+}
+
+impl super::CvEngine for TreeCv {
+    fn engine_name(&self) -> &'static str {
+        "treecv"
+    }
+
+    fn run<L: IncrementalLearner>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult {
+        let timer = Timer::start();
+        let k = folds.k();
+        let mut ops = OpCounts::default();
+        let mut per_fold = vec![0.0; k];
+        let mut model = learner.init();
+        self.recurse(learner, data, folds, &mut model, 0, k - 1, &mut per_fold, &mut ops);
+        CvResult::from_folds(per_fold, ops, timer.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::CvEngine;
+    use crate::learner::multiset::{MultisetLearner, MultisetModel};
+
+    fn dummy(n: usize) -> Dataset {
+        Dataset::new(vec![0.0; n], vec![0.0; n], 1)
+    }
+
+    /// Resolve a recorded leaf marker (first held-out point) to its fold id.
+    fn fold_of_marker(folds: &Folds, marker: usize) -> usize {
+        (0..folds.k())
+            .find(|&i| folds.chunk(i)[0] as usize == marker)
+            .expect("marker is the first element of some chunk")
+    }
+
+    /// A learner that records, at each leaf, the multiset of points its
+    /// model was trained on — used to assert the defining invariant of
+    /// Algorithm 1: leaf `i` sees exactly `Z \ Z_i`.
+    #[test]
+    fn leaf_models_trained_on_exactly_complement() {
+        for (n, k) in [(16usize, 4usize), (17, 5), (20, 20), (9, 2), (7, 7), (24, 3)] {
+            let data = dummy(n);
+            let folds = Folds::new(n, k, 33);
+            let learner = RecordingLearner::default();
+            let engine = TreeCv::default();
+            engine.run(&learner, &data, &folds);
+            let leaves = learner.leaves.take();
+            assert_eq!(leaves.len(), k, "n={n} k={k}");
+            for (marker, seen) in leaves {
+                let i = fold_of_marker(&folds, marker);
+                let mut want = folds.gather_except(i);
+                want.sort_unstable();
+                assert_eq!(seen, want, "n={n} k={k} fold {i}");
+            }
+        }
+    }
+
+    /// Same invariant under SaveRevert.
+    #[test]
+    fn leaf_models_correct_under_save_revert() {
+        let n = 19;
+        let k = 6;
+        let data = dummy(n);
+        let folds = Folds::new(n, k, 34);
+        let learner = RecordingLearner::default();
+        let engine = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 0);
+        engine.run(&learner, &data, &folds);
+        let leaves = learner.leaves.take();
+        for (marker, seen) in leaves {
+            let i = fold_of_marker(&folds, marker);
+            let mut want = folds.gather_except(i);
+            want.sort_unstable();
+            assert_eq!(seen, want, "fold {i}");
+        }
+    }
+
+    /// Randomized ordering must feed the same multiset (just reordered).
+    #[test]
+    fn randomized_ordering_preserves_multisets() {
+        let n = 22;
+        let k = 5;
+        let data = dummy(n);
+        let folds = Folds::new(n, k, 35);
+        let learner = RecordingLearner::default();
+        let engine = TreeCv::new(Strategy::Copy, Ordering::Randomized, 99);
+        engine.run(&learner, &data, &folds);
+        for (marker, seen) in learner.leaves.take() {
+            let i = fold_of_marker(&folds, marker);
+            let mut want = folds.gather_except(i);
+            want.sort_unstable();
+            assert_eq!(seen, want, "fold {i}");
+        }
+    }
+
+    /// Copy and SaveRevert must produce identical estimates for a learner
+    /// with exact revert.
+    #[test]
+    fn strategies_agree() {
+        let n = 40;
+        let data = dummy(n);
+        let folds = Folds::new(n, 8, 36);
+        let l = MultisetLearner::new(1);
+        let a = TreeCv::new(Strategy::Copy, Ordering::Fixed, 0).run(&l, &data, &folds);
+        let b = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 0).run(&l, &data, &folds);
+        assert_eq!(a.per_fold, b.per_fold);
+    }
+
+    /// Theorem 3 workload bound: points_updated ≤ n·log₂(2k) and each level
+    /// of the tree feeds each chunk exactly once.
+    #[test]
+    fn update_work_is_n_log_k() {
+        for k in [2usize, 3, 5, 8, 16, 33, 100] {
+            let n = k * 7;
+            let data = dummy(n);
+            let folds = Folds::new(n, k, 37);
+            let l = MultisetLearner::new(1);
+            let res = TreeCv::default().run(&l, &data, &folds);
+            let bound = (n as f64) * ((2 * k) as f64).log2();
+            assert!(
+                (res.ops.points_updated as f64) <= bound + 1e-9,
+                "k={k}: {} > {bound}",
+                res.ops.points_updated
+            );
+            // And it must do at least the single-training work (n-b points
+            // reach every leaf's model).
+            assert!(res.ops.points_updated as usize >= n - n / k);
+        }
+    }
+
+    /// §4.1: sequential TreeCV stores O(log k) models — with Copy, the
+    /// number of *live* snapshots equals the recursion depth; we check the
+    /// total copies is k-1 (one per interior node), matching the 2k-1-node
+    /// tree, and restores are 0; vice versa under SaveRevert.
+    #[test]
+    fn copy_and_restore_counts_match_tree_shape() {
+        let n = 64;
+        let k = 16;
+        let data = dummy(n);
+        let folds = Folds::new(n, k, 38);
+        let l = MultisetLearner::new(1);
+        let res = TreeCv::new(Strategy::Copy, Ordering::Fixed, 0).run(&l, &data, &folds);
+        assert_eq!(res.ops.model_copies, (k - 1) as u64); // interior nodes
+        assert_eq!(res.ops.model_restores, 0);
+        assert_eq!(res.ops.evals, k as u64);
+
+        let res = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 0).run(&l, &data, &folds);
+        assert_eq!(res.ops.model_copies, 0);
+        assert_eq!(res.ops.model_restores, 2 * (k - 1) as u64); // 2 per interior node
+    }
+
+    #[test]
+    fn loocv_runs() {
+        let n = 33;
+        let data = dummy(n);
+        let folds = Folds::loocv(n);
+        let l = MultisetLearner::new(1);
+        let res = TreeCv::default().run(&l, &data, &folds);
+        assert_eq!(res.per_fold.len(), n);
+        assert!((res.estimate - res.per_fold.iter().sum::<f64>() / n as f64).abs() < 1e-15);
+    }
+
+    /// Learner whose update records indices and whose evaluate snapshots
+    /// the training multiset per leaf.
+    #[derive(Default)]
+    struct RecordingLearner {
+        leaves: std::cell::Cell<Vec<(usize, Vec<u32>)>>,
+    }
+
+    impl RecordingLearner {
+        fn push_leaf(&self, fold: usize, seen: Vec<u32>) {
+            let mut v = self.leaves.take();
+            v.push((fold, seen));
+            self.leaves.set(v);
+        }
+    }
+
+    impl IncrementalLearner for RecordingLearner {
+        type Model = MultisetModel;
+        type Undo = usize;
+
+        fn name(&self) -> &'static str {
+            "recording"
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn init(&self) -> MultisetModel {
+            MultisetModel::default()
+        }
+        fn update(&self, m: &mut MultisetModel, _d: &Dataset, idx: &[u32]) {
+            m.seen.extend_from_slice(idx);
+        }
+        fn update_logged(&self, m: &mut MultisetModel, _d: &Dataset, idx: &[u32]) -> usize {
+            m.seen.extend_from_slice(idx);
+            idx.len()
+        }
+        fn revert(&self, m: &mut MultisetModel, _d: &Dataset, undo: usize) {
+            m.seen.truncate(m.seen.len() - undo);
+        }
+        fn loss(&self, _m: &MultisetModel, _d: &Dataset, _i: u32) -> f64 {
+            0.0
+        }
+        fn evaluate(&self, m: &MultisetModel, _d: &Dataset, idx: &[u32]) -> f64 {
+            // Record (marker, training multiset); the marker is the first
+            // held-out point, which the test maps back to its fold id.
+            self.push_leaf(idx[0] as usize, m.sorted());
+            0.0
+        }
+        fn model_bytes(&self, m: &MultisetModel) -> usize {
+            m.seen.len() * 4
+        }
+    }
+}

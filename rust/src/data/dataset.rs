@@ -1,0 +1,211 @@
+//! Dense, row-major in-memory dataset.
+//!
+//! The paper's general setting (its Table 1) is points `z_i = (x_i, y_i)`
+//! with `x ∈ R^d` and an outcome `y` that is a class label, a regression
+//! target, or `NoLabel` for unsupervised tasks. We store `x` densely
+//! (`n × d`, row-major `f32`) and `y` as `f32` (±1 for binary labels,
+//! real-valued targets, or ignored by unsupervised learners).
+
+use crate::rng::Rng;
+
+/// A dense supervised/unsupervised dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major features, length `n * d`.
+    pub x: Vec<f32>,
+    /// Outcomes, length `n`. For unsupervised tasks this is all zeros.
+    pub y: Vec<f32>,
+    /// Number of points.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+}
+
+impl Dataset {
+    /// Build from parts, checking shape consistency.
+    pub fn new(x: Vec<f32>, y: Vec<f32>, d: usize) -> Self {
+        assert!(d > 0, "feature dimension must be positive");
+        assert_eq!(x.len() % d, 0, "x length {} not a multiple of d {}", x.len(), d);
+        let n = x.len() / d;
+        assert_eq!(y.len(), n, "y length {} != n {}", y.len(), n);
+        Self { x, y, n, d }
+    }
+
+    /// Feature row `i`.
+    #[inline(always)]
+    pub fn row(&self, i: u32) -> &[f32] {
+        let i = i as usize;
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Outcome of point `i`.
+    #[inline(always)]
+    pub fn label(&self, i: u32) -> f32 {
+        self.y[i as usize]
+    }
+
+    /// A subset of the dataset (copies rows; used by tests and the
+    /// distributed simulation where chunks live on different nodes).
+    pub fn subset(&self, idx: &[u32]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.label(i));
+        }
+        Dataset::new(x, y, self.d)
+    }
+
+    /// Truncate to the first `n` points (used by the Figure-2 `n`-sweeps so
+    /// all sweep points share one generated dataset, as in the paper).
+    pub fn take(&self, n: usize) -> Dataset {
+        assert!(n <= self.n);
+        Dataset::new(self.x[..n * self.d].to_vec(), self.y[..n].to_vec(), self.d)
+    }
+
+    /// Scale every feature column to unit variance (the paper does this for
+    /// Covertype). Returns the per-column scale factors applied.
+    pub fn scale_to_unit_variance(&mut self) -> Vec<f32> {
+        let (n, d) = (self.n, self.d);
+        let mut mean = vec![0f64; d];
+        let mut m2 = vec![0f64; d];
+        for i in 0..n {
+            for j in 0..d {
+                mean[j] += self.x[i * d + j] as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        for i in 0..n {
+            for j in 0..d {
+                let dv = self.x[i * d + j] as f64 - mean[j];
+                m2[j] += dv * dv;
+            }
+        }
+        let mut scales = vec![1f32; d];
+        for j in 0..d {
+            let var = m2[j] / n as f64;
+            if var > 1e-12 {
+                scales[j] = (1.0 / var.sqrt()) as f32;
+            }
+        }
+        for i in 0..n {
+            for j in 0..d {
+                self.x[i * d + j] *= scales[j];
+            }
+        }
+        scales
+    }
+
+    /// Min-max scale the targets to [0, 1] (the paper does this for
+    /// YearPredictionMSD).
+    pub fn scale_targets_to_unit_interval(&mut self) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in &self.y {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let span = (hi - lo).max(1e-12);
+        for v in self.y.iter_mut() {
+            *v = (*v - lo) / span;
+        }
+    }
+
+    /// Shuffle the dataset rows in place (paper: datasets are shuffled once
+    /// before fold assignment).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let perm = rng.permutation(self.n);
+        let mut x = Vec::with_capacity(self.x.len());
+        let mut y = Vec::with_capacity(self.n);
+        for &i in &perm {
+            x.extend_from_slice(self.row(i));
+            y.push(self.label(i));
+        }
+        self.x = x;
+        self.y = y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(vec![1., 2., 3., 4., 5., 6.], vec![1., -1., 1.], 2)
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let d = toy();
+        assert_eq!(d.n, 3);
+        assert_eq!(d.d, 2);
+        assert_eq!(d.row(1), &[3., 4.]);
+        assert_eq!(d.label(2), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Dataset::new(vec![1., 2., 3.], vec![1.], 2);
+    }
+
+    #[test]
+    fn subset_copies_rows() {
+        let d = toy();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.row(0), &[5., 6.]);
+        assert_eq!(s.row(1), &[1., 2.]);
+        assert_eq!(s.y, vec![1., 1.]);
+    }
+
+    #[test]
+    fn take_prefix() {
+        let d = toy();
+        let t = d.take(2);
+        assert_eq!(t.n, 2);
+        assert_eq!(t.x, vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn unit_variance_scaling() {
+        let mut d = Dataset::new(
+            vec![0., 10., 1., 20., 2., 30., 3., 40.],
+            vec![0.; 4],
+            2,
+        );
+        d.scale_to_unit_variance();
+        for j in 0..2 {
+            let mean: f64 = (0..4).map(|i| d.x[i * 2 + j] as f64).sum::<f64>() / 4.0;
+            let var: f64 =
+                (0..4).map(|i| (d.x[i * 2 + j] as f64 - mean).powi(2)).sum::<f64>() / 4.0;
+            assert!((var - 1.0).abs() < 1e-5, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn target_scaling() {
+        let mut d = Dataset::new(vec![0.; 8], vec![-5., 0., 5., 15.], 2);
+        d.scale_targets_to_unit_interval();
+        assert_eq!(d.y[0], 0.0);
+        assert_eq!(d.y[3], 1.0);
+        assert!((d.y[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shuffle_preserves_rows() {
+        let mut d = toy();
+        let mut rng = Rng::new(1);
+        let before: Vec<(Vec<f32>, f32)> =
+            (0..3).map(|i| (d.row(i).to_vec(), d.label(i))).collect();
+        d.shuffle(&mut rng);
+        let mut after: Vec<(Vec<f32>, f32)> =
+            (0..3).map(|i| (d.row(i).to_vec(), d.label(i))).collect();
+        for b in &before {
+            let pos = after.iter().position(|a| a == b).expect("row lost");
+            after.remove(pos);
+        }
+        assert!(after.is_empty());
+    }
+}

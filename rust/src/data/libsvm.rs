@@ -1,0 +1,146 @@
+//! LIBSVM / SVMlight text-format parser.
+//!
+//! The paper's datasets (Covertype, YearPredictionMSD) are distributed in
+//! this format on the LIBSVM site. When a real file is available on disk,
+//! experiments load it here instead of using the synthetic stand-ins; the
+//! parser handles the 1-based sparse `idx:val` encoding and densifies.
+
+use super::Dataset;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+/// Parse LIBSVM-format text from any reader into a dense [`Dataset`].
+///
+/// * `d` — feature dimension; pass `None` to infer from the max index seen
+///   (requires buffering all rows, which we do anyway).
+/// * `binarize_label` — if `Some(c)`, labels equal to `c` map to `+1` and
+///   everything else to `-1` (the paper's "class 1 against the rest").
+pub fn parse<R: Read>(reader: R, d: Option<usize>, binarize_label: Option<f32>) -> Result<Dataset> {
+    let reader = BufReader::new(reader);
+    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("I/O error reading libsvm data")?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f32 = parts
+            .next()
+            .ok_or_else(|| anyhow!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|e| anyhow!("line {}: bad label: {e}", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow!("line {}: token `{tok}` missing `:`", lineno + 1))?;
+            let idx: usize =
+                idx.parse().map_err(|e| anyhow!("line {}: bad index `{idx}`: {e}", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
+            }
+            let val: f32 =
+                val.parse().map_err(|e| anyhow!("line {}: bad value `{val}`: {e}", lineno + 1))?;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push((label, feats));
+    }
+
+    let d = match d {
+        Some(d) => {
+            if max_idx > d {
+                bail!("feature index {max_idx} exceeds declared dimension {d}");
+            }
+            d
+        }
+        None => max_idx.max(1),
+    };
+
+    let n = rows.len();
+    let mut x = vec![0f32; n * d];
+    let mut y = Vec::with_capacity(n);
+    for (i, (label, feats)) in rows.into_iter().enumerate() {
+        y.push(match binarize_label {
+            Some(c) => {
+                if label == c {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            None => label,
+        });
+        for (j, v) in feats {
+            x[i * d + j] = v;
+        }
+    }
+    Ok(Dataset::new(x, y, d))
+}
+
+/// Load a LIBSVM file from disk. See [`parse`].
+pub fn load(path: &Path, d: Option<usize>, binarize_label: Option<f32>) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    parse(f, d, binarize_label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "1 1:0.5 3:1.5\n-1 2:2.0\n";
+        let d = parse(text.as_bytes(), None, None).unwrap();
+        assert_eq!(d.n, 2);
+        assert_eq!(d.d, 3);
+        assert_eq!(d.row(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(d.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn binarizes_multiclass() {
+        let text = "1 1:1\n2 1:2\n7 1:3\n1 1:4\n";
+        let d = parse(text.as_bytes(), None, Some(1.0)).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn declared_dimension_pads() {
+        let text = "0.5 1:1\n";
+        let d = parse(text.as_bytes(), Some(5), None).unwrap();
+        assert_eq!(d.d, 5);
+        assert_eq!(d.row(0), &[1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = "# header\n\n1 1:1 # trailing\n";
+        let d = parse(text.as_bytes(), None, None).unwrap();
+        assert_eq!(d.n, 1);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let text = "1 0:1\n";
+        assert!(parse(text.as_bytes(), None, None).is_err());
+    }
+
+    #[test]
+    fn rejects_index_beyond_declared_d() {
+        let text = "1 9:1\n";
+        assert!(parse(text.as_bytes(), Some(3), None).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_token() {
+        assert!(parse("1 abc\n".as_bytes(), None, None).is_err());
+        assert!(parse("x 1:1\n".as_bytes(), None, None).is_err());
+    }
+}

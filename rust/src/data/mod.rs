@@ -1,0 +1,9 @@
+//! Dataset substrate: dense in-memory datasets, synthetic generators that
+//! stand in for the paper's UCI workloads, and a LIBSVM-format parser so
+//! the real files drop in when available.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod synth;
+
+pub use dataset::Dataset;

@@ -1,0 +1,261 @@
+//! Synthetic stand-ins for the paper's UCI workloads.
+//!
+//! The paper evaluates on UCI Covertype (581,012 × 54, class "1" vs rest,
+//! features scaled to unit variance) and UCI YearPredictionMSD
+//! (463,715 × 90, targets scaled to [0,1]). Those files are not available
+//! in this environment, so per the substitution policy (DESIGN.md §4) we
+//! generate synthetic datasets that match the quantities the experiments
+//! actually depend on: `n`, `d`, feature scaling, label balance, and the
+//! achievable loss level of the linear models under test. If the real
+//! files are present, [`super::libsvm`] loads them instead.
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// Covertype-like binary classification: 54 unit-variance features, labels
+/// from a noisy linear teacher tuned so linear-SVM misclassification lands
+/// near the paper's ≈30.6% (Table 2 top).
+#[derive(Debug, Clone)]
+pub struct SyntheticCovertype {
+    pub n: usize,
+    pub seed: u64,
+    /// Label-flip probability. Together with the positive-side flips below
+    /// this is tuned so single-pass PEGASOS at the paper's λ = 10⁻⁶ lands
+    /// near the paper's ≈30.6% (Table 2 top) at paper-scale n — measured
+    /// ≈33.5% at n = 100k on this generator.
+    pub noise: f64,
+}
+
+impl SyntheticCovertype {
+    pub const D: usize = 54;
+
+    pub fn new(n: usize, seed: u64) -> Self {
+        Self { n, seed, noise: 0.15 }
+    }
+
+    /// Generate the dataset. Deterministic in `(n, seed, noise)`; a longer
+    /// generation is a strict prefix-extension of a shorter one only in
+    /// distribution, so `n`-sweeps should generate once at max `n` and
+    /// [`Dataset::take`] prefixes.
+    pub fn generate(&self) -> Dataset {
+        let d = Self::D;
+        let mut rng = Rng::derive(self.seed, 0xC0FE);
+        // Fixed random teacher hyperplane.
+        let mut teacher = Rng::derive(self.seed, 0x7EAC);
+        let w: Vec<f32> = (0..d).map(|_| teacher.next_gaussian()).collect();
+        let wn = (w.iter().map(|v| (v * v) as f64).sum::<f64>()).sqrt() as f32;
+
+        let mut x = Vec::with_capacity(self.n * d);
+        let mut y = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let start = x.len();
+            let mut dot = 0f32;
+            for j in 0..d {
+                let v = rng.next_gaussian();
+                x.push(v);
+                dot += v * w[j];
+            }
+            let _ = start;
+            let mut label = if dot / wn >= 0.0 { 1.0 } else { -1.0 };
+            if rng.next_f64() < self.noise {
+                label = -label;
+            }
+            // Covertype class "1" vs rest is imbalanced (≈36.5% positive);
+            // bias the kept labels toward that ratio by flipping a slice of
+            // positives (keeps the linear structure).
+            if label > 0.0 && rng.next_f64() < 0.08 {
+                label = -1.0;
+            }
+            y.push(label);
+        }
+        Dataset::new(x, y, d)
+    }
+}
+
+/// YearPredictionMSD-like regression: 90 unit-variance features, targets in
+/// [0, 1] from a bounded linear teacher plus noise. With unit-ball
+/// constrained LSQSGD this yields a squared-error plateau in the same
+/// regime as the paper's ≈0.253 (Table 2 bottom is ×100).
+#[derive(Debug, Clone)]
+pub struct SyntheticYearMsd {
+    pub n: usize,
+    pub seed: u64,
+    /// Additive target noise std (pre-clipping).
+    pub noise_std: f64,
+}
+
+impl SyntheticYearMsd {
+    pub const D: usize = 90;
+
+    pub fn new(n: usize, seed: u64) -> Self {
+        Self { n, seed, noise_std: 0.40 }
+    }
+
+    pub fn generate(&self) -> Dataset {
+        let d = Self::D;
+        let mut rng = Rng::derive(self.seed, 0x5EED);
+        let mut teacher = Rng::derive(self.seed, 0x7EAC2);
+        // Teacher inside the unit ball so the constrained learner can
+        // express it; signal-to-noise tuned so the squared-error plateau
+        // lands in the paper's regime while remaining clearly learnable.
+        let mut w: Vec<f32> = (0..d).map(|_| teacher.next_gaussian()).collect();
+        let wn = (w.iter().map(|v| (v * v) as f64).sum::<f64>()).sqrt() as f32;
+        for v in w.iter_mut() {
+            *v *= 0.30 / wn;
+        }
+
+        let mut x = Vec::with_capacity(self.n * d);
+        let mut y = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let mut dot = 0f32;
+            for wj in w.iter().take(d) {
+                let v = rng.next_gaussian();
+                x.push(v);
+                dot += v * wj;
+            }
+            let t = 0.5 + dot as f64 + self.noise_std * rng.next_gaussian() as f64;
+            y.push(t.clamp(0.0, 1.0) as f32);
+        }
+        Dataset::new(x, y, d)
+    }
+}
+
+/// Isotropic Gaussian blobs for the K-means instantiation of the paper's
+/// Table 1 (unsupervised; `y` is all zeros = NoLabel).
+#[derive(Debug, Clone)]
+pub struct SyntheticBlobs {
+    pub n: usize,
+    pub d: usize,
+    pub centers: usize,
+    pub spread: f32,
+    pub seed: u64,
+}
+
+impl SyntheticBlobs {
+    pub fn new(n: usize, d: usize, centers: usize, seed: u64) -> Self {
+        Self { n, d, centers, spread: 0.3, seed }
+    }
+
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Rng::derive(self.seed, 0xB10B);
+        let mut cgen = Rng::derive(self.seed, 0xCE27);
+        let centers: Vec<Vec<f32>> = (0..self.centers)
+            .map(|_| (0..self.d).map(|_| 2.0 * cgen.next_gaussian()).collect())
+            .collect();
+        let mut x = Vec::with_capacity(self.n * self.d);
+        let y = vec![0f32; self.n];
+        for _ in 0..self.n {
+            let c = &centers[rng.below(self.centers as u64) as usize];
+            for &cj in c.iter() {
+                x.push(cj + self.spread * rng.next_gaussian());
+            }
+        }
+        Dataset::new(x, y, self.d)
+    }
+}
+
+/// 1-D Gaussian-mixture samples for the density-estimation instantiation of
+/// Table 1 (loss = negative log-likelihood).
+#[derive(Debug, Clone)]
+pub struct SyntheticMixture1d {
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl SyntheticMixture1d {
+    pub fn new(n: usize, seed: u64) -> Self {
+        Self { n, seed }
+    }
+
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Rng::derive(self.seed, 0xD157);
+        let mut x = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let v = if rng.next_f64() < 0.5 {
+                -2.0 + 0.7 * rng.next_gaussian()
+            } else {
+                1.5 + 1.1 * rng.next_gaussian()
+            };
+            x.push(v);
+        }
+        Dataset::new(x, vec![0f32; self.n], 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covertype_shape_and_determinism() {
+        let a = SyntheticCovertype::new(500, 1).generate();
+        let b = SyntheticCovertype::new(500, 1).generate();
+        assert_eq!(a.n, 500);
+        assert_eq!(a.d, 54);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn covertype_seed_changes_data() {
+        let a = SyntheticCovertype::new(100, 1).generate();
+        let b = SyntheticCovertype::new(100, 2).generate();
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn covertype_labels_are_binary_and_imbalanced() {
+        let d = SyntheticCovertype::new(20_000, 3).generate();
+        let pos = d.y.iter().filter(|&&v| v == 1.0).count() as f64 / d.n as f64;
+        assert!(d.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(pos > 0.25 && pos < 0.5, "positive ratio {pos}");
+    }
+
+    #[test]
+    fn covertype_features_near_unit_variance() {
+        let d = SyntheticCovertype::new(20_000, 4).generate();
+        let mut var = 0f64;
+        for i in 0..d.n {
+            var += (d.x[i * d.d] as f64).powi(2);
+        }
+        var /= d.n as f64;
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn yearmsd_targets_in_unit_interval() {
+        let d = SyntheticYearMsd::new(5_000, 5).generate();
+        assert_eq!(d.d, 90);
+        assert!(d.y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mean = d.y.iter().map(|&v| v as f64).sum::<f64>() / d.n as f64;
+        assert!((mean - 0.5).abs() < 0.05, "target mean {mean}");
+    }
+
+    #[test]
+    fn blobs_cluster_structure() {
+        let g = SyntheticBlobs::new(2_000, 4, 3, 6);
+        let d = g.generate();
+        assert_eq!(d.n, 2_000);
+        // Spread within a blob (0.3) is much smaller than between centers
+        // (~2σ per coord); overall variance must exceed within-blob variance.
+        let mut var = 0f64;
+        let mut mean = 0f64;
+        for i in 0..d.n {
+            mean += d.x[i * d.d] as f64;
+        }
+        mean /= d.n as f64;
+        for i in 0..d.n {
+            var += (d.x[i * d.d] as f64 - mean).powi(2);
+        }
+        var /= d.n as f64;
+        assert!(var > 0.5, "var {var}");
+    }
+
+    #[test]
+    fn mixture_is_bimodalish() {
+        let d = SyntheticMixture1d::new(10_000, 7).generate();
+        let lo = d.x.iter().filter(|&&v| v < -0.5).count();
+        let hi = d.x.iter().filter(|&&v| v > 0.5).count();
+        assert!(lo > 2_000 && hi > 2_000);
+    }
+}

@@ -1,0 +1,238 @@
+//! Simulated distributed TreeCV (paper §4.1, last paragraph):
+//!
+//! > "TREECV is potentially useful in a distributed environment, where each
+//! > chunk of the data is stored on a different node in the network.
+//! > Updating the model on a given chunk can then be relegated to that
+//! > node ... it is only the model (or the updates made to the model), not
+//! > the data, that needs to be communicated. Since at every level of the
+//! > tree, each chunk is added to exactly one model, the total
+//! > communication cost of doing this is O(k log k)."
+//!
+//! We do not have a cluster, so per the substitution policy we build a
+//! discrete simulation: `k` storage nodes each own one chunk; a driver
+//! walks the TreeCV recursion, and every time a chunk must be added to a
+//! model it *sends the model* to the owning node and receives it back,
+//! charging latency + size/bandwidth on a simple network cost model. The
+//! naive alternative (shipping data to a compute node) is also modeled, so
+//! the `repro dist` experiment can exhibit the paper's claimed asymmetry:
+//! model transfers scale O(k log k), data transfers O(n k) for standard CV.
+
+use crate::cv::folds::Folds;
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+
+/// Simple network cost model.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Per-message latency (seconds).
+    pub latency_s: f64,
+    /// Bandwidth (bytes / second).
+    pub bandwidth_bps: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // 100 µs latency, 10 Gbit/s — a modest datacenter network.
+        Self { latency_s: 100e-6, bandwidth_bps: 10e9 / 8.0 }
+    }
+}
+
+impl NetworkModel {
+    /// Simulated time to move `bytes` in one message.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Accumulated communication statistics of a simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    /// Number of model transfers (send + receive counted as 2 messages).
+    pub model_messages: u64,
+    /// Total model bytes moved.
+    pub model_bytes: u64,
+    /// Number of raw-data transfers (naive strategy only).
+    pub data_messages: u64,
+    /// Total data bytes moved.
+    pub data_bytes: u64,
+    /// Simulated network time (seconds).
+    pub sim_network_time_s: f64,
+}
+
+/// Result of a simulated distributed CV run.
+#[derive(Debug, Clone)]
+pub struct DistributedRunReport {
+    pub k: usize,
+    pub n: usize,
+    pub estimate: f64,
+    pub comm: CommStats,
+}
+
+/// Simulated cluster: node `i` owns chunk `Z_i`. The model bounces between
+/// nodes; the raw chunks never move (TreeCV strategy).
+pub struct Cluster<'a> {
+    pub data: &'a Dataset,
+    pub folds: &'a Folds,
+    pub net: NetworkModel,
+}
+
+impl<'a> Cluster<'a> {
+    pub fn new(data: &'a Dataset, folds: &'a Folds, net: NetworkModel) -> Self {
+        Self { data, folds, net }
+    }
+
+    /// Distributed TreeCV: walk Algorithm 1; every chunk-update ships the
+    /// model to the chunk's node and back.
+    pub fn treecv<L: IncrementalLearner>(&self, learner: &L) -> DistributedRunReport {
+        let k = self.folds.k();
+        let mut comm = CommStats::default();
+        let mut per_fold = vec![0.0; k];
+        let mut model = learner.init();
+        self.recurse(learner, &mut model, 0, k - 1, &mut per_fold, &mut comm);
+        let estimate = per_fold.iter().sum::<f64>() / k as f64;
+        DistributedRunReport { k, n: self.data.n, estimate, comm }
+    }
+
+    fn ship_model<L: IncrementalLearner>(
+        &self,
+        learner: &L,
+        model: &L::Model,
+        comm: &mut CommStats,
+    ) {
+        let bytes = learner.model_bytes(model) as u64;
+        comm.model_messages += 2; // to the node and back
+        comm.model_bytes += 2 * bytes;
+        comm.sim_network_time_s += 2.0 * self.net.transfer_time(bytes);
+    }
+
+    /// Update `model` with chunks `lo..=hi`, one node at a time (the paper:
+    /// "the model is sent to the processing node, trained and sent back,
+    /// i.e., this is not using all the nodes at once").
+    fn update_range<L: IncrementalLearner>(
+        &self,
+        learner: &L,
+        model: &mut L::Model,
+        lo: usize,
+        hi: usize,
+        comm: &mut CommStats,
+    ) {
+        for c in lo..=hi {
+            self.ship_model(learner, model, comm);
+            learner.update(model, self.data, self.folds.chunk(c));
+        }
+    }
+
+    fn recurse<L: IncrementalLearner>(
+        &self,
+        learner: &L,
+        model: &mut L::Model,
+        s: usize,
+        e: usize,
+        per_fold: &mut [f64],
+        comm: &mut CommStats,
+    ) {
+        if s == e {
+            // Evaluation happens on the node owning the held-out chunk.
+            self.ship_model(learner, model, comm);
+            per_fold[s] = learner.evaluate(model, self.data, self.folds.chunk(s));
+            return;
+        }
+        let m = (s + e) / 2;
+        let saved = model.clone();
+        self.update_range(learner, model, m + 1, e, comm);
+        self.recurse(learner, model, s, m, per_fold, comm);
+        *model = saved;
+        self.update_range(learner, model, s, m, comm);
+        self.recurse(learner, model, m + 1, e, per_fold, comm);
+    }
+
+    /// Naive distributed standard CV: a central compute node pulls every
+    /// training chunk over the network for each fold (data moves, models
+    /// don't). Communication is Θ(n·k) bytes.
+    pub fn standard_naive<L: IncrementalLearner>(&self, learner: &L) -> DistributedRunReport {
+        let k = self.folds.k();
+        let mut comm = CommStats::default();
+        let mut per_fold = vec![0.0; k];
+        let row_bytes = (self.data.d * 4 + 4) as u64;
+        for i in 0..k {
+            let mut model = learner.init();
+            for c in 0..k {
+                if c == i {
+                    continue;
+                }
+                let chunk = self.folds.chunk(c);
+                let bytes = chunk.len() as u64 * row_bytes;
+                comm.data_messages += 1;
+                comm.data_bytes += bytes;
+                comm.sim_network_time_s += self.net.transfer_time(bytes);
+                learner.update(&mut model, self.data, chunk);
+            }
+            per_fold[i] = learner.evaluate(&model, self.data, self.folds.chunk(i));
+        }
+        let estimate = per_fold.iter().sum::<f64>() / k as f64;
+        DistributedRunReport { k, n: self.data.n, estimate, comm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::CvEngine;
+    use crate::data::synth::SyntheticCovertype;
+    use crate::learner::pegasos::Pegasos;
+
+    fn setup(n: usize, k: usize) -> (Dataset, Folds) {
+        (SyntheticCovertype::new(n, 131).generate(), Folds::new(n, k, 132))
+    }
+
+    #[test]
+    fn distributed_treecv_matches_local_estimate() {
+        let (data, folds) = setup(600, 8);
+        let l = Pegasos::new(54, 1e-4);
+        let cluster = Cluster::new(&data, &folds, NetworkModel::default());
+        let dist = cluster.treecv(&l);
+        let local = TreeCv::default().run(&l, &data, &folds);
+        assert!((dist.estimate - local.estimate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_messages_scale_k_log_k() {
+        let l = Pegasos::new(54, 1e-4);
+        for k in [4usize, 16, 64] {
+            let (data, folds) = setup(k * 8, k);
+            let cluster = Cluster::new(&data, &folds, NetworkModel::default());
+            let rep = cluster.treecv(&l);
+            // Each level ships each chunk's node one model (2 messages);
+            // plus k evaluation round-trips. Bound: 2·k·(log2(2k)+1).
+            let bound = 2.0 * (k as f64) * (((2 * k) as f64).log2() + 1.0) + 2.0 * k as f64;
+            assert!(
+                (rep.comm.model_messages as f64) <= bound,
+                "k={k}: {} > {bound}",
+                rep.comm.model_messages
+            );
+            assert_eq!(rep.comm.data_messages, 0);
+        }
+    }
+
+    #[test]
+    fn naive_moves_data_quadratically() {
+        let l = Pegasos::new(54, 1e-4);
+        let (data, folds) = setup(640, 8);
+        let cluster = Cluster::new(&data, &folds, NetworkModel::default());
+        let naive = cluster.standard_naive(&l);
+        let tree = cluster.treecv(&l);
+        assert_eq!(naive.comm.model_messages, 0);
+        // Standard ships ~ (k-1)·n rows; TreeCV ships models only.
+        let row_bytes = (54 * 4 + 4) as u64;
+        assert_eq!(naive.comm.data_bytes, 7 * 640 * row_bytes);
+        assert!(tree.comm.model_bytes < naive.comm.data_bytes);
+    }
+
+    #[test]
+    fn network_model_costs() {
+        let net = NetworkModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let t = net.transfer_time(500_000);
+        assert!((t - 0.501).abs() < 1e-9);
+    }
+}

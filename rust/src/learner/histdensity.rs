@@ -1,0 +1,227 @@
+//! Histogram density estimation — the paper's Table 1 row 4 instantiation
+//! (`Y = {NoLabel}`, prediction is a density, loss is `−log f(x)`).
+//!
+//! The model is a vector of *integer* bin counts over a fixed range, plus
+//! an out-of-range mass bucket, with Laplace smoothing at prediction time.
+//! Because the sufficient statistics are integers, the learner is *exactly*
+//! order- and batching-insensitive: `f^inc == f^batch` bit-for-bit, i.e.
+//! g ≡ 0 in the paper's Definition 1. TreeCV must therefore reproduce the
+//! standard k-CV estimate exactly (Theorem 1 with g = 0) — this learner is
+//! one of the two structural correctness oracles used by the test suite.
+//! It is also mergeable (add the counts), driving the Izbicki baseline.
+
+use super::{IncrementalLearner, MergeableLearner};
+use crate::data::Dataset;
+use crate::loss;
+
+/// Histogram density estimator over feature 0 of the dataset.
+#[derive(Debug, Clone)]
+pub struct HistogramDensity {
+    /// Histogram support `[lo, hi)`.
+    pub lo: f32,
+    pub hi: f32,
+    /// Number of equal-width bins.
+    pub bins: usize,
+}
+
+/// Integer sufficient statistics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistModel {
+    pub counts: Vec<u64>,
+    /// Points outside `[lo, hi)`.
+    pub outside: u64,
+    pub total: u64,
+}
+
+/// Undo log: the bin each point landed in (`usize::MAX` = outside).
+pub type HistUndo = Vec<usize>;
+
+impl HistogramDensity {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, bins }
+    }
+
+    #[inline(always)]
+    fn bin(&self, v: f32) -> usize {
+        if v < self.lo || v >= self.hi || !v.is_finite() {
+            return usize::MAX;
+        }
+        let w = (self.hi - self.lo) / self.bins as f32;
+        (((v - self.lo) / w) as usize).min(self.bins - 1)
+    }
+
+    /// Smoothed density at `v` (Laplace add-one over bins + outside bucket).
+    pub fn density(&self, m: &HistModel, v: f32) -> f64 {
+        let w = ((self.hi - self.lo) / self.bins as f32) as f64;
+        let denom = (m.total + self.bins as u64 + 1) as f64;
+        match self.bin(v) {
+            usize::MAX => 1.0 / denom, // point mass for the outside bucket
+            b => (m.counts[b] + 1) as f64 / (denom * w),
+        }
+    }
+}
+
+impl IncrementalLearner for HistogramDensity {
+    type Model = HistModel;
+    type Undo = HistUndo;
+
+    fn name(&self) -> &'static str {
+        "hist-density"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn init(&self) -> HistModel {
+        HistModel { counts: vec![0; self.bins], outside: 0, total: 0 }
+    }
+
+    fn update(&self, m: &mut HistModel, data: &Dataset, idx: &[u32]) {
+        for &i in idx {
+            match self.bin(data.row(i)[0]) {
+                usize::MAX => m.outside += 1,
+                b => m.counts[b] += 1,
+            }
+            m.total += 1;
+        }
+    }
+
+    fn update_logged(&self, m: &mut HistModel, data: &Dataset, idx: &[u32]) -> HistUndo {
+        let mut log = Vec::with_capacity(idx.len());
+        for &i in idx {
+            let b = self.bin(data.row(i)[0]);
+            match b {
+                usize::MAX => m.outside += 1,
+                b => m.counts[b] += 1,
+            }
+            m.total += 1;
+            log.push(b);
+        }
+        log
+    }
+
+    fn revert(&self, m: &mut HistModel, _data: &Dataset, undo: HistUndo) {
+        for b in undo.into_iter().rev() {
+            match b {
+                usize::MAX => m.outside -= 1,
+                b => m.counts[b] -= 1,
+            }
+            m.total -= 1;
+        }
+    }
+
+    fn loss(&self, m: &HistModel, data: &Dataset, i: u32) -> f64 {
+        loss::negative_log_likelihood(self.density(m, data.row(i)[0]))
+    }
+
+    fn model_bytes(&self, m: &HistModel) -> usize {
+        m.counts.len() * 8 + 16
+    }
+}
+
+impl MergeableLearner for HistogramDensity {
+    fn merge(&self, a: &HistModel, b: &HistModel) -> HistModel {
+        HistModel {
+            counts: a.counts.iter().zip(&b.counts).map(|(x, y)| x + y).collect(),
+            outside: a.outside + b.outside,
+            total: a.total + b.total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SyntheticMixture1d;
+
+    fn learner() -> HistogramDensity {
+        HistogramDensity::new(-8.0, 8.0, 64)
+    }
+
+    #[test]
+    fn counts_conserve_total() {
+        let data = SyntheticMixture1d::new(1_000, 51).generate();
+        let l = learner();
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..1_000).collect::<Vec<_>>());
+        assert_eq!(m.total, 1_000);
+        assert_eq!(m.counts.iter().sum::<u64>() + m.outside, 1_000);
+    }
+
+    #[test]
+    fn batch_equals_incremental_exactly() {
+        let data = SyntheticMixture1d::new(500, 52).generate();
+        let l = learner();
+        let idx: Vec<u32> = (0..500).collect();
+        let mut batch = l.init();
+        l.update(&mut batch, &data, &idx);
+        let mut inc = l.init();
+        for c in idx.chunks(37) {
+            l.update(&mut inc, &data, c);
+        }
+        assert_eq!(batch, inc);
+    }
+
+    #[test]
+    fn order_insensitive_exactly() {
+        let data = SyntheticMixture1d::new(500, 53).generate();
+        let l = learner();
+        let fwd: Vec<u32> = (0..500).collect();
+        let rev: Vec<u32> = (0..500).rev().collect();
+        let mut a = l.init();
+        let mut b = l.init();
+        l.update(&mut a, &data, &fwd);
+        l.update(&mut b, &data, &rev);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_equals_joint_training() {
+        let data = SyntheticMixture1d::new(600, 54).generate();
+        let l = learner();
+        let mut a = l.init();
+        let mut b = l.init();
+        let mut joint = l.init();
+        l.update(&mut a, &data, &(0..300).collect::<Vec<_>>());
+        l.update(&mut b, &data, &(300..600).collect::<Vec<_>>());
+        l.update(&mut joint, &data, &(0..600).collect::<Vec<_>>());
+        assert_eq!(l.merge(&a, &b), joint);
+    }
+
+    #[test]
+    fn revert_is_exact() {
+        let data = SyntheticMixture1d::new(400, 55).generate();
+        let l = learner();
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..100).collect::<Vec<_>>());
+        let before = m.clone();
+        let undo = l.update_logged(&mut m, &data, &(100..400).collect::<Vec<_>>());
+        l.revert(&mut m, &data, undo);
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn density_integrates_to_about_one() {
+        let data = SyntheticMixture1d::new(20_000, 56).generate();
+        let l = learner();
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..20_000).collect::<Vec<_>>());
+        let w = 16.0 / 64.0;
+        let mass: f64 =
+            (0..64).map(|b| l.density(&m, -8.0 + (b as f32 + 0.5) * w as f32) * w).sum();
+        assert!((mass - 1.0).abs() < 0.05, "mass {mass}");
+    }
+
+    #[test]
+    fn nll_is_lower_for_in_distribution_points() {
+        let data = SyntheticMixture1d::new(10_000, 57).generate();
+        let l = learner();
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..10_000).collect::<Vec<_>>());
+        let typical = Dataset::new(vec![-2.0], vec![0.0], 1);
+        let atypical = Dataset::new(vec![7.5], vec![0.0], 1);
+        assert!(l.loss(&m, &typical, 0) < l.loss(&m, &atypical, 0));
+    }
+}

@@ -1,0 +1,206 @@
+//! Online K-means (sequential / MacQueen K-means), the paper's Table 1
+//! row 3 instantiation of the general learning setting: `Y = {NoLabel}`,
+//! predictions are cluster centers, and the loss is the quantization error
+//! `||x − f(x)||²`.
+//!
+//! The first `K` points seed the centers; after that each point moves its
+//! nearest center by `(x − c)/count`. Updates touch exactly one center, so
+//! the save/revert undo log is one `(center id, old center, old count)`
+//! record per point — O(d) versus the O(K·d) model copy, another concrete
+//! case of the paper's §4.1 trade-off.
+
+use super::{linalg, IncrementalLearner};
+use crate::data::Dataset;
+use crate::loss;
+
+/// Online K-means trainer.
+#[derive(Debug, Clone)]
+pub struct OnlineKMeans {
+    d: usize,
+    /// Number of clusters.
+    pub k: usize,
+}
+
+/// K-means model: `k × d` centers (row-major) and per-center counts.
+/// `seeded` counts how many centers have been initialized.
+#[derive(Debug, Clone)]
+pub struct KMeansModel {
+    pub centers: Vec<f32>,
+    pub counts: Vec<u64>,
+    pub seeded: usize,
+}
+
+impl KMeansModel {
+    /// Index of the nearest seeded center, or None if unseeded.
+    pub fn nearest(&self, d: usize, x: &[f32]) -> Option<usize> {
+        (0..self.seeded)
+            .map(|j| (j, linalg::dist_sq(x, &self.centers[j * d..(j + 1) * d])))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(j, _)| j)
+    }
+}
+
+/// One undo record per training point, in application order.
+#[derive(Debug)]
+pub enum KMeansUndoOp {
+    /// Point seeded center `j`.
+    Seeded { j: usize },
+    /// Point moved center `j`; stores the pre-update center row.
+    Moved { j: usize, old_center: Vec<f32> },
+}
+
+impl OnlineKMeans {
+    pub fn new(d: usize, k: usize) -> Self {
+        assert!(k > 0);
+        Self { d, k }
+    }
+
+    /// Apply one point; returns the undo record.
+    fn step(&self, m: &mut KMeansModel, x: &[f32]) -> KMeansUndoOp {
+        let d = self.d;
+        if m.seeded < self.k {
+            let j = m.seeded;
+            m.centers[j * d..(j + 1) * d].copy_from_slice(x);
+            m.counts[j] = 1;
+            m.seeded += 1;
+            return KMeansUndoOp::Seeded { j };
+        }
+        let j = m.nearest(d, x).expect("seeded model");
+        let c = &mut m.centers[j * d..(j + 1) * d];
+        let old_center = c.to_vec();
+        m.counts[j] += 1;
+        let inv = 1.0 / m.counts[j] as f32;
+        for t in 0..d {
+            c[t] += inv * (x[t] - c[t]);
+        }
+        KMeansUndoOp::Moved { j, old_center }
+    }
+}
+
+impl IncrementalLearner for OnlineKMeans {
+    type Model = KMeansModel;
+    type Undo = Vec<KMeansUndoOp>;
+
+    fn name(&self) -> &'static str {
+        "online-kmeans"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> KMeansModel {
+        KMeansModel { centers: vec![0.0; self.k * self.d], counts: vec![0; self.k], seeded: 0 }
+    }
+
+    fn update(&self, m: &mut KMeansModel, data: &Dataset, idx: &[u32]) {
+        for &i in idx {
+            let _ = self.step(m, data.row(i));
+        }
+    }
+
+    fn update_logged(&self, m: &mut KMeansModel, data: &Dataset, idx: &[u32]) -> Self::Undo {
+        idx.iter().map(|&i| self.step(m, data.row(i))).collect()
+    }
+
+    fn revert(&self, m: &mut KMeansModel, _data: &Dataset, undo: Self::Undo) {
+        let d = self.d;
+        for op in undo.into_iter().rev() {
+            match op {
+                KMeansUndoOp::Seeded { j } => {
+                    m.centers[j * d..(j + 1) * d].fill(0.0);
+                    m.counts[j] = 0;
+                    m.seeded -= 1;
+                }
+                KMeansUndoOp::Moved { j, old_center } => {
+                    m.centers[j * d..(j + 1) * d].copy_from_slice(&old_center);
+                    m.counts[j] -= 1;
+                }
+            }
+        }
+    }
+
+    fn loss(&self, m: &KMeansModel, data: &Dataset, i: u32) -> f64 {
+        let x = data.row(i);
+        match m.nearest(self.d, x) {
+            Some(j) => loss::quantization_error(x, &m.centers[j * self.d..(j + 1) * self.d]),
+            // Unseeded model: quantize to the origin (the zero center).
+            None => linalg::norm_sq(x),
+        }
+    }
+
+    fn model_bytes(&self, m: &KMeansModel) -> usize {
+        m.centers.len() * 4 + m.counts.len() * 8 + 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SyntheticBlobs;
+
+    #[test]
+    fn seeds_then_assigns() {
+        let data = SyntheticBlobs::new(500, 4, 3, 41).generate();
+        let l = OnlineKMeans::new(4, 3);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..500).collect::<Vec<_>>());
+        assert_eq!(m.seeded, 3);
+        assert_eq!(m.counts.iter().sum::<u64>(), 500);
+    }
+
+    #[test]
+    fn quantization_error_beats_origin() {
+        let data = SyntheticBlobs::new(3_000, 4, 3, 42).generate();
+        let train: Vec<u32> = (0..2_500).collect();
+        let test: Vec<u32> = (2_500..3_000).collect();
+        let l = OnlineKMeans::new(4, 3);
+        let mut m = l.init();
+        l.update(&mut m, &data, &train);
+        let q = l.evaluate(&m, &data, &test);
+        let origin: f64 =
+            test.iter().map(|&i| linalg::norm_sq(data.row(i))).sum::<f64>() / test.len() as f64;
+        assert!(q < origin * 0.5, "quantization {q} vs origin {origin}");
+    }
+
+    #[test]
+    fn center_is_running_mean_of_assigned_points() {
+        // Single cluster: center must equal the exact running mean.
+        let data = Dataset::new(vec![1., 3., 5., 7.], vec![0.; 4], 1);
+        let l = OnlineKMeans::new(1, 1);
+        let mut m = l.init();
+        l.update(&mut m, &data, &[0, 1, 2, 3]);
+        assert!((m.centers[0] - 4.0).abs() < 1e-6);
+        assert_eq!(m.counts[0], 4);
+    }
+
+    #[test]
+    fn revert_is_exact() {
+        // copy_from_slice-based undo restores the model bit-for-bit.
+        let data = SyntheticBlobs::new(400, 4, 3, 43).generate();
+        let l = OnlineKMeans::new(4, 3);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..100).collect::<Vec<_>>());
+        let before = m.clone();
+        let undo = l.update_logged(&mut m, &data, &(100..400).collect::<Vec<_>>());
+        l.revert(&mut m, &data, undo);
+        assert_eq!(m.centers, before.centers);
+        assert_eq!(m.counts, before.counts);
+        assert_eq!(m.seeded, before.seeded);
+    }
+
+    #[test]
+    fn revert_across_seeding_boundary() {
+        let data = SyntheticBlobs::new(10, 4, 5, 44).generate();
+        let l = OnlineKMeans::new(4, 5);
+        let mut m = l.init();
+        l.update(&mut m, &data, &[0, 1]); // partially seeded
+        let before = m.clone();
+        let undo = l.update_logged(&mut m, &data, &[2, 3, 4, 5, 6, 7]);
+        assert_eq!(m.seeded, 5);
+        l.revert(&mut m, &data, undo);
+        assert_eq!(m.seeded, 2);
+        assert_eq!(m.centers, before.centers);
+        assert_eq!(m.counts, before.counts);
+    }
+}

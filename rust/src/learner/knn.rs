@@ -1,0 +1,219 @@
+//! k-nearest-neighbour classification as an incremental learner.
+//!
+//! Related-work tie-in: Mullin & Sukthankar [2000] (paper §1.1) study fast
+//! *complete* CV for nearest-neighbour methods precisely because the k-NN
+//! "model" is just the training set — updates are appends, which makes it
+//! the ideal real-prediction exactness oracle for TreeCV: the model is
+//! exactly order- and batching-insensitive (predictions depend only on the
+//! training *set*), so by Theorem 1 (g ≡ 0) TreeCV must reproduce standard
+//! k-CV *bit-for-bit* — with a learner that actually classifies, unlike
+//! the synthetic multiset oracle.
+//!
+//! Brute-force neighbour search (O(|train|·d) per query) — fine at the
+//! test scales; this learner exists for validation, not throughput.
+
+use super::{linalg, IncrementalLearner, MergeableLearner};
+use crate::data::Dataset;
+use crate::loss;
+
+/// k-NN trainer for ±1 labels.
+#[derive(Debug, Clone)]
+pub struct KnnClassifier {
+    d: usize,
+    /// Number of neighbours (odd avoids vote ties).
+    pub k: usize,
+}
+
+/// The model is the multiset of training indices (the data itself stays in
+/// the shared [`Dataset`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KnnModel {
+    pub train: Vec<u32>,
+}
+
+impl KnnClassifier {
+    pub fn new(d: usize, k: usize) -> Self {
+        assert!(k >= 1);
+        Self { d, k }
+    }
+
+    /// Majority vote over the k nearest training points (ties in distance
+    /// broken by the smaller index for determinism; vote ties → +1).
+    pub fn predict(&self, m: &KnnModel, data: &Dataset, x: &[f32]) -> f32 {
+        // Partial selection of the k smallest distances.
+        let mut best: Vec<(f64, u32)> = Vec::with_capacity(self.k + 1);
+        for &j in &m.train {
+            let dist = linalg::dist_sq(x, data.row(j));
+            let pos = best.partition_point(|&(d0, i0)| (d0, i0) < (dist, j));
+            if pos < self.k {
+                best.insert(pos, (dist, j));
+                best.truncate(self.k);
+            }
+        }
+        let vote: f32 = best.iter().map(|&(_, j)| data.label(j)).sum();
+        if vote >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+impl IncrementalLearner for KnnClassifier {
+    type Model = KnnModel;
+    type Undo = usize; // appended count
+
+    fn name(&self) -> &'static str {
+        "knn"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> KnnModel {
+        KnnModel::default()
+    }
+
+    fn update(&self, m: &mut KnnModel, _data: &Dataset, idx: &[u32]) {
+        m.train.extend_from_slice(idx);
+    }
+
+    fn update_logged(&self, m: &mut KnnModel, _data: &Dataset, idx: &[u32]) -> usize {
+        m.train.extend_from_slice(idx);
+        idx.len()
+    }
+
+    fn revert(&self, m: &mut KnnModel, _data: &Dataset, undo: usize) {
+        m.train.truncate(m.train.len() - undo);
+    }
+
+    fn loss(&self, m: &KnnModel, data: &Dataset, i: u32) -> f64 {
+        if m.train.is_empty() {
+            return 1.0; // no information: always counted wrong
+        }
+        let pred = self.predict(m, data, data.row(i));
+        loss::misclassification(pred, data.label(i))
+    }
+
+    fn model_bytes(&self, m: &KnnModel) -> usize {
+        m.train.len() * 4
+    }
+}
+
+impl MergeableLearner for KnnClassifier {
+    /// Appending index sets is an exact merge — k-NN satisfies Izbicki's
+    /// assumption *if* model size is ignored (his O(n + k) claim assumes
+    /// O(1)-size models; here the merge itself is O(|model|), which is why
+    /// the paper calls the assumption restrictive).
+    fn merge(&self, a: &KnnModel, b: &KnnModel) -> KnnModel {
+        let mut out = a.clone();
+        out.train.extend_from_slice(&b.train);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::Folds;
+    use crate::cv::standard::StandardCv;
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::CvEngine;
+    use crate::data::synth::SyntheticCovertype;
+
+    fn two_blob_data(n: usize) -> Dataset {
+        let mut rng = crate::rng::Rng::new(171);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let s = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            x.push(2.0 * s + 0.5 * rng.next_gaussian());
+            x.push(-1.5 * s + 0.5 * rng.next_gaussian());
+            y.push(s);
+        }
+        Dataset::new(x, y, 2)
+    }
+
+    #[test]
+    fn classifies_separated_blobs() {
+        let data = two_blob_data(400);
+        let l = KnnClassifier::new(2, 3);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..300).collect::<Vec<_>>());
+        let err = l.evaluate(&m, &data, &(300..400).collect::<Vec<_>>());
+        assert!(err < 0.05, "error {err}");
+    }
+
+    #[test]
+    fn prediction_is_order_insensitive() {
+        let data = two_blob_data(100);
+        let l = KnnClassifier::new(2, 3);
+        let fwd: Vec<u32> = (0..80).collect();
+        let mut rev = fwd.clone();
+        rev.reverse();
+        let mut a = l.init();
+        let mut b = l.init();
+        l.update(&mut a, &data, &fwd);
+        l.update(&mut b, &data, &rev);
+        for i in 80..100u32 {
+            assert_eq!(
+                l.predict(&a, &data, data.row(i)),
+                l.predict(&b, &data, data.row(i)),
+                "i={i}"
+            );
+        }
+    }
+
+    /// The key property: TreeCV == standard CV bit-for-bit with a learner
+    /// that makes real predictions (Theorem 1 with g ≡ 0).
+    #[test]
+    fn treecv_equals_standard_exactly() {
+        let data = SyntheticCovertype::new(240, 172).generate();
+        let l = KnnClassifier::new(54, 5);
+        for k in [2usize, 6, 12, 60] {
+            let folds = Folds::new(240, k, 173);
+            let tree = TreeCv::default().run(&l, &data, &folds);
+            let std_res = StandardCv::default().run(&l, &data, &folds);
+            assert_eq!(tree.per_fold, std_res.per_fold, "k={k}");
+        }
+    }
+
+    #[test]
+    fn revert_is_exact() {
+        let data = two_blob_data(60);
+        let l = KnnClassifier::new(2, 1);
+        let mut m = l.init();
+        l.update(&mut m, &data, &[0, 1, 2]);
+        let before = m.clone();
+        let undo = l.update_logged(&mut m, &data, &[3, 4]);
+        l.revert(&mut m, &data, undo);
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn merge_is_append() {
+        let l = KnnClassifier::new(2, 1);
+        let a = KnnModel { train: vec![1, 2] };
+        let b = KnnModel { train: vec![3] };
+        assert_eq!(l.merge(&a, &b).train, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_model_counts_as_wrong() {
+        let data = two_blob_data(4);
+        let l = KnnClassifier::new(2, 3);
+        assert_eq!(l.loss(&l.init(), &data, 0), 1.0);
+    }
+
+    #[test]
+    fn tie_distance_broken_by_index() {
+        // Two equidistant points with different labels; k=1 must pick the
+        // smaller index deterministically.
+        let data = Dataset::new(vec![1.0, 0.0, -1.0, 0.0, 0.0, 0.0], vec![1.0, -1.0, 0.0], 2);
+        let l = KnnClassifier::new(2, 1);
+        let mut m = l.init();
+        l.update(&mut m, &data, &[0, 1]);
+        assert_eq!(l.predict(&m, &data, data.row(2)), 1.0);
+    }
+}

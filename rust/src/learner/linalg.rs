@@ -1,0 +1,233 @@
+//! Small dense linear-algebra kernels shared by the pure-Rust learners and
+//! the exact-LOOCV comparator. These are the L3 hot path for the large-`n`
+//! experiments (the XLA artifacts cover the L1/L2 path), so they are kept
+//! allocation-free and auto-vectorizable.
+
+/// Dot product `⟨a, b⟩` in f32.
+///
+/// Eight independent accumulators break the serial FP dependency chain so
+/// LLVM can vectorize (strict FP semantics forbid reassociating a single
+/// `s += a[i]*b[i]` chain). This is the single hottest operation in the
+/// whole system (PEGASOS margin checks + all evaluations) — see
+/// EXPERIMENTS.md §Perf for the measured effect.
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        // Eight independent lanes → one SIMD FMA per iteration.
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for (xa, xb) in ra.iter().zip(rb) {
+        s += xa * xb;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline(always)]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y *= alpha`.
+#[inline(always)]
+pub fn scale(alpha: f32, y: &mut [f32]) {
+    for v in y.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Squared l2 norm, f64 accumulator (used for projections and regularizers
+/// where drift matters). Four independent lanes break the FP chain (same
+/// reasoning as [`dot`]).
+#[inline(always)]
+pub fn norm_sq(a: &[f32]) -> f64 {
+    let mut acc = [0f64; 4];
+    let ca = a.chunks_exact(4);
+    let r = ca.remainder();
+    for xa in ca {
+        for l in 0..4 {
+            let v = xa[l] as f64;
+            acc[l] += v * v;
+        }
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    for &v in r {
+        s += (v as f64) * (v as f64);
+    }
+    s
+}
+
+/// Squared euclidean distance `||a - b||²` (four-lane, as [`norm_sq`]).
+#[inline(always)]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f64; 4];
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..4 {
+            let d = (xa[l] - xb[l]) as f64;
+            acc[l] += d * d;
+        }
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    for (xa, xb) in ra.iter().zip(rb) {
+        let d = (xa - xb) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// Cholesky factorization of a symmetric positive-definite matrix stored
+/// dense row-major (`n × n`). Returns the lower factor `L` (row-major) with
+/// `A = L Lᵀ`, or `None` if the matrix is not positive definite.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    debug_assert_eq!(a.len(), n * n);
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` of `A` (forward then back
+/// substitution).
+pub fn cholesky_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    // L z = b
+    let mut z = vec![0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * z[k];
+        }
+        z[i] = s / l[i * n + i];
+    }
+    // Lᵀ x = z
+    let mut x = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Invert an SPD matrix via its Cholesky factor (column-by-column solves).
+/// Used only by the exact-LOOCV comparator on small `d`.
+pub fn cholesky_inverse(l: &[f64], n: usize) -> Vec<f64> {
+    let mut inv = vec![0f64; n * n];
+    let mut e = vec![0f64; n];
+    for j in 0..n {
+        e.fill(0.0);
+        e[j] = 1.0;
+        let col = cholesky_solve(l, n, &e);
+        for i in 0..n {
+            inv[i * n + j] = col[i];
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_scale() {
+        let a = [1f32, 2., 3.];
+        let b = [4f32, 5., 6.];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6., 9., 12.]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [3., 4.5, 6.]);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm_sq(&[3., 4.]) - 25.0).abs() < 1e-12);
+        assert!((dist_sq(&[1., 1.], &[4., 5.]) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = M Mᵀ + I for a random-ish M is SPD.
+        let n = 4;
+        let m = [
+            1.0, 0.5, 0.0, 0.2, //
+            0.3, 2.0, 0.1, 0.0, //
+            0.0, 0.7, 1.5, 0.4, //
+            0.2, 0.0, 0.3, 1.0,
+        ];
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let l = cholesky(&a, n).expect("SPD");
+        let b = [1.0, -2.0, 0.5, 3.0];
+        let x = cholesky_solve(&l, n, &b);
+        // Check A x ≈ b.
+        for i in 0..n {
+            let mut s = 0f64;
+            for j in 0..n {
+                s += a[i * n + j] * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-9, "row {i}: {s} vs {}", b[i]);
+        }
+        // Inverse: A * A⁻¹ ≈ I.
+        let inv = cholesky_inverse(&l, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0f64;
+                for k in 0..n {
+                    s += a[i * n + k] * inv[k * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+}

@@ -1,0 +1,119 @@
+//! Incremental learners (the paper's `L : (M ∪ {∅}) × Z* → M`).
+//!
+//! The paper's only requirement on the base algorithm is that it is
+//! *incremental*: given a model trained on previous data and a new batch of
+//! points, it updates the model at a fraction of the cost of retraining
+//! from scratch. [`IncrementalLearner`] captures exactly that interface,
+//! plus the two mechanisms TreeCV needs at interior tree nodes (paper §4.1):
+//! copying a model, or reverting the in-place changes an update made
+//! (`update_logged` / `revert`).
+//!
+//! Implementations:
+//! * [`pegasos::Pegasos`] — linear PEGASOS SVM (paper §5, Table 2 top).
+//! * [`lsqsgd::LsqSgd`] — robust-SA least-squares SGD with averaging
+//!   (paper §5, Table 2 bottom).
+//! * [`perceptron::Perceptron`] — classic online perceptron; its sparse
+//!   mistake-driven updates make the save/revert strategy genuinely
+//!   cheaper than copying.
+//! * [`kmeans::OnlineKMeans`] — online K-means (paper Table 1, row 3).
+//! * [`histdensity::HistogramDensity`] — integer-count histogram density
+//!   estimator (Table 1, row 4); exactly order-insensitive, so TreeCV
+//!   equals standard CV bit-for-bit — a key correctness oracle.
+//! * [`naive_bayes::GaussianNb`] — Gaussian naive Bayes over sufficient
+//!   statistics; *mergeable*, so it also drives the Izbicki-style
+//!   fold-merging baseline ([`crate::cv::mergecv`]).
+//! * [`ridge::OnlineRidge`] — ridge regression over running sufficient
+//!   statistics; order-insensitive and the subject of the exact
+//!   closed-form LOOCV comparator ([`crate::cv::exact`]).
+//! * [`knn::KnnClassifier`] — k-nearest-neighbour classification (related
+//!   work: Mullin & Sukthankar 2000); the model is the training set, so it
+//!   is an exactness oracle that makes real predictions.
+//! * [`multiset::MultisetLearner`] — a structural test oracle whose model
+//!   is the exact multiset of training indices.
+//!
+//! The XLA-backed learners (running the AOT Pallas/JAX artifacts through
+//! PJRT) live in [`crate::runtime`] and implement the same trait.
+
+pub mod histdensity;
+pub mod kmeans;
+pub mod knn;
+pub mod linalg;
+pub mod lsqsgd;
+pub mod multiset;
+pub mod naive_bayes;
+pub mod pegasos;
+pub mod perceptron;
+pub mod ridge;
+
+use crate::data::Dataset;
+
+/// An incremental learning algorithm, in the paper's sense.
+///
+/// `update` must treat the index slice as an *ordered* sequence: online
+/// learners visit points in exactly the given order (the CV engines control
+/// ordering to reproduce the paper's fixed vs randomized variants).
+pub trait IncrementalLearner {
+    /// Trained model state (the paper allows "padding" models with internal
+    /// state such as step counters; that lives here too).
+    type Model: Clone + Send;
+    /// Token holding enough information to revert one `update_logged` call.
+    type Undo: Send;
+
+    /// Short human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Expected feature dimension.
+    fn dim(&self) -> usize;
+
+    /// The empty model `∅` — what `L(∅, Z)` starts from.
+    fn init(&self) -> Self::Model;
+
+    /// Incremental update: feed the points `data[idx]`, in order, into the
+    /// model.
+    fn update(&self, model: &mut Self::Model, data: &Dataset, idx: &[u32]);
+
+    /// Like [`update`](Self::update), but records an undo token so the
+    /// caller can restore the pre-update model (the paper's save/revert
+    /// strategy, §4.1). Default implementations in concrete learners either
+    /// snapshot the model (compact models) or log the touched state
+    /// (sparse-update models).
+    fn update_logged(&self, model: &mut Self::Model, data: &Dataset, idx: &[u32]) -> Self::Undo;
+
+    /// Restore the model to its state before the matching
+    /// [`update_logged`](Self::update_logged) call. `data` is the same
+    /// dataset the update saw — sparse undo logs (e.g. the perceptron's
+    /// mistake list) re-fetch rows from it instead of storing them.
+    fn revert(&self, model: &mut Self::Model, data: &Dataset, undo: Self::Undo);
+
+    /// The paper's `ℓ(f(x_i), x_i, y_i)` for a single held-out point.
+    fn loss(&self, model: &Self::Model, data: &Dataset, i: u32) -> f64;
+
+    /// Mean loss over a held-out chunk (`R_i` in the paper). Learners with
+    /// amortizable per-chunk work (e.g. lazily solved ridge, batched XLA
+    /// execution) override this.
+    fn evaluate(&self, model: &Self::Model, data: &Dataset, idx: &[u32]) -> f64 {
+        if idx.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0f64;
+        for &i in idx {
+            s += self.loss(model, data, i);
+        }
+        s / idx.len() as f64
+    }
+
+    /// Approximate model size in bytes (drives the copy-cost metrics and
+    /// the distributed simulation's communication accounting).
+    fn model_bytes(&self, model: &Self::Model) -> usize;
+}
+
+/// Learners whose models can be *merged*: `merge(f(A), f(B)) == f(A ∪ B)`.
+///
+/// This is exactly the (restrictive) assumption of Izbicki [2013], which the
+/// paper contrasts against; [`crate::cv::mergecv`] implements that O(n + k)
+/// baseline for learners that satisfy it.
+pub trait MergeableLearner: IncrementalLearner {
+    /// Combine two models trained on disjoint data into one trained on the
+    /// union.
+    fn merge(&self, a: &Self::Model, b: &Self::Model) -> Self::Model;
+}

@@ -1,0 +1,154 @@
+//! A structural test oracle: the "model" is the exact multiset of dataset
+//! indices it was trained on, and the loss of a held-out point is a
+//! deterministic hash of (training multiset, point index).
+//!
+//! Because the model depends only on the *set* of points (not their order
+//! or batching), this learner is exactly incrementally stable (g ≡ 0), and
+//! by the paper's Theorem 1 TreeCV must produce bit-for-bit the standard
+//! k-CV estimate. More importantly, it lets the test suite assert the
+//! *defining invariant* of Algorithm 1: the model evaluated at leaf `i`
+//! was trained on exactly `Z \ Z_i` — every chunk except the held-out one,
+//! each point exactly once. Any scheduling bug in the tree recursion
+//! (wrong half updated, missed restore, double update) breaks this
+//! immediately and observably.
+
+use super::IncrementalLearner;
+use crate::data::Dataset;
+
+/// The oracle learner. `dim` is free; it never reads features.
+#[derive(Debug, Clone)]
+pub struct MultisetLearner {
+    d: usize,
+}
+
+/// Model: indices seen, in arrival order (so order effects are detectable
+/// by tests that want them), plus a running count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MultisetModel {
+    pub seen: Vec<u32>,
+}
+
+impl MultisetModel {
+    /// The canonical (sorted) multiset of trained indices.
+    pub fn sorted(&self) -> Vec<u32> {
+        let mut s = self.seen.clone();
+        s.sort_unstable();
+        s
+    }
+}
+
+impl MultisetLearner {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+
+    /// Order-insensitive 64-bit fingerprint of the training multiset.
+    pub fn fingerprint(model: &MultisetModel) -> u64 {
+        // Sum of per-element hashes: commutative ⇒ order-insensitive.
+        model.seen.iter().fold(0u64, |acc, &i| {
+            let mut h = i as u64 + 0x9E3779B97F4A7C15;
+            h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+            acc.wrapping_add(h ^ (h >> 31))
+        })
+    }
+}
+
+impl IncrementalLearner for MultisetLearner {
+    type Model = MultisetModel;
+    type Undo = usize; // number of points appended
+
+    fn name(&self) -> &'static str {
+        "multiset-oracle"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> MultisetModel {
+        MultisetModel::default()
+    }
+
+    fn update(&self, m: &mut MultisetModel, _data: &Dataset, idx: &[u32]) {
+        m.seen.extend_from_slice(idx);
+    }
+
+    fn update_logged(&self, m: &mut MultisetModel, _data: &Dataset, idx: &[u32]) -> usize {
+        m.seen.extend_from_slice(idx);
+        idx.len()
+    }
+
+    fn revert(&self, m: &mut MultisetModel, _data: &Dataset, undo: usize) {
+        m.seen.truncate(m.seen.len() - undo);
+    }
+
+    fn loss(&self, m: &MultisetModel, _data: &Dataset, i: u32) -> f64 {
+        // Deterministic in (training multiset, i); maps to [0, 1).
+        let h = Self::fingerprint(m) ^ (i as u64).wrapping_mul(0xD1B54A32D192ED03);
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn model_bytes(&self, m: &MultisetModel) -> usize {
+        m.seen.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(n: usize) -> Dataset {
+        Dataset::new(vec![0.0; n], vec![0.0; n], 1)
+    }
+
+    #[test]
+    fn update_appends() {
+        let l = MultisetLearner::new(1);
+        let d = dummy(10);
+        let mut m = l.init();
+        l.update(&mut m, &d, &[3, 1]);
+        l.update(&mut m, &d, &[2]);
+        assert_eq!(m.seen, vec![3, 1, 2]);
+        assert_eq!(m.sorted(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn fingerprint_order_insensitive() {
+        let a = MultisetModel { seen: vec![1, 2, 3] };
+        let b = MultisetModel { seen: vec![3, 1, 2] };
+        let c = MultisetModel { seen: vec![1, 2, 4] };
+        assert_eq!(MultisetLearner::fingerprint(&a), MultisetLearner::fingerprint(&b));
+        assert_ne!(MultisetLearner::fingerprint(&a), MultisetLearner::fingerprint(&c));
+    }
+
+    #[test]
+    fn fingerprint_sees_multiplicity() {
+        let a = MultisetModel { seen: vec![1, 1, 2] };
+        let b = MultisetModel { seen: vec![1, 2] };
+        assert_ne!(MultisetLearner::fingerprint(&a), MultisetLearner::fingerprint(&b));
+    }
+
+    #[test]
+    fn revert_truncates() {
+        let l = MultisetLearner::new(1);
+        let d = dummy(10);
+        let mut m = l.init();
+        l.update(&mut m, &d, &[5, 6]);
+        let undo = l.update_logged(&mut m, &d, &[7, 8, 9]);
+        l.revert(&mut m, &d, undo);
+        assert_eq!(m.seen, vec![5, 6]);
+    }
+
+    #[test]
+    fn loss_depends_on_set_and_point() {
+        let l = MultisetLearner::new(1);
+        let d = dummy(10);
+        let m1 = MultisetModel { seen: vec![1, 2] };
+        let m2 = MultisetModel { seen: vec![1, 3] };
+        assert_ne!(l.loss(&m1, &d, 0), l.loss(&m2, &d, 0));
+        assert_ne!(l.loss(&m1, &d, 0), l.loss(&m1, &d, 1));
+        // And is in [0,1).
+        assert!((0.0..1.0).contains(&l.loss(&m1, &d, 0)));
+    }
+}

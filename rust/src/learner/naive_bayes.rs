@@ -1,0 +1,252 @@
+//! Gaussian naive Bayes over per-class running sufficient statistics
+//! (count, Σx, Σx² per feature). Two roles here:
+//!
+//! 1. It is *mergeable* — models trained on disjoint data combine by adding
+//!    statistics — which is exactly the restrictive assumption of
+//!    Izbicki [2013] that the paper's related-work section contrasts
+//!    against ("applies only to simple methods, such as Bayesian
+//!    classification"). [`crate::cv::mergecv`] uses it to implement that
+//!    O(n + k) baseline.
+//! 2. Its sufficient statistics are order-insensitive up to f64 rounding,
+//!    so TreeCV and standard CV agree to ~1e-12 — a strong near-exactness
+//!    check on the tree recursion with a "real" learner.
+
+use super::{IncrementalLearner, MergeableLearner};
+use crate::data::Dataset;
+use crate::loss;
+
+/// Gaussian NB trainer for binary labels in {+1, −1}.
+#[derive(Debug, Clone)]
+pub struct GaussianNb {
+    d: usize,
+    /// Variance floor to keep log-densities finite.
+    pub var_floor: f64,
+}
+
+/// Per-class sufficient statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NbClassStats {
+    pub count: u64,
+    pub sum: Vec<f64>,
+    pub sumsq: Vec<f64>,
+}
+
+impl NbClassStats {
+    fn new(d: usize) -> Self {
+        Self { count: 0, sum: vec![0.0; d], sumsq: vec![0.0; d] }
+    }
+
+    fn add_point(&mut self, x: &[f32]) {
+        self.count += 1;
+        for (j, &v) in x.iter().enumerate() {
+            self.sum[j] += v as f64;
+            self.sumsq[j] += (v as f64) * (v as f64);
+        }
+    }
+
+    fn sub_point(&mut self, x: &[f32]) {
+        self.count -= 1;
+        for (j, &v) in x.iter().enumerate() {
+            self.sum[j] -= v as f64;
+            self.sumsq[j] -= (v as f64) * (v as f64);
+        }
+    }
+
+    fn add(&mut self, other: &Self) {
+        self.count += other.count;
+        for j in 0..self.sum.len() {
+            self.sum[j] += other.sum[j];
+            self.sumsq[j] += other.sumsq[j];
+        }
+    }
+}
+
+/// NB model: statistics for the positive and negative class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NbModel {
+    pub pos: NbClassStats,
+    pub neg: NbClassStats,
+}
+
+impl GaussianNb {
+    pub fn new(d: usize) -> Self {
+        Self { d, var_floor: 1e-6 }
+    }
+
+    /// Class log-posterior difference `log P(+|x) − log P(−|x)` (up to the
+    /// shared evidence term).
+    pub fn score(&self, m: &NbModel, x: &[f32]) -> f64 {
+        let total = (m.pos.count + m.neg.count).max(1) as f64;
+        // Laplace-smoothed priors.
+        let lp_pos = ((m.pos.count as f64 + 1.0) / (total + 2.0)).ln();
+        let lp_neg = ((m.neg.count as f64 + 1.0) / (total + 2.0)).ln();
+        let ll = |s: &NbClassStats| -> f64 {
+            if s.count == 0 {
+                return 0.0; // uninformative class-conditional
+            }
+            let n = s.count as f64;
+            let mut acc = 0.0;
+            for j in 0..self.d {
+                let mean = s.sum[j] / n;
+                let var = (s.sumsq[j] / n - mean * mean).max(self.var_floor);
+                let dv = x[j] as f64 - mean;
+                acc += -0.5 * (var.ln() + dv * dv / var);
+            }
+            acc
+        };
+        (lp_pos + ll(&m.pos)) - (lp_neg + ll(&m.neg))
+    }
+}
+
+impl IncrementalLearner for GaussianNb {
+    type Model = NbModel;
+    /// Undo by subtracting the points back out (exact for the counts,
+    /// f64-rounding-exact for the sums; the reverse-order replay makes it
+    /// bit-exact because fl(fl(a+b)−b) replays the inverse op sequence —
+    /// still not guaranteed identical, so exactness tests use tolerance).
+    type Undo = Vec<u32>;
+
+    fn name(&self) -> &'static str {
+        "gaussian-nb"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> NbModel {
+        NbModel { pos: NbClassStats::new(self.d), neg: NbClassStats::new(self.d) }
+    }
+
+    fn update(&self, m: &mut NbModel, data: &Dataset, idx: &[u32]) {
+        for &i in idx {
+            if data.label(i) > 0.0 {
+                m.pos.add_point(data.row(i));
+            } else {
+                m.neg.add_point(data.row(i));
+            }
+        }
+    }
+
+    fn update_logged(&self, m: &mut NbModel, data: &Dataset, idx: &[u32]) -> Vec<u32> {
+        self.update(m, data, idx);
+        idx.to_vec()
+    }
+
+    fn revert(&self, m: &mut NbModel, data: &Dataset, undo: Vec<u32>) {
+        for &i in undo.iter().rev() {
+            if data.label(i) > 0.0 {
+                m.pos.sub_point(data.row(i));
+            } else {
+                m.neg.sub_point(data.row(i));
+            }
+        }
+    }
+
+    fn loss(&self, m: &NbModel, data: &Dataset, i: u32) -> f64 {
+        let s = self.score(m, data.row(i)) as f32;
+        loss::misclassification(s, data.label(i))
+    }
+
+    fn model_bytes(&self, _m: &NbModel) -> usize {
+        2 * (self.d * 16 + 8)
+    }
+}
+
+impl MergeableLearner for GaussianNb {
+    fn merge(&self, a: &NbModel, b: &NbModel) -> NbModel {
+        let mut out = a.clone();
+        out.pos.add(&b.pos);
+        out.neg.add(&b.neg);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SyntheticCovertype;
+
+    #[test]
+    fn classifies_shifted_gaussians() {
+        // Two well-separated classes.
+        let n = 1_000;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut rng = crate::rng::Rng::new(61);
+        for i in 0..n {
+            let s = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            x.push(3.0 * s + rng.next_gaussian());
+            x.push(-2.0 * s + rng.next_gaussian());
+            y.push(s);
+        }
+        let data = Dataset::new(x, y, 2);
+        let l = GaussianNb::new(2);
+        let mut m = l.init();
+        let idx: Vec<u32> = (0..n as u32).collect();
+        l.update(&mut m, &data, &idx);
+        let err = l.evaluate(&m, &data, &idx);
+        assert!(err < 0.02, "error {err}");
+    }
+
+    #[test]
+    fn order_insensitive_to_tolerance() {
+        let data = SyntheticCovertype::new(500, 62).generate();
+        let l = GaussianNb::new(54);
+        let fwd: Vec<u32> = (0..500).collect();
+        let mut rev = fwd.clone();
+        rev.reverse();
+        let mut a = l.init();
+        let mut b = l.init();
+        l.update(&mut a, &data, &fwd);
+        l.update(&mut b, &data, &rev);
+        assert_eq!(a.pos.count, b.pos.count);
+        for j in 0..54 {
+            assert!((a.pos.sum[j] - b.pos.sum[j]).abs() < 1e-9);
+            assert!((a.neg.sumsq[j] - b.neg.sumsq[j]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn merge_equals_joint_training() {
+        let data = SyntheticCovertype::new(600, 63).generate();
+        let l = GaussianNb::new(54);
+        let mut a = l.init();
+        let mut b = l.init();
+        let mut joint = l.init();
+        l.update(&mut a, &data, &(0..300).collect::<Vec<_>>());
+        l.update(&mut b, &data, &(300..600).collect::<Vec<_>>());
+        l.update(&mut joint, &data, &(0..600).collect::<Vec<_>>());
+        let merged = l.merge(&a, &b);
+        assert_eq!(merged.pos.count, joint.pos.count);
+        for j in 0..54 {
+            assert!((merged.pos.sum[j] - joint.pos.sum[j]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn revert_restores_counts_and_sums() {
+        let data = SyntheticCovertype::new(300, 64).generate();
+        let l = GaussianNb::new(54);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..150).collect::<Vec<_>>());
+        let before = m.clone();
+        let undo = l.update_logged(&mut m, &data, &(150..300).collect::<Vec<_>>());
+        l.revert(&mut m, &data, undo);
+        assert_eq!(m.pos.count, before.pos.count);
+        assert_eq!(m.neg.count, before.neg.count);
+        for j in 0..54 {
+            assert!((m.pos.sum[j] - before.pos.sum[j]).abs() < 1e-9);
+            assert!((m.neg.sumsq[j] - before.neg.sumsq[j]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn empty_class_does_not_nan() {
+        let data = Dataset::new(vec![1.0, 2.0], vec![1.0, 1.0], 1);
+        let l = GaussianNb::new(1);
+        let mut m = l.init();
+        l.update(&mut m, &data, &[0, 1]);
+        assert!(l.score(&m, &[1.5]).is_finite());
+    }
+}

@@ -1,0 +1,202 @@
+//! Online perceptron. Not in the paper's experiments, but included because
+//! its *mistake-driven* updates give the save/revert strategy (paper §4.1:
+//! "when the model undergoes few changes during an update, save/revert
+//! might be preferred") a genuinely sparse undo log: only the points that
+//! caused a mistake are recorded (4 bytes each), and revert re-subtracts
+//! their updates in reverse order. The undo cost is proportional to the
+//! number of mistakes, not to `model size × update count`. The `ablations`
+//! bench measures Copy vs SaveRevert on exactly this learner.
+//!
+//! Floating-point note: `fl(fl(w + ηyx) − ηyx)` can differ from `w` by one
+//! ulp per component. Revert is therefore exact-in-structure but only
+//! ulp-accurate in value; the TreeCV engine's exactness oracles use the
+//! integer-state learners ([`super::multiset`], [`super::histdensity`])
+//! instead.
+
+use super::{linalg, IncrementalLearner};
+use crate::data::Dataset;
+use crate::loss;
+
+/// Perceptron trainer.
+#[derive(Debug, Clone)]
+pub struct Perceptron {
+    d: usize,
+    /// Learning rate (1.0 is the classic perceptron).
+    pub eta: f32,
+}
+
+/// Perceptron model.
+#[derive(Debug, Clone)]
+pub struct PerceptronModel {
+    pub w: Vec<f32>,
+    pub bias: f32,
+    /// Total mistakes made (monotone; useful for mistake-bound checks).
+    pub mistakes: u64,
+}
+
+/// Sparse undo log: indices whose mistake-updates must be subtracted back,
+/// in application order.
+#[derive(Debug)]
+pub struct PerceptronUndo {
+    applied: Vec<u32>,
+}
+
+impl PerceptronUndo {
+    /// Undo-log footprint in bytes (for the strategy-ablation metrics).
+    pub fn bytes(&self) -> usize {
+        self.applied.len() * 4
+    }
+}
+
+impl Perceptron {
+    pub fn new(d: usize) -> Self {
+        Self { d, eta: 1.0 }
+    }
+
+    /// Returns true if the point triggered an update (was misclassified).
+    #[inline(always)]
+    fn step(&self, m: &mut PerceptronModel, x: &[f32], y: f32) -> bool {
+        let score = linalg::dot(&m.w, x) + m.bias;
+        if y * score <= 0.0 {
+            linalg::axpy(self.eta * y, x, &mut m.w);
+            m.bias += self.eta * y;
+            m.mistakes += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl IncrementalLearner for Perceptron {
+    type Model = PerceptronModel;
+    type Undo = PerceptronUndo;
+
+    fn name(&self) -> &'static str {
+        "perceptron"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> PerceptronModel {
+        PerceptronModel { w: vec![0.0; self.d], bias: 0.0, mistakes: 0 }
+    }
+
+    fn update(&self, m: &mut PerceptronModel, data: &Dataset, idx: &[u32]) {
+        for &i in idx {
+            self.step(m, data.row(i), data.label(i));
+        }
+    }
+
+    fn update_logged(&self, m: &mut PerceptronModel, data: &Dataset, idx: &[u32]) -> PerceptronUndo {
+        let mut applied = Vec::new();
+        for &i in idx {
+            if self.step(m, data.row(i), data.label(i)) {
+                applied.push(i);
+            }
+        }
+        PerceptronUndo { applied }
+    }
+
+    fn revert(&self, m: &mut PerceptronModel, data: &Dataset, undo: PerceptronUndo) {
+        for &i in undo.applied.iter().rev() {
+            let y = data.label(i);
+            linalg::axpy(-self.eta * y, data.row(i), &mut m.w);
+            m.bias -= self.eta * y;
+            m.mistakes -= 1;
+        }
+    }
+
+    fn loss(&self, m: &PerceptronModel, data: &Dataset, i: u32) -> f64 {
+        loss::misclassification(linalg::dot(&m.w, data.row(i)) + m.bias, data.label(i))
+    }
+
+    fn model_bytes(&self, m: &PerceptronModel) -> usize {
+        m.w.len() * 4 + 12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SyntheticCovertype;
+
+    #[test]
+    fn learns_separable_data() {
+        // Linearly separable toy problem: y = sign(x0).
+        let n = 200;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let v = if i % 2 == 0 { 1.0 + (i as f32) * 0.01 } else { -1.0 - (i as f32) * 0.01 };
+            x.extend_from_slice(&[v, 0.5]);
+            y.push(v.signum());
+        }
+        let data = Dataset::new(x, y, 2);
+        let l = Perceptron::new(2);
+        let mut m = l.init();
+        let idx: Vec<u32> = (0..n as u32).collect();
+        // A few passes converge on separable data.
+        for _ in 0..5 {
+            l.update(&mut m, &data, &idx);
+        }
+        assert_eq!(l.evaluate(&m, &data, &idx), 0.0);
+    }
+
+    #[test]
+    fn undo_log_is_sparse() {
+        let data = SyntheticCovertype::new(2_000, 31).generate();
+        let l = Perceptron::new(54);
+        let mut m = l.init();
+        let idx: Vec<u32> = (0..2_000).collect();
+        let undo = l.update_logged(&mut m, &data, &idx);
+        assert_eq!(undo.applied.len() as u64, m.mistakes);
+        // Mistakes << points once a rough separator is found (noisy data,
+        // but still a fraction of all points must be non-mistakes).
+        assert!(undo.applied.len() < 2_000);
+        assert!(undo.bytes() < 2_000 * 4 + 1);
+    }
+
+    #[test]
+    fn revert_restores_within_ulp() {
+        let data = SyntheticCovertype::new(500, 32).generate();
+        let l = Perceptron::new(54);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..250).collect::<Vec<_>>());
+        let before = m.clone();
+        let undo = l.update_logged(&mut m, &data, &(250..500).collect::<Vec<_>>());
+        l.revert(&mut m, &data, undo);
+        assert_eq!(m.mistakes, before.mistakes);
+        for j in 0..54 {
+            assert!(
+                (m.w[j] - before.w[j]).abs() <= 1e-4 * (1.0 + before.w[j].abs()),
+                "j={j}: {} vs {}",
+                m.w[j],
+                before.w[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mistake_bound_on_separable_margin() {
+        // Perceptron mistake bound: (R/γ)² on margin-γ separable data.
+        let n = 1_000;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let s = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            x.extend_from_slice(&[s * 2.0, 1.0]); // margin ≥ 2/√5, R ≤ √5
+            y.push(s);
+        }
+        let data = Dataset::new(x, y, 2);
+        let l = Perceptron::new(2);
+        let mut m = l.init();
+        let idx: Vec<u32> = (0..n as u32).collect();
+        for _ in 0..10 {
+            l.update(&mut m, &data, &idx);
+        }
+        assert!(m.mistakes <= 25, "mistakes {}", m.mistakes);
+    }
+}

@@ -1,0 +1,238 @@
+//! Ridge regression over running sufficient statistics `A = XᵀX`,
+//! `b = Xᵀy` (f64). Incremental by construction: an update adds rank-one
+//! terms; the weight vector is solved lazily at evaluation time via
+//! Cholesky.
+//!
+//! Why it is here: ridge/RLS is the model family the *prior-work* fast-CV
+//! methods specialize to (Golub et al. 1979's generalized CV, Pahikkala
+//! et al. 2006, Cawley 2006 — paper §1.1). [`crate::cv::exact`] implements
+//! the classic closed-form LOOCV (hat-matrix leverage formula) for this
+//! learner, giving an *exact* external comparator against which TreeCV's
+//! LOOCV is validated end-to-end; this reproduces the paper's claim that
+//! for batching-insensitive learners `R̂_{k-CV} = R_{k-CV}` (Theorem 1 with
+//! g ≡ 0, modulo f64 rounding).
+
+use super::{linalg, IncrementalLearner, MergeableLearner};
+use crate::data::Dataset;
+use crate::loss;
+
+/// Ridge trainer with fixed regularizer λ (added once, not per-point).
+#[derive(Debug, Clone)]
+pub struct OnlineRidge {
+    d: usize,
+    pub lambda: f64,
+}
+
+/// Sufficient statistics; `a` is the dense d×d Gram matrix (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RidgeModel {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    pub n: u64,
+}
+
+/// Undo log: indices added (rank-one terms are subtracted back).
+pub type RidgeUndo = Vec<u32>;
+
+impl OnlineRidge {
+    pub fn new(d: usize, lambda: f64) -> Self {
+        assert!(lambda > 0.0);
+        Self { d, lambda }
+    }
+
+    /// Solve `(A + λI) w = b`. Returns zeros for an empty model.
+    pub fn solve(&self, m: &RidgeModel) -> Vec<f64> {
+        if m.n == 0 {
+            return vec![0.0; self.d];
+        }
+        let d = self.d;
+        let mut reg = m.a.clone();
+        for j in 0..d {
+            reg[j * d + j] += self.lambda;
+        }
+        let l = linalg::cholesky(&reg, d).expect("A + λI is SPD for λ > 0");
+        linalg::cholesky_solve(&l, d, &m.b)
+    }
+
+    fn rank_one(&self, m: &mut RidgeModel, x: &[f32], y: f32, sign: f64) {
+        let d = self.d;
+        for i in 0..d {
+            let xi = x[i] as f64;
+            m.b[i] += sign * xi * y as f64;
+            for j in 0..d {
+                m.a[i * d + j] += sign * xi * (x[j] as f64);
+            }
+        }
+    }
+}
+
+impl IncrementalLearner for OnlineRidge {
+    type Model = RidgeModel;
+    type Undo = RidgeUndo;
+
+    fn name(&self) -> &'static str {
+        "online-ridge"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> RidgeModel {
+        RidgeModel { a: vec![0.0; self.d * self.d], b: vec![0.0; self.d], n: 0 }
+    }
+
+    fn update(&self, m: &mut RidgeModel, data: &Dataset, idx: &[u32]) {
+        for &i in idx {
+            self.rank_one(m, data.row(i), data.label(i), 1.0);
+            m.n += 1;
+        }
+    }
+
+    fn update_logged(&self, m: &mut RidgeModel, data: &Dataset, idx: &[u32]) -> RidgeUndo {
+        self.update(m, data, idx);
+        idx.to_vec()
+    }
+
+    fn revert(&self, m: &mut RidgeModel, data: &Dataset, undo: RidgeUndo) {
+        for &i in undo.iter().rev() {
+            self.rank_one(m, data.row(i), data.label(i), -1.0);
+            m.n -= 1;
+        }
+    }
+
+    fn loss(&self, m: &RidgeModel, data: &Dataset, i: u32) -> f64 {
+        // Single-point path (solves per call — see `evaluate` for the
+        // amortized chunk path the CV engines actually hit).
+        let w = self.solve(m);
+        let x = data.row(i);
+        let pred: f64 = (0..self.d).map(|j| w[j] * x[j] as f64).sum();
+        loss::squared_error(pred as f32, data.label(i))
+    }
+
+    /// Solve once, score the whole chunk.
+    fn evaluate(&self, m: &RidgeModel, data: &Dataset, idx: &[u32]) -> f64 {
+        if idx.is_empty() {
+            return 0.0;
+        }
+        let w = self.solve(m);
+        let mut s = 0f64;
+        for &i in idx {
+            let x = data.row(i);
+            let pred: f64 = (0..self.d).map(|j| w[j] * x[j] as f64).sum();
+            s += loss::squared_error(pred as f32, data.label(i));
+        }
+        s / idx.len() as f64
+    }
+
+    fn model_bytes(&self, m: &RidgeModel) -> usize {
+        (m.a.len() + m.b.len()) * 8 + 8
+    }
+}
+
+impl MergeableLearner for OnlineRidge {
+    fn merge(&self, a: &RidgeModel, b: &RidgeModel) -> RidgeModel {
+        RidgeModel {
+            a: a.a.iter().zip(&b.a).map(|(x, y)| x + y).collect(),
+            b: a.b.iter().zip(&b.b).map(|(x, y)| x + y).collect(),
+            n: a.n + b.n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SyntheticYearMsd;
+
+    #[test]
+    fn recovers_exact_linear_relation() {
+        // y = 2·x0 − 3·x1, no noise, tiny λ → near-exact recovery.
+        let n = 50;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut rng = crate::rng::Rng::new(71);
+        for _ in 0..n {
+            let (a, b) = (rng.next_gaussian(), rng.next_gaussian());
+            x.extend_from_slice(&[a, b]);
+            y.push(2.0 * a - 3.0 * b);
+        }
+        let data = Dataset::new(x, y, 2);
+        let l = OnlineRidge::new(2, 1e-8);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..n as u32).collect::<Vec<_>>());
+        let w = l.solve(&m);
+        assert!((w[0] - 2.0).abs() < 1e-4, "w0 {}", w[0]);
+        assert!((w[1] + 3.0).abs() < 1e-4, "w1 {}", w[1]);
+    }
+
+    #[test]
+    fn batching_insensitive() {
+        let data = SyntheticYearMsd::new(300, 72).generate();
+        let l = OnlineRidge::new(90, 1.0);
+        let idx: Vec<u32> = (0..300).collect();
+        let mut batch = l.init();
+        l.update(&mut batch, &data, &idx);
+        let mut inc = l.init();
+        for c in idx.chunks(41) {
+            l.update(&mut inc, &data, c);
+        }
+        assert_eq!(batch.n, inc.n);
+        for (a, b) in batch.a.iter().zip(&inc.a) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn merge_equals_joint() {
+        let data = SyntheticYearMsd::new(200, 73).generate();
+        let l = OnlineRidge::new(90, 1.0);
+        let mut a = l.init();
+        let mut b = l.init();
+        let mut joint = l.init();
+        l.update(&mut a, &data, &(0..100).collect::<Vec<_>>());
+        l.update(&mut b, &data, &(100..200).collect::<Vec<_>>());
+        l.update(&mut joint, &data, &(0..200).collect::<Vec<_>>());
+        let merged = l.merge(&a, &b);
+        assert_eq!(merged.n, joint.n);
+        for (x, y) in merged.a.iter().zip(&joint.a) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn revert_restores_stats() {
+        let data = SyntheticYearMsd::new(100, 74).generate();
+        let l = OnlineRidge::new(90, 1.0);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..50).collect::<Vec<_>>());
+        let before = m.clone();
+        let undo = l.update_logged(&mut m, &data, &(50..100).collect::<Vec<_>>());
+        l.revert(&mut m, &data, undo);
+        assert_eq!(m.n, before.n);
+        for (x, y) in m.a.iter().zip(&before.a) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn evaluate_matches_per_point_loss() {
+        let data = SyntheticYearMsd::new(120, 75).generate();
+        let l = OnlineRidge::new(90, 0.5);
+        let mut m = l.init();
+        l.update(&mut m, &data, &(0..100).collect::<Vec<_>>());
+        let idx: Vec<u32> = (100..120).collect();
+        let fast = l.evaluate(&m, &data, &idx);
+        let slow: f64 = idx.iter().map(|&i| l.loss(&m, &data, i)).sum::<f64>() / idx.len() as f64;
+        assert!((fast - slow).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_model_predicts_zero() {
+        let data = SyntheticYearMsd::new(10, 76).generate();
+        let l = OnlineRidge::new(90, 1.0);
+        let m = l.init();
+        let loss0 = l.loss(&m, &data, 0);
+        assert!((loss0 - (data.label(0) as f64).powi(2)).abs() < 1e-12);
+    }
+}

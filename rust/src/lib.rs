@@ -1,0 +1,54 @@
+//! # TreeCV — Fast Cross-Validation for Incremental Learning
+//!
+//! A production reproduction of Joulani, György & Szepesvári,
+//! *"Fast Cross-Validation for Incremental Learning"*, IJCAI 2015.
+//!
+//! TreeCV computes the k-fold cross-validation estimate for incremental
+//! learning algorithms in `O(log k)`-times single-training time, instead of
+//! the `k`-times cost of the standard method, by organizing the fold
+//! computation in a binary recursion tree (paper Algorithm 1).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: the TreeCV
+//!   scheduler ([`cv::treecv`]), the standard baseline ([`cv::standard`]),
+//!   fold management, save/restore strategies, the repetition/variance
+//!   harness, and a simulated distributed runtime ([`distributed`]).
+//! * **Layer 2 (python/compile/model.py)** — the incremental learners'
+//!   chunk-update / chunk-evaluate steps as JAX functions, AOT-lowered to
+//!   HLO text under `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, validated against pure-jnp oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
+//! crate) so that Python is never on the measurement path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use treecv::data::synth::SyntheticCovertype;
+//! use treecv::learner::pegasos::Pegasos;
+//! use treecv::cv::{folds::Folds, treecv::TreeCv, CvEngine};
+//!
+//! let data = SyntheticCovertype::new(10_000, 42).generate();
+//! let learner = Pegasos::new(54, 1e-6);
+//! let folds = Folds::new(data.n, 10, 7);
+//! let res = TreeCv::default().run(&learner, &data, &folds);
+//! println!("10-CV misclassification = {:.4}", res.estimate);
+//! ```
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod distributed;
+pub mod learner;
+pub mod loss;
+pub mod metrics;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

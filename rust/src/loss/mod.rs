@@ -1,0 +1,108 @@
+//! Performance measures (the paper's `ℓ(p, x, y)`).
+//!
+//! The paper's setting scores a prediction `p` for a pair `(x, y)` with an
+//! arbitrary loss `ℓ : P × X × Y → R` (its Table 1). These are the concrete
+//! instantiations used by the learners and the CV engines. They are free
+//! functions (not a trait) because each learner's `loss` method picks the
+//! measure the paper pairs with it — PEGASOS reports misclassification,
+//! LSQSGD squared error, K-means quantization error, density estimation
+//! negative log-likelihood.
+
+/// 0/1 misclassification: `I{sign(score) != y}` with ties predicted as +1.
+#[inline(always)]
+pub fn misclassification(score: f32, y: f32) -> f64 {
+    let pred = if score >= 0.0 { 1.0 } else { -1.0 };
+    if pred == y {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// Hinge loss `max(0, 1 - y·score)` (PEGASOS's surrogate objective; the
+/// stability guarantee of the paper's Thm 2 is w.r.t. this loss).
+#[inline(always)]
+pub fn hinge(score: f32, y: f32) -> f64 {
+    (1.0 - (y * score) as f64).max(0.0)
+}
+
+/// Regularized hinge: `max(0, 1 - y·score) + (λ/2)·||w||²`.
+#[inline(always)]
+pub fn regularized_hinge(score: f32, y: f32, lambda: f64, w_norm_sq: f64) -> f64 {
+    hinge(score, y) + 0.5 * lambda * w_norm_sq
+}
+
+/// Squared error `(pred - y)²`.
+#[inline(always)]
+pub fn squared_error(pred: f32, y: f32) -> f64 {
+    let e = (pred - y) as f64;
+    e * e
+}
+
+/// K-means quantization error `||x - c||²` for the assigned center `c`.
+#[inline(always)]
+pub fn quantization_error(x: &[f32], c: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), c.len());
+    let mut s = 0f64;
+    for (a, b) in x.iter().zip(c) {
+        let dv = (a - b) as f64;
+        s += dv * dv;
+    }
+    s
+}
+
+/// Negative log-likelihood `-log f(x)` for density estimation, clamped to
+/// avoid `inf` when the model assigns (numerically) zero mass.
+#[inline(always)]
+pub fn negative_log_likelihood(density: f64) -> f64 {
+    -(density.max(1e-300)).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn misclassification_basic() {
+        assert_eq!(misclassification(0.7, 1.0), 0.0);
+        assert_eq!(misclassification(-0.7, 1.0), 1.0);
+        assert_eq!(misclassification(-0.2, -1.0), 0.0);
+        // Ties predict +1.
+        assert_eq!(misclassification(0.0, 1.0), 0.0);
+        assert_eq!(misclassification(0.0, -1.0), 1.0);
+    }
+
+    #[test]
+    fn hinge_basic() {
+        assert_eq!(hinge(1.0, 1.0), 0.0);
+        assert_eq!(hinge(2.0, 1.0), 0.0);
+        assert!((hinge(0.5, 1.0) - 0.5).abs() < 1e-12);
+        assert!((hinge(-1.0, 1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regularized_hinge_adds_penalty() {
+        let base = hinge(0.5, 1.0);
+        let reg = regularized_hinge(0.5, 1.0, 0.1, 4.0);
+        assert!((reg - (base + 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn squared_error_basic() {
+        assert_eq!(squared_error(3.0, 1.0), 4.0);
+        assert_eq!(squared_error(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn quantization_error_basic() {
+        assert!((quantization_error(&[1.0, 2.0], &[0.0, 0.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(quantization_error(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn nll_clamps_zero_density() {
+        assert!(negative_log_likelihood(0.0).is_finite());
+        assert!((negative_log_likelihood(1.0)).abs() < 1e-12);
+        assert!(negative_log_likelihood(0.1) > 0.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! `repro` — the TreeCV experiment launcher.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//! * `cv`      — run any (task, engine, k, ordering, strategy) combination.
+//! * `table2`  — reproduce Table 2 (estimate mean ± std over repetitions).
+//! * `figure2` — reproduce Figure 2 (runtime vs n for several k; all panels).
+//! * `loocv`   — the headline: LOOCV at large n with TreeCV vs standard.
+//! * `dist`    — the §4.1 distributed simulation (communication accounting).
+//! * `grid`    — the intro's motivation: hyper-parameter grid search driven
+//!               by fast CV.
+//! * `selfcheck` — verify the PJRT runtime and AOT artifacts end-to-end.
+//!
+//! Argument parsing is in-tree (`--flag value` / `--flag` booleans); run
+//! `repro help` for usage.
+
+use treecv::config::{Engine, ExperimentConfig, OrderingCfg, StrategyCfg, Task};
+use treecv::coordinator::{self, paper};
+use treecv::report::{Json, ToJson};
+use treecv::Result;
+
+const USAGE: &str = "\
+repro — TreeCV (IJCAI 2015) reproduction driver
+
+USAGE: repro <command> [--flag value ...]
+
+COMMANDS
+  cv         Run a CV experiment.
+             --task pegasos|lsqsgd|kmeans|density|naive_bayes|ridge
+             --engine treecv|standard|parallel_treecv|merge
+             --ks 5,10,100        fold counts (0 = LOOCV)
+             --n 20000  --reps 20  --seed 42
+             --randomized          randomized feeding order
+             --save-revert         save/revert strategy (default: copy)
+             --lambda 1e-6  --alpha 0  --data FILE.libsvm
+             --config FILE         load a config file (flags override)
+             --json                emit JSON
+  table2     Reproduce Table 2.   --task --n --ks --reps --seed --json
+  figure2    Reproduce Figure 2.  --task --panel fixed|randomized|loocv
+             --ns 1000,2000,...   --reps --seed   (CSV to stdout)
+  loocv      LOOCV headline.      --task --n --standard-max-n --seed
+  dist       Distributed sim.     --n --ks --seed
+  grid       λ grid search.       --n --k --log-lambdas -7,-6,-5 --seed
+  selfcheck  Verify PJRT runtime + artifacts.
+  help       Show this message.
+";
+
+/// Tiny flag parser: `--key value` pairs plus boolean `--key` switches.
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String], boolean_flags: &[&str]) -> Result<Args> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                anyhow::bail!("unexpected argument `{a}` (flags start with --)");
+            };
+            if boolean_flags.contains(&key) {
+                flags.push((key.to_string(), None));
+                i += 1;
+            } else {
+                let Some(val) = argv.get(i + 1) else {
+                    anyhow::bail!("flag --{key} needs a value");
+                };
+                flags.push((key.to_string(), Some(val.clone())));
+                i += 2;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    fn get_list(&self, key: &str, default: Vec<usize>) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|e| anyhow::anyhow!("--{key} `{p}`: {e}")))
+                .collect(),
+        }
+    }
+
+    fn get_f64_list(&self, key: &str, default: Vec<f64>) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|e| anyhow::anyhow!("--{key} `{p}`: {e}")))
+                .collect(),
+        }
+    }
+}
+
+fn cell_reports_json(reports: &[coordinator::CellReport]) -> Json {
+    Json::Arr(
+        reports
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("task", Json::str(r.task.name())),
+                    ("engine", Json::str(r.engine.name())),
+                    ("k", Json::num(r.k as f64)),
+                    ("n", Json::num(r.n as f64)),
+                    ("repetitions", Json::num(r.repetitions as f64)),
+                    ("mean", Json::Num(r.mean)),
+                    ("std", Json::Num(r.std)),
+                    ("mean_wall_secs", Json::Num(r.mean_wall_secs)),
+                    ("ops", r.ops.to_json()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "cv" => {
+            let args = Args::parse(rest, &["randomized", "save-revert", "json"])?;
+            let mut cfg = match args.get("config") {
+                Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+                None => ExperimentConfig::default(),
+            };
+            if let Some(t) = args.get("task") {
+                cfg.task = Task::parse(t)?;
+            }
+            if let Some(e) = args.get("engine") {
+                cfg.engine = Engine::parse(e)?;
+            }
+            cfg.ks = args.get_list("ks", cfg.ks.clone())?;
+            cfg.n = args.get_parse("n", cfg.n)?;
+            cfg.seed = args.get_parse("seed", cfg.seed)?;
+            cfg.repetitions = args.get_parse("reps", cfg.repetitions)?;
+            if args.has("randomized") {
+                cfg.ordering = OrderingCfg::Randomized;
+            }
+            if args.has("save-revert") {
+                cfg.strategy = StrategyCfg::SaveRevert;
+            }
+            cfg.lambda = args.get_parse("lambda", cfg.lambda)?;
+            cfg.alpha = args.get_parse("alpha", cfg.alpha)?;
+            if let Some(d) = args.get("data") {
+                cfg.data_path = Some(d.to_string());
+            }
+            let reports = coordinator::run_experiment(&cfg)?;
+            if args.has("json") {
+                println!("{}", cell_reports_json(&reports).render_pretty());
+            } else {
+                print!("{}", coordinator::format_table(&reports));
+            }
+        }
+        "table2" => {
+            let args = Args::parse(rest, &["json"])?;
+            let task = Task::parse(args.get("task").unwrap_or("pegasos"))?;
+            let n = args.get_parse("n", 20_000usize)?;
+            let ks = args.get_list("ks", vec![5, 10, 100, 0])?;
+            let reps = args.get_parse("reps", 20usize)?;
+            let seed = args.get_parse("seed", 42u64)?;
+            let out = paper::table2(task, n, &ks, reps, seed)?;
+            if args.has("json") {
+                println!("{}", out.to_json().render_pretty());
+            } else {
+                print!("{}", out.render());
+            }
+        }
+        "figure2" => {
+            let args = Args::parse(rest, &[])?;
+            let task = Task::parse(args.get("task").unwrap_or("pegasos"))?;
+            let panel = paper::Panel::parse(args.get("panel").unwrap_or("fixed"))?;
+            let n = args.get_parse("n", 100_000usize)?;
+            let ns = args.get_list("ns", paper::default_ns(n))?;
+            let reps = args.get_parse("reps", 5usize)?;
+            let seed = args.get_parse("seed", 42u64)?;
+            let out = paper::figure2(task, panel, &ns, reps, seed)?;
+            print!("{}", out.render_csv());
+        }
+        "loocv" => {
+            let args = Args::parse(rest, &[])?;
+            let task = Task::parse(args.get("task").unwrap_or("pegasos"))?;
+            let n = args.get_parse("n", 581_012usize)?;
+            let max_std = args.get_parse("standard-max-n", 10_000usize)?;
+            let seed = args.get_parse("seed", 42u64)?;
+            print!("{}", paper::loocv_headline(task, n, max_std, seed)?);
+        }
+        "dist" => {
+            let args = Args::parse(rest, &[])?;
+            let n = args.get_parse("n", 20_000usize)?;
+            let ks = args.get_list("ks", vec![4, 8, 16, 32, 64])?;
+            let seed = args.get_parse("seed", 42u64)?;
+            print!("{}", paper::distributed_report(n, &ks, seed)?);
+        }
+        "grid" => {
+            let args = Args::parse(rest, &[])?;
+            let n = args.get_parse("n", 20_000usize)?;
+            let k = args.get_parse("k", 10usize)?;
+            let lls = args.get_f64_list("log-lambdas", vec![-7.0, -6.0, -5.0, -4.0, -3.0])?;
+            let seed = args.get_parse("seed", 42u64)?;
+            print!("{}", paper::grid_search(n, k, &lls, seed)?);
+        }
+        "selfcheck" => paper::selfcheck()?,
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("unknown command `{other}`\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Operation counters and timing used to validate the paper's complexity
+//! claims (Theorem 3 / Corollary 4: TreeCV does ≤ (1+c)·n·log₂(2k) update
+//! work; §4.1: O(log k) live model copies sequentially, O(k log k)
+//! communications distributed).
+//!
+//! Counters are plain `u64`s carried through the engines (no atomics on the
+//! sequential hot path); the parallel engine keeps per-thread counters and
+//! merges them on join.
+
+use std::time::{Duration, Instant};
+
+/// Work counters for one CV computation.
+#[derive(Debug, Default, Clone)]
+pub struct OpCounts {
+    /// Calls into `IncrementalLearner::update` / `update_logged`.
+    pub update_calls: u64,
+    /// Total points fed through updates (the paper's `n·log₂(2k)` bound
+    /// applies to this number for TreeCV, `n·(k-1)/k·k` for standard CV).
+    pub points_updated: u64,
+    /// Model snapshots taken (Copy strategy / parallel engine).
+    pub model_copies: u64,
+    /// Bytes of model state snapshotted.
+    pub bytes_copied: u64,
+    /// Reverts applied (SaveRevert strategy).
+    pub model_restores: u64,
+    /// Chunk evaluations (one per fold).
+    pub evals: u64,
+    /// Points scored during evaluation.
+    pub points_evaluated: u64,
+    /// Points passed through a random permutation (randomized variants).
+    pub points_permuted: u64,
+}
+
+impl OpCounts {
+    /// Merge counters from another (sub)computation.
+    pub fn merge(&mut self, other: &OpCounts) {
+        self.update_calls += other.update_calls;
+        self.points_updated += other.points_updated;
+        self.model_copies += other.model_copies;
+        self.bytes_copied += other.bytes_copied;
+        self.model_restores += other.model_restores;
+        self.evals += other.evals;
+        self.points_evaluated += other.points_evaluated;
+        self.points_permuted += other.points_permuted;
+    }
+}
+
+/// Simple scope timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Streaming mean/variance accumulator (Welford) for the repetition
+/// harness (paper Table 2 reports mean ± std over 100 repetitions).
+#[derive(Debug, Default, Clone)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl RunningStats {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (n−1 denominator), 0 for n < 2.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcounts_merge_adds() {
+        let mut a = OpCounts { update_calls: 1, points_updated: 10, ..Default::default() };
+        let b = OpCounts { update_calls: 2, points_updated: 20, evals: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.update_calls, 3);
+        assert_eq!(a.points_updated, 30);
+        assert_eq!(a.evals, 3);
+    }
+
+    #[test]
+    fn running_stats_mean_std() {
+        let mut s = RunningStats::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // Sample std of this classic set is sqrt(32/7).
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_stats_degenerate() {
+        let mut s = RunningStats::default();
+        assert_eq!(s.std(), 0.0);
+        s.push(3.0);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.std(), 0.0);
+    }
+}

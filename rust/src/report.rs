@@ -1,0 +1,190 @@
+//! Minimal JSON emission for reports.
+//!
+//! The offline build environment vendors no serde facade, so the library
+//! carries its own small JSON value model + writer. Reports (cells, bench
+//! rows, distributed stats) convert to [`Json`] and render; there is no
+//! parser because nothing in the system consumes JSON (the artifact
+//! manifest uses a line format precisely to keep it that way).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value (sufficient subset; maps are ordered for stable output).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num<T: Into<f64>>(v: T) -> Json {
+        Json::Num(v.into())
+    }
+
+    pub fn str<S: Into<String>>(s: S) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Render compactly.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Render with 2-space indentation.
+    pub fn render_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    if *v == v.trunc() && v.abs() < 9.0e15 {
+                        let _ = write!(out, "{}", *v as i64);
+                    } else {
+                        let _ = write!(out, "{v}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no inf/nan
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::newline(out, indent, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                if !items.is_empty() {
+                    Self::newline(out, indent, depth);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::newline(out, indent, depth + 1);
+                    Json::Str(k.clone()).write(out, None, 0);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if !map.is_empty() {
+                    Self::newline(out, indent, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
+        if let Some(w) = indent {
+            out.push('\n');
+            for _ in 0..w * depth {
+                out.push(' ');
+            }
+        }
+    }
+}
+
+/// Types that can report themselves as JSON.
+pub trait ToJson {
+    fn to_json(&self) -> Json;
+}
+
+impl ToJson for crate::metrics::OpCounts {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("update_calls", Json::num(self.update_calls as f64)),
+            ("points_updated", Json::num(self.points_updated as f64)),
+            ("model_copies", Json::num(self.model_copies as f64)),
+            ("bytes_copied", Json::num(self.bytes_copied as f64)),
+            ("model_restores", Json::num(self.model_restores as f64)),
+            ("evals", Json::num(self.evals as f64)),
+            ("points_evaluated", Json::num(self.points_evaluated as f64)),
+            ("points_permuted", Json::num(self.points_permuted as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scalars() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::num(3.0).render(), "3");
+        assert_eq!(Json::num(3.5).render(), "3.5");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn escapes_strings() {
+        assert_eq!(Json::str("a\"b\\c\nd").render(), r#""a\"b\\c\nd""#);
+        assert_eq!(Json::str("\u{1}").render(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn renders_nested() {
+        let j = Json::obj(vec![
+            ("k", Json::num(5.0)),
+            ("name", Json::str("treecv")),
+            ("folds", Json::Arr(vec![Json::num(1.0), Json::num(2.0)])),
+        ]);
+        assert_eq!(j.render(), r#"{"folds":[1,2],"k":5,"name":"treecv"}"#);
+    }
+
+    #[test]
+    fn pretty_has_newlines() {
+        let j = Json::obj(vec![("a", Json::num(1.0))]);
+        let p = j.render_pretty();
+        assert!(p.contains('\n'));
+        assert!(p.contains("\"a\": 1"));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::Arr(vec![]).render(), "[]");
+        assert_eq!(Json::Obj(Default::default()).render(), "{}");
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO *text*,
+//! see `python/compile/aot.py`) and executes them from the Rust hot path.
+//! Python is never invoked at runtime — `make artifacts` runs once at
+//! build time.
+//!
+//! Interchange format is HLO text, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+
+pub mod xla_learner;
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Default artifact directory, overridable via `TREECV_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("TREECV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if the artifact directory holds the expected compiled programs.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+/// A compiled, loaded XLA executable plus its artifact identity.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True, so outputs are one tuple.
+        lit.to_tuple().map_err(|e| anyhow!("untupling result of {}: {e:?}", self.name))
+    }
+}
+
+/// PJRT CPU client + compile cache keyed by artifact name.
+///
+/// Compilation is the expensive step (tens of ms); every CV run reuses the
+/// cached executables, so the per-chunk cost is literal marshaling +
+/// execution only.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-backed runtime reading from [`artifacts_dir`].
+    pub fn cpu() -> Result<Self> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    /// Create a runtime reading artifacts from `dir`.
+    pub fn with_dir(dir: PathBuf) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()), dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) the artifact `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let exe = self.compile_file(name, &path)?;
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn compile_file(&self, name: &str, path: &Path) -> Result<Executable> {
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable { name: name.to_string(), exe })
+    }
+}
+
+/// Artifact manifest written by `python/compile/aot.py`: records the
+/// (B, d) shapes each program was lowered for, so the Rust side can check
+/// compatibility instead of failing inside XLA.
+///
+/// Line format (whitespace-separated, `#` comments):
+/// ```text
+/// jax 0.8.2
+/// program pegasos_update_b256_d54 256 54
+/// ```
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub programs: Vec<ManifestEntry>,
+    pub jax_version: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Chunk capacity (rows per execution, padded).
+    pub block: usize,
+    /// Feature dimension.
+    pub dim: usize,
+}
+
+impl Manifest {
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir().join("manifest.txt"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse the line format above.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut programs = Vec::new();
+        let mut jax_version = String::from("unknown");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut tok = line.split_ascii_whitespace();
+            match tok.next() {
+                Some("jax") => {
+                    jax_version =
+                        tok.next().ok_or_else(|| anyhow!("line {}: jax version missing", lineno + 1))?.to_string();
+                }
+                Some("program") => {
+                    let name = tok
+                        .next()
+                        .ok_or_else(|| anyhow!("line {}: program name missing", lineno + 1))?
+                        .to_string();
+                    let block: usize = tok
+                        .next()
+                        .ok_or_else(|| anyhow!("line {}: block missing", lineno + 1))?
+                        .parse()
+                        .map_err(|e| anyhow!("line {}: bad block: {e}", lineno + 1))?;
+                    let dim: usize = tok
+                        .next()
+                        .ok_or_else(|| anyhow!("line {}: dim missing", lineno + 1))?
+                        .parse()
+                        .map_err(|e| anyhow!("line {}: bad dim: {e}", lineno + 1))?;
+                    programs.push(ManifestEntry { name, block, dim });
+                }
+                Some(other) => anyhow::bail!("line {}: unknown directive `{other}`", lineno + 1),
+                None => unreachable!(),
+            }
+        }
+        Ok(Self { programs, jax_version })
+    }
+
+    /// Find the program `family` (e.g. "pegasos_update") for dimension `d`,
+    /// preferring the largest block.
+    pub fn find(&self, family: &str, d: usize) -> Option<&ManifestEntry> {
+        self.programs
+            .iter()
+            .filter(|p| p.dim == d && p.name.starts_with(family))
+            .max_by_key(|p| p.block)
+    }
+}
+
+/// Build an `f32` literal of the given shape from a slice.
+pub fn literal_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(values);
+    lit.reshape(dims).map_err(|e| anyhow!("reshaping literal to {dims:?}: {e:?}"))
+}
+
+/// Build a scalar f32 literal.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // Don't mutate the env in parallel tests; just exercise default.
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || d.is_absolute());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = match PjrtRuntime::with_dir(PathBuf::from("/nonexistent-artifacts")) {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        let err = match rt.load("no_such_program") {
+            Err(e) => e,
+            Ok(_) => panic!("expected a missing-artifact error"),
+        };
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            "# generated\njax 0.8.2\nprogram pegasos_update_b256_d54 256 54\n\
+             program pegasos_update_b64_d54 64 54\n",
+        )
+        .unwrap();
+        assert_eq!(m.jax_version, "0.8.2");
+        let e = m.find("pegasos_update", 54).unwrap();
+        assert_eq!(e.block, 256);
+        assert!(m.find("pegasos_update", 90).is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("bogus line\n").is_err());
+        assert!(Manifest::parse("program x\n").is_err());
+        assert!(Manifest::parse("program x notanum 3\n").is_err());
+    }
+}

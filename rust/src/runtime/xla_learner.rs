@@ -1,0 +1,289 @@
+//! XLA-backed incremental learners: the same [`IncrementalLearner`]
+//! interface as the pure-Rust learners, but the chunk-update and
+//! chunk-evaluate steps execute the AOT-compiled JAX/Pallas artifacts
+//! (Layer 1/2) through PJRT. This is the three-layer composition: the L3
+//! TreeCV engines drive these learners without knowing XLA is underneath.
+//!
+//! Chunks are processed in fixed-capacity blocks (the artifact's lowered
+//! shape `B × d`), padded with zero rows and a 0/1 validity mask so
+//! variable-size chunks run on a single compiled executable. Padded rows
+//! are masked out of both the SGD step (they do not advance the step
+//! counter `t`) and the evaluation sum.
+//!
+//! Numerics note: the artifacts carry the step counter as an f32 scalar, so
+//! the XLA learners are validated for `n < 2²⁴`; the pure-Rust learners are
+//! the path used for the huge-`n` Figure-2 sweeps.
+
+use super::{literal_f32, scalar_f32, Executable, Manifest, PjrtRuntime};
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+use crate::loss;
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::Arc;
+
+/// Gather rows `idx[lo..hi]` into a zero-padded `(block × d)` buffer plus
+/// labels and mask.
+fn gather_block(
+    data: &Dataset,
+    idx: &[u32],
+    block: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let d = data.d;
+    let mut x = vec![0f32; block * d];
+    let mut y = vec![0f32; block];
+    let mut mask = vec![0f32; block];
+    for (r, &i) in idx.iter().enumerate() {
+        x[r * d..(r + 1) * d].copy_from_slice(data.row(i));
+        y[r] = data.label(i);
+        mask[r] = 1.0;
+    }
+    (x, y, mask)
+}
+
+/// PEGASOS whose chunk update/eval run the `pegasos_update` /
+/// `pegasos_eval` artifacts.
+pub struct XlaPegasos {
+    d: usize,
+    block: usize,
+    pub lambda: f64,
+    update_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+}
+
+/// Host-resident model state (weights round-trip through PJRT per block).
+#[derive(Debug, Clone)]
+pub struct XlaPegasosModel {
+    pub w: Vec<f32>,
+    pub t: f32,
+}
+
+impl XlaPegasos {
+    /// Look up the (block, dim)-matched artifacts in the manifest and
+    /// compile them.
+    pub fn from_manifest(rt: &PjrtRuntime, manifest: &Manifest, d: usize, lambda: f64) -> Result<Self> {
+        let upd = manifest
+            .find("pegasos_update", d)
+            .ok_or_else(|| anyhow!("no pegasos_update artifact for d={d}"))?;
+        let evl = manifest
+            .find("pegasos_eval", d)
+            .ok_or_else(|| anyhow!("no pegasos_eval artifact for d={d}"))?;
+        anyhow::ensure!(upd.block == evl.block, "update/eval artifact block mismatch");
+        Ok(Self {
+            d,
+            block: upd.block,
+            lambda,
+            update_exe: rt.load(&upd.name)?,
+            eval_exe: rt.load(&evl.name)?,
+        })
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    fn run_update(&self, m: &mut XlaPegasosModel, data: &Dataset, idx: &[u32]) -> Result<()> {
+        for blk in idx.chunks(self.block) {
+            let (x, y, mask) = gather_block(data, blk, self.block);
+            let inputs = [
+                literal_f32(&m.w, &[self.d as i64])?,
+                scalar_f32(m.t),
+                scalar_f32(self.lambda as f32),
+                literal_f32(&x, &[self.block as i64, self.d as i64])?,
+                literal_f32(&y, &[self.block as i64])?,
+                literal_f32(&mask, &[self.block as i64])?,
+            ];
+            let out = self.update_exe.run(&inputs)?;
+            anyhow::ensure!(out.len() == 2, "pegasos_update returned {} outputs", out.len());
+            m.w = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            m.t = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        }
+        Ok(())
+    }
+
+    fn run_eval(&self, m: &XlaPegasosModel, data: &Dataset, idx: &[u32]) -> Result<f64> {
+        let mut err_sum = 0f64;
+        for blk in idx.chunks(self.block) {
+            let (x, y, mask) = gather_block(data, blk, self.block);
+            let inputs = [
+                literal_f32(&m.w, &[self.d as i64])?,
+                literal_f32(&x, &[self.block as i64, self.d as i64])?,
+                literal_f32(&y, &[self.block as i64])?,
+                literal_f32(&mask, &[self.block as i64])?,
+            ];
+            let out = self.eval_exe.run(&inputs)?;
+            err_sum += out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0] as f64;
+        }
+        Ok(err_sum / idx.len().max(1) as f64)
+    }
+}
+
+impl IncrementalLearner for XlaPegasos {
+    type Model = XlaPegasosModel;
+    type Undo = XlaPegasosModel;
+
+    fn name(&self) -> &'static str {
+        "xla-pegasos"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> XlaPegasosModel {
+        XlaPegasosModel { w: vec![0.0; self.d], t: 0.0 }
+    }
+
+    fn update(&self, m: &mut XlaPegasosModel, data: &Dataset, idx: &[u32]) {
+        self.run_update(m, data, idx).expect("pegasos_update artifact execution failed");
+    }
+
+    fn update_logged(&self, m: &mut XlaPegasosModel, data: &Dataset, idx: &[u32]) -> Self::Undo {
+        let snap = m.clone();
+        self.update(m, data, idx);
+        snap
+    }
+
+    fn revert(&self, m: &mut XlaPegasosModel, _data: &Dataset, undo: Self::Undo) {
+        *m = undo;
+    }
+
+    fn loss(&self, m: &XlaPegasosModel, data: &Dataset, i: u32) -> f64 {
+        // Host-side single-point path; `evaluate` uses the XLA kernel.
+        let x = data.row(i);
+        let score: f32 = m.w.iter().zip(x).map(|(a, b)| a * b).sum();
+        loss::misclassification(score, data.label(i))
+    }
+
+    fn evaluate(&self, m: &XlaPegasosModel, data: &Dataset, idx: &[u32]) -> f64 {
+        if idx.is_empty() {
+            return 0.0;
+        }
+        self.run_eval(m, data, idx).expect("pegasos_eval artifact execution failed")
+    }
+
+    fn model_bytes(&self, m: &XlaPegasosModel) -> usize {
+        m.w.len() * 4 + 4
+    }
+}
+
+/// LSQSGD whose chunk update/eval run the `lsqsgd_update` / `lsqsgd_eval`
+/// artifacts.
+pub struct XlaLsqSgd {
+    d: usize,
+    block: usize,
+    pub alpha: f64,
+    update_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaLsqSgdModel {
+    pub w: Vec<f32>,
+    pub wavg: Vec<f32>,
+    pub t: f32,
+}
+
+impl XlaLsqSgd {
+    pub fn from_manifest(rt: &PjrtRuntime, manifest: &Manifest, d: usize, alpha: f64) -> Result<Self> {
+        let upd = manifest
+            .find("lsqsgd_update", d)
+            .ok_or_else(|| anyhow!("no lsqsgd_update artifact for d={d}"))?;
+        let evl = manifest
+            .find("lsqsgd_eval", d)
+            .ok_or_else(|| anyhow!("no lsqsgd_eval artifact for d={d}"))?;
+        anyhow::ensure!(upd.block == evl.block, "update/eval artifact block mismatch");
+        Ok(Self {
+            d,
+            block: upd.block,
+            alpha,
+            update_exe: rt.load(&upd.name)?,
+            eval_exe: rt.load(&evl.name)?,
+        })
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    fn run_update(&self, m: &mut XlaLsqSgdModel, data: &Dataset, idx: &[u32]) -> Result<()> {
+        for blk in idx.chunks(self.block) {
+            let (x, y, mask) = gather_block(data, blk, self.block);
+            let inputs = [
+                literal_f32(&m.w, &[self.d as i64])?,
+                literal_f32(&m.wavg, &[self.d as i64])?,
+                scalar_f32(m.t),
+                scalar_f32(self.alpha as f32),
+                literal_f32(&x, &[self.block as i64, self.d as i64])?,
+                literal_f32(&y, &[self.block as i64])?,
+                literal_f32(&mask, &[self.block as i64])?,
+            ];
+            let out = self.update_exe.run(&inputs)?;
+            anyhow::ensure!(out.len() == 3, "lsqsgd_update returned {} outputs", out.len());
+            m.w = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            m.wavg = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            m.t = out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        }
+        Ok(())
+    }
+}
+
+impl IncrementalLearner for XlaLsqSgd {
+    type Model = XlaLsqSgdModel;
+    type Undo = XlaLsqSgdModel;
+
+    fn name(&self) -> &'static str {
+        "xla-lsqsgd"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init(&self) -> XlaLsqSgdModel {
+        XlaLsqSgdModel { w: vec![0.0; self.d], wavg: vec![0.0; self.d], t: 0.0 }
+    }
+
+    fn update(&self, m: &mut XlaLsqSgdModel, data: &Dataset, idx: &[u32]) {
+        self.run_update(m, data, idx).expect("lsqsgd_update artifact execution failed");
+    }
+
+    fn update_logged(&self, m: &mut XlaLsqSgdModel, data: &Dataset, idx: &[u32]) -> Self::Undo {
+        let snap = m.clone();
+        self.update(m, data, idx);
+        snap
+    }
+
+    fn revert(&self, m: &mut XlaLsqSgdModel, _data: &Dataset, undo: Self::Undo) {
+        *m = undo;
+    }
+
+    fn loss(&self, m: &XlaLsqSgdModel, data: &Dataset, i: u32) -> f64 {
+        let x = data.row(i);
+        let pred: f32 = m.wavg.iter().zip(x).map(|(a, b)| a * b).sum();
+        loss::squared_error(pred, data.label(i))
+    }
+
+    fn evaluate(&self, m: &XlaLsqSgdModel, data: &Dataset, idx: &[u32]) -> f64 {
+        if idx.is_empty() {
+            return 0.0;
+        }
+        let mut sse = 0f64;
+        for blk in idx.chunks(self.block) {
+            let (x, y, mask) = gather_block(data, blk, self.block);
+            let inputs = [
+                literal_f32(&m.wavg, &[self.d as i64]).expect("literal"),
+                literal_f32(&x, &[self.block as i64, self.d as i64]).expect("literal"),
+                literal_f32(&y, &[self.block as i64]).expect("literal"),
+                literal_f32(&mask, &[self.block as i64]).expect("literal"),
+            ];
+            let out = self.eval_exe.run(&inputs).expect("lsqsgd_eval artifact execution failed");
+            sse += out[0].to_vec::<f32>().expect("f32 output")[0] as f64;
+        }
+        sse / idx.len() as f64
+    }
+
+    fn model_bytes(&self, m: &XlaLsqSgdModel) -> usize {
+        (m.w.len() + m.wavg.len()) * 4 + 4
+    }
+}

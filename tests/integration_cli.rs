@@ -1,0 +1,113 @@
+//! CLI integration: drive the `repro` binary end-to-end (small workloads)
+//! and check output shapes. Uses the binary Cargo builds for this package.
+
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = repro().args(args).output().expect("spawn repro");
+    assert!(
+        out.status.success(),
+        "repro {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+#[test]
+fn help_lists_commands() {
+    let text = run_ok(&["help"]);
+    for cmd in ["cv", "table2", "figure2", "loocv", "dist", "grid", "selfcheck"] {
+        assert!(text.contains(cmd), "missing {cmd}");
+    }
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let text = run_ok(&[]);
+    assert!(text.contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = repro().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cv_text_output() {
+    let text = run_ok(&["cv", "--task", "density", "--n", "300", "--ks", "5", "--reps", "2"]);
+    assert!(text.contains("density"));
+    assert!(text.contains("treecv"));
+    assert_eq!(text.lines().count(), 2); // header + one row
+}
+
+#[test]
+fn cv_json_output_is_valid_shape() {
+    let text = run_ok(&[
+        "cv", "--task", "density", "--n", "200", "--ks", "4,8", "--reps", "2", "--json",
+    ]);
+    assert!(text.trim_start().starts_with('['));
+    assert!(text.contains("\"engine\": \"treecv\""));
+    assert!(text.contains("\"points_updated\""));
+    // Two ks → two report objects.
+    assert_eq!(text.matches("\"mean\"").count(), 2);
+}
+
+#[test]
+fn cv_rejects_bad_flags() {
+    let out = repro().args(["cv", "--task", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = repro().args(["cv", "--ks"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn table2_renders_paper_layout() {
+    let text = run_ok(&[
+        "table2", "--task", "density", "--n", "150", "--ks", "5,0", "--reps", "2",
+    ]);
+    assert!(text.contains("Table 2"));
+    assert!(text.contains("TreeCV fixed"));
+    assert!(text.contains("Standard randomized"));
+    assert!(text.contains("N/A")); // standard LOOCV cell
+    assert!(text.contains("n=150"));
+}
+
+#[test]
+fn figure2_emits_csv() {
+    let text = run_ok(&[
+        "figure2", "--task", "density", "--panel", "loocv", "--ns", "100,150", "--reps", "1",
+    ]);
+    let mut lines = text.lines();
+    assert_eq!(lines.next().unwrap(), "series,n,k,mean_wall_secs,points_updated");
+    assert!(text.contains("treecv-loocv-fixed,100,100,"));
+}
+
+#[test]
+fn dist_reports_comm_columns() {
+    let text = run_ok(&["dist", "--n", "400", "--ks", "4,8"]);
+    assert!(text.contains("model_msgs"));
+    assert!(text.lines().count() >= 4);
+}
+
+#[test]
+fn grid_reports_best_lambda() {
+    let text = run_ok(&["grid", "--n", "400", "--k", "4", "--log-lambdas", "-4,-3"]);
+    assert!(text.contains("best:"));
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = std::env::temp_dir().join("treecv_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.toml");
+    std::fs::write(&cfg, "task = \"density\"\nn = 120\nks = [3]\nrepetitions = 2\n").unwrap();
+    let text = run_ok(&["cv", "--config", cfg.to_str().unwrap()]);
+    assert!(text.contains("density"));
+    assert!(text.contains("     3 ") || text.contains(" 3 "));
+}

@@ -1,0 +1,268 @@
+//! Cross-module integration tests: the CV engines against every learner,
+//! the paper's theorems as executable properties, and randomized
+//! property-style sweeps (many seeded trials standing in for proptest,
+//! which is unavailable offline).
+
+use treecv::cv::exact::ridge_loocv;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::mergecv::MergeCv;
+use treecv::cv::parallel::ParallelTreeCv;
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::{CvEngine, Strategy};
+use treecv::data::synth::*;
+use treecv::data::Dataset;
+use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::kmeans::OnlineKMeans;
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::multiset::MultisetLearner;
+use treecv::learner::naive_bayes::GaussianNb;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::perceptron::Perceptron;
+use treecv::learner::ridge::OnlineRidge;
+use treecv::learner::IncrementalLearner;
+use treecv::rng::Rng;
+
+/// Property sweep: for random (n, k, seed), TreeCV == Standard CV exactly
+/// for the order-insensitive multiset oracle (Theorem 1 with g ≡ 0).
+#[test]
+fn prop_treecv_equals_standard_for_oracle() {
+    let mut rng = Rng::new(0xABCD);
+    for trial in 0..60 {
+        let n = 2 + (rng.below(200) as usize);
+        let k = 2 + (rng.below((n - 1).min(64) as u64) as usize);
+        let seed = rng.next_u64();
+        let data = Dataset::new(vec![0.0; n], vec![0.0; n], 1);
+        let folds = Folds::new(n, k, seed);
+        let l = MultisetLearner::new(1);
+        let a = TreeCv::default().run(&l, &data, &folds);
+        let b = StandardCv::default().run(&l, &data, &folds);
+        assert_eq!(a.per_fold, b.per_fold, "trial {trial}: n={n} k={k} seed={seed}");
+    }
+}
+
+/// Property sweep: Copy and SaveRevert strategies agree for every learner
+/// with exact revert, across random shapes.
+#[test]
+fn prop_strategies_agree_for_exact_revert_learners() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..25 {
+        let n = 20 + (rng.below(300) as usize);
+        let k = 2 + (rng.below(20) as u64 as usize);
+        let seed = rng.next_u64();
+        let folds = Folds::new(n, k, seed);
+
+        let data = SyntheticMixture1d::new(n, seed).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let a = TreeCv::new(Strategy::Copy, Ordering::Fixed, 1).run(&l, &data, &folds);
+        let b = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 1).run(&l, &data, &folds);
+        assert_eq!(a.per_fold, b.per_fold, "hist n={n} k={k}");
+
+        let blobs = SyntheticBlobs::new(n, 4, 3, seed).generate();
+        let l = OnlineKMeans::new(4, 3);
+        let a = TreeCv::new(Strategy::Copy, Ordering::Fixed, 1).run(&l, &blobs, &folds);
+        let b = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 1).run(&l, &blobs, &folds);
+        assert_eq!(a.per_fold, b.per_fold, "kmeans n={n} k={k}");
+    }
+}
+
+/// Theorem 3 as a property: TreeCV's update-point count ≤ n·log₂(2k) for
+/// random (n, k), across learners (work counting is learner-independent).
+#[test]
+fn prop_theorem3_work_bound() {
+    let mut rng = Rng::new(0xFACE);
+    for _ in 0..80 {
+        let n = 4 + (rng.below(500) as usize);
+        let k = 2 + (rng.below((n - 1).min(128) as u64) as usize);
+        let data = Dataset::new(vec![0.0; n], vec![0.0; n], 1);
+        let folds = Folds::new(n, k, rng.next_u64());
+        let l = MultisetLearner::new(1);
+        let res = TreeCv::default().run(&l, &data, &folds);
+        let bound = (n as f64) * ((2 * k) as f64).log2();
+        assert!(
+            res.ops.points_updated as f64 <= bound + 1e-9,
+            "n={n} k={k}: {} > {bound}",
+            res.ops.points_updated
+        );
+    }
+}
+
+/// PEGASOS: TreeCV estimate is close to the standard estimate (incremental
+/// stability, Theorem 1) even though the learner is order-sensitive.
+#[test]
+fn pegasos_treecv_close_to_standard() {
+    let n = 4_000;
+    let data = SyntheticCovertype::new(n, 1).generate();
+    let l = Pegasos::new(54, 1e-4);
+    for k in [5usize, 10, 50] {
+        let folds = Folds::new(n, k, 7);
+        let tree = TreeCv::default().run(&l, &data, &folds);
+        let std_res = StandardCv::default().run(&l, &data, &folds);
+        assert!(
+            (tree.estimate - std_res.estimate).abs() < 0.05,
+            "k={k}: tree {} vs std {}",
+            tree.estimate,
+            std_res.estimate
+        );
+    }
+}
+
+/// LSQSGD: same closeness property on the regression task.
+#[test]
+fn lsqsgd_treecv_close_to_standard() {
+    let n = 4_000;
+    let data = SyntheticYearMsd::new(n, 2).generate();
+    let l = LsqSgd::with_paper_step(90, n);
+    let folds = Folds::new(n, 10, 8);
+    let tree = TreeCv::default().run(&l, &data, &folds);
+    let std_res = StandardCv::default().run(&l, &data, &folds);
+    assert!(
+        (tree.estimate - std_res.estimate).abs() < 0.01,
+        "tree {} vs std {}",
+        tree.estimate,
+        std_res.estimate
+    );
+}
+
+/// Naive Bayes: TreeCV == Standard == MergeCV to f64 tolerance.
+#[test]
+fn naive_bayes_three_engines_agree() {
+    let n = 1_500;
+    let data = SyntheticCovertype::new(n, 3).generate();
+    let l = GaussianNb::new(54);
+    let folds = Folds::new(n, 12, 9);
+    let tree = TreeCv::default().run(&l, &data, &folds);
+    let std_res = StandardCv::default().run(&l, &data, &folds);
+    let merge = MergeCv.run(&l, &data, &folds);
+    for i in 0..12 {
+        assert!((tree.per_fold[i] - std_res.per_fold[i]).abs() < 1e-12);
+        assert!((merge.per_fold[i] - std_res.per_fold[i]).abs() < 1e-12);
+    }
+}
+
+/// Perceptron with sparse save/revert undo: revert is only ulp-accurate
+/// (f32 re-subtraction), and the mistake-driven update rule is chaotic in
+/// those ulps — a flipped decision cascades. The *estimates* must still be
+/// statistically indistinguishable.
+#[test]
+fn perceptron_save_revert_close_to_copy() {
+    let n = 2_000;
+    let data = SyntheticCovertype::new(n, 4).generate();
+    let l = Perceptron::new(54);
+    let folds = Folds::new(n, 16, 10);
+    let a = TreeCv::new(Strategy::Copy, Ordering::Fixed, 1).run(&l, &data, &folds);
+    let b = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 1).run(&l, &data, &folds);
+    assert!((a.estimate - b.estimate).abs() < 0.02, "{} vs {}", a.estimate, b.estimate);
+}
+
+/// End-to-end ridge validation: TreeCV LOOCV == hat-matrix closed form,
+/// at a size where brute force would already be unpleasant.
+#[test]
+fn ridge_loocv_matches_closed_form_end_to_end() {
+    let n = 400;
+    let d = 12;
+    let full = SyntheticYearMsd::new(n, 5).generate();
+    let mut x = Vec::with_capacity(n * d);
+    for i in 0..n {
+        x.extend_from_slice(&full.row(i as u32)[..d]);
+    }
+    let data = Dataset::new(x, full.y.clone(), d);
+    let lambda = 0.3;
+    let exact = ridge_loocv(&data, lambda);
+    let l = OnlineRidge::new(d, lambda);
+    let tree = TreeCv::default().run(&l, &data, &Folds::loocv(n));
+    assert!(
+        (tree.estimate - exact.estimate).abs() < 1e-6 * (1.0 + exact.estimate),
+        "tree {} vs exact {}",
+        tree.estimate,
+        exact.estimate
+    );
+}
+
+/// Parallel engine at several fork depths reproduces sequential results
+/// and per-fold outputs land in the right slots.
+#[test]
+fn parallel_depths_reproduce_sequential() {
+    let n = 1_200;
+    let data = SyntheticCovertype::new(n, 6).generate();
+    let l = Pegasos::new(54, 1e-3);
+    let folds = Folds::new(n, 13, 11); // non-power-of-two k
+    let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 3).run(&l, &data, &folds);
+    for depth in [1usize, 2, 4] {
+        let par = ParallelTreeCv::new(Ordering::Fixed, 3, depth).run(&l, &data, &folds);
+        assert_eq!(seq.per_fold, par.per_fold, "depth={depth}");
+    }
+}
+
+/// Failure injection: a learner that panics on revert must never be
+/// reverted under the Copy strategy (i.e. Copy never calls revert).
+#[test]
+fn copy_strategy_never_reverts() {
+    struct NoRevert;
+    impl IncrementalLearner for NoRevert {
+        type Model = u64;
+        type Undo = ();
+        fn name(&self) -> &'static str {
+            "no-revert"
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn init(&self) -> u64 {
+            0
+        }
+        fn update(&self, m: &mut u64, _d: &Dataset, idx: &[u32]) {
+            *m += idx.len() as u64;
+        }
+        fn update_logged(&self, m: &mut u64, d: &Dataset, idx: &[u32]) {
+            self.update(m, d, idx);
+        }
+        fn revert(&self, _m: &mut u64, _d: &Dataset, _u: ()) {
+            panic!("revert must not be called under Copy");
+        }
+        fn loss(&self, m: &u64, _d: &Dataset, _i: u32) -> f64 {
+            *m as f64
+        }
+        fn model_bytes(&self, _m: &u64) -> usize {
+            8
+        }
+    }
+    let n = 40;
+    let data = Dataset::new(vec![0.0; n], vec![0.0; n], 1);
+    let folds = Folds::new(n, 8, 12);
+    let res = TreeCv::new(Strategy::Copy, Ordering::Fixed, 0).run(&NoRevert, &data, &folds);
+    // Leaf models saw exactly n - b points each.
+    for (i, v) in res.per_fold.iter().enumerate() {
+        assert_eq!(*v, (n - folds.chunk(i).len()) as f64);
+    }
+}
+
+/// Degenerate shapes: k = 2 (smallest tree) and k = n (LOOCV) on odd sizes.
+#[test]
+fn degenerate_fold_counts() {
+    for n in [2usize, 3, 5, 17] {
+        let data = Dataset::new(vec![0.0; n], vec![0.0; n], 1);
+        let l = MultisetLearner::new(1);
+        for k in [2usize, n] {
+            let folds = Folds::new(n, k, 13);
+            let tree = TreeCv::default().run(&l, &data, &folds);
+            let std_res = StandardCv::default().run(&l, &data, &folds);
+            assert_eq!(tree.per_fold, std_res.per_fold, "n={n} k={k}");
+        }
+    }
+}
+
+/// Randomized ordering: TreeCV estimate is reproducible for a fixed seed
+/// and differs across seeds (the permutations actually happen).
+#[test]
+fn randomized_ordering_seeded_reproducibility() {
+    let n = 1_000;
+    let data = SyntheticCovertype::new(n, 9).generate();
+    let l = Pegasos::new(54, 1e-3);
+    let folds = Folds::new(n, 10, 14);
+    let a = TreeCv::new(Strategy::Copy, Ordering::Randomized, 42).run(&l, &data, &folds);
+    let b = TreeCv::new(Strategy::Copy, Ordering::Randomized, 42).run(&l, &data, &folds);
+    let c = TreeCv::new(Strategy::Copy, Ordering::Randomized, 43).run(&l, &data, &folds);
+    assert_eq!(a.per_fold, b.per_fold);
+    assert_ne!(a.per_fold, c.per_fold);
+}

@@ -1,0 +1,201 @@
+//! Three-layer integration: the AOT-compiled JAX/Pallas artifacts executed
+//! through PJRT must agree with the pure-Rust learners, both per-update
+//! and end-to-end through the TreeCV engines.
+//!
+//! These tests require `make artifacts` to have run; they are skipped (with
+//! a loud message) when the artifact directory is absent so that plain
+//! `cargo test` works on a fresh checkout.
+
+use treecv::cv::folds::Folds;
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::CvEngine;
+use treecv::data::synth::{SyntheticCovertype, SyntheticYearMsd};
+use treecv::data::Dataset;
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::IncrementalLearner;
+use treecv::runtime::xla_learner::{XlaLsqSgd, XlaPegasos};
+use treecv::runtime::{artifacts_available, Manifest, PjrtRuntime};
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn runtime() -> (PjrtRuntime, Manifest) {
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load_default().expect("manifest.txt");
+    (rt, manifest)
+}
+
+#[test]
+fn xla_pegasos_update_matches_rust() {
+    require_artifacts!();
+    let (rt, manifest) = runtime();
+    let d = 54;
+    let data = SyntheticCovertype::new(700, 21).generate();
+    let idx: Vec<u32> = (0..700).collect();
+    let lambda = 1e-3;
+
+    let xla = XlaPegasos::from_manifest(&rt, &manifest, d, lambda).unwrap();
+    let mut xm = xla.init();
+    xla.update(&mut xm, &data, &idx);
+
+    let rust = Pegasos::new(d, lambda);
+    let mut rm = rust.init();
+    rust.update(&mut rm, &data, &idx);
+
+    assert_eq!(xm.t as u64, rm.t);
+    let rw = rm.weights();
+    for j in 0..d {
+        assert!(
+            (xm.w[j] - rw[j]).abs() <= 2e-3 * (1.0 + rw[j].abs()),
+            "w[{j}]: xla {} vs rust {}",
+            xm.w[j],
+            rw[j]
+        );
+    }
+}
+
+#[test]
+fn xla_pegasos_eval_matches_rust() {
+    require_artifacts!();
+    let (rt, manifest) = runtime();
+    let d = 54;
+    let data = SyntheticCovertype::new(900, 22).generate();
+    let train: Vec<u32> = (0..600).collect();
+    let test: Vec<u32> = (600..900).collect();
+
+    let xla = XlaPegasos::from_manifest(&rt, &manifest, d, 1e-3).unwrap();
+    let mut xm = xla.init();
+    xla.update(&mut xm, &data, &train);
+    let xla_err = xla.evaluate(&xm, &data, &test);
+
+    // Evaluate the same weights with host-side scoring: identical decision
+    // function ⇒ identical error rate.
+    let host_err: f64 = test
+        .iter()
+        .map(|&i| {
+            let score: f32 = xm.w.iter().zip(data.row(i)).map(|(a, b)| a * b).sum();
+            treecv::loss::misclassification(score, data.label(i))
+        })
+        .sum::<f64>()
+        / test.len() as f64;
+    assert!((xla_err - host_err).abs() < 1e-9, "xla {xla_err} vs host {host_err}");
+}
+
+#[test]
+fn xla_lsqsgd_matches_rust() {
+    require_artifacts!();
+    let (rt, manifest) = runtime();
+    let d = 90;
+    let n = 800;
+    let data = SyntheticYearMsd::new(n, 23).generate();
+    let idx: Vec<u32> = (0..n as u32).collect();
+    let alpha = 1.0 / (n as f64).sqrt();
+
+    let xla = XlaLsqSgd::from_manifest(&rt, &manifest, d, alpha).unwrap();
+    let mut xm = xla.init();
+    xla.update(&mut xm, &data, &idx);
+
+    let rust = LsqSgd::new(d, alpha);
+    let mut rm = rust.init();
+    rust.update(&mut rm, &data, &idx);
+
+    assert_eq!(xm.t as u64, rm.t);
+    for j in 0..d {
+        assert!(
+            (xm.wavg[j] - rm.wavg[j]).abs() <= 2e-3 * (1.0 + rm.wavg[j].abs()),
+            "wavg[{j}]: xla {} vs rust {}",
+            xm.wavg[j],
+            rm.wavg[j]
+        );
+    }
+}
+
+/// The full composition: TreeCV driving the XLA-backed learner produces a
+/// CV estimate close to TreeCV driving the Rust learner (f32 vs
+/// scale-trick numerics differ slightly; estimates must agree tightly).
+#[test]
+fn treecv_over_xla_learner_matches_rust_learner() {
+    require_artifacts!();
+    let (rt, manifest) = runtime();
+    let d = 54;
+    let n = 1_024;
+    let data = SyntheticCovertype::new(n, 24).generate();
+    let folds = Folds::new(n, 8, 25);
+    let lambda = 1e-3;
+
+    let xla = XlaPegasos::from_manifest(&rt, &manifest, d, lambda).unwrap();
+    let xla_res = TreeCv::default().run(&xla, &data, &folds);
+
+    let rust = Pegasos::new(d, lambda);
+    let rust_res = TreeCv::default().run(&rust, &data, &folds);
+
+    assert!(
+        (xla_res.estimate - rust_res.estimate).abs() < 0.02,
+        "xla {} vs rust {}",
+        xla_res.estimate,
+        rust_res.estimate
+    );
+    assert_eq!(xla_res.ops.points_updated, rust_res.ops.points_updated);
+}
+
+/// Standard CV over the XLA learner as well — exercises init-from-scratch
+/// per fold and block-wise padding with non-multiple-of-block chunks.
+#[test]
+fn standard_cv_over_xla_learner_runs_with_ragged_chunks() {
+    require_artifacts!();
+    let (rt, manifest) = runtime();
+    let d = 54;
+    let n = 777; // deliberately not a multiple of the 256 block
+    let data = SyntheticCovertype::new(n, 26).generate();
+    let folds = Folds::new(n, 5, 27);
+    let xla = XlaPegasos::from_manifest(&rt, &manifest, d, 1e-3).unwrap();
+    let res = StandardCv::default().run(&xla, &data, &folds);
+    assert!(res.estimate > 0.0 && res.estimate < 1.0);
+    assert_eq!(res.ops.evals, 5);
+}
+
+/// The tiny (B=8, d=6) variant: block-boundary behavior with chunk sizes
+/// below, at, and above the block size.
+#[test]
+fn tiny_variant_handles_all_chunk_sizes() {
+    require_artifacts!();
+    let (rt, manifest) = runtime();
+    let d = 6;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut rng = treecv::rng::Rng::new(99);
+    for _ in 0..40 {
+        for _ in 0..d {
+            x.push(rng.next_gaussian());
+        }
+        y.push(if rng.next_f64() < 0.5 { 1.0 } else { -1.0 });
+    }
+    let data = Dataset::new(x, y, d);
+    let xla = XlaPegasos::from_manifest(&rt, &manifest, d, 0.1).unwrap();
+    assert_eq!(xla.block(), 8);
+    let rust = Pegasos::new(d, 0.1);
+    for chunk in [3usize, 8, 11, 40] {
+        let idx: Vec<u32> = (0..40).collect();
+        let mut xm = xla.init();
+        let mut rm = rust.init();
+        for c in idx.chunks(chunk) {
+            xla.update(&mut xm, &data, c);
+            rust.update(&mut rm, &data, c);
+        }
+        let rw = rm.weights();
+        for j in 0..d {
+            assert!(
+                (xm.w[j] - rw[j]).abs() <= 1e-3 * (1.0 + rw[j].abs()),
+                "chunk={chunk} w[{j}]"
+            );
+        }
+    }
+}
