@@ -7,7 +7,9 @@
 //! Run: `cargo bench --bench scaling_k` (env `SCALING_N` to resize).
 
 use treecv::benchkit::Bench;
-use treecv::cv::folds::Folds;
+use treecv::cv::executor::TreeCvExecutor;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::parallel::ScopedForkTreeCv;
 use treecv::cv::standard::StandardCv;
 use treecv::cv::treecv::TreeCv;
 use treecv::cv::CvEngine;
@@ -67,6 +69,38 @@ fn main() {
             std_t.map(|t| format!("{:.2}x", t / tree_t)).unwrap_or_else(|| "-".into()),
         );
     }
+    // Executor vs scoped-thread forking: the pooled work-stealing executor
+    // must be no slower than the per-node thread-spawning baseline at any
+    // k, and both must agree with the sequential engine bit-for-bit.
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!();
+    println!("== pooled executor vs scoped-thread forking ({threads} hw threads) ==");
+    println!(
+        "{:>6} | {:>12} | {:>12} | {:>14}",
+        "k", "executor(s)", "scoped(s)", "scoped/executor"
+    );
+    for k in [16usize, 64, 256] {
+        let folds = Folds::new(n, k, 7);
+        let pooled = TreeCvExecutor::with_available_parallelism(Ordering::Fixed, 7);
+        let scoped = ScopedForkTreeCv::with_available_parallelism(Ordering::Fixed, 7);
+        let seq_res = TreeCv::default().run(&learner, &data, &folds);
+        let pooled_res = pooled.run(&learner, &data, &folds);
+        let scoped_res = scoped.run(&learner, &data, &folds);
+        assert_eq!(seq_res.per_fold, pooled_res.per_fold, "executor diverged at k={k}");
+        assert_eq!(seq_res.per_fold, scoped_res.per_fold, "scoped baseline diverged at k={k}");
+        let e_t = bench
+            .run(&format!("executor-k{k}"), || {
+                std::hint::black_box(pooled.run(&learner, &data, &folds));
+            })
+            .median();
+        let s_t = bench
+            .run(&format!("scoped-k{k}"), || {
+                std::hint::black_box(scoped.run(&learner, &data, &folds));
+            })
+            .median();
+        println!("{:>6} | {:>12.4} | {:>12.4} | {:>13.2}x", k, e_t, s_t, s_t / e_t);
+    }
+
     println!();
     println!("CSV summary:\n{}", bench.csv());
 }

@@ -28,7 +28,9 @@ fn main() {
             out.cells
                 .iter()
                 .find(|c| {
-                    (c.k == k || (k == 0 && c.is_loocv)) && c.engine == engine && c.ordering == ordering
+                    (c.k == k || (k == 0 && c.is_loocv))
+                        && c.engine == engine
+                        && c.ordering == ordering
                 })
                 .map(|c| c.std)
         };

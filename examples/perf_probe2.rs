@@ -1,19 +1,32 @@
 //! Scratch perf driver #2 (§Perf pass): LSQSGD and k-means single-training
 //! throughput, min-of-6. Not part of the documented examples.
-use treecv::data::synth::{SyntheticYearMsd, SyntheticBlobs};
-use treecv::learner::{lsqsgd::LsqSgd, kmeans::OnlineKMeans, IncrementalLearner};
 use std::time::Instant;
+use treecv::data::synth::{SyntheticBlobs, SyntheticYearMsd};
+use treecv::learner::{kmeans::OnlineKMeans, lsqsgd::LsqSgd, IncrementalLearner};
+
 fn main() {
     let n = 131_072;
     let data = SyntheticYearMsd::new(n, 42).generate();
     let l = LsqSgd::with_paper_step(90, n);
     let idx: Vec<u32> = (0..n as u32).collect();
     let mut best = f64::INFINITY;
-    for _ in 0..6 { let t = Instant::now(); let mut m = l.init(); l.update(&mut m, &data, &idx); std::hint::black_box(&m); best = best.min(t.elapsed().as_secs_f64()); }
-    println!("lsqsgd single-training: {best:.5}s ({:.1} Mpts/s)", n as f64/best/1e6);
+    for _ in 0..6 {
+        let t = Instant::now();
+        let mut m = l.init();
+        l.update(&mut m, &data, &idx);
+        std::hint::black_box(&m);
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    println!("lsqsgd single-training: {best:.5}s ({:.1} Mpts/s)", n as f64 / best / 1e6);
     let blobs = SyntheticBlobs::new(n, 16, 8, 42).generate();
     let k = OnlineKMeans::new(16, 8);
     let mut best = f64::INFINITY;
-    for _ in 0..6 { let t = Instant::now(); let mut m = k.init(); k.update(&mut m, &blobs, &idx); std::hint::black_box(&m); best = best.min(t.elapsed().as_secs_f64()); }
-    println!("kmeans single-training: {best:.5}s ({:.1} Mpts/s)", n as f64/best/1e6);
+    for _ in 0..6 {
+        let t = Instant::now();
+        let mut m = k.init();
+        k.update(&mut m, &blobs, &idx);
+        std::hint::black_box(&m);
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    println!("kmeans single-training: {best:.5}s ({:.1} Mpts/s)", n as f64 / best / 1e6);
 }

@@ -120,7 +120,8 @@ fn parse_value(s: &str) -> Result<Value> {
         if inner.is_empty() {
             return Ok(Value::Array(vec![]));
         }
-        let items: Result<Vec<Value>> = split_top_level(inner).iter().map(|p| parse_value(p)).collect();
+        let items: Result<Vec<Value>> =
+            split_top_level(inner).iter().map(|p| parse_value(p)).collect();
         return Ok(Value::Array(items?));
     }
     match s {

@@ -77,7 +77,11 @@ impl Engine {
         Ok(match s {
             "treecv" => Engine::Treecv,
             "standard" => Engine::Standard,
-            "parallel_treecv" | "parallel-treecv" | "parallel" => Engine::ParallelTreecv,
+            // "executor"/"pooled" are aliases: parallel TreeCV runs on the
+            // pooled work-stealing executor (cv::executor).
+            "parallel_treecv" | "parallel-treecv" | "parallel" | "executor" | "pooled" => {
+                Engine::ParallelTreecv
+            }
             "merge" => Engine::Merge,
             other => bail!("unknown engine `{other}`"),
         })
@@ -313,8 +317,9 @@ mod tests {
         for t in ["pegasos", "lsqsgd", "kmeans", "density", "naive_bayes", "ridge"] {
             assert!(Task::parse(t).is_ok(), "{t}");
         }
-        for e in ["treecv", "standard", "parallel_treecv", "merge"] {
+        for e in ["treecv", "standard", "parallel_treecv", "executor", "pooled", "merge"] {
             assert!(Engine::parse(e).is_ok(), "{e}");
         }
+        assert_eq!(Engine::parse("executor").unwrap(), Engine::ParallelTreecv);
     }
 }

@@ -2,7 +2,9 @@
 //! learners and engine runs, and collects Table-2-style cell reports.
 //! This is the layer the CLI (`rust/src/main.rs`), the examples and the
 //! benches all drive, so every experiment in EXPERIMENTS.md is a function
-//! call away.
+//! call away. All parallel engine selections dispatch through the pooled
+//! work-stealing executor ([`crate::cv::executor::TreeCvExecutor`]) via
+//! the repetition harness.
 
 pub mod paper;
 

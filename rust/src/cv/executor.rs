@@ -1,0 +1,396 @@
+//! Pooled work-stealing TreeCV executor — the engine behind every parallel
+//! code path in the crate.
+//!
+//! The paper's §4.1 parallelization ("dedicate one thread of computation to
+//! each of the data groups") was first implemented by spawning a fresh
+//! scoped OS thread at every tree fork (see
+//! [`super::parallel::ScopedForkTreeCv`], retained as a baseline). That
+//! design churns threads, oversubscribes non-power-of-two machines, and
+//! idles once subtrees go unbalanced (which happens whenever `k ∤ n`
+//! produces remainder folds). This module replaces it with a persistent
+//! executor:
+//!
+//! * **One worker pool per run**, sized from `available_parallelism` (or an
+//!   explicit `threads` knob) — workers are spawned once and live for the
+//!   whole computation.
+//! * **Tree nodes are tasks.** A task carries `(s, e, model)` where the
+//!   model is trained on every chunk outside `s..=e`. Processing an
+//!   interior node performs both of the node's update phases and pushes the
+//!   two child tasks; a leaf evaluates and records `R̂_s`.
+//! * **Per-worker work-stealing deques.** Owners push/pop LIFO (depth-first
+//!   — keeps the live-model count near `O(log k · workers)`); thieves steal
+//!   FIFO (breadth-first — steals the largest available subtree, the
+//!   classic Blumofe–Leiserson discipline). Unbalanced subtrees therefore
+//!   rebalance automatically instead of leaving a thread idle.
+//! * **A model buffer pool.** The Copy strategy's `k−1` interior-node
+//!   snapshots draw buffers from a shared pool and `clone_from` into them,
+//!   so model storage is recycled from finished leaves instead of freshly
+//!   allocated at every fork. Retention is capped at ~`workers · log₂ k`
+//!   buffers, so LOOCV-scale runs never hold O(k) models at once.
+//!
+//! Because permutation streams are derived per-node from `(seed, node,
+//! side)` — never drawn from one sequential stream — the executor produces
+//! **bit-identical** estimates to the sequential [`super::treecv::TreeCv`]
+//! for the same seed, under both orderings, for any worker count. The tests
+//! below and `tests/integration_executor.rs` assert exactly that.
+
+use super::folds::{gather_ordered, node_tags, Folds, Ordering};
+use super::CvResult;
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+use crate::metrics::{OpCounts, Timer};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering as MemOrdering};
+use std::sync::Mutex;
+
+/// The pooled work-stealing TreeCV engine (Copy strategy at forks).
+#[derive(Debug, Clone)]
+pub struct TreeCvExecutor {
+    /// Fixed vs randomized feeding order (paper §5).
+    pub ordering: Ordering,
+    /// Seed for the per-node permutation streams (ignored under Fixed).
+    pub seed: u64,
+    /// Worker-pool size. `1` runs the whole tree inline on the calling
+    /// thread (no spawning); capped at `k` per run since at most `k` tasks
+    /// are ever live.
+    pub threads: usize,
+}
+
+/// One unit of executor work: the TreeCV node `(s, e)` plus the model
+/// trained on every chunk outside `s..=e`.
+struct Task<M> {
+    s: usize,
+    e: usize,
+    model: M,
+}
+
+/// State shared by the worker pool for one run.
+struct Shared<M> {
+    /// One deque per worker. Owner pushes/pops the back; thieves pop the
+    /// front. A plain mutexed deque keeps the implementation obviously
+    /// correct; contention is negligible at tree-node granularity.
+    deques: Vec<Mutex<VecDeque<Task<M>>>>,
+    /// Recycled model buffers (`clone_from` targets for interior-node
+    /// snapshots). Leaves return their model here when done; retention is
+    /// capped at [`Shared::pool_cap`] so LOOCV-scale runs (k = n) don't
+    /// accumulate O(k) dead buffers by the end of the computation.
+    pool: Mutex<Vec<M>>,
+    /// Maximum buffers the pool retains (~ workers · tree depth, the
+    /// steady-state demand); excess leaf models are dropped instead.
+    pool_cap: usize,
+    /// Per-fold outputs; distinct indices are written exactly once each.
+    per_fold: Mutex<Vec<f64>>,
+    /// Leaves completed so far; the run is done when this reaches `k`.
+    leaves_done: AtomicUsize,
+    /// Total leaf count.
+    k: usize,
+    /// Set when all leaves are done (or a worker panicked) so idle workers
+    /// exit their steal loop.
+    done: AtomicBool,
+}
+
+/// Sets the shared `done` flag if its thread unwinds, so a panicking
+/// worker cannot leave the rest of the pool spinning forever.
+struct PanicSignal<'a> {
+    done: &'a AtomicBool,
+}
+
+impl Drop for PanicSignal<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.done.store(true, MemOrdering::Release);
+        }
+    }
+}
+
+impl TreeCvExecutor {
+    pub fn new(ordering: Ordering, seed: u64, threads: usize) -> Self {
+        Self { ordering, seed, threads: threads.max(1) }
+    }
+
+    /// Pool sized to the machine's available parallelism (no rounding to a
+    /// power of two — any worker count schedules fully).
+    pub fn with_available_parallelism(ordering: Ordering, seed: u64) -> Self {
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        Self::new(ordering, seed, threads)
+    }
+
+    /// Gather the points of chunks `lo..=hi` in the engine's feeding order.
+    /// The permutation stream is a pure function of `(seed, node, side)`,
+    /// which is what makes any execution order reproduce the sequential
+    /// engine bit-for-bit.
+    fn gather(
+        &self,
+        folds: &Folds,
+        lo: usize,
+        hi: usize,
+        tag: u64,
+        ops: &mut OpCounts,
+    ) -> Vec<u32> {
+        gather_ordered(folds, lo, hi, self.seed, self.ordering, tag, ops)
+    }
+
+    /// Process one tree node: evaluate at a leaf, otherwise run both update
+    /// phases and enqueue the two children on this worker's own deque.
+    #[allow(clippy::too_many_arguments)]
+    fn process<L>(
+        &self,
+        wid: usize,
+        task: Task<L::Model>,
+        shared: &Shared<L::Model>,
+        learner: &L,
+        data: &Dataset,
+        folds: &Folds,
+        ops: &mut OpCounts,
+    ) where
+        L: IncrementalLearner + Sync,
+    {
+        let Task { s, e, mut model } = task;
+        if s == e {
+            let chunk = folds.chunk(s);
+            let score = learner.evaluate(&model, data, chunk);
+            ops.evals += 1;
+            ops.points_evaluated += chunk.len() as u64;
+            shared.per_fold.lock().unwrap()[s] = score;
+            // Recycle the model storage for future interior-node
+            // snapshots (bounded — beyond the cap, just drop it).
+            {
+                let mut pool = shared.pool.lock().unwrap();
+                if pool.len() < shared.pool_cap {
+                    pool.push(model);
+                }
+            }
+            if shared.leaves_done.fetch_add(1, MemOrdering::AcqRel) + 1 == shared.k {
+                shared.done.store(true, MemOrdering::Release);
+            }
+            return;
+        }
+
+        let m = (s + e) / 2;
+        // Node tags shared with the sequential engine (`folds::node_tags`).
+        let (tag_right, tag_left) = node_tags(s, e);
+
+        let right = self.gather(folds, m + 1, e, tag_right, ops);
+        let left = self.gather(folds, s, m, tag_left, ops);
+        ops.update_calls += 2;
+        ops.points_updated += (right.len() + left.len()) as u64;
+
+        // Snapshot into a pooled buffer (clone_from reuses its storage)
+        // instead of allocating a fresh model at every interior node.
+        let recycled = shared.pool.lock().unwrap().pop();
+        let mut sibling = match recycled {
+            Some(mut buf) => {
+                buf.clone_from(&model);
+                buf
+            }
+            None => model.clone(),
+        };
+        ops.model_copies += 1;
+        ops.bytes_copied += learner.model_bytes(&model) as u64;
+
+        // As in Algorithm 1: the model fed the *second* group serves the
+        // left child (s, m); the model fed the *first* group serves the
+        // right child (m+1, e).
+        learner.update(&mut model, data, &right);
+        learner.update(&mut sibling, data, &left);
+
+        let mut dq = shared.deques[wid].lock().unwrap();
+        dq.push_back(Task { s, e: m, model });
+        dq.push_back(Task { s: m + 1, e, model: sibling });
+    }
+
+    /// Worker loop: drain own deque LIFO, steal FIFO when empty, exit once
+    /// every leaf is recorded. Returns this worker's operation counters.
+    fn worker<L>(
+        &self,
+        wid: usize,
+        shared: &Shared<L::Model>,
+        learner: &L,
+        data: &Dataset,
+        folds: &Folds,
+    ) -> OpCounts
+    where
+        L: IncrementalLearner + Sync,
+    {
+        let _signal = PanicSignal { done: &shared.done };
+        let mut ops = OpCounts::default();
+        let n_workers = shared.deques.len();
+        // Consecutive empty steal sweeps; drives the idle backoff below.
+        let mut dry_sweeps = 0u32;
+        loop {
+            let task = {
+                let own = shared.deques[wid].lock().unwrap().pop_back();
+                match own {
+                    Some(t) => Some(t),
+                    None => (1..n_workers).find_map(|offset| {
+                        let victim = (wid + offset) % n_workers;
+                        shared.deques[victim].lock().unwrap().pop_front()
+                    }),
+                }
+            };
+            match task {
+                Some(t) => {
+                    dry_sweeps = 0;
+                    self.process(wid, t, shared, learner, data, folds, &mut ops);
+                }
+                None => {
+                    if shared.done.load(MemOrdering::Acquire) {
+                        break;
+                    }
+                    // Tiered backoff: spin-yield briefly (work usually
+                    // appears within a node's two updates), then sleep so
+                    // idle workers stop hammering the deque mutexes during
+                    // long serial phases (e.g. the root node's O(n) updates
+                    // while only one task exists).
+                    dry_sweeps += 1;
+                    if dry_sweeps < 16 {
+                        std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                }
+            }
+        }
+        ops
+    }
+
+    /// Run the executor engine. (Not part of the [`super::CvEngine`] trait
+    /// because it needs `L: Sync` bounds the trait doesn't impose.)
+    pub fn run<L>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        let timer = Timer::start();
+        let k = folds.k();
+        let threads = self.threads.max(1).min(k);
+        // Steady-state snapshot demand is one buffer per live tree path
+        // per worker: ~threads · ⌈log₂ k⌉ (+ slack). Capping retention
+        // here keeps LOOCV (k = n) from holding O(k) buffers at once.
+        let pool_cap = threads * (k.max(2).ilog2() as usize + 2);
+        let shared: Shared<L::Model> = Shared {
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pool: Mutex::new(Vec::new()),
+            pool_cap,
+            per_fold: Mutex::new(vec![0.0; k]),
+            leaves_done: AtomicUsize::new(0),
+            k,
+            done: AtomicBool::new(false),
+        };
+        shared.deques[0]
+            .lock()
+            .unwrap()
+            .push_back(Task { s: 0, e: k - 1, model: learner.init() });
+
+        let mut ops = OpCounts::default();
+        if threads == 1 {
+            // Inline on the calling thread: zero spawn cost, and exactly
+            // the sequential engine's work.
+            ops = self.worker(0, &shared, learner, data, folds);
+        } else {
+            let shared_ref = &shared;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|wid| {
+                        scope.spawn(move || {
+                            self.worker(wid, shared_ref, learner, data, folds)
+                        })
+                    })
+                    .collect();
+                for handle in handles {
+                    ops.merge(&handle.join().expect("executor worker panicked"));
+                }
+            });
+        }
+
+        let per_fold = shared.per_fold.into_inner().unwrap();
+        CvResult::from_folds(per_fold, ops, timer.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::{CvEngine, Strategy};
+    use crate::data::synth::{SyntheticCovertype, SyntheticMixture1d};
+    use crate::learner::histdensity::HistogramDensity;
+    use crate::learner::pegasos::Pegasos;
+
+    #[test]
+    fn matches_sequential_fixed_order() {
+        let data = SyntheticCovertype::new(2_000, 91).generate();
+        let l = Pegasos::new(54, 1e-4);
+        let folds = Folds::new(2_000, 16, 92);
+        let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 5).run(&l, &data, &folds);
+        let exe = TreeCvExecutor::new(Ordering::Fixed, 5, 8).run(&l, &data, &folds);
+        assert_eq!(seq.per_fold, exe.per_fold);
+        assert_eq!(seq.estimate, exe.estimate);
+    }
+
+    #[test]
+    fn matches_sequential_randomized_order() {
+        // Per-node RNG derivation makes randomized ordering identical too.
+        let data = SyntheticCovertype::new(1_000, 93).generate();
+        let l = Pegasos::new(54, 1e-4);
+        let folds = Folds::new(1_000, 8, 94);
+        let seq = TreeCv::new(Strategy::Copy, Ordering::Randomized, 7).run(&l, &data, &folds);
+        let exe = TreeCvExecutor::new(Ordering::Randomized, 7, 4).run(&l, &data, &folds);
+        assert_eq!(seq.per_fold, exe.per_fold);
+    }
+
+    #[test]
+    fn every_worker_count_is_bit_identical() {
+        // Including non-power-of-two pools, which the scoped-fork engine
+        // could never use, and pools larger than k (internally capped).
+        let data = SyntheticCovertype::new(900, 95).generate();
+        let l = Pegasos::new(54, 1e-3);
+        let folds = Folds::new(900, 13, 96); // remainder folds: k ∤ n
+        let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 3).run(&l, &data, &folds);
+        for threads in [1usize, 2, 3, 5, 6, 7, 12, 16, 64] {
+            let exe = TreeCvExecutor::new(Ordering::Fixed, 3, threads).run(&l, &data, &folds);
+            assert_eq!(seq.per_fold, exe.per_fold, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn single_thread_is_inline_and_identical() {
+        let data = SyntheticMixture1d::new(300, 97).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(300, 10, 98);
+        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 1).run(&l, &data, &folds);
+        let seq = TreeCv::default().run(&l, &data, &folds);
+        assert_eq!(exe.per_fold, seq.per_fold);
+    }
+
+    #[test]
+    fn total_work_unchanged_by_pool_size() {
+        let data = SyntheticMixture1d::new(512, 99).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(512, 32, 100);
+        let seq = TreeCv::default().run(&l, &data, &folds);
+        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 6).run(&l, &data, &folds);
+        assert_eq!(seq.ops.points_updated, exe.ops.points_updated);
+        assert_eq!(seq.ops.evals, exe.ops.evals);
+        assert_eq!(seq.ops.update_calls, exe.ops.update_calls);
+        // One snapshot per interior node, exactly as the Copy strategy:
+        // the pool recycles storage but never changes the copy count.
+        assert_eq!(exe.ops.model_copies, 31);
+    }
+
+    #[test]
+    fn loocv_smallest_and_degenerate_k() {
+        // k = 1: the root is a leaf; the init model is evaluated directly.
+        let data = SyntheticMixture1d::new(40, 101).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 16);
+        let folds = Folds::new(40, 1, 102);
+        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 4).run(&l, &data, &folds);
+        assert_eq!(exe.per_fold.len(), 1);
+        assert_eq!(exe.ops.evals, 1);
+        // k = n (LOOCV) with a multi-worker pool.
+        let folds = Folds::loocv(40);
+        let seq = TreeCv::default().run(&l, &data, &folds);
+        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 4).run(&l, &data, &folds);
+        assert_eq!(seq.per_fold, exe.per_fold);
+    }
+}

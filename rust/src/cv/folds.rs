@@ -110,6 +110,38 @@ impl Folds {
     }
 }
 
+/// The `(right, left)` stream tags for TreeCV node `(s, e)` — one per
+/// update phase, unique across the tree for u32-sized ranges.
+///
+/// Every engine (sequential, scoped-fork, pooled executor) derives its
+/// per-node permutation streams from these tags via [`gather_ordered`],
+/// so their cross-engine bit-identity is structural rather than three
+/// hand-synchronized copies of the same bit-packing.
+pub fn node_tags(s: usize, e: usize) -> (u64, u64) {
+    let right = ((s as u64) << 33) | ((e as u64) << 1);
+    (right, right | 1)
+}
+
+/// Gather the points of chunks `lo..=hi` under `ordering`, permuting (if
+/// randomized) with the stream derived from `(seed, tag)`. The stream is
+/// a pure function of its arguments — never drawn from a shared
+/// sequential source — which is what lets any execution order reproduce
+/// the sequential engine exactly.
+pub fn gather_ordered(
+    folds: &Folds,
+    lo: usize,
+    hi: usize,
+    seed: u64,
+    ordering: Ordering,
+    tag: u64,
+    ops: &mut OpCounts,
+) -> Vec<u32> {
+    let mut idx = folds.gather_range(lo, hi);
+    let mut rng = Rng::derive(seed, tag);
+    ordering.apply(&mut idx, &mut rng, ops);
+    idx
+}
+
 /// Fixed vs randomized feeding order (paper §5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Ordering {
@@ -185,6 +217,27 @@ mod tests {
     fn gather_except_skips_fold() {
         let f = Folds::contiguous(6, 3);
         assert_eq!(f.gather_except(1), vec![0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn node_tags_unique_per_phase() {
+        // Distinct (s, e, side) triples must never collide for u32 ranges.
+        let mut seen = std::collections::HashSet::new();
+        for (s, e) in [(0usize, 0usize), (0, 1), (0, 7), (1, 7), (4, 7), (0, 1000)] {
+            let (r, l) = node_tags(s, e);
+            assert_ne!(r, l);
+            assert!(seen.insert(r), "({s},{e}) right collides");
+            assert!(seen.insert(l), "({s},{e}) left collides");
+        }
+    }
+
+    #[test]
+    fn gather_ordered_fixed_matches_gather_range() {
+        let f = Folds::contiguous(9, 3);
+        let mut ops = OpCounts::default();
+        let idx = gather_ordered(&f, 0, 1, 7, Ordering::Fixed, 42, &mut ops);
+        assert_eq!(idx, f.gather_range(0, 1));
+        assert_eq!(ops.points_permuted, 0);
     }
 
     #[test]

@@ -4,8 +4,12 @@
 //!   tree-structured CV in `O(log k)`-times single-training time.
 //! * [`standard`] — the naive k-repetition baseline the paper compares
 //!   against (train k models from scratch).
-//! * [`parallel`] — threaded TreeCV (paper §4.1's parallelization: one
-//!   thread per subtree, model copied at forks).
+//! * [`executor`] — the pooled work-stealing executor that runs TreeCV
+//!   tree nodes as tasks on a persistent worker pool; every parallel
+//!   dispatch path routes through it.
+//! * [`parallel`] — the §4.1 parallel engine facade (delegates to
+//!   [`executor`]) plus the original scoped-thread forking retained as a
+//!   bench baseline.
 //! * [`mergecv`] — the Izbicki [2013] O(n + k) baseline for *mergeable*
 //!   learners (related-work comparator).
 //! * [`exact`] — closed-form ridge LOOCV (hat-matrix), the external
@@ -16,6 +20,7 @@
 //!   `mean ± std` rows.
 
 pub mod exact;
+pub mod executor;
 pub mod folds;
 pub mod mergecv;
 pub mod parallel;
@@ -44,12 +49,19 @@ pub struct CvResult {
 }
 
 impl CvResult {
+    /// Build a result from per-fold scores.
+    ///
+    /// Panics on an empty fold vector: a CV computation that evaluated
+    /// zero folds is a caller bug (k ≥ 1 is enforced by
+    /// [`folds::Folds::new`]), and returning `estimate = 0.0` would
+    /// silently masquerade as a perfect score.
     pub(crate) fn from_folds(per_fold: Vec<f64>, ops: OpCounts, wall: Duration) -> Self {
-        let estimate = if per_fold.is_empty() {
-            0.0
-        } else {
-            per_fold.iter().sum::<f64>() / per_fold.len() as f64
-        };
+        assert!(
+            !per_fold.is_empty(),
+            "CvResult::from_folds: empty per-fold vector — no folds were \
+             evaluated; every engine requires k >= 1"
+        );
+        let estimate = per_fold.iter().sum::<f64>() / per_fold.len() as f64;
         Self { estimate, per_fold, ops, wall }
     }
 }
@@ -74,4 +86,22 @@ pub enum Strategy {
     /// model undergoes few changes during an update, save/revert might be
     /// preferred").
     SaveRevert,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "empty per-fold vector")]
+    fn from_folds_rejects_empty() {
+        let _ = CvResult::from_folds(Vec::new(), OpCounts::default(), Duration::ZERO);
+    }
+
+    #[test]
+    fn from_folds_estimate_is_mean() {
+        let r = CvResult::from_folds(vec![1.0, 3.0], OpCounts::default(), Duration::ZERO);
+        assert_eq!(r.estimate, 2.0);
+        assert_eq!(r.per_fold, vec![1.0, 3.0]);
+    }
 }

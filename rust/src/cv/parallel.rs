@@ -4,48 +4,127 @@
 //! the model since the two threads need to run independently; thus the
 //! total number of models TreeCV needs to store is O(k)."
 //!
-//! This engine forks at tree nodes down to a configurable depth (2^depth
-//! concurrent subtrees), cloning the model at each fork, and falls back to
-//! the sequential Copy-strategy recursion below that depth. Because the
+//! [`ParallelTreeCv`] is the public parallel engine. It used to spawn a
+//! fresh scoped OS thread at every tree fork down to `fork_depth`; it now
+//! delegates to the pooled work-stealing executor
+//! ([`super::executor::TreeCvExecutor`]) with a pool of `2^fork_depth`
+//! workers, which schedules the same tree without thread churn,
+//! oversubscription, or idle tails on unbalanced subtrees. Because the
 //! randomized-ordering streams are derived per-node (not drawn from one
 //! sequential stream), the parallel engine produces *identical* estimates
 //! to the sequential [`super::treecv::TreeCv`] for the same seed — tested
 //! below.
+//!
+//! [`ScopedForkTreeCv`] preserves the original recursive `thread::scope`
+//! implementation as a measurement baseline so `benches/scaling_k.rs` can
+//! quantify the executor's win; it is not wired into any dispatch path.
 
-use super::folds::{Folds, Ordering};
+use super::executor::TreeCvExecutor;
+use super::folds::{gather_ordered, node_tags, Folds, Ordering};
 use super::CvResult;
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
-use crate::rng::Rng;
+
+/// Largest fork depth whose subtree count does not oversubscribe
+/// `threads`: the greatest `d` with `2^d <= threads` (0 for `threads <= 1`).
+///
+/// The previous implementation rounded *up* via `next_power_of_two`, so a
+/// 6-core machine got depth 3 — eight concurrent subtrees on six cores.
+pub fn fork_depth_for_threads(threads: usize) -> usize {
+    if threads <= 1 {
+        0
+    } else {
+        (usize::BITS - 1 - threads.leading_zeros()) as usize
+    }
+}
 
 /// Threaded TreeCV engine (always uses the Copy strategy at forks).
+/// Runs on the pooled work-stealing executor with `2^fork_depth` workers
+/// (or an exact `threads` override — the executor schedules any count).
 #[derive(Debug, Clone)]
 pub struct ParallelTreeCv {
     pub ordering: Ordering,
     pub seed: u64,
     /// Fork depth: up to `2^fork_depth` concurrent subtrees.
     pub fork_depth: usize,
+    /// Exact worker-pool size, overriding the `2^fork_depth` derivation.
+    /// Set by [`Self::with_available_parallelism`] so non-power-of-two
+    /// machines use every core instead of rounding down.
+    pub threads: Option<usize>,
 }
 
 impl ParallelTreeCv {
     pub fn new(ordering: Ordering, seed: u64, fork_depth: usize) -> Self {
+        Self { ordering, seed, fork_depth, threads: None }
+    }
+
+    /// Pool sized to the machine's full parallelism. `fork_depth` is set
+    /// to the largest depth with `2^depth <= threads` (the historical
+    /// clamp), but the run uses the exact thread count — a 6-core machine
+    /// gets 6 workers, not 4.
+    pub fn with_available_parallelism(ordering: Ordering, seed: u64) -> Self {
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        Self {
+            ordering,
+            seed,
+            fork_depth: fork_depth_for_threads(threads),
+            threads: Some(threads),
+        }
+    }
+
+    /// Run the parallel engine. (Not part of the [`super::CvEngine`] trait
+    /// because it needs `L: Sync` bounds the trait doesn't impose.)
+    pub fn run<L>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        // Exact override, else 2^fork_depth workers; a single worker runs
+        // inline on the calling thread.
+        let threads = self
+            .threads
+            .unwrap_or_else(|| 1usize << self.fork_depth.min(usize::BITS as usize - 1));
+        TreeCvExecutor::new(self.ordering, self.seed, threads).run(learner, data, folds)
+    }
+}
+
+/// The original §4.1 implementation: recursively fork a scoped OS thread at
+/// every tree node down to `fork_depth`, cloning the model at each fork,
+/// with a sequential Copy-strategy tail below that depth.
+///
+/// Retained **only** as the baseline for executor benchmarks and the
+/// equivalence tests; production dispatch goes through [`ParallelTreeCv`]
+/// (i.e. the executor).
+#[derive(Debug, Clone)]
+pub struct ScopedForkTreeCv {
+    pub ordering: Ordering,
+    pub seed: u64,
+    /// Fork depth: up to `2^fork_depth` concurrent subtrees.
+    pub fork_depth: usize,
+}
+
+impl ScopedForkTreeCv {
+    pub fn new(ordering: Ordering, seed: u64, fork_depth: usize) -> Self {
         Self { ordering, seed, fork_depth }
     }
 
-    /// Default fork depth covering the machine's parallelism.
+    /// Depth fitting the machine's parallelism (same clamp as
+    /// [`ParallelTreeCv::with_available_parallelism`]).
     pub fn with_available_parallelism(ordering: Ordering, seed: u64) -> Self {
         let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        // Smallest depth with 2^depth >= threads.
-        let depth = (usize::BITS - threads.next_power_of_two().leading_zeros() - 1) as usize;
-        Self::new(ordering, seed, depth)
+        Self::new(ordering, seed, fork_depth_for_threads(threads))
     }
 
-    fn gather(&self, folds: &Folds, lo: usize, hi: usize, tag: u64, ops: &mut OpCounts) -> Vec<u32> {
-        let mut idx = folds.gather_range(lo, hi);
-        let mut rng = Rng::derive(self.seed, tag);
-        self.ordering.apply(&mut idx, &mut rng, ops);
-        idx
+    fn gather(
+        &self,
+        folds: &Folds,
+        lo: usize,
+        hi: usize,
+        tag: u64,
+        ops: &mut OpCounts,
+    ) -> Vec<u32> {
+        gather_ordered(folds, lo, hi, self.seed, self.ordering, tag, ops)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -73,8 +152,7 @@ impl ParallelTreeCv {
             return ops;
         }
         let m = (s + e) / 2;
-        let tag_right = ((s as u64) << 33) | ((e as u64) << 1);
-        let tag_left = tag_right | 1;
+        let (tag_right, tag_left) = node_tags(s, e);
 
         let right = self.gather(folds, m + 1, e, tag_right, &mut ops);
         let left = self.gather(folds, s, m, tag_left, &mut ops);
@@ -118,11 +196,8 @@ impl ParallelTreeCv {
         }
         ops
     }
-}
 
-impl ParallelTreeCv {
-    /// Run the parallel engine. (Not part of the [`super::CvEngine`] trait
-    /// because it needs `L: Sync` bounds the trait doesn't impose.)
+    /// Run the scoped-fork baseline.
     pub fn run<L>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult
     where
         L: IncrementalLearner + Sync,
@@ -189,5 +264,39 @@ mod tests {
         // Copies: the paper notes parallel CV stores O(k) models; every
         // interior node still copies exactly once here.
         assert_eq!(par.ops.model_copies, 31);
+    }
+
+    #[test]
+    fn scoped_fork_baseline_matches_executor_dispatch() {
+        let data = SyntheticCovertype::new(1_100, 89).generate();
+        let l = Pegasos::new(54, 1e-3);
+        let folds = Folds::new(1_100, 11, 90);
+        let scoped = ScopedForkTreeCv::new(Ordering::Fixed, 4, 2).run(&l, &data, &folds);
+        let pooled = ParallelTreeCv::new(Ordering::Fixed, 4, 2).run(&l, &data, &folds);
+        assert_eq!(scoped.per_fold, pooled.per_fold);
+        assert_eq!(scoped.ops.points_updated, pooled.ops.points_updated);
+        assert_eq!(scoped.ops.evals, pooled.ops.evals);
+    }
+
+    #[test]
+    fn fork_depth_never_oversubscribes() {
+        // Regression test for the next_power_of_two rounding bug: on a
+        // 6-thread machine the old code picked depth 3 (8 subtrees).
+        for threads in 1usize..=16 {
+            let depth = fork_depth_for_threads(threads);
+            assert!(
+                (1usize << depth) <= threads.max(1),
+                "threads={threads}: 2^{depth} subtrees oversubscribe"
+            );
+            assert!(
+                (1usize << (depth + 1)) > threads,
+                "threads={threads}: depth {depth} is not the largest fit"
+            );
+        }
+        assert_eq!(fork_depth_for_threads(0), 0);
+        assert_eq!(fork_depth_for_threads(1), 0);
+        assert_eq!(fork_depth_for_threads(6), 2);
+        assert_eq!(fork_depth_for_threads(8), 3);
+        assert_eq!(fork_depth_for_threads(9), 3);
     }
 }

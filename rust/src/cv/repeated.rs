@@ -56,7 +56,12 @@ impl RepeatedCv {
     }
 
     /// Run k-CV under `partitionings` independent fold assignments.
-    pub fn run<L: IncrementalLearner>(&self, learner: &L, data: &Dataset, k: usize) -> RepeatedCvResult {
+    pub fn run<L: IncrementalLearner>(
+        &self,
+        learner: &L,
+        data: &Dataset,
+        k: usize,
+    ) -> RepeatedCvResult {
         let timer = Timer::start();
         let mut stats = RunningStats::default();
         let mut runs = Vec::with_capacity(self.partitionings);
@@ -66,7 +71,8 @@ impl RepeatedCv {
             let folds = Folds::new(data.n, k, rep_seed);
             let res = match self.inner {
                 Inner::TreeCv(strategy) => {
-                    TreeCv::new(strategy, self.ordering, rep_seed ^ 0x5EED).run(learner, data, &folds)
+                    TreeCv::new(strategy, self.ordering, rep_seed ^ 0x5EED)
+                        .run(learner, data, &folds)
                 }
                 Inner::Standard => {
                     StandardCv::new(self.ordering, rep_seed ^ 0x5EED).run(learner, data, &folds)

@@ -5,8 +5,8 @@
 //! permutations), runs an engine, and the harness accumulates mean ± std
 //! of the resulting estimates plus aggregate work counters.
 
+use super::executor::TreeCvExecutor;
 use super::folds::{Folds, Ordering};
-use super::parallel::ParallelTreeCv;
 use super::standard::StandardCv;
 use super::treecv::TreeCv;
 use super::{CvEngine, CvResult, Strategy};
@@ -15,7 +15,9 @@ use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, RunningStats};
 use std::time::Duration;
 
-/// Which engine a repetition run uses.
+/// Which engine a repetition run uses. `ParallelTreeCv` executes on the
+/// pooled work-stealing executor ([`TreeCvExecutor`]) sized to the
+/// machine's available parallelism.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     TreeCv,
@@ -82,7 +84,7 @@ where
                 StandardCv::new(spec.ordering, rep_seed ^ 0xA5A5).run(learner, data, &folds)
             }
             EngineKind::ParallelTreeCv => {
-                ParallelTreeCv::with_available_parallelism(spec.ordering, rep_seed ^ 0xA5A5)
+                TreeCvExecutor::with_available_parallelism(spec.ordering, rep_seed ^ 0xA5A5)
                     .run(learner, data, &folds)
             }
         };
@@ -143,6 +145,21 @@ mod tests {
             hi.std,
             lo.std
         );
+    }
+
+    #[test]
+    fn parallel_engine_kind_is_bit_identical_to_treecv() {
+        // The executor derives permutation streams per node, so routing
+        // EngineKind::ParallelTreeCv through it must reproduce the
+        // sequential engine exactly — identical means AND stds, even for
+        // an order-sensitive learner.
+        let data = crate::data::synth::SyntheticCovertype::new(600, 124).generate();
+        let l = crate::learner::pegasos::Pegasos::new(54, 1e-3);
+        let a = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 8, 5));
+        let b = run_repetitions(&l, &data, &spec(EngineKind::ParallelTreeCv, 8, 5));
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.std, b.std);
+        assert_eq!(a.ops.points_updated, b.ops.points_updated);
     }
 
     #[test]

@@ -21,12 +21,11 @@
 //! update before returning, so every call leaves the model exactly as it
 //! found it — that invariant is what makes the recursion compose.
 
-use super::folds::{Folds, Ordering};
+use super::folds::{gather_ordered, node_tags, Folds, Ordering};
 use super::{CvResult, Strategy};
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
-use crate::rng::Rng;
 
 /// The TreeCV engine.
 #[derive(Debug, Clone)]
@@ -63,10 +62,7 @@ impl TreeCv {
         node_tag: u64,
         ops: &mut OpCounts,
     ) -> Vec<u32> {
-        let mut idx = folds.gather_range(lo, hi);
-        let mut rng = Rng::derive(self.seed, node_tag);
-        self.ordering.apply(&mut idx, &mut rng, ops);
-        idx
+        gather_ordered(folds, lo, hi, self.seed, self.ordering, node_tag, ops)
     }
 
     fn recurse<L: IncrementalLearner>(
@@ -88,9 +84,9 @@ impl TreeCv {
             return;
         }
         let m = (s + e) / 2;
-        // Unique tags for this node's two update phases (u32 ranges).
-        let tag_right = ((s as u64) << 33) | ((e as u64) << 1);
-        let tag_left = tag_right | 1;
+        // Unique tags for this node's two update phases (u32 ranges),
+        // shared with the parallel engines via `folds::node_tags`.
+        let (tag_right, tag_left) = node_tags(s, e);
 
         match self.strategy {
             Strategy::Copy => {

@@ -90,7 +90,12 @@ impl IncrementalLearner for Perceptron {
         }
     }
 
-    fn update_logged(&self, m: &mut PerceptronModel, data: &Dataset, idx: &[u32]) -> PerceptronUndo {
+    fn update_logged(
+        &self,
+        m: &mut PerceptronModel,
+        data: &Dataset,
+        idx: &[u32],
+    ) -> PerceptronUndo {
         let mut applied = Vec::new();
         for &i in idx {
             if self.step(m, data.row(i), data.label(i)) {

@@ -11,9 +11,11 @@
 //! ## Architecture (three layers)
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: the TreeCV
-//!   scheduler ([`cv::treecv`]), the standard baseline ([`cv::standard`]),
-//!   fold management, save/restore strategies, the repetition/variance
-//!   harness, and a simulated distributed runtime ([`distributed`]).
+//!   scheduler ([`cv::treecv`]), the pooled work-stealing parallel
+//!   executor ([`cv::executor`]), the standard baseline
+//!   ([`cv::standard`]), fold management, save/restore strategies, the
+//!   repetition/variance harness, and a simulated distributed runtime
+//!   ([`distributed`]).
 //! * **Layer 2 (python/compile/model.py)** — the incremental learners'
 //!   chunk-update / chunk-evaluate steps as JAX functions, AOT-lowered to
 //!   HLO text under `artifacts/`.

@@ -27,6 +27,8 @@ COMMANDS
   cv         Run a CV experiment.
              --task pegasos|lsqsgd|kmeans|density|naive_bayes|ridge
              --engine treecv|standard|parallel_treecv|merge
+                                  (parallel_treecv — alias: executor — runs
+                                   on the pooled work-stealing executor)
              --ks 5,10,100        fold counts (0 = LOOCV)
              --n 20000  --reps 20  --seed 42
              --randomized          randomized feeding order

@@ -61,7 +61,12 @@ pub struct XlaPegasosModel {
 impl XlaPegasos {
     /// Look up the (block, dim)-matched artifacts in the manifest and
     /// compile them.
-    pub fn from_manifest(rt: &PjrtRuntime, manifest: &Manifest, d: usize, lambda: f64) -> Result<Self> {
+    pub fn from_manifest(
+        rt: &PjrtRuntime,
+        manifest: &Manifest,
+        d: usize,
+        lambda: f64,
+    ) -> Result<Self> {
         let upd = manifest
             .find("pegasos_update", d)
             .ok_or_else(|| anyhow!("no pegasos_update artifact for d={d}"))?;
@@ -185,7 +190,12 @@ pub struct XlaLsqSgdModel {
 }
 
 impl XlaLsqSgd {
-    pub fn from_manifest(rt: &PjrtRuntime, manifest: &Manifest, d: usize, alpha: f64) -> Result<Self> {
+    pub fn from_manifest(
+        rt: &PjrtRuntime,
+        manifest: &Manifest,
+        d: usize,
+        alpha: f64,
+    ) -> Result<Self> {
         let upd = manifest
             .find("lsqsgd_update", d)
             .ok_or_else(|| anyhow!("no lsqsgd_update artifact for d={d}"))?;

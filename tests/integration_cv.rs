@@ -4,6 +4,7 @@
 //! which is unavailable offline).
 
 use treecv::cv::exact::ridge_loocv;
+use treecv::cv::executor::TreeCvExecutor;
 use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::mergecv::MergeCv;
 use treecv::cv::parallel::ParallelTreeCv;
@@ -180,7 +181,9 @@ fn ridge_loocv_matches_closed_form_end_to_end() {
 }
 
 /// Parallel engine at several fork depths reproduces sequential results
-/// and per-fold outputs land in the right slots.
+/// and per-fold outputs land in the right slots; the pooled executor does
+/// the same at worker counts the fork-depth scheme could never express
+/// (non-powers of two).
 #[test]
 fn parallel_depths_reproduce_sequential() {
     let n = 1_200;
@@ -191,6 +194,10 @@ fn parallel_depths_reproduce_sequential() {
     for depth in [1usize, 2, 4] {
         let par = ParallelTreeCv::new(Ordering::Fixed, 3, depth).run(&l, &data, &folds);
         assert_eq!(seq.per_fold, par.per_fold, "depth={depth}");
+    }
+    for threads in [3usize, 5, 6, 11] {
+        let exe = TreeCvExecutor::new(Ordering::Fixed, 3, threads).run(&l, &data, &folds);
+        assert_eq!(seq.per_fold, exe.per_fold, "threads={threads}");
     }
 }
 

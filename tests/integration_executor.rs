@@ -1,0 +1,108 @@
+//! Executor equivalence properties: the pooled work-stealing executor
+//! (`cv::executor::TreeCvExecutor`), the §4.1 parallel facade
+//! (`cv::parallel::ParallelTreeCv`), the scoped-fork baseline, and the
+//! sequential engine must all compute the *same function* — identical
+//! `per_fold` vectors and identical work counters — across random shapes,
+//! both orderings, and both model-preservation strategies. Seeded trials
+//! stand in for proptest (unavailable offline), mirroring
+//! `tests/integration_cv.rs`.
+
+use treecv::cv::executor::TreeCvExecutor;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::parallel::{ParallelTreeCv, ScopedForkTreeCv};
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::{CvEngine, Strategy};
+use treecv::data::synth::{SyntheticCovertype, SyntheticMixture1d};
+use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::pegasos::Pegasos;
+
+/// Draw a random CV shape: k ∈ [2, 64], n ∈ [k, 400].
+fn random_shape(rng: &mut treecv::rng::Rng) -> (usize, usize) {
+    let k = 2 + rng.below(63) as usize;
+    let n = k + rng.below((400 - k) as u64 + 1) as usize;
+    (n, k)
+}
+
+/// Property: for an order-*sensitive* learner (PEGASOS) under the Copy
+/// strategy, executor == parallel facade == scoped baseline == sequential,
+/// bit for bit, under both orderings — including the counters the
+/// Theorem-3 bound is asserted against.
+#[test]
+fn prop_executor_matches_sequential_and_parallel() {
+    let mut rng = treecv::rng::Rng::new(0xEC5);
+    for trial in 0..12 {
+        let (n, k) = random_shape(&mut rng);
+        let seed = rng.next_u64();
+        let threads = 1 + rng.below(8) as usize;
+        let data = SyntheticCovertype::new(n, seed).generate();
+        let folds = Folds::new(n, k, seed ^ 0x0F);
+        let l = Pegasos::new(54, 1e-3);
+        for ordering in [Ordering::Fixed, Ordering::Randomized] {
+            let ctx = format!("trial {trial}: n={n} k={k} threads={threads} {ordering:?}");
+            let seq = TreeCv::new(Strategy::Copy, ordering, seed).run(&l, &data, &folds);
+            let par = ParallelTreeCv::new(ordering, seed, 3).run(&l, &data, &folds);
+            let sco = ScopedForkTreeCv::new(ordering, seed, 2).run(&l, &data, &folds);
+            let exe = TreeCvExecutor::new(ordering, seed, threads).run(&l, &data, &folds);
+            assert_eq!(seq.per_fold, par.per_fold, "{ctx} (parallel facade)");
+            assert_eq!(seq.per_fold, sco.per_fold, "{ctx} (scoped baseline)");
+            assert_eq!(seq.per_fold, exe.per_fold, "{ctx} (executor)");
+            assert_eq!(seq.ops.points_updated, exe.ops.points_updated, "{ctx}");
+            assert_eq!(seq.ops.evals, exe.ops.evals, "{ctx}");
+            assert_eq!(seq.ops.update_calls, exe.ops.update_calls, "{ctx}");
+            assert_eq!(seq.ops.points_evaluated, exe.ops.points_evaluated, "{ctx}");
+            assert_eq!(seq.ops.points_permuted, exe.ops.points_permuted, "{ctx}");
+            // Theorem 3 still holds for the executor's counters.
+            let bound = (n as f64) * ((2 * k) as f64).log2();
+            assert!(
+                exe.ops.points_updated as f64 <= bound + 1e-9,
+                "{ctx}: {} > {bound}",
+                exe.ops.points_updated
+            );
+        }
+    }
+}
+
+/// Property: for a learner with exact revert (histogram density), the
+/// executor (which always copies at forks) agrees with sequential TreeCV
+/// under *both* strategies — Copy and SaveRevert compute the same leaves.
+#[test]
+fn prop_executor_matches_both_strategies() {
+    let mut rng = treecv::rng::Rng::new(0xEC6);
+    for trial in 0..12 {
+        let (n, k) = random_shape(&mut rng);
+        let seed = rng.next_u64();
+        let data = SyntheticMixture1d::new(n, seed).generate();
+        let folds = Folds::new(n, k, seed ^ 0xF0);
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        for ordering in [Ordering::Fixed, Ordering::Randomized] {
+            let exe = TreeCvExecutor::new(ordering, seed, 4).run(&l, &data, &folds);
+            for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+                let seq = TreeCv::new(strategy, ordering, seed).run(&l, &data, &folds);
+                assert_eq!(
+                    seq.per_fold, exe.per_fold,
+                    "trial {trial}: n={n} k={k} {ordering:?} {strategy:?}"
+                );
+                assert_eq!(seq.ops.points_updated, exe.ops.points_updated);
+                assert_eq!(seq.ops.evals, exe.ops.evals);
+            }
+        }
+    }
+}
+
+/// The executor's copy count is exactly one snapshot per interior node
+/// (k − 1), independent of the worker count — the buffer pool recycles
+/// storage without changing the §4.1 accounting.
+#[test]
+fn executor_copy_accounting_is_pool_size_independent() {
+    let n = 450;
+    let k = 30;
+    let data = SyntheticMixture1d::new(n, 7).generate();
+    let l = HistogramDensity::new(-8.0, 8.0, 32);
+    let folds = Folds::new(n, k, 8);
+    for threads in [1usize, 2, 5, 8] {
+        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, threads).run(&l, &data, &folds);
+        assert_eq!(exe.ops.model_copies, (k - 1) as u64, "threads={threads}");
+        assert_eq!(exe.ops.model_restores, 0, "threads={threads}");
+        assert_eq!(exe.ops.evals, k as u64, "threads={threads}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Minimal, dependency-free subset of the `anyhow` error-handling API.
+//!
+//! The build image has no crates.io access, so the crate vendors exactly
+//! the surface the repository uses: [`Error`], [`Result`], the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the [`Context`] extension
+//! trait. Semantics match upstream `anyhow` for these cases:
+//!
+//! * `Error` is a display-oriented error value that is NOT itself a
+//!   `std::error::Error` (this is what lets the blanket `From<E>` impl
+//!   coexist with the reflexive `From<Error>`), and it preserves the
+//!   underlying error as a boxed `source`.
+//! * `Context` prepends a message, like `anyhow`'s `"{context}: {cause}"`
+//!   rendering of the chain head.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed, display-oriented error value.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` alias, with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an additional layer of context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The chain of underlying causes, outermost first.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {e}")?;
+            cause = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}"), source: Some(Box::new(e)) })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()), source: Some(Box::new(e)) })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_preserves_message_and_source() {
+        let e: Error = io_err().into();
+        assert_eq!(format!("{e}"), "gone");
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let x = 3;
+        let b = anyhow!("x = {x}");
+        assert_eq!(format!("{b}"), "x = 3");
+        let c = anyhow!("{} and {}", 1, 2);
+        assert_eq!(format!("{c}"), "1 and 2");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_early() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with flag {}", fail);
+            if fail {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "failed with flag true");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e}"), "reading file: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+}
