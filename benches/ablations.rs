@@ -11,6 +11,7 @@
 //! Run: `cargo bench --bench ablations` (env `ABL_N` to resize).
 
 use treecv::benchkit::Bench;
+use treecv::cv::executor::TreeCvExecutor;
 use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::parallel::ParallelTreeCv;
 use treecv::cv::standard::StandardCv;
@@ -62,11 +63,33 @@ fn main() {
     let sr_res =
         TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 1).run(&kmeans, &blobs, &folds);
     println!(
-        "kmeans copy: {} copies / {:.1} KB snapshotted; save_revert: {} restores / 0 snapshot bytes",
+        "kmeans copy: {} copies / {:.1} KB snapshotted; save_revert: {} restores / 0 snap bytes",
         copy_res.ops.model_copies,
         copy_res.ops.bytes_copied as f64 / 1e3,
         sr_res.ops.model_restores
     );
+
+    // --- 1b. Copy vs SaveRevert on the pooled executor --------------------
+    // The EXPERIMENTS.md ablation row: the strategy-aware executor keeps
+    // SaveRevert's snapshots at its fork frontier (O(workers)), so
+    // bytes_copied collapses versus Copy's k − 1 snapshots while wall time
+    // must not regress.
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!("\n== executor strategy ablation (perceptron, k = {k}, {threads} workers) ==");
+    for (name, strat) in [("copy", Strategy::Copy), ("save_revert", Strategy::SaveRevert)] {
+        let exe = TreeCvExecutor::with_available_parallelism(strat, Ordering::Fixed, 1);
+        let res = exe.run(&perceptron, &cover, &folds);
+        let s = bench.run(&format!("executor-perceptron/{name}"), || {
+            std::hint::black_box(exe.run(&perceptron, &cover, &folds));
+        });
+        println!(
+            "  {name:>11}: {:>4} copies / {:>8.1} KB copied / {:>4} restores, median {:.4}s",
+            res.ops.model_copies,
+            res.ops.bytes_copied as f64 / 1e3,
+            res.ops.model_restores,
+            s.median()
+        );
+    }
 
     // --- 2. Parallel fork depth ------------------------------------------
     println!("\n== parallel fork-depth ablation (pegasos, k = {k}) ==");
@@ -79,7 +102,8 @@ fn main() {
     for depth in [1usize, 2, 3, 4] {
         let s = bench.run(&format!("parallel/depth{depth}"), || {
             std::hint::black_box(
-                ParallelTreeCv::new(Ordering::Fixed, 1, depth).run(&pegasos, &cover, &folds),
+                ParallelTreeCv::new(Strategy::Copy, Ordering::Fixed, 1, depth)
+                    .run(&pegasos, &cover, &folds),
             );
         });
         println!("  depth {depth}: speedup {:.2}x", t_seq / s.median());

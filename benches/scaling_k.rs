@@ -12,7 +12,7 @@ use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::parallel::ScopedForkTreeCv;
 use treecv::cv::standard::StandardCv;
 use treecv::cv::treecv::TreeCv;
-use treecv::cv::CvEngine;
+use treecv::cv::{CvEngine, Strategy};
 use treecv::data::synth::SyntheticCovertype;
 use treecv::learner::pegasos::Pegasos;
 use treecv::learner::IncrementalLearner;
@@ -81,8 +81,17 @@ fn main() {
     );
     for k in [16usize, 64, 256] {
         let folds = Folds::new(n, k, 7);
-        let pooled = TreeCvExecutor::with_available_parallelism(Ordering::Fixed, 7);
-        let scoped = ScopedForkTreeCv::with_available_parallelism(Ordering::Fixed, 7);
+        let pooled =
+            TreeCvExecutor::with_available_parallelism(Strategy::Copy, Ordering::Fixed, 7);
+        let scoped =
+            ScopedForkTreeCv::with_available_parallelism(Strategy::Copy, Ordering::Fixed, 7);
+        // A baseline-vs-executor wall-time ratio is only meaningful if both
+        // engines preserve models the same way — never compare a Copy run
+        // against a SaveRevert run.
+        assert_eq!(
+            pooled.strategy, scoped.strategy,
+            "baseline and executor must be benchmarked under the same strategy"
+        );
         let seq_res = TreeCv::default().run(&learner, &data, &folds);
         let pooled_res = pooled.run(&learner, &data, &folds);
         let scoped_res = scoped.run(&learner, &data, &folds);

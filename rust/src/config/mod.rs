@@ -131,6 +131,12 @@ impl From<OrderingCfg> for crate::cv::folds::Ordering {
 }
 
 /// Model-preservation strategy (paper §4.1).
+///
+/// Honored by the `treecv` and `parallel_treecv` engines (the pooled
+/// executor runs SaveRevert with snapshots only at its fork frontier —
+/// O(workers) copies per run instead of k − 1). Engines that cannot honor
+/// a requested strategy (`standard`, `merge`) reject it with a hard error
+/// rather than silently downgrading to Copy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StrategyCfg {
     Copy,

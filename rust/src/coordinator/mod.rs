@@ -112,7 +112,7 @@ where
             repetitions: cfg.repetitions,
             seed: cfg.seed,
         };
-        let rep = run_repetitions(learner, data, &spec);
+        let rep = run_repetitions(learner, data, &spec)?;
         out.push(CellReport::from_rep(cfg.task, cfg.engine, data.n, &rep));
     }
     Ok(out)
@@ -123,6 +123,12 @@ fn run_merge_cells<L: MergeableLearner>(
     data: &Dataset,
     cfg: &ExperimentConfig,
 ) -> Result<Vec<CellReport>> {
+    if cfg.strategy == crate::config::StrategyCfg::SaveRevert {
+        bail!(
+            "engine `merge` cannot honor the save/revert strategy (Izbicki-style fold merging \
+             never updates a model in place); refusing to silently run Copy instead"
+        );
+    }
     let mut out = Vec::new();
     for &k_raw in &cfg.ks {
         let k = if k_raw == 0 { data.n } else { k_raw };
@@ -250,6 +256,33 @@ mod tests {
     fn merge_engine_rejects_nonmergeable() {
         let cfg = tiny_cfg(Task::Pegasos, Engine::Merge);
         assert!(run_experiment(&cfg).is_err());
+    }
+
+    #[test]
+    fn save_revert_honored_by_treecv_and_parallel_engines() {
+        for engine in [Engine::Treecv, Engine::ParallelTreecv] {
+            let mut cfg = tiny_cfg(Task::Density, engine);
+            cfg.strategy = StrategyCfg::SaveRevert;
+            let reports = run_experiment(&cfg).unwrap();
+            assert!(reports[0].mean.is_finite(), "{engine:?}");
+            // The strategy actually ran: interior nodes account as one
+            // fork snapshot OR two restores each (k − 1 = 4 interior).
+            let ops = &reports[0].ops;
+            assert_eq!(2 * ops.model_copies + ops.model_restores, 8, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn save_revert_on_standard_or_merge_is_a_hard_error() {
+        let mut cfg = tiny_cfg(Task::Density, Engine::Standard);
+        cfg.strategy = StrategyCfg::SaveRevert;
+        let err = run_experiment(&cfg).unwrap_err();
+        assert!(format!("{err}").contains("save/revert"), "{err}");
+
+        let mut cfg = tiny_cfg(Task::Density, Engine::Merge);
+        cfg.strategy = StrategyCfg::SaveRevert;
+        let err = run_experiment(&cfg).unwrap_err();
+        assert!(format!("{err}").contains("save/revert"), "{err}");
     }
 
     #[test]

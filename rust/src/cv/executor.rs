@@ -1,5 +1,6 @@
 //! Pooled work-stealing TreeCV executor — the engine behind every parallel
-//! code path in the crate.
+//! code path in the crate, now aware of both §4.1 model-preservation
+//! strategies.
 //!
 //! The paper's §4.1 parallelization ("dedicate one thread of computation to
 //! each of the data groups") was first implemented by spawning a fresh
@@ -13,29 +14,52 @@
 //! * **One worker pool per run**, sized from `available_parallelism` (or an
 //!   explicit `threads` knob) — workers are spawned once and live for the
 //!   whole computation.
-//! * **Tree nodes are tasks.** A task carries `(s, e, model)` where the
-//!   model is trained on every chunk outside `s..=e`. Processing an
-//!   interior node performs both of the node's update phases and pushes the
-//!   two child tasks; a leaf evaluates and records `R̂_s`.
+//! * **Tasks are subtrees, not nodes.** Only the nodes above the *snapshot
+//!   cutoff* ([`snapshot_cutoff`], ~⌈log₂ workers⌉ + slack levels — the
+//!   nodes that actually feed the deques) are forked into independent
+//!   tasks; a fork materializes one model snapshot because its two halves
+//!   may run concurrently on different workers. Every subtree at or below
+//!   the cutoff runs *inline on its worker* through the shared sequential
+//!   recursion ([`super::treecv::run_subtree`]) with the caller's chosen
+//!   [`Strategy`]:
+//!   - [`Strategy::SaveRevert`] descends via `update_logged`/`revert` with
+//!     **zero** copies below the cutoff, so a run takes `O(workers)` model
+//!     snapshots instead of the `k − 1` a Copy run pays — decisive for
+//!     LOOCV and for large models (ridge's d² sufficient statistics, KNN's
+//!     training-set model), exactly the regime the paper recommends
+//!     save/revert for.
+//!   - [`Strategy::Copy`] clones at every interior node as before; the
+//!     fork/inline split leaves its `k − 1` copy count unchanged.
 //! * **Per-worker work-stealing deques.** Owners push/pop LIFO (depth-first
 //!   — keeps the live-model count near `O(log k · workers)`); thieves steal
 //!   FIFO (breadth-first — steals the largest available subtree, the
-//!   classic Blumofe–Leiserson discipline). Unbalanced subtrees therefore
-//!   rebalance automatically instead of leaving a thread idle.
-//! * **A model buffer pool.** The Copy strategy's `k−1` interior-node
-//!   snapshots draw buffers from a shared pool and `clone_from` into them,
-//!   so model storage is recycled from finished leaves instead of freshly
-//!   allocated at every fork. Retention is capped at ~`workers · log₂ k`
-//!   buffers, so LOOCV-scale runs never hold O(k) models at once.
+//!   classic Blumofe–Leiserson discipline). The cutoff still yields
+//!   `~2^slack · workers` independent subtrees, so unbalanced remainders
+//!   rebalance instead of leaving a thread idle.
+//! * **Model buffer recycling at both granularities.** Fork-node
+//!   snapshots draw buffers from a shared pool and `clone_from` into
+//!   them; finished subtrees return their (restored) model buffer.
+//!   Retention is capped at ~`workers · cutoff` buffers — the fork
+//!   levels' steady-state demand, much shallower than the old
+//!   `workers · log₂ k` now that deep levels never feed the deques.
+//!   Below the cutoff, Copy-strategy snapshots recycle through a
+//!   *worker-local* scratch free-list threaded into the shared recursion
+//!   (no locking on the hot path), so a Copy run still allocates
+//!   O(depth) models per worker, not one per interior node.
 //!
 //! Because permutation streams are derived per-node from `(seed, node,
 //! side)` — never drawn from one sequential stream — the executor produces
 //! **bit-identical** estimates to the sequential [`super::treecv::TreeCv`]
-//! for the same seed, under both orderings, for any worker count. The tests
+//! for the same seed and strategy, under both orderings, for any worker
+//! count, whenever the learner's revert is exact (always, under Copy).
+//! Learners with approximate revert (the f32 perceptron) are reproduced
+//! bit-for-bit at `threads = 1` and to ulp-cascade tolerance above, since
+//! forks snapshot where the sequential engine would revert. The tests
 //! below and `tests/integration_executor.rs` assert exactly that.
 
 use super::folds::{gather_ordered, node_tags, Folds, Ordering};
-use super::CvResult;
+use super::treecv::run_subtree;
+use super::{CvResult, Strategy};
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
@@ -43,24 +67,51 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering as MemOrdering};
 use std::sync::Mutex;
 
-/// The pooled work-stealing TreeCV engine (Copy strategy at forks).
+/// Extra fork levels beyond ⌈log₂ workers⌉: each level doubles the subtree
+/// count, so slack 2 yields ~4 independent subtrees per worker — enough
+/// over-decomposition for stealing to absorb remainder-fold imbalance,
+/// while keeping the per-run snapshot count at `O(workers)`.
+const SNAPSHOT_SLACK: usize = 2;
+
+/// First tree depth that is NOT forked into independent tasks: nodes at
+/// depth `< snapshot_cutoff(threads)` fork (one model snapshot each, at
+/// most `2^cutoff − 1` per run); subtrees rooted at the cutoff run inline
+/// on their worker with the engine's strategy. `threads <= 1` forks
+/// nothing — the whole tree runs inline, exactly the sequential engine.
+pub fn snapshot_cutoff(threads: usize) -> usize {
+    if threads <= 1 {
+        return 0;
+    }
+    // ⌈log₂ threads⌉ for threads ≥ 2.
+    let ceil_log2 = (usize::BITS - (threads - 1).leading_zeros()) as usize;
+    ceil_log2 + SNAPSHOT_SLACK
+}
+
+/// The pooled work-stealing TreeCV engine.
 #[derive(Debug, Clone)]
 pub struct TreeCvExecutor {
+    /// Model-preservation strategy (paper §4.1): applied verbatim inside
+    /// every inline subtree; fork nodes above the cutoff always snapshot
+    /// (their halves run concurrently), which is the only place a
+    /// SaveRevert run still copies.
+    pub strategy: Strategy,
     /// Fixed vs randomized feeding order (paper §5).
     pub ordering: Ordering,
     /// Seed for the per-node permutation streams (ignored under Fixed).
     pub seed: u64,
     /// Worker-pool size. `1` runs the whole tree inline on the calling
-    /// thread (no spawning); capped at `k` per run since at most `k` tasks
-    /// are ever live.
+    /// thread (no spawning, no forking — the sequential engine exactly);
+    /// capped at `k` per run.
     pub threads: usize,
 }
 
-/// One unit of executor work: the TreeCV node `(s, e)` plus the model
-/// trained on every chunk outside `s..=e`.
+/// One unit of executor work: the TreeCV subtree rooted at `(s, e)` plus
+/// the model trained on every chunk outside `s..=e`. `depth` decides
+/// whether the node forks (above the snapshot cutoff) or runs inline.
 struct Task<M> {
     s: usize,
     e: usize,
+    depth: usize,
     model: M,
 }
 
@@ -68,16 +119,18 @@ struct Task<M> {
 struct Shared<M> {
     /// One deque per worker. Owner pushes/pops the back; thieves pop the
     /// front. A plain mutexed deque keeps the implementation obviously
-    /// correct; contention is negligible at tree-node granularity.
+    /// correct; contention is negligible at subtree granularity.
     deques: Vec<Mutex<VecDeque<Task<M>>>>,
-    /// Recycled model buffers (`clone_from` targets for interior-node
-    /// snapshots). Leaves return their model here when done; retention is
-    /// capped at [`Shared::pool_cap`] so LOOCV-scale runs (k = n) don't
-    /// accumulate O(k) dead buffers by the end of the computation.
+    /// Recycled model buffers (`clone_from` targets for fork-node
+    /// snapshots). Finished subtrees return their model here; retention is
+    /// capped at [`Shared::pool_cap`] so LOOCV-scale runs don't accumulate
+    /// dead buffers by the end of the computation.
     pool: Mutex<Vec<M>>,
-    /// Maximum buffers the pool retains (~ workers · tree depth, the
-    /// steady-state demand); excess leaf models are dropped instead.
+    /// Maximum buffers the pool retains (~ workers · cutoff, the fork
+    /// levels' steady-state demand); excess buffers are dropped instead.
     pool_cap: usize,
+    /// First non-forking depth (see [`snapshot_cutoff`]).
+    cutoff: usize,
     /// Per-fold outputs; distinct indices are written exactly once each.
     per_fold: Mutex<Vec<f64>>,
     /// Leaves completed so far; the run is done when this reaches `k`.
@@ -104,15 +157,15 @@ impl Drop for PanicSignal<'_> {
 }
 
 impl TreeCvExecutor {
-    pub fn new(ordering: Ordering, seed: u64, threads: usize) -> Self {
-        Self { ordering, seed, threads: threads.max(1) }
+    pub fn new(strategy: Strategy, ordering: Ordering, seed: u64, threads: usize) -> Self {
+        Self { strategy, ordering, seed, threads: threads.max(1) }
     }
 
     /// Pool sized to the machine's available parallelism (no rounding to a
     /// power of two — any worker count schedules fully).
-    pub fn with_available_parallelism(ordering: Ordering, seed: u64) -> Self {
+    pub fn with_available_parallelism(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
         let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        Self::new(ordering, seed, threads)
+        Self::new(strategy, ordering, seed, threads)
     }
 
     /// Gather the points of chunks `lo..=hi` in the engine's feeding order.
@@ -130,8 +183,11 @@ impl TreeCvExecutor {
         gather_ordered(folds, lo, hi, self.seed, self.ordering, tag, ops)
     }
 
-    /// Process one tree node: evaluate at a leaf, otherwise run both update
-    /// phases and enqueue the two children on this worker's own deque.
+    /// Process one task: fork nodes above the cutoff run both update
+    /// phases (one snapshot) and enqueue the two child subtrees on this
+    /// worker's own deque; everything else — leaves and whole subtrees at
+    /// or below the cutoff — runs inline through the shared sequential
+    /// recursion with the engine's strategy.
     #[allow(clippy::too_many_arguments)]
     fn process<L>(
         &self,
@@ -142,61 +198,82 @@ impl TreeCvExecutor {
         data: &Dataset,
         folds: &Folds,
         ops: &mut OpCounts,
+        scratch: &mut Vec<L::Model>,
     ) where
         L: IncrementalLearner + Sync,
     {
-        let Task { s, e, mut model } = task;
-        if s == e {
-            let chunk = folds.chunk(s);
-            let score = learner.evaluate(&model, data, chunk);
-            ops.evals += 1;
-            ops.points_evaluated += chunk.len() as u64;
-            shared.per_fold.lock().unwrap()[s] = score;
-            // Recycle the model storage for future interior-node
-            // snapshots (bounded — beyond the cap, just drop it).
-            {
-                let mut pool = shared.pool.lock().unwrap();
-                if pool.len() < shared.pool_cap {
-                    pool.push(model);
+        let Task { s, e, depth, mut model } = task;
+        if s < e && depth < shared.cutoff {
+            let m = (s + e) / 2;
+            // Node tags shared with the sequential engine.
+            let (tag_right, tag_left) = node_tags(s, e);
+
+            let right = self.gather(folds, m + 1, e, tag_right, ops);
+            let left = self.gather(folds, s, m, tag_left, ops);
+            ops.update_calls += 2;
+            ops.points_updated += (right.len() + left.len()) as u64;
+
+            // The two halves may run concurrently on different workers, so
+            // a fork must snapshot regardless of strategy — this is the
+            // only copy a SaveRevert run pays. The snapshot goes into a
+            // pooled buffer (clone_from reuses its storage) when one is
+            // available.
+            let recycled = shared.pool.lock().unwrap().pop();
+            let mut sibling = match recycled {
+                Some(mut buf) => {
+                    buf.clone_from(&model);
+                    buf
                 }
-            }
-            if shared.leaves_done.fetch_add(1, MemOrdering::AcqRel) + 1 == shared.k {
-                shared.done.store(true, MemOrdering::Release);
-            }
+                None => model.clone(),
+            };
+            ops.model_copies += 1;
+            ops.bytes_copied += learner.model_bytes(&model) as u64;
+
+            // As in Algorithm 1: the model fed the *second* group serves
+            // the left child (s, m); the model fed the *first* group
+            // serves the right child (m+1, e).
+            learner.update(&mut model, data, &right);
+            learner.update(&mut sibling, data, &left);
+
+            let mut dq = shared.deques[wid].lock().unwrap();
+            dq.push_back(Task { s, e: m, depth: depth + 1, model });
+            dq.push_back(Task { s: m + 1, e, depth: depth + 1, model: sibling });
             return;
         }
 
-        let m = (s + e) / 2;
-        // Node tags shared with the sequential engine (`folds::node_tags`).
-        let (tag_right, tag_left) = node_tags(s, e);
-
-        let right = self.gather(folds, m + 1, e, tag_right, ops);
-        let left = self.gather(folds, s, m, tag_left, ops);
-        ops.update_calls += 2;
-        ops.points_updated += (right.len() + left.len()) as u64;
-
-        // Snapshot into a pooled buffer (clone_from reuses its storage)
-        // instead of allocating a fresh model at every interior node.
-        let recycled = shared.pool.lock().unwrap().pop();
-        let mut sibling = match recycled {
-            Some(mut buf) => {
-                buf.clone_from(&model);
-                buf
+        // Inline subtree: the shared sequential recursion, under the
+        // caller's strategy, into a local buffer (one per-fold lock per
+        // subtree instead of one per leaf). Copy-strategy snapshots inside
+        // the subtree recycle through this worker's scratch free-list.
+        let mut local = vec![0.0; e - s + 1];
+        run_subtree(
+            learner,
+            data,
+            folds,
+            self.strategy,
+            self.ordering,
+            self.seed,
+            &mut model,
+            s,
+            e,
+            s,
+            &mut local,
+            ops,
+            scratch,
+        );
+        shared.per_fold.lock().unwrap()[s..=e].copy_from_slice(&local);
+        // Recycle the model storage for future fork-node snapshots
+        // (bounded — beyond the cap, just drop it).
+        {
+            let mut pool = shared.pool.lock().unwrap();
+            if pool.len() < shared.pool_cap {
+                pool.push(model);
             }
-            None => model.clone(),
-        };
-        ops.model_copies += 1;
-        ops.bytes_copied += learner.model_bytes(&model) as u64;
-
-        // As in Algorithm 1: the model fed the *second* group serves the
-        // left child (s, m); the model fed the *first* group serves the
-        // right child (m+1, e).
-        learner.update(&mut model, data, &right);
-        learner.update(&mut sibling, data, &left);
-
-        let mut dq = shared.deques[wid].lock().unwrap();
-        dq.push_back(Task { s, e: m, model });
-        dq.push_back(Task { s: m + 1, e, model: sibling });
+        }
+        let leaves = e - s + 1;
+        if shared.leaves_done.fetch_add(leaves, MemOrdering::AcqRel) + leaves == shared.k {
+            shared.done.store(true, MemOrdering::Release);
+        }
     }
 
     /// Worker loop: drain own deque LIFO, steal FIFO when empty, exit once
@@ -215,6 +292,10 @@ impl TreeCvExecutor {
         let _signal = PanicSignal { done: &shared.done };
         let mut ops = OpCounts::default();
         let n_workers = shared.deques.len();
+        // Worker-local free-list for inline-subtree Copy snapshots; lives
+        // across tasks so buffers recycle for the whole run (held count is
+        // bounded by the subtree recursion depth, ≤ ⌈log₂ k⌉).
+        let mut scratch: Vec<L::Model> = Vec::new();
         // Consecutive empty steal sweeps; drives the idle backoff below.
         let mut dry_sweeps = 0u32;
         loop {
@@ -231,7 +312,7 @@ impl TreeCvExecutor {
             match task {
                 Some(t) => {
                     dry_sweeps = 0;
-                    self.process(wid, t, shared, learner, data, folds, &mut ops);
+                    self.process(wid, t, shared, learner, data, folds, &mut ops, &mut scratch);
                 }
                 None => {
                     if shared.done.load(MemOrdering::Acquire) {
@@ -264,23 +345,27 @@ impl TreeCvExecutor {
         let timer = Timer::start();
         let k = folds.k();
         let threads = self.threads.max(1).min(k);
-        // Steady-state snapshot demand is one buffer per live tree path
-        // per worker: ~threads · ⌈log₂ k⌉ (+ slack). Capping retention
-        // here keeps LOOCV (k = n) from holding O(k) buffers at once.
-        let pool_cap = threads * (k.max(2).ilog2() as usize + 2);
+        let cutoff = snapshot_cutoff(threads);
+        // Steady-state snapshot demand is one buffer per live fork level
+        // per worker — and forks only exist above the cutoff, so the cap
+        // no longer scales with log₂ k.
+        let pool_cap = threads * (cutoff + 2);
         let shared: Shared<L::Model> = Shared {
             deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
             pool: Mutex::new(Vec::new()),
             pool_cap,
+            cutoff,
             per_fold: Mutex::new(vec![0.0; k]),
             leaves_done: AtomicUsize::new(0),
             k,
             done: AtomicBool::new(false),
         };
-        shared.deques[0]
-            .lock()
-            .unwrap()
-            .push_back(Task { s: 0, e: k - 1, model: learner.init() });
+        shared.deques[0].lock().unwrap().push_back(Task {
+            s: 0,
+            e: k - 1,
+            depth: 0,
+            model: learner.init(),
+        });
 
         let mut ops = OpCounts::default();
         if threads == 1 {
@@ -323,7 +408,8 @@ mod tests {
         let l = Pegasos::new(54, 1e-4);
         let folds = Folds::new(2_000, 16, 92);
         let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 5).run(&l, &data, &folds);
-        let exe = TreeCvExecutor::new(Ordering::Fixed, 5, 8).run(&l, &data, &folds);
+        let exe =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, 8).run(&l, &data, &folds);
         assert_eq!(seq.per_fold, exe.per_fold);
         assert_eq!(seq.estimate, exe.estimate);
     }
@@ -335,7 +421,8 @@ mod tests {
         let l = Pegasos::new(54, 1e-4);
         let folds = Folds::new(1_000, 8, 94);
         let seq = TreeCv::new(Strategy::Copy, Ordering::Randomized, 7).run(&l, &data, &folds);
-        let exe = TreeCvExecutor::new(Ordering::Randomized, 7, 4).run(&l, &data, &folds);
+        let exe =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 7, 4).run(&l, &data, &folds);
         assert_eq!(seq.per_fold, exe.per_fold);
     }
 
@@ -348,8 +435,48 @@ mod tests {
         let folds = Folds::new(900, 13, 96); // remainder folds: k ∤ n
         let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 3).run(&l, &data, &folds);
         for threads in [1usize, 2, 3, 5, 6, 7, 12, 16, 64] {
-            let exe = TreeCvExecutor::new(Ordering::Fixed, 3, threads).run(&l, &data, &folds);
+            let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 3, threads)
+                .run(&l, &data, &folds);
             assert_eq!(seq.per_fold, exe.per_fold, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn save_revert_matches_sequential_at_every_worker_count() {
+        // Exact-revert learner: the strategy-aware executor must reproduce
+        // sequential SaveRevert bit-for-bit at any pool size.
+        let data = SyntheticMixture1d::new(700, 89).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(700, 11, 88); // remainder folds
+        let seq = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 4).run(&l, &data, &folds);
+        for threads in [1usize, 2, 3, 5, 8, 16] {
+            let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 4, threads)
+                .run(&l, &data, &folds);
+            assert_eq!(seq.per_fold, exe.per_fold, "threads={threads}");
+            assert_eq!(seq.ops.points_updated, exe.ops.points_updated, "threads={threads}");
+            assert_eq!(seq.ops.evals, exe.ops.evals, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn save_revert_copies_only_at_forks() {
+        // k = 64 LOOCV-ish tree: Copy pays k−1 = 63 snapshots; SaveRevert
+        // pays at most 2^cutoff − 1 fork snapshots, restores carry the
+        // rest (2 per non-forked interior node).
+        let data = SyntheticMixture1d::new(640, 87).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(640, 64, 86);
+        for threads in [1usize, 3, 6] {
+            let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 0, threads)
+                .run(&l, &data, &folds);
+            let max_forks = (1u64 << snapshot_cutoff(threads)) - 1;
+            assert!(
+                exe.ops.model_copies <= max_forks,
+                "threads={threads}: {} copies > {max_forks} fork nodes",
+                exe.ops.model_copies
+            );
+            assert!(exe.ops.model_copies < 63, "threads={threads}");
+            assert_eq!(exe.ops.model_restores, 2 * (63 - exe.ops.model_copies));
         }
     }
 
@@ -358,7 +485,8 @@ mod tests {
         let data = SyntheticMixture1d::new(300, 97).generate();
         let l = HistogramDensity::new(-8.0, 8.0, 32);
         let folds = Folds::new(300, 10, 98);
-        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 1).run(&l, &data, &folds);
+        let exe =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 1).run(&l, &data, &folds);
         let seq = TreeCv::default().run(&l, &data, &folds);
         assert_eq!(exe.per_fold, seq.per_fold);
     }
@@ -369,12 +497,14 @@ mod tests {
         let l = HistogramDensity::new(-8.0, 8.0, 32);
         let folds = Folds::new(512, 32, 100);
         let seq = TreeCv::default().run(&l, &data, &folds);
-        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 6).run(&l, &data, &folds);
+        let exe =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 6).run(&l, &data, &folds);
         assert_eq!(seq.ops.points_updated, exe.ops.points_updated);
         assert_eq!(seq.ops.evals, exe.ops.evals);
         assert_eq!(seq.ops.update_calls, exe.ops.update_calls);
         // One snapshot per interior node, exactly as the Copy strategy:
-        // the pool recycles storage but never changes the copy count.
+        // the fork/inline split recycles storage but never changes the
+        // Copy-strategy count.
         assert_eq!(exe.ops.model_copies, 31);
     }
 
@@ -384,13 +514,31 @@ mod tests {
         let data = SyntheticMixture1d::new(40, 101).generate();
         let l = HistogramDensity::new(-8.0, 8.0, 16);
         let folds = Folds::new(40, 1, 102);
-        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 4).run(&l, &data, &folds);
+        let exe =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4).run(&l, &data, &folds);
         assert_eq!(exe.per_fold.len(), 1);
         assert_eq!(exe.ops.evals, 1);
-        // k = n (LOOCV) with a multi-worker pool.
+        // k = n (LOOCV) with a multi-worker pool, both strategies.
         let folds = Folds::loocv(40);
         let seq = TreeCv::default().run(&l, &data, &folds);
-        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, 4).run(&l, &data, &folds);
+        let exe =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4).run(&l, &data, &folds);
         assert_eq!(seq.per_fold, exe.per_fold);
+        let seq = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 0).run(&l, &data, &folds);
+        let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 0, 4)
+            .run(&l, &data, &folds);
+        assert_eq!(seq.per_fold, exe.per_fold);
+    }
+
+    #[test]
+    fn snapshot_cutoff_shape() {
+        assert_eq!(snapshot_cutoff(0), 0);
+        assert_eq!(snapshot_cutoff(1), 0);
+        assert_eq!(snapshot_cutoff(2), 1 + SNAPSHOT_SLACK);
+        assert_eq!(snapshot_cutoff(3), 2 + SNAPSHOT_SLACK);
+        assert_eq!(snapshot_cutoff(4), 2 + SNAPSHOT_SLACK);
+        assert_eq!(snapshot_cutoff(6), 3 + SNAPSHOT_SLACK);
+        assert_eq!(snapshot_cutoff(8), 3 + SNAPSHOT_SLACK);
+        assert_eq!(snapshot_cutoff(16), 4 + SNAPSHOT_SLACK);
     }
 }

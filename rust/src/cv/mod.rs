@@ -1,15 +1,19 @@
 //! Cross-validation engines.
 //!
 //! * [`treecv`] — the paper's contribution (Algorithm 1): recursive
-//!   tree-structured CV in `O(log k)`-times single-training time.
+//!   tree-structured CV in `O(log k)`-times single-training time. Its
+//!   recursion (`run_subtree`) is *the* sequential implementation, shared
+//!   with both parallel engines for their inline subtrees/tails.
 //! * [`standard`] — the naive k-repetition baseline the paper compares
 //!   against (train k models from scratch).
-//! * [`executor`] — the pooled work-stealing executor that runs TreeCV
-//!   tree nodes as tasks on a persistent worker pool; every parallel
-//!   dispatch path routes through it.
+//! * [`executor`] — the pooled work-stealing executor that forks TreeCV
+//!   subtrees above a snapshot cutoff (~⌈log₂ workers⌉ levels) and runs
+//!   everything below inline under the caller's [`Strategy`] — SaveRevert
+//!   therefore pays O(workers) model copies per run instead of k − 1.
+//!   Every parallel dispatch path routes through it.
 //! * [`parallel`] — the §4.1 parallel engine facade (delegates to
 //!   [`executor`]) plus the original scoped-thread forking retained as a
-//!   bench baseline.
+//!   bench baseline; both are strategy-aware.
 //! * [`mergecv`] — the Izbicki [2013] O(n + k) baseline for *mergeable*
 //!   learners (related-work comparator).
 //! * [`exact`] — closed-form ridge LOOCV (hat-matrix), the external

@@ -9,19 +9,26 @@
 //! delegates to the pooled work-stealing executor
 //! ([`super::executor::TreeCvExecutor`]) with a pool of `2^fork_depth`
 //! workers, which schedules the same tree without thread churn,
-//! oversubscription, or idle tails on unbalanced subtrees. Because the
+//! oversubscription, or idle tails on unbalanced subtrees — and honors the
+//! caller's model-preservation [`Strategy`] (SaveRevert runs copy only at
+//! the executor's fork frontier, O(workers) snapshots per run). Because the
 //! randomized-ordering streams are derived per-node (not drawn from one
 //! sequential stream), the parallel engine produces *identical* estimates
-//! to the sequential [`super::treecv::TreeCv`] for the same seed — tested
-//! below.
+//! to the sequential [`super::treecv::TreeCv`] for the same seed and
+//! strategy (exactly-reverting learners; bit-identical always under Copy)
+//! — tested below.
 //!
 //! [`ScopedForkTreeCv`] preserves the original recursive `thread::scope`
 //! implementation as a measurement baseline so `benches/scaling_k.rs` can
 //! quantify the executor's win; it is not wired into any dispatch path.
+//! Its sequential tail shares [`super::treecv::run_subtree`] with the other
+//! engines, so it too honors both strategies (forks above the tail must
+//! snapshot regardless, exactly like the executor's fork frontier).
 
 use super::executor::TreeCvExecutor;
 use super::folds::{gather_ordered, node_tags, Folds, Ordering};
-use super::CvResult;
+use super::treecv::run_subtree;
+use super::{CvResult, Strategy};
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
@@ -39,11 +46,13 @@ pub fn fork_depth_for_threads(threads: usize) -> usize {
     }
 }
 
-/// Threaded TreeCV engine (always uses the Copy strategy at forks).
-/// Runs on the pooled work-stealing executor with `2^fork_depth` workers
-/// (or an exact `threads` override — the executor schedules any count).
+/// Threaded TreeCV engine facade. Runs on the pooled work-stealing
+/// executor with `2^fork_depth` workers (or an exact `threads` override —
+/// the executor schedules any count), under the caller's strategy.
 #[derive(Debug, Clone)]
 pub struct ParallelTreeCv {
+    /// Model-preservation strategy, forwarded to the executor.
+    pub strategy: Strategy,
     pub ordering: Ordering,
     pub seed: u64,
     /// Fork depth: up to `2^fork_depth` concurrent subtrees.
@@ -55,17 +64,18 @@ pub struct ParallelTreeCv {
 }
 
 impl ParallelTreeCv {
-    pub fn new(ordering: Ordering, seed: u64, fork_depth: usize) -> Self {
-        Self { ordering, seed, fork_depth, threads: None }
+    pub fn new(strategy: Strategy, ordering: Ordering, seed: u64, fork_depth: usize) -> Self {
+        Self { strategy, ordering, seed, fork_depth, threads: None }
     }
 
     /// Pool sized to the machine's full parallelism. `fork_depth` is set
     /// to the largest depth with `2^depth <= threads` (the historical
     /// clamp), but the run uses the exact thread count — a 6-core machine
     /// gets 6 workers, not 4.
-    pub fn with_available_parallelism(ordering: Ordering, seed: u64) -> Self {
+    pub fn with_available_parallelism(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
         let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         Self {
+            strategy,
             ordering,
             seed,
             fork_depth: fork_depth_for_threads(threads),
@@ -85,19 +95,24 @@ impl ParallelTreeCv {
         let threads = self
             .threads
             .unwrap_or_else(|| 1usize << self.fork_depth.min(usize::BITS as usize - 1));
-        TreeCvExecutor::new(self.ordering, self.seed, threads).run(learner, data, folds)
+        TreeCvExecutor::new(self.strategy, self.ordering, self.seed, threads)
+            .run(learner, data, folds)
     }
 }
 
 /// The original §4.1 implementation: recursively fork a scoped OS thread at
-/// every tree node down to `fork_depth`, cloning the model at each fork,
-/// with a sequential Copy-strategy tail below that depth.
+/// every tree node down to `fork_depth` — cloning the model at each fork,
+/// which concurrency requires regardless of strategy — with a sequential
+/// tail below that depth that runs the shared recursion under the engine's
+/// [`Strategy`].
 ///
 /// Retained **only** as the baseline for executor benchmarks and the
 /// equivalence tests; production dispatch goes through [`ParallelTreeCv`]
 /// (i.e. the executor).
 #[derive(Debug, Clone)]
 pub struct ScopedForkTreeCv {
+    /// Model-preservation strategy for the sequential tails.
+    pub strategy: Strategy,
     pub ordering: Ordering,
     pub seed: u64,
     /// Fork depth: up to `2^fork_depth` concurrent subtrees.
@@ -105,15 +120,15 @@ pub struct ScopedForkTreeCv {
 }
 
 impl ScopedForkTreeCv {
-    pub fn new(ordering: Ordering, seed: u64, fork_depth: usize) -> Self {
-        Self { ordering, seed, fork_depth }
+    pub fn new(strategy: Strategy, ordering: Ordering, seed: u64, fork_depth: usize) -> Self {
+        Self { strategy, ordering, seed, fork_depth }
     }
 
     /// Depth fitting the machine's parallelism (same clamp as
     /// [`ParallelTreeCv::with_available_parallelism`]).
-    pub fn with_available_parallelism(ordering: Ordering, seed: u64) -> Self {
+    pub fn with_available_parallelism(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
         let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        Self::new(ordering, seed, fork_depth_for_threads(threads))
+        Self::new(strategy, ordering, seed, fork_depth_for_threads(threads))
     }
 
     fn gather(
@@ -144,11 +159,25 @@ impl ScopedForkTreeCv {
         L::Model: Send,
     {
         let mut ops = OpCounts::default();
-        if s == e {
-            let chunk = folds.chunk(s);
-            per_fold[0] = learner.evaluate(&model, data, chunk);
-            ops.evals += 1;
-            ops.points_evaluated += chunk.len() as u64;
+        if s == e || depth >= self.fork_depth {
+            // Sequential tail (also handles leaves): the shared recursion
+            // under the engine's strategy, writing `per_fold[i - s]`.
+            let mut scratch = Vec::new();
+            run_subtree(
+                learner,
+                data,
+                folds,
+                self.strategy,
+                self.ordering,
+                self.seed,
+                &mut model,
+                s,
+                e,
+                s,
+                per_fold,
+                &mut ops,
+                &mut scratch,
+            );
             return ops;
         }
         let m = (s + e) / 2;
@@ -163,37 +192,22 @@ impl ScopedForkTreeCv {
         // written concurrently without locks.
         let (pf_left, pf_right) = per_fold.split_at_mut(m - s + 1);
 
-        if depth < self.fork_depth {
-            let mut model_right = model.clone();
-            ops.model_copies += 1;
-            ops.bytes_copied += learner.model_bytes(&model) as u64;
-            let (ops_a, ops_b) = std::thread::scope(|scope| {
-                let handle = scope.spawn(move || {
-                    // Right side of the split: model updated with the LEFT
-                    // chunk group, recursing on (m+1, e).
-                    learner.update(&mut model_right, data, &left);
-                    self.recurse(learner, data, folds, model_right, m + 1, e, depth + 1, pf_right)
-                });
-                learner.update(&mut model, data, &right);
-                let ops_a =
-                    self.recurse(learner, data, folds, model, s, m, depth + 1, pf_left);
-                (ops_a, handle.join().expect("treecv worker panicked"))
+        let mut model_right = model.clone();
+        ops.model_copies += 1;
+        ops.bytes_copied += learner.model_bytes(&model) as u64;
+        let (ops_a, ops_b) = std::thread::scope(|scope| {
+            let handle = scope.spawn(move || {
+                // Right side of the split: model updated with the LEFT
+                // chunk group, recursing on (m+1, e).
+                learner.update(&mut model_right, data, &left);
+                self.recurse(learner, data, folds, model_right, m + 1, e, depth + 1, pf_right)
             });
-            ops.merge(&ops_a);
-            ops.merge(&ops_b);
-        } else {
-            // Sequential tail: same order as the sequential engine.
-            let saved = model.clone();
-            ops.model_copies += 1;
-            ops.bytes_copied += learner.model_bytes(&saved) as u64;
             learner.update(&mut model, data, &right);
             let ops_a = self.recurse(learner, data, folds, model, s, m, depth + 1, pf_left);
-            let mut model = saved;
-            learner.update(&mut model, data, &left);
-            let ops_b = self.recurse(learner, data, folds, model, m + 1, e, depth + 1, pf_right);
-            ops.merge(&ops_a);
-            ops.merge(&ops_b);
-        }
+            (ops_a, handle.join().expect("treecv worker panicked"))
+        });
+        ops.merge(&ops_a);
+        ops.merge(&ops_b);
         ops
     }
 
@@ -227,7 +241,8 @@ mod tests {
         let l = Pegasos::new(54, 1e-4);
         let folds = Folds::new(2_000, 16, 92);
         let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 5).run(&l, &data, &folds);
-        let par = ParallelTreeCv::new(Ordering::Fixed, 5, 3).run(&l, &data, &folds);
+        let par =
+            ParallelTreeCv::new(Strategy::Copy, Ordering::Fixed, 5, 3).run(&l, &data, &folds);
         assert_eq!(seq.per_fold, par.per_fold);
     }
 
@@ -238,7 +253,8 @@ mod tests {
         let l = Pegasos::new(54, 1e-4);
         let folds = Folds::new(1_000, 8, 94);
         let seq = TreeCv::new(Strategy::Copy, Ordering::Randomized, 7).run(&l, &data, &folds);
-        let par = ParallelTreeCv::new(Ordering::Randomized, 7, 2).run(&l, &data, &folds);
+        let par =
+            ParallelTreeCv::new(Strategy::Copy, Ordering::Randomized, 7, 2).run(&l, &data, &folds);
         assert_eq!(seq.per_fold, par.per_fold);
     }
 
@@ -247,9 +263,35 @@ mod tests {
         let data = SyntheticMixture1d::new(300, 95).generate();
         let l = HistogramDensity::new(-8.0, 8.0, 32);
         let folds = Folds::new(300, 10, 96);
-        let par = ParallelTreeCv::new(Ordering::Fixed, 0, 0).run(&l, &data, &folds);
+        let par =
+            ParallelTreeCv::new(Strategy::Copy, Ordering::Fixed, 0, 0).run(&l, &data, &folds);
         let seq = TreeCv::default().run(&l, &data, &folds);
         assert_eq!(par.per_fold, seq.per_fold);
+    }
+
+    #[test]
+    fn save_revert_honored_by_facade_and_baseline() {
+        // Exact-revert learner: both parallel engines must reproduce the
+        // sequential SaveRevert engine bit-for-bit — and actually run
+        // save/revert (restores > 0, copies strictly below k − 1).
+        let data = SyntheticMixture1d::new(520, 85).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(520, 20, 84);
+        let seq = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 2).run(&l, &data, &folds);
+        let par = ParallelTreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 2, 2)
+            .run(&l, &data, &folds);
+        let sco = ScopedForkTreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 2, 2)
+            .run(&l, &data, &folds);
+        assert_eq!(seq.per_fold, par.per_fold);
+        assert_eq!(seq.per_fold, sco.per_fold);
+        for res in [&par, &sco] {
+            assert!(res.ops.model_restores > 0);
+            assert!(res.ops.model_copies < 19, "copies {}", res.ops.model_copies);
+        }
+        // The scoped baseline forks 2^2 − 1 = 3 interior nodes (one copy
+        // each); the remaining 16 interior nodes save/revert (2 each).
+        assert_eq!(sco.ops.model_copies, 3);
+        assert_eq!(sco.ops.model_restores, 2 * 16);
     }
 
     #[test]
@@ -258,11 +300,12 @@ mod tests {
         let l = HistogramDensity::new(-8.0, 8.0, 32);
         let folds = Folds::new(512, 32, 98);
         let seq = TreeCv::default().run(&l, &data, &folds);
-        let par = ParallelTreeCv::new(Ordering::Fixed, 0, 4).run(&l, &data, &folds);
+        let par =
+            ParallelTreeCv::new(Strategy::Copy, Ordering::Fixed, 0, 4).run(&l, &data, &folds);
         assert_eq!(seq.ops.points_updated, par.ops.points_updated);
         assert_eq!(seq.ops.evals, par.ops.evals);
         // Copies: the paper notes parallel CV stores O(k) models; every
-        // interior node still copies exactly once here.
+        // interior node still copies exactly once under Copy.
         assert_eq!(par.ops.model_copies, 31);
     }
 
@@ -271,8 +314,10 @@ mod tests {
         let data = SyntheticCovertype::new(1_100, 89).generate();
         let l = Pegasos::new(54, 1e-3);
         let folds = Folds::new(1_100, 11, 90);
-        let scoped = ScopedForkTreeCv::new(Ordering::Fixed, 4, 2).run(&l, &data, &folds);
-        let pooled = ParallelTreeCv::new(Ordering::Fixed, 4, 2).run(&l, &data, &folds);
+        let scoped =
+            ScopedForkTreeCv::new(Strategy::Copy, Ordering::Fixed, 4, 2).run(&l, &data, &folds);
+        let pooled =
+            ParallelTreeCv::new(Strategy::Copy, Ordering::Fixed, 4, 2).run(&l, &data, &folds);
         assert_eq!(scoped.per_fold, pooled.per_fold);
         assert_eq!(scoped.ops.points_updated, pooled.ops.points_updated);
         assert_eq!(scoped.ops.evals, pooled.ops.evals);

@@ -13,6 +13,8 @@ use super::{CvEngine, CvResult, Strategy};
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, RunningStats};
+use crate::Result;
+use anyhow::bail;
 use std::time::Duration;
 
 /// Which engine a repetition run uses. `ParallelTreeCv` executes on the
@@ -59,15 +61,28 @@ pub struct RepetitionResult {
 /// called with the same spec see the *same* fold assignments, isolating
 /// the engine as the only difference (this mirrors the paper comparing
 /// columns of Table 2 on common partitionings).
+///
+/// `spec.strategy` is honored by every TreeCV-family engine — including
+/// `EngineKind::ParallelTreeCv`, which forwards it to the pooled executor.
+/// An engine that cannot honor a requested strategy is a hard error, never
+/// a silent downgrade: `EngineKind::Standard` trains each fold's model
+/// from scratch and has no update to rewind, so it rejects SaveRevert.
 pub fn run_repetitions<L>(
     learner: &L,
     data: &Dataset,
     spec: &RepetitionSpec,
-) -> RepetitionResult
+) -> Result<RepetitionResult>
 where
     L: IncrementalLearner + Sync,
     L::Model: Send,
 {
+    if spec.engine == EngineKind::Standard && spec.strategy == Strategy::SaveRevert {
+        bail!(
+            "engine `standard` cannot honor the save/revert strategy (it retrains every fold \
+             from scratch and never rewinds an update); refusing to silently run Copy instead — \
+             use --engine treecv or parallel_treecv"
+        );
+    }
     let mut stats = RunningStats::default();
     let mut total_wall = Duration::ZERO;
     let mut last_ops = OpCounts::default();
@@ -83,23 +98,25 @@ where
             EngineKind::Standard => {
                 StandardCv::new(spec.ordering, rep_seed ^ 0xA5A5).run(learner, data, &folds)
             }
-            EngineKind::ParallelTreeCv => {
-                TreeCvExecutor::with_available_parallelism(spec.ordering, rep_seed ^ 0xA5A5)
-                    .run(learner, data, &folds)
-            }
+            EngineKind::ParallelTreeCv => TreeCvExecutor::with_available_parallelism(
+                spec.strategy,
+                spec.ordering,
+                rep_seed ^ 0xA5A5,
+            )
+            .run(learner, data, &folds),
         };
         stats.push(res.estimate);
         total_wall += res.wall;
         last_ops = res.ops;
     }
-    RepetitionResult {
+    Ok(RepetitionResult {
         spec: spec.clone(),
         mean: stats.mean(),
         std: stats.std(),
         total_wall,
         mean_wall_secs: total_wall.as_secs_f64() / spec.repetitions.max(1) as f64,
         ops: last_ops,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -119,14 +136,18 @@ mod tests {
         }
     }
 
+    fn spec_with_strategy(engine: EngineKind, strategy: Strategy, k: usize) -> RepetitionSpec {
+        RepetitionSpec { strategy, ..spec(engine, k, 5) }
+    }
+
     #[test]
     fn tree_and_standard_agree_exactly_per_partitioning() {
         // Same seeds → same fold assignments → identical estimates for an
         // order-insensitive learner, hence identical means AND stds.
         let data = SyntheticMixture1d::new(300, 121).generate();
         let l = HistogramDensity::new(-8.0, 8.0, 32);
-        let a = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 10, 20));
-        let b = run_repetitions(&l, &data, &spec(EngineKind::Standard, 10, 20));
+        let a = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 10, 20)).unwrap();
+        let b = run_repetitions(&l, &data, &spec(EngineKind::Standard, 10, 20)).unwrap();
         assert_eq!(a.mean, b.mean);
         assert_eq!(a.std, b.std);
     }
@@ -137,8 +158,8 @@ mod tests {
         // across-partitioning variance (the Table 2 trend for TreeCV).
         let data = SyntheticMixture1d::new(400, 122).generate();
         let l = HistogramDensity::new(-8.0, 8.0, 32);
-        let lo = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 2, 40));
-        let hi = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 40, 40));
+        let lo = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 2, 40)).unwrap();
+        let hi = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 40, 40)).unwrap();
         assert!(
             hi.std < lo.std,
             "std(k=40) {} !< std(k=2) {}",
@@ -155,18 +176,63 @@ mod tests {
         // an order-sensitive learner.
         let data = crate::data::synth::SyntheticCovertype::new(600, 124).generate();
         let l = crate::learner::pegasos::Pegasos::new(54, 1e-3);
-        let a = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 8, 5));
-        let b = run_repetitions(&l, &data, &spec(EngineKind::ParallelTreeCv, 8, 5));
+        let a = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 8, 5)).unwrap();
+        let b = run_repetitions(&l, &data, &spec(EngineKind::ParallelTreeCv, 8, 5)).unwrap();
         assert_eq!(a.mean, b.mean);
         assert_eq!(a.std, b.std);
         assert_eq!(a.ops.points_updated, b.ops.points_updated);
     }
 
     #[test]
+    fn parallel_engine_kind_honors_save_revert() {
+        // SaveRevert through EngineKind::ParallelTreeCv must match the
+        // sequential SaveRevert engine (exact-revert learner) and keep the
+        // §4.1 interior-node accounting: every interior node is either one
+        // fork snapshot or two restores, never both.
+        let data = SyntheticMixture1d::new(320, 125).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let k = 32usize;
+        let a = run_repetitions(
+            &l,
+            &data,
+            &spec_with_strategy(EngineKind::TreeCv, Strategy::SaveRevert, k),
+        )
+        .unwrap();
+        let b = run_repetitions(
+            &l,
+            &data,
+            &spec_with_strategy(EngineKind::ParallelTreeCv, Strategy::SaveRevert, k),
+        )
+        .unwrap();
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.std, b.std);
+        assert_eq!(
+            2 * b.ops.model_copies + b.ops.model_restores,
+            2 * (k as u64 - 1),
+            "copies {} / restores {}",
+            b.ops.model_copies,
+            b.ops.model_restores
+        );
+    }
+
+    #[test]
+    fn standard_with_save_revert_is_a_hard_error() {
+        let data = SyntheticMixture1d::new(100, 126).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let err = run_repetitions(
+            &l,
+            &data,
+            &spec_with_strategy(EngineKind::Standard, Strategy::SaveRevert, 5),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("save/revert"), "{err}");
+    }
+
+    #[test]
     fn repetitions_vary_partitionings() {
         let data = SyntheticMixture1d::new(200, 123).generate();
         let l = HistogramDensity::new(-8.0, 8.0, 32);
-        let res = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 5, 10));
+        let res = run_repetitions(&l, &data, &spec(EngineKind::TreeCv, 5, 10)).unwrap();
         // With varying partitions the estimator std must be nonzero.
         assert!(res.std > 0.0);
         assert!(res.mean.is_finite());

@@ -27,6 +27,117 @@ use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
 
+/// Run the TreeCV recursion (Algorithm 1) over the subtree rooted at
+/// `(s, e)`, sequentially, with the given model-preservation strategy.
+///
+/// This is *the* sequential recursion: [`TreeCv`] runs it over the whole
+/// tree, the pooled executor ([`super::executor::TreeCvExecutor`]) runs it
+/// inline on a worker for every subtree below its snapshot cutoff, and
+/// [`super::parallel::ScopedForkTreeCv`] runs it as its sequential tail —
+/// one implementation instead of three hand-synchronized copies.
+///
+/// `model` must be trained on every chunk outside `s..=e`; fold `i`'s score
+/// is written to `per_fold[i - base]` (callers hand a slice covering
+/// exactly their subtree by passing `base = s`, or the whole run with
+/// `base = 0`). Under [`Strategy::SaveRevert`] the recursion also reverts
+/// the *second* update before returning, so every call leaves `model`
+/// exactly as it found it — that invariant is what makes the recursion
+/// compose, and what lets the executor recycle the buffer afterwards.
+///
+/// `scratch` is a free-list of model buffers for Copy-strategy snapshots:
+/// each interior node pops a buffer (`clone_from` reuses its storage) and
+/// pushes the spent one back at its restore, so steady-state allocation is
+/// the recursion depth, not one fresh model per node. Callers pass an
+/// empty `Vec` (or a longer-lived one to recycle across calls, as the
+/// executor's workers do); SaveRevert never touches it.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_subtree<L: IncrementalLearner>(
+    learner: &L,
+    data: &Dataset,
+    folds: &Folds,
+    strategy: Strategy,
+    ordering: Ordering,
+    seed: u64,
+    model: &mut L::Model,
+    s: usize,
+    e: usize,
+    base: usize,
+    per_fold: &mut [f64],
+    ops: &mut OpCounts,
+    scratch: &mut Vec<L::Model>,
+) {
+    if s == e {
+        let chunk = folds.chunk(s);
+        per_fold[s - base] = learner.evaluate(model, data, chunk);
+        ops.evals += 1;
+        ops.points_evaluated += chunk.len() as u64;
+        return;
+    }
+    let m = (s + e) / 2;
+    // Unique tags for this node's two update phases (u32 ranges), shared
+    // with the parallel engines via `folds::node_tags`.
+    let (tag_right, tag_left) = node_tags(s, e);
+
+    match strategy {
+        Strategy::Copy => {
+            let saved = match scratch.pop() {
+                Some(mut buf) => {
+                    buf.clone_from(model);
+                    buf
+                }
+                None => model.clone(),
+            };
+            ops.model_copies += 1;
+            ops.bytes_copied += learner.model_bytes(&saved) as u64;
+
+            let right = gather_ordered(folds, m + 1, e, seed, ordering, tag_right, ops);
+            learner.update(model, data, &right);
+            ops.update_calls += 1;
+            ops.points_updated += right.len() as u64;
+            run_subtree(
+                learner, data, folds, strategy, ordering, seed, model, s, m, base, per_fold, ops,
+                scratch,
+            );
+
+            // Restore the snapshot and recycle the spent buffer for a
+            // descendant's next snapshot.
+            let spent = std::mem::replace(model, saved);
+            scratch.push(spent);
+            let left = gather_ordered(folds, s, m, seed, ordering, tag_left, ops);
+            learner.update(model, data, &left);
+            ops.update_calls += 1;
+            ops.points_updated += left.len() as u64;
+            run_subtree(
+                learner, data, folds, strategy, ordering, seed, model, m + 1, e, base, per_fold,
+                ops, scratch,
+            );
+        }
+        Strategy::SaveRevert => {
+            let right = gather_ordered(folds, m + 1, e, seed, ordering, tag_right, ops);
+            let undo = learner.update_logged(model, data, &right);
+            ops.update_calls += 1;
+            ops.points_updated += right.len() as u64;
+            run_subtree(
+                learner, data, folds, strategy, ordering, seed, model, s, m, base, per_fold, ops,
+                scratch,
+            );
+            learner.revert(model, data, undo);
+            ops.model_restores += 1;
+
+            let left = gather_ordered(folds, s, m, seed, ordering, tag_left, ops);
+            let undo = learner.update_logged(model, data, &left);
+            ops.update_calls += 1;
+            ops.points_updated += left.len() as u64;
+            run_subtree(
+                learner, data, folds, strategy, ordering, seed, model, m + 1, e, base, per_fold,
+                ops, scratch,
+            );
+            learner.revert(model, data, undo);
+            ops.model_restores += 1;
+        }
+    }
+}
+
 /// The TreeCV engine.
 #[derive(Debug, Clone)]
 pub struct TreeCv {
@@ -48,84 +159,6 @@ impl TreeCv {
     pub fn new(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
         Self { strategy, ordering, seed }
     }
-
-    /// Gather the points of chunks `lo..=hi` in the engine's feeding order.
-    ///
-    /// The permutation stream is derived from `(seed, node, side)` rather
-    /// than drawn from one sequential stream, so the sequential and
-    /// parallel engines produce *identical* estimates for the same seed.
-    fn gather(
-        &self,
-        folds: &Folds,
-        lo: usize,
-        hi: usize,
-        node_tag: u64,
-        ops: &mut OpCounts,
-    ) -> Vec<u32> {
-        gather_ordered(folds, lo, hi, self.seed, self.ordering, node_tag, ops)
-    }
-
-    fn recurse<L: IncrementalLearner>(
-        &self,
-        learner: &L,
-        data: &Dataset,
-        folds: &Folds,
-        model: &mut L::Model,
-        s: usize,
-        e: usize,
-        per_fold: &mut [f64],
-        ops: &mut OpCounts,
-    ) {
-        if s == e {
-            let chunk = folds.chunk(s);
-            per_fold[s] = learner.evaluate(model, data, chunk);
-            ops.evals += 1;
-            ops.points_evaluated += chunk.len() as u64;
-            return;
-        }
-        let m = (s + e) / 2;
-        // Unique tags for this node's two update phases (u32 ranges),
-        // shared with the parallel engines via `folds::node_tags`.
-        let (tag_right, tag_left) = node_tags(s, e);
-
-        match self.strategy {
-            Strategy::Copy => {
-                let saved = model.clone();
-                ops.model_copies += 1;
-                ops.bytes_copied += learner.model_bytes(&saved) as u64;
-
-                let right = self.gather(folds, m + 1, e, tag_right, ops);
-                learner.update(model, data, &right);
-                ops.update_calls += 1;
-                ops.points_updated += right.len() as u64;
-                self.recurse(learner, data, folds, model, s, m, per_fold, ops);
-
-                *model = saved;
-                let left = self.gather(folds, s, m, tag_left, ops);
-                learner.update(model, data, &left);
-                ops.update_calls += 1;
-                ops.points_updated += left.len() as u64;
-                self.recurse(learner, data, folds, model, m + 1, e, per_fold, ops);
-            }
-            Strategy::SaveRevert => {
-                let right = self.gather(folds, m + 1, e, tag_right, ops);
-                let undo = learner.update_logged(model, data, &right);
-                ops.update_calls += 1;
-                ops.points_updated += right.len() as u64;
-                self.recurse(learner, data, folds, model, s, m, per_fold, ops);
-                learner.revert(model, data, undo);
-                ops.model_restores += 1;
-
-                let left = self.gather(folds, s, m, tag_left, ops);
-                let undo = learner.update_logged(model, data, &left);
-                ops.update_calls += 1;
-                ops.points_updated += left.len() as u64;
-                self.recurse(learner, data, folds, model, m + 1, e, per_fold, ops);
-                learner.revert(model, data, undo);
-                ops.model_restores += 1;
-            }
-        }
-    }
 }
 
 impl super::CvEngine for TreeCv {
@@ -139,7 +172,22 @@ impl super::CvEngine for TreeCv {
         let mut ops = OpCounts::default();
         let mut per_fold = vec![0.0; k];
         let mut model = learner.init();
-        self.recurse(learner, data, folds, &mut model, 0, k - 1, &mut per_fold, &mut ops);
+        let mut scratch = Vec::new();
+        run_subtree(
+            learner,
+            data,
+            folds,
+            self.strategy,
+            self.ordering,
+            self.seed,
+            &mut model,
+            0,
+            k - 1,
+            0,
+            &mut per_fold,
+            &mut ops,
+            &mut scratch,
+        );
         CvResult::from_folds(per_fold, ops, timer.elapsed())
     }
 }

@@ -25,12 +25,26 @@ pub struct HistogramDensity {
 }
 
 /// Integer sufficient statistics.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub struct HistModel {
     pub counts: Vec<u64>,
     /// Points outside `[lo, hi)`.
     pub outside: u64,
     pub total: u64,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for HistModel {
+    fn clone(&self) -> Self {
+        Self { counts: self.counts.clone(), outside: self.outside, total: self.total }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.counts.clone_from(&src.counts);
+        self.outside = src.outside;
+        self.total = src.total;
+    }
 }
 
 /// Undo log: the bin each point landed in (`usize::MAX` = outside).

@@ -23,11 +23,25 @@ pub struct OnlineKMeans {
 
 /// K-means model: `k × d` centers (row-major) and per-center counts.
 /// `seeded` counts how many centers have been initialized.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct KMeansModel {
     pub centers: Vec<f32>,
     pub counts: Vec<u64>,
     pub seeded: usize,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for KMeansModel {
+    fn clone(&self) -> Self {
+        Self { centers: self.centers.clone(), counts: self.counts.clone(), seeded: self.seeded }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.centers.clone_from(&src.centers);
+        self.counts.clone_from(&src.counts);
+        self.seeded = src.seeded;
+    }
 }
 
 impl KMeansModel {

@@ -26,9 +26,22 @@ pub struct KnnClassifier {
 
 /// The model is the multiset of training indices (the data itself stays in
 /// the shared [`Dataset`]).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Default, PartialEq, Eq)]
 pub struct KnnModel {
     pub train: Vec<u32>,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the model IS the training set, the
+// worst case for per-node snapshots).
+impl Clone for KnnModel {
+    fn clone(&self) -> Self {
+        Self { train: self.train.clone() }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.train.clone_from(&src.train);
+    }
 }
 
 impl KnnClassifier {

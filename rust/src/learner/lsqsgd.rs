@@ -24,7 +24,7 @@ pub struct LsqSgd {
 }
 
 /// LSQSGD model: current iterate, running average, and step count.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct LsqSgdModel {
     /// Current (projected) iterate.
     pub w: Vec<f32>,
@@ -32,6 +32,20 @@ pub struct LsqSgdModel {
     pub wavg: Vec<f32>,
     /// Number of points consumed.
     pub t: u64,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for LsqSgdModel {
+    fn clone(&self) -> Self {
+        Self { w: self.w.clone(), wavg: self.wavg.clone(), t: self.t }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.w.clone_from(&src.w);
+        self.wavg.clone_from(&src.wavg);
+        self.t = src.t;
+    }
 }
 
 impl LsqSgdModel {

@@ -23,9 +23,21 @@ pub struct MultisetLearner {
 
 /// Model: indices seen, in arrival order (so order effects are detectable
 /// by tests that want them), plus a running count.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Default, PartialEq, Eq)]
 pub struct MultisetModel {
     pub seen: Vec<u32>,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for MultisetModel {
+    fn clone(&self) -> Self {
+        Self { seen: self.seen.clone() }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.seen.clone_from(&src.seen);
+    }
 }
 
 impl MultisetModel {

@@ -24,11 +24,25 @@ pub struct GaussianNb {
 }
 
 /// Per-class sufficient statistics.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct NbClassStats {
     pub count: u64,
     pub sum: Vec<f64>,
     pub sumsq: Vec<f64>,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for NbClassStats {
+    fn clone(&self) -> Self {
+        Self { count: self.count, sum: self.sum.clone(), sumsq: self.sumsq.clone() }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.count = src.count;
+        self.sum.clone_from(&src.sum);
+        self.sumsq.clone_from(&src.sumsq);
+    }
 }
 
 impl NbClassStats {
@@ -62,10 +76,22 @@ impl NbClassStats {
 }
 
 /// NB model: statistics for the positive and negative class.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct NbModel {
     pub pos: NbClassStats,
     pub neg: NbClassStats,
+}
+
+// Delegates to [`NbClassStats`]' storage-reusing `clone_from`.
+impl Clone for NbModel {
+    fn clone(&self) -> Self {
+        Self { pos: self.pos.clone(), neg: self.neg.clone() }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.pos.clone_from(&src.pos);
+        self.neg.clone_from(&src.neg);
+    }
 }
 
 impl GaussianNb {

@@ -29,7 +29,7 @@ pub struct Pegasos {
 }
 
 /// PEGASOS model: `w = scale · v`, plus the global step counter.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct PegasosModel {
     /// Unscaled weights `v`.
     pub v: Vec<f32>,
@@ -37,6 +37,21 @@ pub struct PegasosModel {
     pub scale: f64,
     /// Number of points consumed so far.
     pub t: u64,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage — the
+// derive's fallback reallocates, which would defeat the CV engines'
+// snapshot-buffer recycling.
+impl Clone for PegasosModel {
+    fn clone(&self) -> Self {
+        Self { v: self.v.clone(), scale: self.scale, t: self.t }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.v.clone_from(&src.v);
+        self.scale = src.scale;
+        self.t = src.t;
+    }
 }
 
 impl PegasosModel {

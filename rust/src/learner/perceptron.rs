@@ -26,12 +26,26 @@ pub struct Perceptron {
 }
 
 /// Perceptron model.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct PerceptronModel {
     pub w: Vec<f32>,
     pub bias: f32,
     /// Total mistakes made (monotone; useful for mistake-bound checks).
     pub mistakes: u64,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for PerceptronModel {
+    fn clone(&self) -> Self {
+        Self { w: self.w.clone(), bias: self.bias, mistakes: self.mistakes }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.w.clone_from(&src.w);
+        self.bias = src.bias;
+        self.mistakes = src.mistakes;
+    }
 }
 
 /// Sparse undo log: indices whose mistake-updates must be subtracted back,

@@ -24,11 +24,26 @@ pub struct OnlineRidge {
 }
 
 /// Sufficient statistics; `a` is the dense d×d Gram matrix (row-major).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct RidgeModel {
     pub a: Vec<f64>,
     pub b: Vec<f64>,
     pub n: u64,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; d² Gram matrices are the expensive case
+// the CV engines' snapshot-buffer recycling exists for).
+impl Clone for RidgeModel {
+    fn clone(&self) -> Self {
+        Self { a: self.a.clone(), b: self.b.clone(), n: self.n }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.a.clone_from(&src.a);
+        self.b.clone_from(&src.b);
+        self.n = src.n;
+    }
 }
 
 /// Undo log: indices added (rank-one terms are subtracted back).

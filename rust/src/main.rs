@@ -32,7 +32,11 @@ COMMANDS
              --ks 5,10,100        fold counts (0 = LOOCV)
              --n 20000  --reps 20  --seed 42
              --randomized          randomized feeding order
-             --save-revert         save/revert strategy (default: copy)
+             --save-revert         save/revert strategy (default: copy);
+                                   honored by treecv and parallel_treecv
+                                   (the executor snapshots only at its
+                                   fork frontier); a hard error on
+                                   standard/merge, never silently copy
              --lambda 1e-6  --alpha 0  --data FILE.libsvm
              --config FILE         load a config file (flags override)
              --json                emit JSON

@@ -52,10 +52,23 @@ pub struct XlaPegasos {
 }
 
 /// Host-resident model state (weights round-trip through PJRT per block).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct XlaPegasosModel {
     pub w: Vec<f32>,
     pub t: f32,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for XlaPegasosModel {
+    fn clone(&self) -> Self {
+        Self { w: self.w.clone(), t: self.t }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.w.clone_from(&src.w);
+        self.t = src.t;
+    }
 }
 
 impl XlaPegasos {
@@ -182,11 +195,25 @@ pub struct XlaLsqSgd {
     eval_exe: Arc<Executable>,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct XlaLsqSgdModel {
     pub w: Vec<f32>,
     pub wavg: Vec<f32>,
     pub t: f32,
+}
+
+// Hand-written so `clone_from` reuses the target's heap storage (the
+// derive's fallback reallocates; the CV engines recycle snapshot buffers).
+impl Clone for XlaLsqSgdModel {
+    fn clone(&self) -> Self {
+        Self { w: self.w.clone(), wavg: self.wavg.clone(), t: self.t }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.w.clone_from(&src.w);
+        self.wavg.clone_from(&src.wavg);
+        self.t = src.t;
+    }
 }
 
 impl XlaLsqSgd {

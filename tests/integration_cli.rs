@@ -59,6 +59,43 @@ fn cv_json_output_is_valid_shape() {
 }
 
 #[test]
+fn cv_save_revert_honored_on_parallel_engine() {
+    // `--engine parallel_treecv --save-revert` must run the requested
+    // strategy through the pooled executor (it used to silently run Copy).
+    let text = run_ok(&[
+        "cv",
+        "--task",
+        "density",
+        "--n",
+        "300",
+        "--ks",
+        "6",
+        "--reps",
+        "2",
+        "--engine",
+        "parallel_treecv",
+        "--save-revert",
+    ]);
+    assert!(text.contains("parallel_treecv"));
+    assert_eq!(text.lines().count(), 2); // header + one row
+}
+
+#[test]
+fn cv_save_revert_on_standard_engine_is_an_error() {
+    // Engines that cannot honor SaveRevert must hard-error, not downgrade.
+    let out = repro()
+        .args([
+            "cv", "--task", "density", "--n", "200", "--ks", "4", "--engine", "standard",
+            "--save-revert",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("save/revert"), "stderr: {err}");
+}
+
+#[test]
 fn cv_rejects_bad_flags() {
     let out = repro().args(["cv", "--task", "nope"]).output().unwrap();
     assert!(!out.status.success());

@@ -192,11 +192,13 @@ fn parallel_depths_reproduce_sequential() {
     let folds = Folds::new(n, 13, 11); // non-power-of-two k
     let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 3).run(&l, &data, &folds);
     for depth in [1usize, 2, 4] {
-        let par = ParallelTreeCv::new(Ordering::Fixed, 3, depth).run(&l, &data, &folds);
+        let par =
+            ParallelTreeCv::new(Strategy::Copy, Ordering::Fixed, 3, depth).run(&l, &data, &folds);
         assert_eq!(seq.per_fold, par.per_fold, "depth={depth}");
     }
     for threads in [3usize, 5, 6, 11] {
-        let exe = TreeCvExecutor::new(Ordering::Fixed, 3, threads).run(&l, &data, &folds);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 3, threads)
+            .run(&l, &data, &folds);
         assert_eq!(seq.per_fold, exe.per_fold, "threads={threads}");
     }
 }

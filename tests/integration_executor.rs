@@ -3,18 +3,27 @@
 //! (`cv::parallel::ParallelTreeCv`), the scoped-fork baseline, and the
 //! sequential engine must all compute the *same function* — identical
 //! `per_fold` vectors and identical work counters — across random shapes,
-//! both orderings, and both model-preservation strategies. Seeded trials
-//! stand in for proptest (unavailable offline), mirroring
-//! `tests/integration_cv.rs`.
+//! both orderings, and both model-preservation strategies. For SaveRevert
+//! the executor additionally must keep its model-copy count at the fork
+//! frontier (O(workers), strictly below the k − 1 a Copy run pays), with
+//! `model_restores` carrying the rest. Seeded trials stand in for proptest
+//! (unavailable offline), mirroring `tests/integration_cv.rs`.
 
-use treecv::cv::executor::TreeCvExecutor;
+use treecv::cv::executor::{snapshot_cutoff, TreeCvExecutor};
 use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::parallel::{ParallelTreeCv, ScopedForkTreeCv};
 use treecv::cv::treecv::TreeCv;
 use treecv::cv::{CvEngine, Strategy};
 use treecv::data::synth::{SyntheticCovertype, SyntheticMixture1d};
+use treecv::data::Dataset;
 use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::multiset::MultisetLearner;
 use treecv::learner::pegasos::Pegasos;
+use treecv::learner::perceptron::Perceptron;
+
+/// The worker counts the SaveRevert properties sweep: inline (1), odd (3),
+/// a typical machine (6), and more workers than some trees have depth (16).
+const WORKER_COUNTS: [usize; 4] = [1, 3, 6, 16];
 
 /// Draw a random CV shape: k ∈ [2, 64], n ∈ [k, 400].
 fn random_shape(rng: &mut treecv::rng::Rng) -> (usize, usize) {
@@ -40,9 +49,11 @@ fn prop_executor_matches_sequential_and_parallel() {
         for ordering in [Ordering::Fixed, Ordering::Randomized] {
             let ctx = format!("trial {trial}: n={n} k={k} threads={threads} {ordering:?}");
             let seq = TreeCv::new(Strategy::Copy, ordering, seed).run(&l, &data, &folds);
-            let par = ParallelTreeCv::new(ordering, seed, 3).run(&l, &data, &folds);
-            let sco = ScopedForkTreeCv::new(ordering, seed, 2).run(&l, &data, &folds);
-            let exe = TreeCvExecutor::new(ordering, seed, threads).run(&l, &data, &folds);
+            let par = ParallelTreeCv::new(Strategy::Copy, ordering, seed, 3).run(&l, &data, &folds);
+            let sco =
+                ScopedForkTreeCv::new(Strategy::Copy, ordering, seed, 2).run(&l, &data, &folds);
+            let exe =
+                TreeCvExecutor::new(Strategy::Copy, ordering, seed, threads).run(&l, &data, &folds);
             assert_eq!(seq.per_fold, par.per_fold, "{ctx} (parallel facade)");
             assert_eq!(seq.per_fold, sco.per_fold, "{ctx} (scoped baseline)");
             assert_eq!(seq.per_fold, exe.per_fold, "{ctx} (executor)");
@@ -63,35 +74,167 @@ fn prop_executor_matches_sequential_and_parallel() {
 }
 
 /// Property: for a learner with exact revert (histogram density), the
-/// executor (which always copies at forks) agrees with sequential TreeCV
-/// under *both* strategies — Copy and SaveRevert compute the same leaves.
+/// strategy-aware executor run under each strategy agrees bit-for-bit with
+/// sequential TreeCV under that same strategy, both orderings, random
+/// shapes and pool sizes.
 #[test]
 fn prop_executor_matches_both_strategies() {
     let mut rng = treecv::rng::Rng::new(0xEC6);
     for trial in 0..12 {
         let (n, k) = random_shape(&mut rng);
         let seed = rng.next_u64();
+        let threads = 1 + rng.below(8) as usize;
         let data = SyntheticMixture1d::new(n, seed).generate();
         let folds = Folds::new(n, k, seed ^ 0xF0);
         let l = HistogramDensity::new(-8.0, 8.0, 32);
         for ordering in [Ordering::Fixed, Ordering::Randomized] {
-            let exe = TreeCvExecutor::new(ordering, seed, 4).run(&l, &data, &folds);
             for strategy in [Strategy::Copy, Strategy::SaveRevert] {
                 let seq = TreeCv::new(strategy, ordering, seed).run(&l, &data, &folds);
+                let exe = TreeCvExecutor::new(strategy, ordering, seed, threads)
+                    .run(&l, &data, &folds);
                 assert_eq!(
                     seq.per_fold, exe.per_fold,
-                    "trial {trial}: n={n} k={k} {ordering:?} {strategy:?}"
+                    "trial {trial}: n={n} k={k} threads={threads} {ordering:?} {strategy:?}"
                 );
                 assert_eq!(seq.ops.points_updated, exe.ops.points_updated);
                 assert_eq!(seq.ops.evals, exe.ops.evals);
+                assert_eq!(seq.ops.points_permuted, exe.ops.points_permuted);
             }
         }
     }
 }
 
-/// The executor's copy count is exactly one snapshot per interior node
-/// (k − 1), independent of the worker count — the buffer pool recycles
-/// storage without changing the §4.1 accounting.
+/// SaveRevert equivalence on the *exactly reverting* structural oracle:
+/// executor ≡ sequential TreeCv per fold, bit for bit, across worker
+/// counts, remainder folds (k ∤ n), and LOOCV.
+#[test]
+fn save_revert_multiset_oracle_bit_identical() {
+    for (n, k) in [(96usize, 8usize), (103, 13), (47, 47), (200, 200)] {
+        let data = Dataset::new(vec![0.0; n], vec![0.0; n], 1);
+        let l = MultisetLearner::new(1);
+        let folds = if k == n { Folds::loocv(n) } else { Folds::new(n, k, 5) };
+        let seq = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 2).run(&l, &data, &folds);
+        for threads in WORKER_COUNTS {
+            let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 2, threads)
+                .run(&l, &data, &folds);
+            assert_eq!(seq.per_fold, exe.per_fold, "n={n} k={k} threads={threads}");
+            assert_eq!(seq.ops.points_updated, exe.ops.points_updated, "n={n} k={k}");
+            assert_eq!(seq.ops.evals, exe.ops.evals, "n={n} k={k}");
+        }
+    }
+}
+
+/// SaveRevert equivalence for the perceptron, whose revert is only
+/// ulp-accurate (f32 re-subtraction): `threads = 1` runs the whole tree
+/// inline and must be bit-identical, ulp noise and all; larger pools
+/// snapshot at the fork frontier where the sequential engine reverts, so
+/// per-fold scores agree to the ulp-cascade tolerance the sequential
+/// Copy-vs-SaveRevert comparison already exhibits
+/// (`integration_cv::perceptron_save_revert_close_to_copy`).
+#[test]
+fn save_revert_perceptron_matches_sequential_ulp_tolerant() {
+    let n = 2_000;
+    let data = SyntheticCovertype::new(n, 21).generate();
+    let l = Perceptron::new(54);
+    let folds = Folds::new(n, 16, 22);
+    let seq = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 2).run(&l, &data, &folds);
+    let inline =
+        TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 2, 1).run(&l, &data, &folds);
+    assert_eq!(seq.per_fold, inline.per_fold, "threads=1 must be bit-identical");
+    for threads in [3usize, 6, 16] {
+        let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 2, threads)
+            .run(&l, &data, &folds);
+        for (i, (a, b)) in seq.per_fold.iter().zip(&exe.per_fold).enumerate() {
+            assert!((a - b).abs() < 0.25, "fold {i} threads={threads}: {a} vs {b}");
+        }
+        assert!(
+            (seq.estimate - exe.estimate).abs() < 0.05,
+            "threads={threads}: {} vs {}",
+            seq.estimate,
+            exe.estimate
+        );
+    }
+}
+
+/// The *exact* multi-worker SaveRevert oracle for inexact-revert learners:
+/// an executor with cutoff `c` has the identical model flow to the scoped
+/// baseline with `fork_depth = c` — snapshot at every forked node,
+/// save/revert below, same tags, same update order — so the two must agree
+/// bit for bit even for the perceptron, whose ulp cascade defeats
+/// tolerance-based comparison against the purely sequential engine. Also
+/// pins scheduling determinism: two runs at the same pool size must be
+/// bit-identical.
+#[test]
+fn save_revert_perceptron_executor_equals_scoped_with_cutoff_depth() {
+    let n = 2_000;
+    let data = SyntheticCovertype::new(n, 23).generate();
+    let l = Perceptron::new(54);
+    // k = 64 (tree depth 6) so threads ∈ {2, 3, 6} leave real SaveRevert
+    // subtrees below the fork frontier; threads = 16 is the all-fork edge.
+    let folds = Folds::new(n, 64, 24);
+    for threads in [2usize, 3, 6, 16] {
+        let cutoff = snapshot_cutoff(threads);
+        let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 9, threads);
+        let sco = ScopedForkTreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 9, cutoff);
+        let a = exe.run(&l, &data, &folds);
+        let b = sco.run(&l, &data, &folds);
+        assert_eq!(a.per_fold, b.per_fold, "threads={threads} cutoff={cutoff}");
+        assert_eq!(a.ops.points_updated, b.ops.points_updated, "threads={threads}");
+        assert_eq!(a.ops.model_copies, b.ops.model_copies, "threads={threads}");
+        assert_eq!(a.ops.model_restores, b.ops.model_restores, "threads={threads}");
+        // Determinism: work stealing must never change the computed values.
+        let again = exe.run(&l, &data, &folds);
+        assert_eq!(a.per_fold, again.per_fold, "threads={threads} (rerun)");
+    }
+}
+
+/// The SaveRevert copy bill: `model_copies` stays at the fork frontier —
+/// at most `2^cutoff − 1 = O(workers)` per run and strictly below the
+/// `k − 1` of a Copy run — while `model_restores` carries every remaining
+/// interior node (two per node). LOOCV at n = 200 makes the gap stark:
+/// Copy pays 199 snapshots, SaveRevert at most 63 even at 16 workers.
+#[test]
+fn save_revert_copies_stay_o_workers() {
+    let n = 200;
+    let k = n as u64;
+    let data = Dataset::new(vec![0.0; n], vec![0.0; n], 1);
+    let l = MultisetLearner::new(1);
+    let folds = Folds::loocv(n);
+    for threads in WORKER_COUNTS {
+        let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 0, threads)
+            .run(&l, &data, &folds);
+        let max_forks = (1u64 << snapshot_cutoff(threads)) - 1;
+        assert!(
+            exe.ops.model_copies <= max_forks,
+            "threads={threads}: {} copies exceed the {max_forks} fork nodes",
+            exe.ops.model_copies
+        );
+        assert!(
+            exe.ops.model_copies < k - 1,
+            "threads={threads}: {} copies is not below Copy's k-1 = {}",
+            exe.ops.model_copies,
+            k - 1
+        );
+        assert_eq!(
+            exe.ops.model_restores,
+            2 * (k - 1 - exe.ops.model_copies),
+            "threads={threads}: restores must cover every non-forked interior node"
+        );
+        assert_eq!(exe.ops.evals, k, "threads={threads}");
+
+        // And Copy at the same pool size still pays one snapshot per
+        // interior node — no strategy leaks into the other.
+        let copy = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads)
+            .run(&l, &data, &folds);
+        assert_eq!(copy.ops.model_copies, k - 1, "threads={threads}");
+        assert_eq!(copy.ops.model_restores, 0, "threads={threads}");
+    }
+}
+
+/// The executor's Copy-strategy copy count is exactly one snapshot per
+/// interior node (k − 1), independent of the worker count — the
+/// fork/inline split and buffer pool recycle storage without changing the
+/// §4.1 accounting.
 #[test]
 fn executor_copy_accounting_is_pool_size_independent() {
     let n = 450;
@@ -100,7 +243,8 @@ fn executor_copy_accounting_is_pool_size_independent() {
     let l = HistogramDensity::new(-8.0, 8.0, 32);
     let folds = Folds::new(n, k, 8);
     for threads in [1usize, 2, 5, 8] {
-        let exe = TreeCvExecutor::new(Ordering::Fixed, 0, threads).run(&l, &data, &folds);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads)
+            .run(&l, &data, &folds);
         assert_eq!(exe.ops.model_copies, (k - 1) as u64, "threads={threads}");
         assert_eq!(exe.ops.model_restores, 0, "threads={threads}");
         assert_eq!(exe.ops.evals, k as u64, "threads={threads}");
