@@ -1,0 +1,92 @@
+//! Sweep-vs-sequential-runs: the multi-run scheduling claim. C
+//! hyperparameter configs × r repetitions execute either as ONE pooled
+//! batch (`cv::sweep::run_sweep` → `TreeCvExecutor::run_many`) or as r·C
+//! standalone executor invocations (one pool spawn, one model-pool cold
+//! start, and one join barrier each — exactly what `run_repetitions` used
+//! to do). Results are asserted bit-identical, so any wall-time gap is
+//! pure scheduling overhead.
+//!
+//! Run: `cargo bench --bench sweep` (env `SWEEP_N`, `SWEEP_REPS`).
+
+use treecv::benchkit::Bench;
+use treecv::cv::executor::{pool_spawn_count, TreeCvExecutor};
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::stats::{repetition_engine_seed, repetition_fold_seed};
+use treecv::cv::sweep::{run_sweep, SweepSpec};
+use treecv::cv::Strategy;
+use treecv::data::synth::SyntheticCovertype;
+use treecv::learner::pegasos::Pegasos;
+
+fn main() {
+    let n: usize = std::env::var("SWEEP_N").ok().and_then(|v| v.parse().ok()).unwrap_or(32_768);
+    let reps: usize = std::env::var("SWEEP_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let k = 16;
+    let seed = 9u64;
+    let lambdas = [1e-3, 1e-4, 1e-5, 1e-6];
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    let data = SyntheticCovertype::new(n, 42).generate();
+    let learners: Vec<Pegasos> = lambdas.iter().map(|&l| Pegasos::new(data.d, l)).collect();
+    let spec = SweepSpec {
+        ordering: Ordering::Fixed,
+        strategies: vec![Strategy::Copy],
+        k,
+        repetitions: reps,
+        seed,
+        threads,
+    };
+
+    println!(
+        "== sweep vs sequential runs (pegasos, {} configs x {reps} reps, k = {k}, n = {n}, \
+         {threads} workers) ==",
+        lambdas.len()
+    );
+    let mut bench = Bench::default();
+    let seq = bench.run("sweep/sequential-runs", || {
+        for learner in &learners {
+            for r in 0..reps {
+                let folds = Folds::new(n, k, repetition_fold_seed(seed, r));
+                let engine = TreeCvExecutor::new(
+                    Strategy::Copy,
+                    Ordering::Fixed,
+                    repetition_engine_seed(seed, r),
+                    threads,
+                );
+                std::hint::black_box(engine.run(learner, &data, &folds));
+            }
+        }
+    });
+    let t_seq = seq.median();
+    let pooled = bench.run("sweep/one-pool", || {
+        std::hint::black_box(run_sweep(&learners, &data, &spec).unwrap());
+    });
+    println!("  one-pool speedup over sequential dispatch: {:.2}x", t_seq / pooled.median());
+
+    // The correctness half of the claim: bit-identical results, one pool.
+    let before = pool_spawn_count();
+    let out = run_sweep(&learners, &data, &spec).unwrap();
+    let sweep_spawns = pool_spawn_count() - before;
+    for (c, cell) in out.cells.iter().enumerate() {
+        for (r, run) in cell.runs.iter().enumerate() {
+            let folds = Folds::new(n, k, repetition_fold_seed(seed, r));
+            let alone = TreeCvExecutor::new(
+                Strategy::Copy,
+                Ordering::Fixed,
+                repetition_engine_seed(seed, r),
+                threads,
+            )
+            .run(&learners[c], &data, &folds);
+            assert_eq!(
+                run.per_fold, alone.per_fold,
+                "sweep must be bit-identical to standalone (config {c}, rep {r})"
+            );
+        }
+    }
+    println!(
+        "  pool spawns: sweep {} vs sequential {}",
+        sweep_spawns,
+        lambdas.len() * reps
+    );
+
+    println!("\nCSV summary:\n{}", bench.csv());
+}

@@ -1,0 +1,23 @@
+//! Build probe for the PJRT runtime gate.
+//!
+//! The real PJRT client (`runtime::PjrtRuntime`) needs the external `xla`
+//! crate, which offline builds don't have — so enabling the `xla` cargo
+//! feature alone must still compile (CI's feature-matrix job builds
+//! `--features xla` as a stub). The real implementation is therefore
+//! gated on `cfg(treecv_pjrt)`, emitted here only when BOTH the feature
+//! is on AND `TREECV_XLA_RUNTIME=1` is set — the same environment that
+//! adds the `xla = "..."` dependency to Cargo.toml.
+
+fn main() {
+    // Declare the custom cfg so check-cfg-aware toolchains don't warn;
+    // older cargos ignore unknown instructions.
+    println!("cargo:rustc-check-cfg=cfg(treecv_pjrt)");
+    println!("cargo:rerun-if-env-changed=TREECV_XLA_RUNTIME");
+    let feature_on = std::env::var_os("CARGO_FEATURE_XLA").is_some();
+    // Compare the value, not mere presence: TREECV_XLA_RUNTIME=0 must
+    // keep the stub (the documented opt-in is exactly `=1`).
+    let runtime_present = std::env::var("TREECV_XLA_RUNTIME").is_ok_and(|v| v == "1");
+    if feature_on && runtime_present {
+        println!("cargo:rustc-cfg=treecv_pjrt");
+    }
+}

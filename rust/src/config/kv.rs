@@ -47,6 +47,14 @@ impl Value {
             other => bail!("expected array, got {other:?}"),
         }
     }
+
+    /// Flat numeric array (ints are widened) — the `sweep_values` grid.
+    pub fn as_f64_array(&self) -> Result<Vec<f64>> {
+        match self {
+            Value::Array(items) => items.iter().map(|v| v.as_f64()).collect(),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
 }
 
 /// A parsed file: ordered `(key, value)` pairs.
@@ -230,5 +238,13 @@ mod tests {
         assert!(Value::Str("x".into()).as_f64().is_err());
         assert!(Value::Int(3).as_f64().is_ok());
         assert!(Value::Int(3).as_str().is_err());
+    }
+
+    #[test]
+    fn f64_arrays_widen_ints() {
+        let t = parse("vals = [1e-4, 0.5, 2]\nbad = [1, \"x\"]\n").unwrap();
+        assert_eq!(t.get("vals").unwrap().as_f64_array().unwrap(), vec![1e-4, 0.5, 2.0]);
+        assert!(t.get("bad").unwrap().as_f64_array().is_err());
+        assert!(Value::Int(3).as_f64_array().is_err());
     }
 }

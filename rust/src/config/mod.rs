@@ -169,6 +169,65 @@ impl From<StrategyCfg> for crate::cv::Strategy {
     }
 }
 
+impl From<crate::cv::Strategy> for StrategyCfg {
+    fn from(s: crate::cv::Strategy) -> Self {
+        match s {
+            crate::cv::Strategy::Copy => StrategyCfg::Copy,
+            crate::cv::Strategy::SaveRevert => StrategyCfg::SaveRevert,
+        }
+    }
+}
+
+/// A hyperparameter sweep axis, written `name=v1,v2,...` (the `--sweep`
+/// grid syntax; config files may spell it `sweep = "lambda=0.1,0.01"` or
+/// as the `sweep_param` + `sweep_values` pair). Which names a task
+/// accepts is decided by `coordinator::run_sweep` (pegasos/ridge:
+/// `lambda`; lsqsgd: `alpha`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepGrid {
+    pub param: String,
+    pub values: Vec<f64>,
+}
+
+impl SweepGrid {
+    /// Parse the `name=v1,v2,...` grid syntax.
+    pub fn parse(s: &str) -> Result<SweepGrid> {
+        let Some((param, values)) = s.split_once('=') else {
+            bail!("sweep grid `{s}`: expected `name=v1,v2,...` (e.g. lambda=0.1,0.01,0.001)");
+        };
+        let values = values
+            .split(',')
+            .map(|p| {
+                let p = p.trim();
+                p.parse::<f64>().map_err(|e| anyhow::anyhow!("sweep value `{p}`: {e}"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        Self::from_values(param.trim(), values)
+    }
+
+    /// Build a validated grid from parts (the `sweep_param`/`sweep_values`
+    /// config-file form lands here).
+    pub fn from_values(param: &str, values: Vec<f64>) -> Result<SweepGrid> {
+        if param.is_empty() || !param.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            bail!("sweep grid: bad parameter name `{param}`");
+        }
+        if values.is_empty() {
+            bail!("sweep grid `{param}`: needs at least one value");
+        }
+        if let Some(v) = values.iter().find(|v| !v.is_finite()) {
+            bail!("sweep grid `{param}`: non-finite value {v}");
+        }
+        Ok(SweepGrid { param: param.to_string(), values })
+    }
+
+    /// Render back to the `name=v1,v2,...` syntax (round-trips through
+    /// [`Self::parse`]).
+    pub fn to_grid_string(&self) -> String {
+        let vals: Vec<String> = self.values.iter().map(|v| format!("{v:e}")).collect();
+        format!("{}={}", self.param, vals.join(","))
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -192,6 +251,10 @@ pub struct ExperimentConfig {
     pub data_path: Option<String>,
     /// Output JSON path (None = stdout only).
     pub out: Option<String>,
+    /// Hyperparameter grid for the `sweep` subcommand (None elsewhere).
+    pub sweep: Option<SweepGrid>,
+    /// Worker-pool size for pooled engines; `0` = machine parallelism.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -209,6 +272,8 @@ impl Default for ExperimentConfig {
             alpha: 0.0,
             data_path: None,
             out: None,
+            sweep: None,
+            threads: 0,
         }
     }
 }
@@ -225,6 +290,9 @@ impl ExperimentConfig {
     pub fn parse(text: &str) -> Result<Self> {
         let table = kv::parse(text)?;
         let mut cfg = Self::default();
+        let mut sweep_str: Option<SweepGrid> = None;
+        let mut sweep_param: Option<String> = None;
+        let mut sweep_values: Option<Vec<f64>> = None;
         for (key, value) in &table.entries {
             match key.as_str() {
                 "task" => cfg.task = Task::parse(value.as_str()?)?,
@@ -237,11 +305,25 @@ impl ExperimentConfig {
                 "seed" => cfg.seed = value.as_usize()? as u64,
                 "lambda" => cfg.lambda = value.as_f64()?,
                 "alpha" => cfg.alpha = value.as_f64()?,
+                "threads" => cfg.threads = value.as_usize()?,
+                "sweep" => sweep_str = Some(SweepGrid::parse(value.as_str()?)?),
+                "sweep_param" => sweep_param = Some(value.as_str()?.to_string()),
+                "sweep_values" => sweep_values = Some(value.as_f64_array()?),
                 "data_path" => cfg.data_path = Some(value.as_str()?.to_string()),
                 "out" => cfg.out = Some(value.as_str()?.to_string()),
                 other => bail!("unknown config key `{other}`"),
             }
         }
+        cfg.sweep = match (sweep_str, sweep_param, sweep_values) {
+            (Some(grid), None, None) => Some(grid),
+            (None, Some(param), Some(values)) => Some(SweepGrid::from_values(&param, values)?),
+            (None, None, None) => None,
+            (Some(_), _, _) => {
+                bail!("config: give either `sweep` or `sweep_param`+`sweep_values`, not both")
+            }
+            (None, Some(_), None) => bail!("config: `sweep_param` needs `sweep_values`"),
+            (None, None, Some(_)) => bail!("config: `sweep_values` needs `sweep_param`"),
+        };
         Ok(cfg)
     }
 
@@ -261,6 +343,12 @@ impl ExperimentConfig {
         s.push_str(&format!("seed = {}\n", self.seed));
         s.push_str(&format!("lambda = {:e}\n", self.lambda));
         s.push_str(&format!("alpha = {}\n", self.alpha));
+        if self.threads != 0 {
+            s.push_str(&format!("threads = {}\n", self.threads));
+        }
+        if let Some(g) = &self.sweep {
+            s.push_str(&format!("sweep = \"{}\"\n", g.to_grid_string()));
+        }
         if let Some(p) = &self.data_path {
             s.push_str(&format!("data_path = \"{p}\"\n"));
         }
@@ -316,6 +404,48 @@ mod tests {
     fn rejects_bad_task_and_key() {
         assert!(ExperimentConfig::parse("task = \"nope\"\n").is_err());
         assert!(ExperimentConfig::parse("wat = 3\n").is_err());
+    }
+
+    #[test]
+    fn sweep_grid_parses_and_roundtrips() {
+        let g = SweepGrid::parse("lambda=0.1, 0.01,1e-3").unwrap();
+        assert_eq!(g.param, "lambda");
+        assert_eq!(g.values, vec![0.1, 0.01, 1e-3]);
+        let back = SweepGrid::parse(&g.to_grid_string()).unwrap();
+        assert_eq!(back, g);
+        assert_eq!(SweepGrid::parse("alpha=2").unwrap().values, vec![2.0]);
+    }
+
+    #[test]
+    fn sweep_grid_rejects_malformed() {
+        for bad in ["lambda", "lambda=", "lambda=a,b", "=0.1", "la mbda=0.1", "lambda=0.1,,"] {
+            assert!(SweepGrid::parse(bad).is_err(), "{bad}");
+        }
+        assert!(SweepGrid::from_values("lambda", vec![]).is_err());
+        assert!(SweepGrid::from_values("lambda", vec![f64::NAN]).is_err());
+        assert!(SweepGrid::from_values("lambda", vec![f64::INFINITY]).is_err());
+    }
+
+    #[test]
+    fn sweep_config_keys_both_forms() {
+        let a = ExperimentConfig::parse("sweep = \"lambda=0.1,0.01\"\nthreads = 3\n").unwrap();
+        let b =
+            ExperimentConfig::parse("sweep_param = \"lambda\"\nsweep_values = [0.1, 0.01]\n")
+                .unwrap();
+        assert_eq!(a.sweep, b.sweep);
+        assert_eq!(a.threads, 3);
+        assert_eq!(b.threads, 0);
+        // Round-trip through to_text keeps the grid.
+        let back = ExperimentConfig::parse(&a.to_text()).unwrap();
+        assert_eq!(back.sweep, a.sweep);
+        assert_eq!(back.threads, 3);
+        // Mixing both forms, or half of the pair, is an error.
+        assert!(ExperimentConfig::parse(
+            "sweep = \"lambda=0.1\"\nsweep_param = \"lambda\"\nsweep_values = [0.1]\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse("sweep_param = \"lambda\"\n").is_err());
+        assert!(ExperimentConfig::parse("sweep_values = [0.1]\n").is_err());
     }
 
     #[test]

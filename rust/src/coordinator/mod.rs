@@ -8,10 +8,11 @@
 
 pub mod paper;
 
-use crate::config::{Engine, ExperimentConfig, Task};
+use crate::config::{Engine, ExperimentConfig, StrategyCfg, Task};
 use crate::cv::folds::{Folds, Ordering};
 use crate::cv::mergecv::MergeCv;
 use crate::cv::stats::{run_repetitions, EngineKind, RepetitionResult, RepetitionSpec};
+use crate::cv::sweep::{self, SweepOutcome, SweepSpec};
 use crate::cv::Strategy;
 use crate::data::synth::{
     SyntheticBlobs, SyntheticCovertype, SyntheticMixture1d, SyntheticYearMsd,
@@ -111,6 +112,7 @@ where
             k,
             repetitions: cfg.repetitions,
             seed: cfg.seed,
+            threads: cfg.threads,
         };
         let rep = run_repetitions(learner, data, &spec)?;
         out.push(CellReport::from_rep(cfg.task, cfg.engine, data.n, &rep));
@@ -187,6 +189,168 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Vec<CellReport>> {
     }
 }
 
+/// One ranked row of a sweep: a (hyperparameter value, strategy) cell.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Swept parameter name (`lambda` / `alpha`).
+    pub param: String,
+    pub value: f64,
+    pub strategy: StrategyCfg,
+    /// Mean CV estimate over the repetitions (the ranking key).
+    pub mean: f64,
+    /// Sample std over the repetitions.
+    pub std: f64,
+    /// Counters from the cell's last repetition.
+    pub ops: OpCounts,
+}
+
+/// Result of `repro sweep`: one row per grid point, ranked by mean loss
+/// (best first), plus the pooled-execution accounting.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub task: Task,
+    pub n: usize,
+    pub k: usize,
+    pub repetitions: usize,
+    /// Worker-pool size the sweep actually used.
+    pub threads: usize,
+    /// Executor pools spawned by the whole sweep — 1 for a multi-worker
+    /// pool, 0 for `--threads 1` (inline), never one per run.
+    pub pool_spawns: u64,
+    /// Wall-clock of the whole pooled batch (runs overlap, so there is no
+    /// meaningful per-row wall).
+    pub total_wall_secs: f64,
+    /// Rows ranked by mean loss ascending.
+    pub points: Vec<SweepPoint>,
+}
+
+/// The hyperparameter a task's sweep may vary, or None if the task has no
+/// sweepable knob.
+fn sweepable_param(task: Task) -> Option<&'static str> {
+    match task {
+        Task::Pegasos | Task::Ridge => Some("lambda"),
+        Task::Lsqsgd => Some("alpha"),
+        Task::Kmeans | Task::Density | Task::NaiveBayes => None,
+    }
+}
+
+/// Run the tuning workload described by `cfg`: every (grid value ×
+/// repetition) TreeCV run through ONE pooled executor
+/// ([`crate::cv::sweep::run_sweep`]), returning rows ranked by mean loss.
+/// Fold assignments are shared across grid values, so the hyperparameter
+/// is the only difference between rows.
+pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
+    let Some(grid) = &cfg.sweep else {
+        bail!("sweep needs a grid — pass --sweep name=v1,v2,... (e.g. lambda=0.1,0.01,0.001)");
+    };
+    if cfg.ks.len() != 1 {
+        bail!("sweep uses a single fold count; got ks = {:?}", cfg.ks);
+    }
+    match sweepable_param(cfg.task) {
+        None => bail!(
+            "task {} has no sweepable hyperparameter (pegasos/ridge sweep lambda=..., \
+             lsqsgd sweeps alpha=...)",
+            cfg.task.name()
+        ),
+        Some(want) if want != grid.param => bail!(
+            "task {} sweeps `{want}`, not `{}`",
+            cfg.task.name(),
+            grid.param
+        ),
+        Some(_) => {}
+    }
+    if let Some(v) = grid.values.iter().find(|&&v| v <= 0.0) {
+        bail!("sweep {}: values must be > 0, got {v}", grid.param);
+    }
+
+    let data = build_dataset(cfg)?;
+    let k = if cfg.ks[0] == 0 { data.n } else { cfg.ks[0] };
+    if k > data.n {
+        bail!("k = {k} exceeds n = {}", data.n);
+    }
+    let d = data.d;
+    let spec = SweepSpec {
+        ordering: Ordering::from(cfg.ordering),
+        strategies: vec![Strategy::from(cfg.strategy)],
+        k,
+        repetitions: cfg.repetitions,
+        seed: cfg.seed,
+        threads: cfg.threads,
+    };
+    let outcome: SweepOutcome = match cfg.task {
+        Task::Pegasos => {
+            let learners: Vec<Pegasos> = grid.values.iter().map(|&v| Pegasos::new(d, v)).collect();
+            sweep::run_sweep(&learners, &data, &spec)?
+        }
+        Task::Ridge => {
+            let learners: Vec<OnlineRidge> =
+                grid.values.iter().map(|&v| OnlineRidge::new(d, v)).collect();
+            sweep::run_sweep(&learners, &data, &spec)?
+        }
+        Task::Lsqsgd => {
+            let learners: Vec<LsqSgd> = grid.values.iter().map(|&v| LsqSgd::new(d, v)).collect();
+            sweep::run_sweep(&learners, &data, &spec)?
+        }
+        _ => unreachable!("rejected by sweepable_param above"),
+    };
+
+    let mut points: Vec<SweepPoint> = outcome
+        .cells
+        .iter()
+        .map(|c| SweepPoint {
+            param: grid.param.clone(),
+            value: grid.values[c.config],
+            strategy: StrategyCfg::from(c.strategy),
+            mean: c.mean,
+            std: c.std,
+            ops: c.ops.clone(),
+        })
+        .collect();
+    points.sort_by(|a, b| a.mean.total_cmp(&b.mean).then(a.value.total_cmp(&b.value)));
+    Ok(SweepReport {
+        task: cfg.task,
+        n: data.n,
+        k,
+        repetitions: cfg.repetitions,
+        threads: outcome.threads,
+        pool_spawns: outcome.pool_spawns,
+        total_wall_secs: outcome.total_wall.as_secs_f64(),
+        points,
+    })
+}
+
+/// Pretty-print a sweep as its ranked table (the `sweep` CLI's default
+/// output; the schema is documented in EXPERIMENTS.md).
+pub fn format_sweep_table(report: &SweepReport) -> String {
+    let mut s = format!(
+        "sweep task={} n={} k={} reps={} threads={} pool_spawns={} total_wall={:.4}s\n",
+        report.task.name(),
+        report.n,
+        report.k,
+        report.repetitions,
+        report.threads,
+        report.pool_spawns,
+        report.total_wall_secs,
+    );
+    s.push_str(&format!(
+        "{:>4} {:>10} {:>14} {:>12} {:>12} {:>12} {:>14}\n",
+        "rank", "param", "value", "strategy", "mean", "std", "pts_updated"
+    ));
+    for (i, p) in report.points.iter().enumerate() {
+        s.push_str(&format!(
+            "{:>4} {:>10} {:>14e} {:>12} {:>12.6} {:>12.6} {:>14}\n",
+            i + 1,
+            p.param,
+            p.value,
+            p.strategy.name(),
+            p.mean,
+            p.std,
+            p.ops.points_updated,
+        ));
+    }
+    s
+}
+
 /// Pretty-print reports as an aligned text table (the CLI's default output).
 pub fn format_table(reports: &[CellReport]) -> String {
     let mut s = String::new();
@@ -230,6 +394,8 @@ mod tests {
             alpha: 0.0,
             data_path: None,
             out: None,
+            sweep: None,
+            threads: 0,
         }
     }
 
@@ -298,6 +464,64 @@ mod tests {
         let mut cfg = tiny_cfg(Task::Pegasos, Engine::Treecv);
         cfg.ks = vec![9999];
         assert!(run_experiment(&cfg).is_err());
+    }
+
+    fn sweep_cfg(task: Task, grid: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            ks: vec![4],
+            repetitions: 2,
+            threads: 2,
+            sweep: Some(crate::config::SweepGrid::parse(grid).unwrap()),
+            ..tiny_cfg(task, Engine::ParallelTreecv)
+        }
+    }
+
+    #[test]
+    fn sweep_ranks_by_mean_loss() {
+        let report = run_sweep(&sweep_cfg(Task::Pegasos, "lambda=1e-3,1e-4,1e-5")).unwrap();
+        assert_eq!(report.points.len(), 3);
+        assert!(report.points.windows(2).all(|w| w[0].mean <= w[1].mean));
+        assert!(report.points.iter().all(|p| p.mean.is_finite() && p.param == "lambda"));
+        // Exactly one multi-worker pool for the whole sweep (counted
+        // locally, so exact even with concurrent unit tests; the global
+        // counter corroborates it in tests/integration_sweep.rs).
+        assert_eq!(report.pool_spawns, 1);
+        assert_eq!(report.threads, 2);
+        let table = format_sweep_table(&report);
+        assert!(table.contains("rank"));
+        assert!(table.contains("pool_spawns="));
+        assert_eq!(table.lines().count(), 2 + 3);
+    }
+
+    #[test]
+    fn sweep_rejects_bad_grids() {
+        // No grid at all.
+        let mut cfg = sweep_cfg(Task::Pegasos, "lambda=1e-4");
+        cfg.sweep = None;
+        assert!(run_sweep(&cfg).is_err());
+        // Unsupported task.
+        assert!(run_sweep(&sweep_cfg(Task::Density, "lambda=1e-4")).is_err());
+        // Wrong parameter for the task.
+        assert!(run_sweep(&sweep_cfg(Task::Pegasos, "alpha=0.1")).is_err());
+        // Non-positive values.
+        assert!(run_sweep(&sweep_cfg(Task::Pegasos, "lambda=0")).is_err());
+        // Multiple ks.
+        let mut cfg = sweep_cfg(Task::Pegasos, "lambda=1e-4");
+        cfg.ks = vec![4, 8];
+        assert!(run_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn sweep_runs_every_sweepable_task() {
+        for (task, grid) in [
+            (Task::Pegasos, "lambda=1e-4,1e-5"),
+            (Task::Ridge, "lambda=0.5,1.0"),
+            (Task::Lsqsgd, "alpha=0.05,0.1"),
+        ] {
+            let report = run_sweep(&sweep_cfg(task, grid)).unwrap();
+            assert_eq!(report.points.len(), 2, "{task:?}");
+            assert!(report.points[0].mean.is_finite(), "{task:?}");
+        }
     }
 
     #[test]

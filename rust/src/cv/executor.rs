@@ -11,9 +11,11 @@
 //! produces remainder folds). This module replaces it with a persistent
 //! executor:
 //!
-//! * **One worker pool per run**, sized from `available_parallelism` (or an
-//!   explicit `threads` knob) — workers are spawned once and live for the
-//!   whole computation.
+//! * **One worker pool per computation**, sized from
+//!   `available_parallelism` (or an explicit `threads` knob) — workers are
+//!   spawned once and live for the whole computation, which may be a
+//!   single run ([`TreeCvExecutor::run`]) or a whole batch of runs
+//!   ([`TreeCvExecutor::run_many`]).
 //! * **Tasks are subtrees, not nodes.** Only the nodes above the *snapshot
 //!   cutoff* ([`snapshot_cutoff`], ~⌈log₂ workers⌉ + slack levels — the
 //!   nodes that actually feed the deques) are forked into independent
@@ -56,6 +58,17 @@
 //! bit-for-bit at `threads = 1` and to ulp-cascade tolerance above, since
 //! forks snapshot where the sequential engine would revert. The tests
 //! below and `tests/integration_executor.rs` assert exactly that.
+//!
+//! **Multi-run batches.** [`TreeCvExecutor::run_many`] feeds the tree
+//! tasks of *many* independent runs — every (hyperparameter config ×
+//! repetition) of a sweep, each tagged with its `run_id` — through ONE
+//! pool: no per-run spawn/teardown, no barrier between runs, and the
+//! fork-snapshot buffer pool plus the worker-local scratch free-lists stay
+//! warm across runs. Each run keeps its own `(folds, seed, strategy,
+//! cutoff)`, so every result is bit-identical to running that
+//! configuration alone (`tests/integration_sweep.rs` is the battery). The
+//! process-wide [`pool_spawn_count`] instrumentation counter lets callers
+//! assert the "one pool per batch" claim.
 
 use super::folds::{gather_ordered, node_tags, Folds, Ordering};
 use super::treecv::run_subtree;
@@ -64,8 +77,9 @@ use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering as MemOrdering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as MemOrdering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Extra fork levels beyond ⌈log₂ workers⌉: each level doubles the subtree
 /// count, so slack 2 yields ~4 independent subtrees per worker — enough
@@ -87,6 +101,21 @@ pub fn snapshot_cutoff(threads: usize) -> usize {
     ceil_log2 + SNAPSHOT_SLACK
 }
 
+/// Process-wide count of worker pools spawned by the executor: one per
+/// [`TreeCvExecutor::run_many`] batch that actually spawns threads
+/// (`threads = 1` batches run inline and spawn nothing). A whole sweep of
+/// C configs × r repetitions bumps this by exactly 1, where dispatching
+/// the runs one at a time bumps it C·r times — the sweep tests assert
+/// both. Monotonic and approximate under concurrent executor use (it is
+/// never decremented; read deltas around a batch you serialized yourself).
+static POOL_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the pool-spawn instrumentation counter (see
+/// [`POOL_SPAWNS`]).
+pub fn pool_spawn_count() -> u64 {
+    POOL_SPAWNS.load(MemOrdering::Relaxed)
+}
+
 /// The pooled work-stealing TreeCV engine.
 #[derive(Debug, Clone)]
 pub struct TreeCvExecutor {
@@ -105,41 +134,85 @@ pub struct TreeCvExecutor {
     pub threads: usize,
 }
 
-/// One unit of executor work: the TreeCV subtree rooted at `(s, e)` plus
-/// the model trained on every chunk outside `s..=e`. `depth` decides
-/// whether the node forks (above the snapshot cutoff) or runs inline.
+/// One run of a multi-run batch ([`TreeCvExecutor::run_many`]): the full
+/// TreeCV computation of `learner` under `folds`, with its own
+/// permutation-stream seed and model-preservation strategy. A run's
+/// result is a pure function of `(learner, data, folds, strategy,
+/// ordering, seed)` — never of pool size or scheduling — so batching runs
+/// through a shared pool reproduces each standalone run bit for bit.
+pub struct RunSpec<'a, L: IncrementalLearner> {
+    pub learner: &'a L,
+    pub folds: &'a Folds,
+    /// Seed for this run's per-node permutation streams.
+    pub seed: u64,
+    /// Model-preservation strategy for this run's inline subtrees.
+    pub strategy: Strategy,
+}
+
+/// One unit of executor work: the TreeCV subtree of run `run` rooted at
+/// `(s, e)` plus the model trained on every chunk outside `s..=e`.
+/// `depth` decides whether the node forks (above the run's snapshot
+/// cutoff) or runs inline. Root tasks carry `None` and init their model
+/// lazily on the worker that pops them — a batch of R runs would
+/// otherwise materialize R full models up front (ruinous for
+/// training-set-sized models like k-NN's on a wide sweep).
 struct Task<M> {
+    run: usize,
     s: usize,
     e: usize,
     depth: usize,
-    model: M,
+    model: Option<M>,
 }
 
-/// State shared by the worker pool for one run.
-struct Shared<M> {
+/// Per-run shared state: the run's inputs plus its output slots.
+struct RunShared<'a, L: IncrementalLearner> {
+    learner: &'a L,
+    folds: &'a Folds,
+    seed: u64,
+    strategy: Strategy,
+    /// First non-forking depth for THIS run, computed from the engine's
+    /// `threads` knob and the run's own k exactly as a standalone
+    /// [`TreeCvExecutor::run`] computes it — that is what keeps every
+    /// batched run bit-identical to its standalone counterpart.
+    cutoff: usize,
+    /// Leaf count (`folds.k()`).
+    k: usize,
+    /// Per-fold outputs; distinct indices are written exactly once each.
+    per_fold: Mutex<Vec<f64>>,
+    /// Leaves of this run completed so far (done at `k`).
+    leaves_done: AtomicUsize,
+    /// Work counters, merged from every worker's run-local tallies.
+    ops: Mutex<OpCounts>,
+    /// Elapsed time from batch start when the run's last leaf landed.
+    wall: Mutex<Duration>,
+}
+
+/// State shared by the worker pool for one batch of runs.
+struct Shared<'a, L: IncrementalLearner> {
     /// One deque per worker. Owner pushes/pops the back; thieves pop the
     /// front. A plain mutexed deque keeps the implementation obviously
     /// correct; contention is negligible at subtree granularity.
-    deques: Vec<Mutex<VecDeque<Task<M>>>>,
+    deques: Vec<Mutex<VecDeque<Task<L::Model>>>>,
     /// Recycled model buffers (`clone_from` targets for fork-node
-    /// snapshots). Finished subtrees return their model here; retention is
-    /// capped at [`Shared::pool_cap`] so LOOCV-scale runs don't accumulate
-    /// dead buffers by the end of the computation.
-    pool: Mutex<Vec<M>>,
-    /// Maximum buffers the pool retains (~ workers · cutoff, the fork
-    /// levels' steady-state demand); excess buffers are dropped instead.
+    /// snapshots), shared by every run in the batch — later runs start
+    /// with a warm pool. Retention is capped at [`Shared::pool_cap`] so
+    /// LOOCV-scale batches don't accumulate dead buffers.
+    pool: Mutex<Vec<L::Model>>,
+    /// Maximum buffers the pool retains (~ workers · max cutoff, the fork
+    /// levels' steady-state demand, doubled when several runs are in
+    /// flight); excess buffers are dropped instead.
     pool_cap: usize,
-    /// First non-forking depth (see [`snapshot_cutoff`]).
-    cutoff: usize,
-    /// Per-fold outputs; distinct indices are written exactly once each.
-    per_fold: Mutex<Vec<f64>>,
-    /// Leaves completed so far; the run is done when this reaches `k`.
+    /// The batch's runs, indexed by [`Task::run`].
+    runs: Vec<RunShared<'a, L>>,
+    /// Total leaf count across all runs.
+    leaves_total: usize,
+    /// Leaves completed so far across all runs.
     leaves_done: AtomicUsize,
-    /// Total leaf count.
-    k: usize,
     /// Set when all leaves are done (or a worker panicked) so idle workers
     /// exit their steal loop.
     done: AtomicBool,
+    /// Batch clock (per-run completion times are read off it).
+    timer: Timer,
 }
 
 /// Sets the shared `done` flag if its thread unwinds, so a panicking
@@ -168,48 +241,49 @@ impl TreeCvExecutor {
         Self::new(strategy, ordering, seed, threads)
     }
 
-    /// Gather the points of chunks `lo..=hi` in the engine's feeding order.
-    /// The permutation stream is a pure function of `(seed, node, side)`,
-    /// which is what makes any execution order reproduce the sequential
-    /// engine bit-for-bit.
-    fn gather(
-        &self,
-        folds: &Folds,
-        lo: usize,
-        hi: usize,
-        tag: u64,
-        ops: &mut OpCounts,
-    ) -> Vec<u32> {
-        gather_ordered(folds, lo, hi, self.seed, self.ordering, tag, ops)
+    /// Resolve a user-facing `threads` knob (`0` = machine parallelism)
+    /// into a pool — the single resolution every harness (repetition,
+    /// repeated CV, sweep) routes through, so the knob is honored
+    /// identically everywhere and never silently ignored. The engine seed
+    /// is left at 0: the batching harnesses pass per-run seeds via
+    /// [`RunSpec`], which [`Self::run_many`] uses instead.
+    pub fn with_threads_knob(strategy: Strategy, ordering: Ordering, threads: usize) -> Self {
+        if threads == 0 {
+            Self::with_available_parallelism(strategy, ordering, 0)
+        } else {
+            Self::new(strategy, ordering, 0, threads)
+        }
     }
 
-    /// Process one task: fork nodes above the cutoff run both update
+    /// Process one task: fork nodes above the run's cutoff run both update
     /// phases (one snapshot) and enqueue the two child subtrees on this
     /// worker's own deque; everything else — leaves and whole subtrees at
     /// or below the cutoff — runs inline through the shared sequential
-    /// recursion with the engine's strategy.
-    #[allow(clippy::too_many_arguments)]
+    /// recursion with the run's strategy.
     fn process<L>(
         &self,
         wid: usize,
         task: Task<L::Model>,
-        shared: &Shared<L::Model>,
-        learner: &L,
+        shared: &Shared<'_, L>,
         data: &Dataset,
-        folds: &Folds,
-        ops: &mut OpCounts,
+        ops_by_run: &mut [OpCounts],
         scratch: &mut Vec<L::Model>,
     ) where
         L: IncrementalLearner + Sync,
     {
-        let Task { s, e, depth, mut model } = task;
-        if s < e && depth < shared.cutoff {
+        let Task { run, s, e, depth, model } = task;
+        let rs = &shared.runs[run];
+        let ops = &mut ops_by_run[run];
+        // Root tasks init lazily (pure, so scheduling cannot affect it).
+        let mut model = model.unwrap_or_else(|| rs.learner.init());
+        if s < e && depth < rs.cutoff {
             let m = (s + e) / 2;
             // Node tags shared with the sequential engine.
             let (tag_right, tag_left) = node_tags(s, e);
 
-            let right = self.gather(folds, m + 1, e, tag_right, ops);
-            let left = self.gather(folds, s, m, tag_left, ops);
+            let right =
+                gather_ordered(rs.folds, m + 1, e, rs.seed, self.ordering, tag_right, ops);
+            let left = gather_ordered(rs.folds, s, m, rs.seed, self.ordering, tag_left, ops);
             ops.update_calls += 2;
             ops.points_updated += (right.len() + left.len()) as u64;
 
@@ -227,32 +301,33 @@ impl TreeCvExecutor {
                 None => model.clone(),
             };
             ops.model_copies += 1;
-            ops.bytes_copied += learner.model_bytes(&model) as u64;
+            ops.bytes_copied += rs.learner.model_bytes(&model) as u64;
 
             // As in Algorithm 1: the model fed the *second* group serves
             // the left child (s, m); the model fed the *first* group
             // serves the right child (m+1, e).
-            learner.update(&mut model, data, &right);
-            learner.update(&mut sibling, data, &left);
+            rs.learner.update(&mut model, data, &right);
+            rs.learner.update(&mut sibling, data, &left);
 
             let mut dq = shared.deques[wid].lock().unwrap();
-            dq.push_back(Task { s, e: m, depth: depth + 1, model });
-            dq.push_back(Task { s: m + 1, e, depth: depth + 1, model: sibling });
+            dq.push_back(Task { run, s, e: m, depth: depth + 1, model: Some(model) });
+            dq.push_back(Task { run, s: m + 1, e, depth: depth + 1, model: Some(sibling) });
             return;
         }
 
-        // Inline subtree: the shared sequential recursion, under the
-        // caller's strategy, into a local buffer (one per-fold lock per
-        // subtree instead of one per leaf). Copy-strategy snapshots inside
-        // the subtree recycle through this worker's scratch free-list.
+        // Inline subtree: the shared sequential recursion, under the run's
+        // strategy, into a local buffer (one per-fold lock per subtree
+        // instead of one per leaf). Copy-strategy snapshots inside the
+        // subtree recycle through this worker's scratch free-list, which
+        // lives for the whole batch — tasks of every run share it.
         let mut local = vec![0.0; e - s + 1];
         run_subtree(
-            learner,
+            rs.learner,
             data,
-            folds,
-            self.strategy,
+            rs.folds,
+            rs.strategy,
             self.ordering,
-            self.seed,
+            rs.seed,
             &mut model,
             s,
             e,
@@ -261,7 +336,7 @@ impl TreeCvExecutor {
             ops,
             scratch,
         );
-        shared.per_fold.lock().unwrap()[s..=e].copy_from_slice(&local);
+        rs.per_fold.lock().unwrap()[s..=e].copy_from_slice(&local);
         // Recycle the model storage for future fork-node snapshots
         // (bounded — beyond the cap, just drop it).
         {
@@ -271,30 +346,29 @@ impl TreeCvExecutor {
             }
         }
         let leaves = e - s + 1;
-        if shared.leaves_done.fetch_add(leaves, MemOrdering::AcqRel) + leaves == shared.k {
+        if rs.leaves_done.fetch_add(leaves, MemOrdering::AcqRel) + leaves == rs.k {
+            *rs.wall.lock().unwrap() = shared.timer.elapsed();
+        }
+        let done_before = shared.leaves_done.fetch_add(leaves, MemOrdering::AcqRel);
+        if done_before + leaves == shared.leaves_total {
             shared.done.store(true, MemOrdering::Release);
         }
     }
 
     /// Worker loop: drain own deque LIFO, steal FIFO when empty, exit once
-    /// every leaf is recorded. Returns this worker's operation counters.
-    fn worker<L>(
-        &self,
-        wid: usize,
-        shared: &Shared<L::Model>,
-        learner: &L,
-        data: &Dataset,
-        folds: &Folds,
-    ) -> OpCounts
+    /// every leaf of every run is recorded. Counters are tallied per run
+    /// locally and merged into the shared per-run totals on exit.
+    fn worker<L>(&self, wid: usize, shared: &Shared<'_, L>, data: &Dataset)
     where
         L: IncrementalLearner + Sync,
     {
         let _signal = PanicSignal { done: &shared.done };
-        let mut ops = OpCounts::default();
+        let mut ops_by_run: Vec<OpCounts> = vec![OpCounts::default(); shared.runs.len()];
         let n_workers = shared.deques.len();
         // Worker-local free-list for inline-subtree Copy snapshots; lives
-        // across tasks so buffers recycle for the whole run (held count is
-        // bounded by the subtree recursion depth, ≤ ⌈log₂ k⌉).
+        // across tasks — and across runs — so buffers recycle for the
+        // whole batch (held count is bounded by the subtree recursion
+        // depth, ≤ ⌈log₂ k⌉ of the deepest run).
         let mut scratch: Vec<L::Model> = Vec::new();
         // Consecutive empty steal sweeps; drives the idle backoff below.
         let mut dry_sweeps = 0u32;
@@ -312,7 +386,7 @@ impl TreeCvExecutor {
             match task {
                 Some(t) => {
                     dry_sweeps = 0;
-                    self.process(wid, t, shared, learner, data, folds, &mut ops, &mut scratch);
+                    self.process(wid, t, shared, data, &mut ops_by_run, &mut scratch);
                 }
                 None => {
                     if shared.done.load(MemOrdering::Acquire) {
@@ -332,64 +406,123 @@ impl TreeCvExecutor {
                 }
             }
         }
-        ops
+        // Publish this worker's tallies into each run's shared totals.
+        for (rs, ops) in shared.runs.iter().zip(&ops_by_run) {
+            rs.ops.lock().unwrap().merge(ops);
+        }
     }
 
-    /// Run the executor engine. (Not part of the [`super::CvEngine`] trait
-    /// because it needs `L: Sync` bounds the trait doesn't impose.)
+    /// Run the executor engine on a single computation. (Not part of the
+    /// [`super::CvEngine`] trait because it needs `L: Sync` bounds the
+    /// trait doesn't impose.)
     pub fn run<L>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult
     where
         L: IncrementalLearner + Sync,
         L::Model: Send,
     {
-        let timer = Timer::start();
-        let k = folds.k();
-        let threads = self.threads.max(1).min(k);
-        let cutoff = snapshot_cutoff(threads);
+        let spec = RunSpec { learner, folds, seed: self.seed, strategy: self.strategy };
+        self.run_many(data, std::slice::from_ref(&spec))
+            .pop()
+            .expect("run_many returns one result per run")
+    }
+
+    /// Run a whole batch of TreeCV computations — e.g. every
+    /// (hyperparameter config × repetition) run of a sweep — through ONE
+    /// persistent worker pool. Tasks from all runs share the deques, the
+    /// fork-snapshot buffer pool and the worker-local scratch free-lists;
+    /// there is no barrier between runs and no per-run spawn/teardown.
+    ///
+    /// Each run keeps its own snapshot cutoff (derived from the engine's
+    /// `threads` knob and the run's own k, exactly as a standalone
+    /// [`Self::run`] derives it) and its own `(seed, strategy)` from the
+    /// spec — the engine's `strategy`/`seed` fields are not consulted —
+    /// so result `i` is bit-identical to running `runs[i]` alone at the
+    /// same `threads` setting. Results come back in run order; each
+    /// `wall` is the elapsed time from batch start to the run's last
+    /// leaf.
+    pub fn run_many<L>(&self, data: &Dataset, runs: &[RunSpec<'_, L>]) -> Vec<CvResult>
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        if runs.is_empty() {
+            return Vec::new();
+        }
+        let leaves_total: usize = runs.iter().map(|r| r.folds.k()).sum();
+        let threads = self.threads.max(1).min(leaves_total);
+        let cutoff_of = |k: usize| snapshot_cutoff(self.threads.max(1).min(k));
+        let max_cutoff = runs.iter().map(|r| cutoff_of(r.folds.k())).max().unwrap_or(0);
         // Steady-state snapshot demand is one buffer per live fork level
-        // per worker — and forks only exist above the cutoff, so the cap
-        // no longer scales with log₂ k.
-        let pool_cap = threads * (cutoff + 2);
-        let shared: Shared<L::Model> = Shared {
+        // per worker; when several runs are in flight, stealing
+        // interleaves their fork frontiers, so the retention cap doubles.
+        let pool_cap = threads * (max_cutoff + 2) * if runs.len() > 1 { 2 } else { 1 };
+        let shared: Shared<'_, L> = Shared {
             deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
             pool: Mutex::new(Vec::new()),
             pool_cap,
-            cutoff,
-            per_fold: Mutex::new(vec![0.0; k]),
+            runs: runs
+                .iter()
+                .map(|r| RunShared {
+                    learner: r.learner,
+                    folds: r.folds,
+                    seed: r.seed,
+                    strategy: r.strategy,
+                    cutoff: cutoff_of(r.folds.k()),
+                    k: r.folds.k(),
+                    per_fold: Mutex::new(vec![0.0; r.folds.k()]),
+                    leaves_done: AtomicUsize::new(0),
+                    ops: Mutex::new(OpCounts::default()),
+                    wall: Mutex::new(Duration::ZERO),
+                })
+                .collect(),
+            leaves_total,
             leaves_done: AtomicUsize::new(0),
-            k,
             done: AtomicBool::new(false),
+            timer: Timer::start(),
         };
-        shared.deques[0].lock().unwrap().push_back(Task {
-            s: 0,
-            e: k - 1,
-            depth: 0,
-            model: learner.init(),
-        });
+        // Seed the root tasks round-robin so a batch starts spread across
+        // the deques. Placement never affects results — only who steals
+        // first — and a single run lands on deque 0 as before. Root
+        // models are `None` (lazily inited on first pop) so a wide batch
+        // doesn't hold every run's full model before work starts.
+        for (i, r) in runs.iter().enumerate() {
+            shared.deques[i % threads].lock().unwrap().push_back(Task {
+                run: i,
+                s: 0,
+                e: r.folds.k() - 1,
+                depth: 0,
+                model: None,
+            });
+        }
 
-        let mut ops = OpCounts::default();
         if threads == 1 {
             // Inline on the calling thread: zero spawn cost, and exactly
             // the sequential engine's work.
-            ops = self.worker(0, &shared, learner, data, folds);
+            self.worker(0, &shared, data);
         } else {
+            POOL_SPAWNS.fetch_add(1, MemOrdering::Relaxed);
             let shared_ref = &shared;
             std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..threads)
-                    .map(|wid| {
-                        scope.spawn(move || {
-                            self.worker(wid, shared_ref, learner, data, folds)
-                        })
-                    })
+                    .map(|wid| scope.spawn(move || self.worker(wid, shared_ref, data)))
                     .collect();
                 for handle in handles {
-                    ops.merge(&handle.join().expect("executor worker panicked"));
+                    handle.join().expect("executor worker panicked");
                 }
             });
         }
 
-        let per_fold = shared.per_fold.into_inner().unwrap();
-        CvResult::from_folds(per_fold, ops, timer.elapsed())
+        shared
+            .runs
+            .into_iter()
+            .map(|rs| {
+                CvResult::from_folds(
+                    rs.per_fold.into_inner().unwrap(),
+                    rs.ops.into_inner().unwrap(),
+                    rs.wall.into_inner().unwrap(),
+                )
+            })
+            .collect()
     }
 }
 
@@ -528,6 +661,73 @@ mod tests {
         let exe = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 0, 4)
             .run(&l, &data, &folds);
         assert_eq!(seq.per_fold, exe.per_fold);
+    }
+
+    #[test]
+    fn run_many_batch_matches_standalone_runs() {
+        // Three λ configs × two partitionings through ONE batch: every
+        // result must be bit-identical to its standalone run at the same
+        // threads setting, counters included.
+        let data = SyntheticCovertype::new(800, 103).generate();
+        let learners = [Pegasos::new(54, 1e-3), Pegasos::new(54, 1e-4), Pegasos::new(54, 1e-5)];
+        let folds = [Folds::new(800, 9, 104), Folds::new(800, 9, 105)];
+        let mut specs = Vec::new();
+        for learner in &learners {
+            for (r, f) in folds.iter().enumerate() {
+                let spec = RunSpec {
+                    learner,
+                    folds: f,
+                    seed: 60 + r as u64,
+                    strategy: Strategy::Copy,
+                };
+                specs.push(spec);
+            }
+        }
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4);
+        let batch = exe.run_many(&data, &specs);
+        assert_eq!(batch.len(), 6);
+        for (i, (spec, got)) in specs.iter().zip(&batch).enumerate() {
+            let alone = TreeCvExecutor::new(spec.strategy, Ordering::Fixed, spec.seed, 4)
+                .run(spec.learner, &data, spec.folds);
+            assert_eq!(got.per_fold, alone.per_fold, "run {i}");
+            assert_eq!(got.estimate, alone.estimate, "run {i}");
+            assert_eq!(got.ops.points_updated, alone.ops.points_updated, "run {i}");
+            assert_eq!(got.ops.model_copies, alone.ops.model_copies, "run {i}");
+        }
+    }
+
+    #[test]
+    fn run_many_mixes_strategies_and_fold_counts() {
+        // A batch may mix strategies and ks (k = 1 runs are single-leaf);
+        // each run must still reproduce the sequential engine under its
+        // own (strategy, folds, seed).
+        let data = SyntheticMixture1d::new(400, 106).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = [Folds::new(400, 7, 107), Folds::new(400, 16, 108), Folds::new(400, 1, 109)];
+        let strategies = [Strategy::SaveRevert, Strategy::Copy, Strategy::Copy];
+        let specs: Vec<RunSpec<'_, HistogramDensity>> = folds
+            .iter()
+            .zip(strategies)
+            .enumerate()
+            .map(|(i, (f, strategy))| RunSpec { learner: &l, folds: f, seed: i as u64, strategy })
+            .collect();
+        let batch =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 0, 3).run_many(&data, &specs);
+        for (i, (spec, got)) in specs.iter().zip(&batch).enumerate() {
+            let seq = TreeCv::new(spec.strategy, Ordering::Randomized, spec.seed)
+                .run(&l, &data, spec.folds);
+            assert_eq!(got.per_fold, seq.per_fold, "run {i}");
+            assert_eq!(got.ops.points_updated, seq.ops.points_updated, "run {i}");
+            assert_eq!(got.ops.evals, seq.ops.evals, "run {i}");
+        }
+    }
+
+    #[test]
+    fn run_many_empty_batch_is_empty() {
+        let data = SyntheticMixture1d::new(10, 110).generate();
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4);
+        let out = exe.run_many::<HistogramDensity>(&data, &[]);
+        assert!(out.is_empty());
     }
 
     #[test]

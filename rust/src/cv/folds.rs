@@ -178,6 +178,72 @@ mod tests {
         assert!(seen.iter().all(|&s| s));
     }
 
+    /// Remainder-fold coverage property: for every constructor and any
+    /// shape — especially `n % k != 0`, plus the k = 1 and k = n (LOOCV)
+    /// edges — every index lands in EXACTLY one fold, the fold count is
+    /// k, and sizes split as `n % k` chunks of `⌈n/k⌉` followed by
+    /// `k − n % k` chunks of `⌊n/k⌋`.
+    #[test]
+    fn prop_every_index_in_exactly_one_fold() {
+        let mut rng = crate::rng::Rng::new(0xF01D5EED);
+        let mut shapes: Vec<(usize, usize)> = vec![
+            (1, 1),
+            (2, 1),
+            (7, 7),     // LOOCV
+            (103, 10),  // remainder
+            (101, 100), // k = n - 1, all-but-one singleton
+            (64, 64),
+        ];
+        for _ in 0..40 {
+            let n = 2 + rng.below(300) as usize;
+            let k = 1 + rng.below(n as u64) as usize;
+            shapes.push((n, k));
+        }
+        for &(n, k) in &shapes {
+            let seed = (n * 31 + k) as u64;
+            for (which, f) in [
+                ("new", Folds::new(n, k, seed)),
+                ("contiguous", Folds::contiguous(n, k)),
+                ("new_sorted", Folds::new_sorted(n, k, seed)),
+            ] {
+                assert_eq!(f.k(), k, "{which} n={n} k={k}");
+                assert_eq!(f.n(), n, "{which} n={n} k={k}");
+                let mut count = vec![0u32; n];
+                for i in 0..k {
+                    for &p in f.chunk(i) {
+                        count[p as usize] += 1;
+                    }
+                }
+                assert!(
+                    count.iter().all(|&c| c == 1),
+                    "{which} n={n} k={k}: some index not covered exactly once"
+                );
+                let (base, extra) = (n / k, n % k);
+                for i in 0..k {
+                    let want = base + usize::from(i < extra);
+                    assert_eq!(f.chunk(i).len(), want, "{which} n={n} k={k} chunk {i}");
+                }
+                // gather_range over the whole tree root must be a
+                // permutation of 0..n (what every engine consumes).
+                let mut all = f.gather_range(0, k - 1);
+                all.sort_unstable();
+                assert!(all.iter().enumerate().all(|(i, &p)| p as usize == i), "{which}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= k")]
+    fn k_above_n_panics() {
+        let _ = Folds::new(5, 6, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= k")]
+    fn k_zero_panics() {
+        let _ = Folds::new(5, 0, 0);
+    }
+
     #[test]
     fn sizes_near_equal() {
         let f = Folds::new(103, 10, 2);

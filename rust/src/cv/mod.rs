@@ -10,7 +10,15 @@
 //!   subtrees above a snapshot cutoff (~⌈log₂ workers⌉ levels) and runs
 //!   everything below inline under the caller's [`Strategy`] — SaveRevert
 //!   therefore pays O(workers) model copies per run instead of k − 1.
-//!   Every parallel dispatch path routes through it.
+//!   Every parallel dispatch path routes through it, and its `run_many`
+//!   schedules whole batches of runs (each task tagged with its run id)
+//!   through one pool.
+//! * [`sweep`] — the tuning workload: every (hyperparameter config ×
+//!   strategy × repetition) TreeCV run of a grid sweep as ONE executor
+//!   batch — no per-run pool spawn, shared snapshot-buffer pools, fold
+//!   assignments common across configs so the hyperparameter is the only
+//!   difference between rows. Surfaced as the `sweep` CLI subcommand
+//!   (`--sweep lambda=0.1,0.01,0.001`).
 //! * [`parallel`] — the §4.1 parallel engine facade (delegates to
 //!   [`executor`]) plus the original scoped-thread forking retained as a
 //!   bench baseline; both are strategy-aware.
@@ -31,6 +39,7 @@ pub mod parallel;
 pub mod repeated;
 pub mod standard;
 pub mod stats;
+pub mod sweep;
 pub mod treecv;
 
 use crate::data::Dataset;

@@ -10,8 +10,10 @@
 //! naively. The struct also reports the across-partitioning spread, which
 //! is exactly the ± column of the paper's Table 2.
 
+use super::executor::{RunSpec, TreeCvExecutor};
 use super::folds::{Folds, Ordering};
 use super::standard::StandardCv;
+use super::stats::repetition_fold_seed;
 use super::treecv::TreeCv;
 use super::{CvEngine, CvResult, Strategy};
 use crate::data::Dataset;
@@ -23,6 +25,11 @@ use crate::metrics::{OpCounts, RunningStats, Timer};
 pub enum Inner {
     TreeCv(Strategy),
     Standard,
+    /// Every partitioning through ONE pooled executor batch
+    /// ([`TreeCvExecutor::run_many`]) — per-partitioning results are
+    /// bit-identical to `Inner::TreeCv` for exact-revert learners (always
+    /// under Copy), without the `L − 1` extra pool spawns.
+    PooledTreeCv(Strategy),
 }
 
 /// Repeated-partitioning CV.
@@ -33,6 +40,9 @@ pub struct RepeatedCv {
     /// Number of independent partitionings (An et al.'s `L`).
     pub partitionings: usize,
     pub seed: u64,
+    /// Worker-pool size for [`Inner::PooledTreeCv`] (`0` = machine
+    /// parallelism); ignored by the sequential inners.
+    pub threads: usize,
 }
 
 /// Aggregate over partitionings.
@@ -52,35 +62,58 @@ pub struct RepeatedCvResult {
 impl RepeatedCv {
     pub fn new(inner: Inner, ordering: Ordering, partitionings: usize, seed: u64) -> Self {
         assert!(partitionings >= 1);
-        Self { inner, ordering, partitionings, seed }
+        Self { inner, ordering, partitionings, seed, threads: 0 }
     }
 
     /// Run k-CV under `partitionings` independent fold assignments.
-    pub fn run<L: IncrementalLearner>(
-        &self,
-        learner: &L,
-        data: &Dataset,
-        k: usize,
-    ) -> RepeatedCvResult {
+    pub fn run<L>(&self, learner: &L, data: &Dataset, k: usize) -> RepeatedCvResult
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
         let timer = Timer::start();
+        // Fold-assignment seeds share the harness-wide derivation
+        // (`cv::stats::repetition_fold_seed`); only the engine-seed xor
+        // (0x5EED) is RepeatedCv's own.
+        let rep_seed = |r: usize| repetition_fold_seed(self.seed, r);
+        let runs: Vec<CvResult> = match self.inner {
+            Inner::PooledTreeCv(strategy) => {
+                let folds: Vec<Folds> = (0..self.partitionings)
+                    .map(|r| Folds::new(data.n, k, rep_seed(r)))
+                    .collect();
+                let specs: Vec<RunSpec<'_, L>> = folds
+                    .iter()
+                    .enumerate()
+                    .map(|(r, f)| RunSpec {
+                        learner,
+                        folds: f,
+                        seed: rep_seed(r) ^ 0x5EED,
+                        strategy,
+                    })
+                    .collect();
+                TreeCvExecutor::with_threads_knob(strategy, self.ordering, self.threads)
+                    .run_many(data, &specs)
+            }
+            Inner::TreeCv(_) | Inner::Standard => (0..self.partitionings)
+                .map(|r| {
+                    let folds = Folds::new(data.n, k, rep_seed(r));
+                    match self.inner {
+                        Inner::TreeCv(strategy) => {
+                            TreeCv::new(strategy, self.ordering, rep_seed(r) ^ 0x5EED)
+                                .run(learner, data, &folds)
+                        }
+                        Inner::Standard => StandardCv::new(self.ordering, rep_seed(r) ^ 0x5EED)
+                            .run(learner, data, &folds),
+                        Inner::PooledTreeCv(_) => unreachable!("batched above"),
+                    }
+                })
+                .collect(),
+        };
         let mut stats = RunningStats::default();
-        let mut runs = Vec::with_capacity(self.partitionings);
         let mut ops = OpCounts::default();
-        for r in 0..self.partitionings {
-            let rep_seed = self.seed.wrapping_add(r as u64).wrapping_mul(0x9E3779B97F4A7C15);
-            let folds = Folds::new(data.n, k, rep_seed);
-            let res = match self.inner {
-                Inner::TreeCv(strategy) => {
-                    TreeCv::new(strategy, self.ordering, rep_seed ^ 0x5EED)
-                        .run(learner, data, &folds)
-                }
-                Inner::Standard => {
-                    StandardCv::new(self.ordering, rep_seed ^ 0x5EED).run(learner, data, &folds)
-                }
-            };
+        for res in &runs {
             stats.push(res.estimate);
             ops.merge(&res.ops);
-            runs.push(res);
         }
         RepeatedCvResult {
             estimate: stats.mean(),
@@ -145,6 +178,35 @@ mod tests {
         let r4 = RepeatedCv::new(Inner::TreeCv(Strategy::Copy), Ordering::Fixed, 4, 9)
             .run(&l, &data, 8);
         assert_eq!(r4.ops.points_updated, 4 * r1.ops.points_updated);
+    }
+
+    #[test]
+    fn pooled_inner_bit_identical_to_treecv_inner() {
+        // One executor batch for all partitionings must reproduce the
+        // per-partitioning sequential engine exactly — per_fold vectors,
+        // estimate and spread — for an exact-revert learner under both
+        // strategies, and for an order-sensitive learner under Copy.
+        let data = SyntheticMixture1d::new(320, 185).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+            let a = RepeatedCv::new(Inner::TreeCv(strategy), Ordering::Fixed, 6, 17)
+                .run(&l, &data, 9);
+            let b = RepeatedCv::new(Inner::PooledTreeCv(strategy), Ordering::Fixed, 6, 17)
+                .run(&l, &data, 9);
+            assert_eq!(a.estimate.to_bits(), b.estimate.to_bits(), "{strategy:?}");
+            assert_eq!(a.spread.to_bits(), b.spread.to_bits(), "{strategy:?}");
+            for (x, y) in a.runs.iter().zip(&b.runs) {
+                assert_eq!(x.per_fold, y.per_fold, "{strategy:?}");
+            }
+        }
+        let cover = SyntheticCovertype::new(500, 186).generate();
+        let p = Pegasos::new(54, 1e-3);
+        let a = RepeatedCv::new(Inner::TreeCv(Strategy::Copy), Ordering::Randomized, 5, 19)
+            .run(&p, &cover, 7);
+        let b = RepeatedCv::new(Inner::PooledTreeCv(Strategy::Copy), Ordering::Randomized, 5, 19)
+            .run(&p, &cover, 7);
+        assert_eq!(a.estimate.to_bits(), b.estimate.to_bits());
+        assert_eq!(a.spread.to_bits(), b.spread.to_bits());
     }
 
     #[test]

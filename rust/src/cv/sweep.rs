@@ -1,0 +1,230 @@
+//! Sweep scheduler: every (hyperparameter config × strategy × repetition)
+//! TreeCV run of a tuning workload through ONE pooled executor.
+//!
+//! The paper positions fast CV as the tool for "performance estimation
+//! and parameter tuning"; related work (Krueger et al., *Fast
+//! Cross-Validation via Sequential Testing*; Mohr & van Rijn, *Learning
+//! Curve Cross-Validation*) shows most CV compute is spent exactly in
+//! this multi-run regime. [`run_sweep`] therefore does not dispatch the
+//! `C × S × r` runs one executor invocation at a time: it builds one
+//! [`RunSpec`] per run and hands the whole batch to
+//! [`TreeCvExecutor::run_many`], which schedules every tree node of every
+//! run — tagged `(run_id, s, e)` — from one persistent work-stealing
+//! pool. No per-run worker spin-up/teardown, no barrier between runs, no
+//! model-pool cold starts; [`SweepOutcome::pool_spawns`] records that the
+//! whole sweep cost one pool (zero for `threads = 1`, which runs inline).
+//!
+//! Determinism contract: repetition `r` derives its fold assignment and
+//! engine seed exactly as [`super::stats::run_repetitions`] does, and the
+//! folds are shared by every config and strategy — common partitionings
+//! isolate the hyperparameter as the only difference between sweep rows
+//! (the multi-run analogue of the paper comparing Table-2 columns on
+//! common partitionings). Each run's result is bit-identical to running
+//! that configuration alone through the executor (or the
+//! [`super::parallel::ParallelTreeCv`] facade) at the same `threads`
+//! setting — `tests/integration_sweep.rs` is the battery.
+
+use super::executor::{RunSpec, TreeCvExecutor};
+use super::folds::{Folds, Ordering};
+use super::stats::{repetition_engine_seed, repetition_fold_seed};
+use super::{CvResult, Strategy};
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+use crate::metrics::{OpCounts, RunningStats, Timer};
+use crate::Result;
+use anyhow::bail;
+use std::time::Duration;
+
+/// The sweep's shared axes: every learner config passed to [`run_sweep`]
+/// is run under every strategy in `strategies` for `repetitions`
+/// independent partitionings of k folds.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Feeding order (paper §5), shared by every run.
+    pub ordering: Ordering,
+    /// Model-preservation strategies to sweep (usually one).
+    pub strategies: Vec<Strategy>,
+    /// Fold count, shared by every run.
+    pub k: usize,
+    /// Independent partitionings per (config, strategy) cell.
+    pub repetitions: usize,
+    /// Master seed; repetition seeds derive from it as in
+    /// [`super::stats::run_repetitions`].
+    pub seed: u64,
+    /// Worker-pool size for the whole sweep; `0` = machine parallelism.
+    pub threads: usize,
+}
+
+/// One (config, strategy) cell of a sweep: the repetition-aggregated
+/// estimate plus every underlying run.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// Index into the `learners` slice given to [`run_sweep`].
+    pub config: usize,
+    pub strategy: Strategy,
+    /// Mean of the per-repetition CV estimates.
+    pub mean: f64,
+    /// Sample std of the estimates (the Table-2 ±).
+    pub std: f64,
+    /// Counters from the last repetition (work is identical across
+    /// repetitions, mirroring [`super::stats::RepetitionResult`]).
+    pub ops: OpCounts,
+    /// Every repetition's full result, in repetition order. Caveat: each
+    /// run's `wall` measures elapsed time from *batch* start to that
+    /// run's last leaf (runs share the pool and overlap), so it is NOT a
+    /// per-run cost — compare configs on `ops`, or on
+    /// [`SweepOutcome::total_wall`] across whole sweeps.
+    pub runs: Vec<CvResult>,
+}
+
+/// Everything [`run_sweep`] produced. Cells are in (config-major,
+/// strategy-minor) order — ranking is the caller's concern
+/// (`coordinator::run_sweep` sorts by mean loss).
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub cells: Vec<SweepCell>,
+    /// Worker-pool size the batch actually used: the `threads` knob
+    /// resolved (0 → machine parallelism) and clamped to the batch's
+    /// total leaf count, exactly as the executor sizes its pool.
+    pub threads: usize,
+    /// Wall-clock of the whole pooled batch.
+    pub total_wall: Duration,
+    /// Executor pools spawned by this sweep: 1 for a multi-worker pool,
+    /// 0 for a single-worker batch (runs inline) — never one per run.
+    /// Known locally (the sweep makes exactly one `run_many` call, which
+    /// spawns iff the pool has more than one worker), so the count is
+    /// exact even when other executors run concurrently in the process;
+    /// the global [`super::executor::pool_spawn_count`] counter
+    /// corroborates it in `tests/integration_sweep.rs`.
+    pub pool_spawns: u64,
+}
+
+/// Run the full sweep: `learners.len() × spec.strategies.len() ×
+/// spec.repetitions` TreeCV runs through one pooled executor.
+pub fn run_sweep<L>(learners: &[L], data: &Dataset, spec: &SweepSpec) -> Result<SweepOutcome>
+where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    if learners.is_empty() {
+        bail!("sweep needs at least one hyperparameter config");
+    }
+    if spec.strategies.is_empty() {
+        bail!("sweep needs at least one strategy");
+    }
+    if spec.repetitions == 0 {
+        bail!("sweep needs repetitions >= 1");
+    }
+    if spec.k < 1 || spec.k > data.n {
+        bail!("sweep k = {} out of range 1..={}", spec.k, data.n);
+    }
+
+    // One fold assignment per repetition, shared by every config and
+    // strategy, derived exactly as the repetition harness derives it.
+    let folds: Vec<Folds> = (0..spec.repetitions)
+        .map(|r| Folds::new(data.n, spec.k, repetition_fold_seed(spec.seed, r)))
+        .collect();
+
+    let mut runs = Vec::with_capacity(learners.len() * spec.strategies.len() * spec.repetitions);
+    for learner in learners {
+        for &strategy in &spec.strategies {
+            for (r, f) in folds.iter().enumerate() {
+                let seed = repetition_engine_seed(spec.seed, r);
+                runs.push(RunSpec { learner, folds: f, seed, strategy });
+            }
+        }
+    }
+
+    let timer = Timer::start();
+    let engine = TreeCvExecutor::with_threads_knob(spec.strategies[0], spec.ordering, spec.threads);
+    // The pool size the executor will actually use (its own clamp,
+    // mirrored on the batch's total leaf count) — and, from it, the exact
+    // spawn count: one run_many call spawns iff the pool is multi-worker.
+    let threads_used = engine.threads.min(runs.len() * spec.k);
+    let results = engine.run_many(data, &runs);
+    let total_wall = timer.elapsed();
+    let pool_spawns = u64::from(threads_used > 1);
+
+    let mut cells = Vec::with_capacity(learners.len() * spec.strategies.len());
+    let mut results = results.into_iter();
+    for config in 0..learners.len() {
+        for &strategy in &spec.strategies {
+            let cell_runs: Vec<CvResult> = results.by_ref().take(spec.repetitions).collect();
+            let mut stats = RunningStats::default();
+            for res in &cell_runs {
+                stats.push(res.estimate);
+            }
+            let ops = cell_runs.last().expect("repetitions >= 1").ops.clone();
+            cells.push(SweepCell {
+                config,
+                strategy,
+                mean: stats.mean(),
+                std: stats.std(),
+                ops,
+                runs: cell_runs,
+            });
+        }
+    }
+    Ok(SweepOutcome { cells, threads: threads_used, total_wall, pool_spawns })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SyntheticMixture1d;
+    use crate::learner::histdensity::HistogramDensity;
+
+    fn spec(threads: usize) -> SweepSpec {
+        SweepSpec {
+            ordering: Ordering::Fixed,
+            strategies: vec![Strategy::Copy],
+            k: 8,
+            repetitions: 3,
+            seed: 11,
+            threads,
+        }
+    }
+
+    #[test]
+    fn cell_layout_and_aggregates() {
+        let data = SyntheticMixture1d::new(300, 141).generate();
+        let learners =
+            vec![HistogramDensity::new(-8.0, 8.0, 16), HistogramDensity::new(-8.0, 8.0, 64)];
+        let mut s = spec(2);
+        s.strategies = vec![Strategy::Copy, Strategy::SaveRevert];
+        let out = run_sweep(&learners, &data, &s).unwrap();
+        assert_eq!(out.cells.len(), 4); // 2 configs × 2 strategies
+        for (i, cell) in out.cells.iter().enumerate() {
+            assert_eq!(cell.config, i / 2);
+            assert_eq!(cell.runs.len(), 3);
+            let manual: f64 = cell.runs.iter().map(|r| r.estimate).sum::<f64>() / 3.0;
+            assert!((cell.mean - manual).abs() < 1e-12, "cell {i}");
+            assert!(cell.mean.is_finite());
+        }
+        // Histogram density has exact revert: each config's Copy and
+        // SaveRevert cells must agree bit for bit, run by run.
+        for c in 0..2 {
+            let (a, b) = (&out.cells[2 * c], &out.cells[2 * c + 1]);
+            for (x, y) in a.runs.iter().zip(&b.runs) {
+                assert_eq!(x.per_fold, y.per_fold, "config {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_specs() {
+        let data = SyntheticMixture1d::new(50, 142).generate();
+        let l = vec![HistogramDensity::new(-8.0, 8.0, 16)];
+        let empty: Vec<HistogramDensity> = Vec::new();
+        assert!(run_sweep(&empty, &data, &spec(1)).is_err());
+        let mut s = spec(1);
+        s.repetitions = 0;
+        assert!(run_sweep(&l, &data, &s).is_err());
+        let mut s = spec(1);
+        s.k = 51;
+        assert!(run_sweep(&l, &data, &s).is_err());
+        let mut s = spec(1);
+        s.strategies.clear();
+        assert!(run_sweep(&l, &data, &s).is_err());
+    }
+}

@@ -215,6 +215,63 @@ mod tests {
         }
     }
 
+    /// §4.1's communication asymmetry, pinned for k ∈ {4, 16, 64} at fixed
+    /// n: TreeCV's model traffic is Θ(k log k) — messages in
+    /// [2k⌊log₂k⌋, 2k(log₂(2k)+1) + 2k], independent of n — while the
+    /// naive data-shipping strategy moves exactly (k−1)·n rows, i.e.
+    /// Θ(n·k) bytes, growing linearly in k AND in n.
+    #[test]
+    fn comm_asymmetry_model_klogk_vs_data_nk() {
+        let l = Pegasos::new(54, 1e-4);
+        let n = 640;
+        let row_bytes = (54 * 4 + 4) as u64;
+        let mut prev_model_msgs = 0u64;
+        let mut prev_data_bytes = 0u64;
+        for k in [4usize, 16, 64] {
+            let (data, folds) = setup(n, k);
+            let cluster = Cluster::new(&data, &folds, NetworkModel::default());
+            let tree = cluster.treecv(&l);
+            let naive = cluster.standard_naive(&l);
+
+            // Naive data traffic: exactly (k−1)·n rows in k·(k−1) messages.
+            assert_eq!(naive.comm.data_bytes, (k as u64 - 1) * n as u64 * row_bytes, "k={k}");
+            assert_eq!(naive.comm.data_messages, (k * (k - 1)) as u64, "k={k}");
+            assert_eq!(naive.comm.model_messages, 0, "k={k}");
+
+            // TreeCV model traffic: Θ(k log k) messages, no data moved.
+            let lo = 2 * (k as u64) * (k as f64).log2().floor() as u64;
+            let hi = (2.0 * k as f64 * (((2 * k) as f64).log2() + 1.0) + 2.0 * k as f64) as u64;
+            assert!(
+                (lo..=hi).contains(&tree.comm.model_messages),
+                "k={k}: {} model messages outside [{lo}, {hi}]",
+                tree.comm.model_messages
+            );
+            assert_eq!(tree.comm.data_messages, 0, "k={k}");
+
+            // Both grow with k; the asymmetry in absolute volume holds at
+            // every k (models are 4·54+ bytes, chunks are n/k rows).
+            assert!(tree.comm.model_messages > prev_model_msgs, "k={k}");
+            assert!(naive.comm.data_bytes > prev_data_bytes, "k={k}");
+            prev_model_msgs = tree.comm.model_messages;
+            prev_data_bytes = naive.comm.data_bytes;
+            assert!(tree.comm.model_bytes < naive.comm.data_bytes, "k={k}");
+        }
+
+        // Model traffic is independent of n (the whole point of shipping
+        // models): doubling n keeps message counts fixed while the naive
+        // strategy's bytes double.
+        let k = 16;
+        let (d1, f1) = setup(n, k);
+        let (d2, f2) = setup(2 * n, k);
+        let c1 = Cluster::new(&d1, &f1, NetworkModel::default());
+        let c2 = Cluster::new(&d2, &f2, NetworkModel::default());
+        assert_eq!(c1.treecv(&l).comm.model_messages, c2.treecv(&l).comm.model_messages);
+        assert_eq!(
+            2 * c1.standard_naive(&l).comm.data_bytes,
+            c2.standard_naive(&l).comm.data_bytes
+        );
+    }
+
     #[test]
     fn naive_moves_data_quadratically() {
         let l = Pegasos::new(54, 1e-4);

@@ -13,7 +13,7 @@
 //! Argument parsing is in-tree (`--flag value` / `--flag` booleans); run
 //! `repro help` for usage.
 
-use treecv::config::{Engine, ExperimentConfig, OrderingCfg, StrategyCfg, Task};
+use treecv::config::{Engine, ExperimentConfig, OrderingCfg, StrategyCfg, SweepGrid, Task};
 use treecv::coordinator::{self, paper};
 use treecv::report::{Json, ToJson};
 use treecv::Result;
@@ -37,6 +37,8 @@ COMMANDS
                                    (the executor snapshots only at its
                                    fork frontier); a hard error on
                                    standard/merge, never silently copy
+             --threads 0           worker-pool size for parallel_treecv
+                                   (0 = all cores)
              --lambda 1e-6  --alpha 0  --data FILE.libsvm
              --config FILE         load a config file (flags override)
              --json                emit JSON
@@ -46,6 +48,14 @@ COMMANDS
   loocv      LOOCV headline.      --task --n --standard-max-n --seed
   dist       Distributed sim.     --n --ks --seed
   grid       λ grid search.       --n --k --log-lambdas -7,-6,-5 --seed
+  sweep      Hyperparameter sweep: every (value × repetition) TreeCV run
+             through ONE pooled work-stealing executor; prints a table
+             ranked by mean loss (best first).
+             --task pegasos|ridge|lsqsgd
+             --sweep lambda=1e-3,1e-4,1e-5   (lsqsgd: alpha=...)
+             --k 10  --n 20000  --reps 20  --seed 42
+             --threads 0          pool size (0 = all cores)
+             --randomized --save-revert --json --config FILE
   selfcheck  Verify PJRT runtime + artifacts.
   help       Show this message.
 ";
@@ -162,6 +172,7 @@ fn main() -> Result<()> {
             cfg.n = args.get_parse("n", cfg.n)?;
             cfg.seed = args.get_parse("seed", cfg.seed)?;
             cfg.repetitions = args.get_parse("reps", cfg.repetitions)?;
+            cfg.threads = args.get_parse("threads", cfg.threads)?;
             if args.has("randomized") {
                 cfg.ordering = OrderingCfg::Randomized;
             }
@@ -227,6 +238,40 @@ fn main() -> Result<()> {
             let lls = args.get_f64_list("log-lambdas", vec![-7.0, -6.0, -5.0, -4.0, -3.0])?;
             let seed = args.get_parse("seed", 42u64)?;
             print!("{}", paper::grid_search(n, k, &lls, seed)?);
+        }
+        "sweep" => {
+            let args = Args::parse(rest, &["randomized", "save-revert", "json"])?;
+            let mut cfg = match args.get("config") {
+                Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+                None => ExperimentConfig::default(),
+            };
+            if let Some(t) = args.get("task") {
+                cfg.task = Task::parse(t)?;
+            }
+            cfg.n = args.get_parse("n", cfg.n)?;
+            cfg.seed = args.get_parse("seed", cfg.seed)?;
+            cfg.repetitions = args.get_parse("reps", cfg.repetitions)?;
+            cfg.threads = args.get_parse("threads", cfg.threads)?;
+            let default_k = if cfg.ks.len() == 1 { cfg.ks[0] } else { 10 };
+            cfg.ks = vec![args.get_parse("k", default_k)?];
+            if args.has("randomized") {
+                cfg.ordering = OrderingCfg::Randomized;
+            }
+            if args.has("save-revert") {
+                cfg.strategy = StrategyCfg::SaveRevert;
+            }
+            if let Some(g) = args.get("sweep") {
+                cfg.sweep = Some(SweepGrid::parse(g)?);
+            }
+            if let Some(d) = args.get("data") {
+                cfg.data_path = Some(d.to_string());
+            }
+            let report = coordinator::run_sweep(&cfg)?;
+            if args.has("json") {
+                println!("{}", report.to_json().render_pretty());
+            } else {
+                print!("{}", coordinator::format_sweep_table(&report));
+            }
         }
         "selfcheck" => paper::selfcheck()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),

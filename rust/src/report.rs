@@ -145,6 +145,38 @@ impl ToJson for crate::metrics::OpCounts {
     }
 }
 
+impl ToJson for crate::coordinator::SweepReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::str(self.task.name())),
+            ("n", Json::num(self.n as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("repetitions", Json::num(self.repetitions as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("pool_spawns", Json::num(self.pool_spawns as f64)),
+            ("total_wall_secs", Json::Num(self.total_wall_secs)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("param", Json::str(p.param.clone())),
+                                ("value", Json::Num(p.value)),
+                                ("strategy", Json::str(p.strategy.name())),
+                                ("mean", Json::Num(p.mean)),
+                                ("std", Json::Num(p.std)),
+                                ("ops", p.ops.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

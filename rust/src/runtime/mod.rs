@@ -10,10 +10,14 @@
 //!
 //! ## Feature gating
 //!
-//! The PJRT client lives behind the `xla` cargo feature because the
-//! external `xla` crate is not available in the offline build image.
-//! Without the feature this module compiles an API-compatible stub:
-//! [`PjrtRuntime`] constructors return a clean error, so the CLI
+//! The PJRT client needs the external `xla` crate, which is not available
+//! in the offline build image — so the real implementation sits behind
+//! `cfg(treecv_pjrt)`, which `build.rs` emits only when BOTH the `xla`
+//! cargo feature is enabled AND `TREECV_XLA_RUNTIME=1` is set (the
+//! environment that adds the `xla` dependency to Cargo.toml sets it).
+//! Everywhere else — including a plain `--features xla` build, which CI's
+//! feature-matrix job exercises — this module compiles an API-compatible
+//! stub: [`PjrtRuntime`] constructors return a clean error, so the CLI
 //! `selfcheck`, the `runtime_xla` bench, the `xla_pipeline` example and
 //! the runtime integration tests all build, run, and skip/fail gracefully
 //! instead of breaking the build. [`Manifest`] parsing and artifact
@@ -22,16 +26,16 @@
 pub mod xla_learner;
 
 use crate::Result;
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 use anyhow::anyhow;
 use anyhow::Context as _;
 use std::path::{Path, PathBuf};
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 use std::{
     collections::HashMap,
     sync::{Arc, Mutex},
 };
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 use std::sync::Arc;
 
 /// Default artifact directory, overridable via `TREECV_ARTIFACTS`.
@@ -51,13 +55,13 @@ pub fn artifacts_available() -> bool {
 // ---------------------------------------------------------------------------
 
 /// A compiled, loaded XLA executable plus its artifact identity.
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 pub struct Executable {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
 
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 impl Executable {
     /// Execute with literal inputs; returns the flattened tuple outputs.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
@@ -78,14 +82,14 @@ impl Executable {
 /// Compilation is the expensive step (tens of ms); every CV run reuses the
 /// cached executables, so the per-chunk cost is literal marshaling +
 /// execution only.
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
     dir: PathBuf,
 }
 
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 impl PjrtRuntime {
     /// Create a CPU-backed runtime reading from [`artifacts_dir`].
     pub fn cpu() -> Result<Self> {
@@ -136,32 +140,33 @@ impl PjrtRuntime {
 }
 
 /// Build an `f32` literal of the given shape from a slice.
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 pub fn literal_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(values);
     lit.reshape(dims).map_err(|e| anyhow!("reshaping literal to {dims:?}: {e:?}"))
 }
 
 /// Build a scalar f32 literal.
-#[cfg(feature = "xla")]
+#[cfg(treecv_pjrt)]
 pub fn scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::from(v)
 }
 
 // ---------------------------------------------------------------------------
-// Stub implementation (no `xla` feature): same API, constructors error.
+// Stub implementation (cfg(treecv_pjrt) off — no feature, or feature
+// without TREECV_XLA_RUNTIME): same API, constructors error.
 // ---------------------------------------------------------------------------
 
 /// Stand-in for `xla::Literal` when PJRT support is compiled out. Values of
 /// this type cannot be constructed at runtime (every producer errors
 /// first), so its accessors are unreachable.
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 #[derive(Debug, Clone)]
 pub struct Literal {
     _unconstructible: std::convert::Infallible,
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 impl Literal {
     /// Mirror of `xla::Literal::to_vec`; never reachable in stub builds.
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
@@ -170,13 +175,13 @@ impl Literal {
 }
 
 /// Stub [`Executable`]: carries the artifact name only.
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 pub struct Executable {
     pub name: String,
     _unconstructible: std::convert::Infallible,
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 impl Executable {
     /// Mirror of the PJRT execution entry point; never reachable because
     /// no [`Executable`] can be constructed without the `xla` feature.
@@ -187,12 +192,12 @@ impl Executable {
 
 /// Stub [`PjrtRuntime`]: constructors return a clean "built without PJRT"
 /// error so callers degrade gracefully (skip, or surface the message).
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 pub struct PjrtRuntime {
     _unconstructible: std::convert::Infallible,
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 impl PjrtRuntime {
     fn unavailable<T>() -> Result<T> {
         anyhow::bail!(
@@ -224,7 +229,7 @@ impl PjrtRuntime {
 }
 
 /// Stub literal builder; errors like the runtime constructors.
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 pub fn literal_f32(_values: &[f32], _dims: &[i64]) -> Result<Literal> {
     anyhow::bail!("literal_f32 requires the `xla` cargo feature")
 }
@@ -232,7 +237,7 @@ pub fn literal_f32(_values: &[f32], _dims: &[i64]) -> Result<Literal> {
 /// Stub scalar builder. Unreachable in stub builds: the only callers are
 /// the XLA learners, which cannot be constructed without a [`PjrtRuntime`]
 /// (whose constructors always error here).
-#[cfg(not(feature = "xla"))]
+#[cfg(not(treecv_pjrt))]
 pub fn scalar_f32(_v: f32) -> Literal {
     unreachable!("scalar_f32 requires the `xla` cargo feature")
 }
@@ -352,7 +357,7 @@ mod tests {
         assert!(format!("{err}").contains("make artifacts"));
     }
 
-    #[cfg(not(feature = "xla"))]
+    #[cfg(not(treecv_pjrt))]
     #[test]
     fn stub_runtime_errors_cleanly() {
         let err = PjrtRuntime::cpu().err().expect("stub must error");

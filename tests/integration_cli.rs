@@ -21,7 +21,7 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_commands() {
     let text = run_ok(&["help"]);
-    for cmd in ["cv", "table2", "figure2", "loocv", "dist", "grid", "selfcheck"] {
+    for cmd in ["cv", "table2", "figure2", "loocv", "dist", "grid", "sweep", "selfcheck"] {
         assert!(text.contains(cmd), "missing {cmd}");
     }
 }
@@ -136,6 +136,58 @@ fn dist_reports_comm_columns() {
 fn grid_reports_best_lambda() {
     let text = run_ok(&["grid", "--n", "400", "--k", "4", "--log-lambdas", "-4,-3"]);
     assert!(text.contains("best:"));
+}
+
+#[test]
+fn sweep_prints_ranked_table() {
+    let text = run_ok(&[
+        "sweep", "--task", "pegasos", "--n", "400", "--k", "5", "--reps", "2", "--sweep",
+        "lambda=1e-3,1e-4,1e-5", "--threads", "2", "--seed", "9",
+    ]);
+    assert!(text.contains("pool_spawns=1"), "one pool for the whole sweep:\n{text}");
+    assert!(text.contains("rank"), "{text}");
+    assert!(text.contains("lambda"), "{text}");
+    // Header + column line + one row per grid value.
+    assert_eq!(text.lines().count(), 5, "{text}");
+    // Rows are ranked by mean loss ascending (mean is the 5th column).
+    let means: Vec<f64> = text
+        .lines()
+        .skip(2)
+        .map(|l| l.split_whitespace().nth(4).unwrap().parse().unwrap())
+        .collect();
+    assert!(means.windows(2).all(|w| w[0] <= w[1]), "not ranked: {means:?}");
+}
+
+#[test]
+fn sweep_json_output() {
+    let text = run_ok(&[
+        "sweep", "--task", "ridge", "--n", "200", "--k", "4", "--reps", "2", "--sweep",
+        "lambda=0.5,1.0", "--threads", "2", "--json",
+    ]);
+    assert!(text.trim_start().starts_with('{'), "{text}");
+    assert!(text.contains("\"points\""), "{text}");
+    assert!(text.contains("\"pool_spawns\": 1"), "{text}");
+    assert_eq!(text.matches("\"mean\"").count(), 2);
+}
+
+#[test]
+fn sweep_malformed_grid_exits_nonzero() {
+    let cases: [&[&str]; 5] = [
+        // Unparsable value.
+        &["sweep", "--task", "pegasos", "--n", "100", "--sweep", "lambda=abc"],
+        // No `=` at all.
+        &["sweep", "--task", "pegasos", "--n", "100", "--sweep", "lambda"],
+        // Task without a sweepable hyperparameter.
+        &["sweep", "--task", "density", "--n", "100", "--sweep", "lambda=0.1"],
+        // Wrong parameter for the task.
+        &["sweep", "--task", "pegasos", "--n", "100", "--sweep", "alpha=0.1"],
+        // No grid given.
+        &["sweep", "--task", "pegasos", "--n", "100"],
+    ];
+    for args in cases {
+        let out = repro().args(args).output().unwrap();
+        assert!(!out.status.success(), "`repro {args:?}` should fail");
+    }
 }
 
 #[test]

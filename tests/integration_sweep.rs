@@ -1,0 +1,234 @@
+//! Sweep-scheduler equivalence battery: a sweep's `C configs × strategies
+//! × r repetitions` runs all execute through ONE pooled executor, and
+//! every run must be **bit-identical** to running that configuration
+//! alone — same per_fold vector, same estimate, same work counters —
+//! across worker counts {1, 3, 8} and both model-preservation
+//! strategies, under both feeding orders. Plus: run-twice determinism of
+//! the full sweep table, and the pool-spawn accounting (one pool per
+//! sweep; one per run for standalone dispatch; zero inline).
+//!
+//! Every test takes [`POOL_LOCK`]: the spawn counter is process-wide, so
+//! pool users in this binary are serialized to keep deltas exact.
+
+use std::sync::{Mutex, MutexGuard};
+use treecv::cv::executor::{pool_spawn_count, TreeCvExecutor};
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::parallel::ParallelTreeCv;
+use treecv::cv::stats::{repetition_engine_seed, repetition_fold_seed};
+use treecv::cv::sweep::{run_sweep, SweepSpec};
+use treecv::cv::Strategy;
+use treecv::data::synth::{SyntheticCovertype, SyntheticMixture1d};
+use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::pegasos::Pegasos;
+
+/// Serializes every pool-creating test in this binary (see module docs).
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn sweep_spec(strategies: Vec<Strategy>, k: usize, reps: usize, threads: usize) -> SweepSpec {
+    SweepSpec { ordering: Ordering::Fixed, strategies, k, repetitions: reps, seed: 42, threads }
+}
+
+/// The headline property: each (config, strategy, repetition) run of a
+/// sweep is bit-identical to running that config alone through the
+/// `ParallelTreeCv` facade (which delegates to the executor) at the same
+/// worker count — per-fold scores, estimate, and the §4.1 counters.
+/// PEGASOS has snapshot-undo (exact revert), so this holds bitwise even
+/// for SaveRevert at any pool size.
+#[test]
+fn sweep_runs_bit_identical_to_standalone_across_workers_and_strategies() {
+    let _g = lock();
+    let n = 600;
+    let data = SyntheticCovertype::new(n, 51).generate();
+    let lambdas = [1e-3, 1e-4, 1e-5];
+    let learners: Vec<Pegasos> = lambdas.iter().map(|&l| Pegasos::new(54, l)).collect();
+    let (k, reps) = (11usize, 3usize);
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        for threads in [1usize, 3, 8] {
+            let spec = sweep_spec(vec![strategy], k, reps, threads);
+            let out = run_sweep(&learners, &data, &spec).unwrap();
+            assert_eq!(out.cells.len(), learners.len());
+            for (c, cell) in out.cells.iter().enumerate() {
+                assert_eq!(cell.config, c);
+                assert_eq!(cell.runs.len(), reps);
+                for (r, run) in cell.runs.iter().enumerate() {
+                    let folds = Folds::new(n, k, repetition_fold_seed(spec.seed, r));
+                    let alone = ParallelTreeCv {
+                        strategy,
+                        ordering: Ordering::Fixed,
+                        seed: repetition_engine_seed(spec.seed, r),
+                        fork_depth: 0,
+                        threads: Some(threads),
+                    }
+                    .run(&learners[c], &data, &folds);
+                    let ctx =
+                        format!("lambda={} rep={r} threads={threads} {strategy:?}", lambdas[c]);
+                    assert_eq!(run.per_fold, alone.per_fold, "{ctx}");
+                    assert_eq!(run.estimate.to_bits(), alone.estimate.to_bits(), "{ctx}");
+                    assert_eq!(run.ops.points_updated, alone.ops.points_updated, "{ctx}");
+                    assert_eq!(run.ops.update_calls, alone.ops.update_calls, "{ctx}");
+                    assert_eq!(run.ops.model_copies, alone.ops.model_copies, "{ctx}");
+                    assert_eq!(run.ops.model_restores, alone.ops.model_restores, "{ctx}");
+                    assert_eq!(run.ops.evals, alone.ops.evals, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// Same property under randomized feeding order: permutation streams are
+/// per-(run-seed, node), so pooling runs cannot perturb them.
+#[test]
+fn sweep_randomized_ordering_bit_identical_to_standalone() {
+    let _g = lock();
+    let n = 420;
+    let data = SyntheticMixture1d::new(n, 57).generate();
+    let learners =
+        vec![HistogramDensity::new(-8.0, 8.0, 16), HistogramDensity::new(-8.0, 8.0, 48)];
+    let mut spec = sweep_spec(vec![Strategy::Copy], 9, 2, 3);
+    spec.ordering = Ordering::Randomized;
+    let out = run_sweep(&learners, &data, &spec).unwrap();
+    for (c, cell) in out.cells.iter().enumerate() {
+        for (r, run) in cell.runs.iter().enumerate() {
+            let folds = Folds::new(n, 9, repetition_fold_seed(spec.seed, r));
+            let alone = TreeCvExecutor::new(
+                Strategy::Copy,
+                Ordering::Randomized,
+                repetition_engine_seed(spec.seed, r),
+                3,
+            )
+            .run(&learners[c], &data, &folds);
+            assert_eq!(run.per_fold, alone.per_fold, "config {c} rep {r}");
+            assert_eq!(run.ops.points_permuted, alone.ops.points_permuted, "config {c} rep {r}");
+        }
+    }
+}
+
+/// Run-twice determinism: the full sweep table — means, stds, every run's
+/// per-fold vector and counters — must be identical across invocations,
+/// no matter how the pool schedules or steals.
+#[test]
+fn sweep_table_is_run_twice_deterministic() {
+    let _g = lock();
+    let data = SyntheticMixture1d::new(500, 52).generate();
+    let learners = vec![
+        HistogramDensity::new(-8.0, 8.0, 16),
+        HistogramDensity::new(-8.0, 8.0, 32),
+        HistogramDensity::new(-8.0, 8.0, 64),
+    ];
+    let mut spec = sweep_spec(vec![Strategy::Copy, Strategy::SaveRevert], 13, 4, 6);
+    spec.ordering = Ordering::Randomized;
+    spec.seed = 7;
+    let a = run_sweep(&learners, &data, &spec).unwrap();
+    let b = run_sweep(&learners, &data, &spec).unwrap();
+    assert_eq!(a.cells.len(), 6); // 3 configs × 2 strategies
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(x.config, y.config);
+        assert_eq!(x.strategy, y.strategy);
+        assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+        assert_eq!(x.std.to_bits(), y.std.to_bits());
+        for (ra, rb) in x.runs.iter().zip(&y.runs) {
+            assert_eq!(ra.per_fold, rb.per_fold);
+            assert_eq!(ra.ops.points_updated, rb.ops.points_updated);
+            assert_eq!(ra.ops.model_copies, rb.ops.model_copies);
+            assert_eq!(ra.ops.model_restores, rb.ops.model_restores);
+        }
+    }
+    // Histogram density reverts exactly, so within a config the Copy and
+    // SaveRevert cells must also agree bit for bit.
+    for c in 0..3 {
+        let (copy, sr) = (&a.cells[2 * c], &a.cells[2 * c + 1]);
+        for (x, y) in copy.runs.iter().zip(&sr.runs) {
+            assert_eq!(x.per_fold, y.per_fold, "config {c}");
+        }
+    }
+}
+
+/// The acceptance-criterion accounting: a whole sweep of C configs ×
+/// strategies × r repetitions spawns EXACTLY one worker pool; the same
+/// runs dispatched standalone spawn one pool each; a `threads = 1` sweep
+/// runs inline and spawns none.
+#[test]
+fn whole_sweep_uses_exactly_one_pool() {
+    let _g = lock();
+    let n = 400;
+    let data = SyntheticCovertype::new(n, 53).generate();
+    let lambdas = [1e-3, 1e-4, 1e-5, 1e-6];
+    let learners: Vec<Pegasos> = lambdas.iter().map(|&l| Pegasos::new(54, l)).collect();
+    let (k, reps) = (8usize, 3usize);
+
+    // 4 configs × 2 strategies × 3 reps = 24 runs, one pool.
+    let spec = sweep_spec(vec![Strategy::Copy, Strategy::SaveRevert], k, reps, 3);
+    let before = pool_spawn_count();
+    let out = run_sweep(&learners, &data, &spec).unwrap();
+    assert_eq!(pool_spawn_count() - before, 1, "sweep must spawn exactly one pool");
+    assert_eq!(out.pool_spawns, 1);
+    assert_eq!(out.cells.len(), 8);
+
+    // Standalone dispatch of the same 24 runs pays 24 pool spawns.
+    let before = pool_spawn_count();
+    for learner in &learners {
+        for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+            for r in 0..reps {
+                let folds = Folds::new(n, k, repetition_fold_seed(spec.seed, r));
+                let _ = TreeCvExecutor::new(
+                    strategy,
+                    Ordering::Fixed,
+                    repetition_engine_seed(spec.seed, r),
+                    3,
+                )
+                .run(learner, &data, &folds);
+            }
+        }
+    }
+    assert_eq!(pool_spawn_count() - before, 24, "standalone dispatch spawns one pool per run");
+
+    // Inline sweeps (threads = 1) never spawn.
+    let spec1 = sweep_spec(vec![Strategy::Copy], k, reps, 1);
+    let before = pool_spawn_count();
+    let out = run_sweep(&learners, &data, &spec1).unwrap();
+    assert_eq!(pool_spawn_count() - before, 0, "threads=1 must run inline");
+    assert_eq!(out.pool_spawns, 0);
+}
+
+/// Fold assignments are shared across configs: two identical learner
+/// configs in one grid must produce bit-identical cells (same folds, same
+/// seeds — the hyperparameter really is the only degree of freedom).
+#[test]
+fn identical_configs_share_partitionings() {
+    let _g = lock();
+    let data = SyntheticCovertype::new(350, 54).generate();
+    let learners = vec![Pegasos::new(54, 1e-4), Pegasos::new(54, 1e-4)];
+    let out = run_sweep(&learners, &data, &sweep_spec(vec![Strategy::Copy], 7, 3, 3)).unwrap();
+    let (a, b) = (&out.cells[0], &out.cells[1]);
+    assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+    assert_eq!(a.std.to_bits(), b.std.to_bits());
+    for (x, y) in a.runs.iter().zip(&b.runs) {
+        assert_eq!(x.per_fold, y.per_fold);
+    }
+}
+
+/// The coordinator-level sweep (what `repro sweep` drives) reports exact
+/// pool accounting and a table ranked by mean loss.
+#[test]
+fn coordinator_sweep_ranked_and_pooled() {
+    let _g = lock();
+    use treecv::config::{ExperimentConfig, SweepGrid, Task};
+    let cfg = ExperimentConfig {
+        task: Task::Pegasos,
+        n: 400,
+        ks: vec![5],
+        repetitions: 2,
+        seed: 3,
+        threads: 3,
+        sweep: Some(SweepGrid::parse("lambda=1e-3,1e-4,1e-5").unwrap()),
+        ..ExperimentConfig::default()
+    };
+    let report = treecv::coordinator::run_sweep(&cfg).unwrap();
+    assert_eq!(report.pool_spawns, 1);
+    assert_eq!(report.points.len(), 3);
+    assert!(report.points.windows(2).all(|w| w[0].mean <= w[1].mean), "ranked by mean");
+}
