@@ -1,0 +1,94 @@
+//! Erased-vs-generic dispatch overhead: what does the object-safe learner
+//! layer (`learner::erased`) cost on top of the monomorphized path?
+//!
+//! Two learners bracket the range: PEGASOS (tiny per-point work — every
+//! vtable call is maximally visible) and HistogramDensity (integer bin
+//! bumps — similar, with exact-revert SaveRevert exercised too). Each
+//! measurement runs the SAME computation through `TreeCvExecutor::run`
+//! (generic) and `TreeCvExecutor::run_erased` (erased) and asserts the
+//! results are **bit-identical** in-bench — per-fold scores, estimate,
+//! and work counters — so a regression in the equivalence contract fails
+//! the bench before any number is reported.
+//!
+//! Run: `cargo bench --bench dyn_overhead` (env `DYN_N`, `DYN_K`,
+//! `DYN_THREADS`).
+
+use treecv::benchkit::Bench;
+use treecv::cv::executor::TreeCvExecutor;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::{CvResult, Strategy};
+use treecv::data::synth::{SyntheticCovertype, SyntheticMixture1d};
+use treecv::learner::erased::{Erased, ErasedLearner};
+use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::pegasos::Pegasos;
+
+fn assert_bit_identical(generic: &CvResult, erased: &CvResult, ctx: &str) {
+    assert_eq!(generic.per_fold, erased.per_fold, "{ctx}: per_fold diverged");
+    assert_eq!(generic.estimate.to_bits(), erased.estimate.to_bits(), "{ctx}: estimate");
+    assert_eq!(generic.ops.points_updated, erased.ops.points_updated, "{ctx}: points_updated");
+    assert_eq!(generic.ops.model_copies, erased.ops.model_copies, "{ctx}: model_copies");
+    assert_eq!(generic.ops.model_restores, erased.ops.model_restores, "{ctx}: model_restores");
+    assert_eq!(generic.ops.evals, erased.ops.evals, "{ctx}: evals");
+}
+
+fn main() {
+    let n: usize = std::env::var("DYN_N").ok().and_then(|v| v.parse().ok()).unwrap_or(16_384);
+    let k: usize = std::env::var("DYN_K").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    let threads: usize = std::env::var("DYN_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+
+    println!("== erased vs generic dispatch (n = {n}, k = {k}, {threads} workers) ==");
+    let mut bench = Bench::default();
+
+    // PEGASOS, Copy strategy: cheapest per-point update in the crate.
+    {
+        let data = SyntheticCovertype::new(n, 21).generate();
+        let folds = Folds::new(n, k, 22);
+        let learner = Pegasos::new(data.d, 1e-4);
+        let erased: Box<dyn ErasedLearner> = Erased::boxed(learner.clone());
+        let engine = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, threads);
+        let g = bench.run("dyn/pegasos/generic", || {
+            std::hint::black_box(engine.run(&learner, &data, &folds));
+        });
+        let t_generic = g.median();
+        let e = bench.run("dyn/pegasos/erased", || {
+            std::hint::black_box(engine.run_erased(&*erased, &data, &folds));
+        });
+        println!("  erased/generic ratio: {:.3}x", e.median() / t_generic.max(1e-12));
+
+        let want = engine.run(&learner, &data, &folds);
+        let got = engine.run_erased(&*erased, &data, &folds);
+        assert_bit_identical(&want, &got, "pegasos/copy");
+    }
+
+    // HistogramDensity, both strategies (exact revert).
+    {
+        let data = SyntheticMixture1d::new(n, 23).generate();
+        let folds = Folds::new(n, k, 24);
+        let learner = HistogramDensity::new(-8.0, 8.0, 64);
+        let erased: Box<dyn ErasedLearner> = Erased::boxed(learner.clone());
+        for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+            let tag = match strategy {
+                Strategy::Copy => "copy",
+                Strategy::SaveRevert => "save_revert",
+            };
+            let engine = TreeCvExecutor::new(strategy, Ordering::Fixed, 5, threads);
+            let g = bench.run(&format!("dyn/histdensity/{tag}/generic"), || {
+                std::hint::black_box(engine.run(&learner, &data, &folds));
+            });
+            let t_generic = g.median();
+            let e = bench.run(&format!("dyn/histdensity/{tag}/erased"), || {
+                std::hint::black_box(engine.run_erased(&*erased, &data, &folds));
+            });
+            println!("  erased/generic ratio: {:.3}x", e.median() / t_generic.max(1e-12));
+
+            let want = engine.run(&learner, &data, &folds);
+            let got = engine.run_erased(&*erased, &data, &folds);
+            assert_bit_identical(&want, &got, &format!("histdensity/{tag}"));
+        }
+    }
+
+    println!("\nCSV summary:\n{}", bench.csv());
+}

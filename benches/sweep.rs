@@ -9,7 +9,7 @@
 //! Run: `cargo bench --bench sweep` (env `SWEEP_N`, `SWEEP_REPS`).
 
 use treecv::benchkit::Bench;
-use treecv::cv::executor::{pool_spawn_count, TreeCvExecutor};
+use treecv::cv::executor::TreeCvExecutor;
 use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::stats::{repetition_engine_seed, repetition_fold_seed};
 use treecv::cv::sweep::{run_sweep, SweepSpec};
@@ -62,10 +62,10 @@ fn main() {
     });
     println!("  one-pool speedup over sequential dispatch: {:.2}x", t_seq / pooled.median());
 
-    // The correctness half of the claim: bit-identical results, one pool.
-    let before = pool_spawn_count();
+    // The correctness half of the claim: bit-identical results, one pool
+    // (read off the sweep executor's per-pool counter).
     let out = run_sweep(&learners, &data, &spec).unwrap();
-    let sweep_spawns = pool_spawn_count() - before;
+    let sweep_spawns = out.pool_spawns;
     for (c, cell) in out.cells.iter().enumerate() {
         for (r, run) in cell.runs.iter().enumerate() {
             let folds = Folds::new(n, k, repetition_fold_seed(seed, r));

@@ -16,7 +16,11 @@ use anyhow::{bail, Context};
 use std::path::Path;
 
 /// Which (learner, dataset, loss) triple to run — the paper's two
-/// experimental tasks plus the extra learners this library ships.
+/// experimental tasks plus every other incremental learner this library
+/// ships. Each variant has exactly one entry in the coordinator's learner
+/// registry (`coordinator::registry`), which holds the dataset family,
+/// the constructor-from-config closure, merge support and the sweepable
+/// hyperparameter; a registry test pins the bijection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Task {
     /// PEGASOS on covertype-like data, misclassification loss (Table 2 top).
@@ -31,11 +35,36 @@ pub enum Task {
     NaiveBayes,
     /// Online ridge on yearmsd-like data (exact-LOOCV comparator).
     Ridge,
+    /// k-NN classification on covertype-like data (Mullin & Sukthankar
+    /// exactness oracle with real predictions).
+    Knn,
+    /// Online perceptron on covertype-like data (sparse save/revert logs).
+    Perceptron,
+    /// Multiset structural oracle: records training multisets; its "loss"
+    /// is a deterministic hash fingerprint in [0, 1), a correctness probe
+    /// with no statistical meaning (so it cannot be ranked in `select`).
+    Multiset,
+    /// PEGASOS through the AOT XLA artifacts (needs the PJRT runtime).
+    XlaPegasos,
+    /// LSQSGD through the AOT XLA artifacts (needs the PJRT runtime).
+    XlaLsqSgd,
 }
 
 impl Task {
     pub fn all() -> &'static [Task] {
-        &[Task::Pegasos, Task::Lsqsgd, Task::Kmeans, Task::Density, Task::NaiveBayes, Task::Ridge]
+        &[
+            Task::Pegasos,
+            Task::Lsqsgd,
+            Task::Kmeans,
+            Task::Density,
+            Task::NaiveBayes,
+            Task::Ridge,
+            Task::Knn,
+            Task::Perceptron,
+            Task::Multiset,
+            Task::XlaPegasos,
+            Task::XlaLsqSgd,
+        ]
     }
 
     pub fn parse(s: &str) -> Result<Task> {
@@ -46,6 +75,11 @@ impl Task {
             "density" => Task::Density,
             "naive_bayes" | "naive-bayes" => Task::NaiveBayes,
             "ridge" => Task::Ridge,
+            "knn" => Task::Knn,
+            "perceptron" => Task::Perceptron,
+            "multiset" => Task::Multiset,
+            "xla_pegasos" | "xla-pegasos" => Task::XlaPegasos,
+            "xla_lsqsgd" | "xla-lsqsgd" => Task::XlaLsqSgd,
             other => bail!("unknown task `{other}`"),
         })
     }
@@ -58,6 +92,11 @@ impl Task {
             Task::Density => "density",
             Task::NaiveBayes => "naive_bayes",
             Task::Ridge => "ridge",
+            Task::Knn => "knn",
+            Task::Perceptron => "perceptron",
+            Task::Multiset => "multiset",
+            Task::XlaPegasos => "xla_pegasos",
+            Task::XlaLsqSgd => "xla_lsqsgd",
         }
     }
 }
@@ -228,6 +267,97 @@ impl SweepGrid {
     }
 }
 
+/// One hyperparameter override of a [`SelectedLearner`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamOverride {
+    /// Hyperparameter name, e.g. `lambda`.
+    pub name: String,
+    /// Parsed value.
+    pub value: f64,
+    /// The user's original spelling of the value, preserved verbatim in
+    /// report labels and round-tripped config text (so `lambda=1.0` is
+    /// never rewritten as `lambda=1e0`).
+    pub text: String,
+}
+
+/// One learner of a model-selection run: a task plus an optional single
+/// hyperparameter override, written `task` or `task:param=value` (e.g.
+/// `pegasos:lambda=1e-4`). Which parameter names a task accepts is decided
+/// by the coordinator's registry (same rule as `--sweep`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectedLearner {
+    pub task: Task,
+    /// Optional hyperparameter override.
+    pub param: Option<ParamOverride>,
+}
+
+impl SelectedLearner {
+    /// Display label for report rows: `pegasos(lambda=1e-4)` / `knn`.
+    pub fn label(&self) -> String {
+        match &self.param {
+            Some(p) => format!("{}({}={})", self.task.name(), p.name, p.text),
+            None => self.task.name().to_string(),
+        }
+    }
+}
+
+/// The learner axis of a model-selection run (`repro select`): a
+/// comma-separated list of [`SelectedLearner`]s, written
+/// `task[:param=value],task[:param=value],...` — e.g.
+/// `pegasos:lambda=1e-4,naive_bayes,knn,perceptron`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectList {
+    pub entries: Vec<SelectedLearner>,
+}
+
+impl SelectList {
+    /// Parse the `task[:param=value],...` syntax.
+    pub fn parse(s: &str) -> Result<SelectList> {
+        let mut entries = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("select list `{s}`: empty learner entry");
+            }
+            let (task, param) = match part.split_once(':') {
+                None => (Task::parse(part)?, None),
+                Some((task, rest)) => {
+                    let Some((p, v)) = rest.split_once('=') else {
+                        bail!("select entry `{part}`: expected `task:param=value`");
+                    };
+                    let text = v.trim().to_string();
+                    let value: f64 = text
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("select entry `{part}`: bad value: {e}"))?;
+                    if !value.is_finite() {
+                        bail!("select entry `{part}`: non-finite value");
+                    }
+                    let over = ParamOverride { name: p.trim().to_string(), value, text };
+                    (Task::parse(task.trim())?, Some(over))
+                }
+            };
+            entries.push(SelectedLearner { task, param });
+        }
+        if entries.is_empty() {
+            bail!("select list `{s}`: needs at least one learner");
+        }
+        Ok(SelectList { entries })
+    }
+
+    /// Render back to the `task[:param=value],...` syntax (round-trips
+    /// through [`Self::parse`]).
+    pub fn to_list_string(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| match &e.param {
+                Some(p) => format!("{}:{}={}", e.task.name(), p.name, p.text),
+                None => e.task.name().to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -243,8 +373,9 @@ pub struct ExperimentConfig {
     pub repetitions: usize,
     /// Master seed.
     pub seed: u64,
-    /// PEGASOS regularizer.
-    pub lambda: f64,
+    /// Regularizer override for λ-parameterized tasks; `None` means the
+    /// task's registry default (pegasos/xla_pegasos: 1e-6; ridge: 1.0).
+    pub lambda: Option<f64>,
     /// LSQSGD step size; `0.0` means the paper's n^{-1/2} rule.
     pub alpha: f64,
     /// Optional LIBSVM file to load instead of the synthetic dataset.
@@ -253,6 +384,8 @@ pub struct ExperimentConfig {
     pub out: Option<String>,
     /// Hyperparameter grid for the `sweep` subcommand (None elsewhere).
     pub sweep: Option<SweepGrid>,
+    /// Learner axis for the `select` subcommand (None elsewhere).
+    pub learners: Option<SelectList>,
     /// Worker-pool size for pooled engines; `0` = machine parallelism.
     pub threads: usize,
 }
@@ -268,11 +401,12 @@ impl Default for ExperimentConfig {
             ks: vec![5, 10, 100],
             repetitions: 20,
             seed: 42,
-            lambda: 1e-6,
+            lambda: None,
             alpha: 0.0,
             data_path: None,
             out: None,
             sweep: None,
+            learners: None,
             threads: 0,
         }
     }
@@ -303,12 +437,13 @@ impl ExperimentConfig {
                 "ks" => cfg.ks = value.as_usize_array()?,
                 "repetitions" => cfg.repetitions = value.as_usize()?,
                 "seed" => cfg.seed = value.as_usize()? as u64,
-                "lambda" => cfg.lambda = value.as_f64()?,
+                "lambda" => cfg.lambda = Some(value.as_f64()?),
                 "alpha" => cfg.alpha = value.as_f64()?,
                 "threads" => cfg.threads = value.as_usize()?,
                 "sweep" => sweep_str = Some(SweepGrid::parse(value.as_str()?)?),
                 "sweep_param" => sweep_param = Some(value.as_str()?.to_string()),
                 "sweep_values" => sweep_values = Some(value.as_f64_array()?),
+                "learners" => cfg.learners = Some(SelectList::parse(value.as_str()?)?),
                 "data_path" => cfg.data_path = Some(value.as_str()?.to_string()),
                 "out" => cfg.out = Some(value.as_str()?.to_string()),
                 other => bail!("unknown config key `{other}`"),
@@ -341,13 +476,18 @@ impl ExperimentConfig {
         ));
         s.push_str(&format!("repetitions = {}\n", self.repetitions));
         s.push_str(&format!("seed = {}\n", self.seed));
-        s.push_str(&format!("lambda = {:e}\n", self.lambda));
+        if let Some(l) = self.lambda {
+            s.push_str(&format!("lambda = {l:e}\n"));
+        }
         s.push_str(&format!("alpha = {}\n", self.alpha));
         if self.threads != 0 {
             s.push_str(&format!("threads = {}\n", self.threads));
         }
         if let Some(g) = &self.sweep {
             s.push_str(&format!("sweep = \"{}\"\n", g.to_grid_string()));
+        }
+        if let Some(l) = &self.learners {
+            s.push_str(&format!("learners = \"{}\"\n", l.to_list_string()));
         }
         if let Some(p) = &self.data_path {
             s.push_str(&format!("data_path = \"{p}\"\n"));
@@ -450,12 +590,53 @@ mod tests {
 
     #[test]
     fn parses_every_enum() {
-        for t in ["pegasos", "lsqsgd", "kmeans", "density", "naive_bayes", "ridge"] {
-            assert!(Task::parse(t).is_ok(), "{t}");
+        // Every Task variant's canonical name round-trips through parse.
+        for &t in Task::all() {
+            assert_eq!(Task::parse(t.name()).unwrap(), t, "{t:?}");
         }
+        assert_eq!(Task::all().len(), 11);
         for e in ["treecv", "standard", "parallel_treecv", "executor", "pooled", "merge"] {
             assert!(Engine::parse(e).is_ok(), "{e}");
         }
         assert_eq!(Engine::parse("executor").unwrap(), Engine::ParallelTreecv);
+    }
+
+    #[test]
+    fn select_list_parses_and_roundtrips() {
+        let l = SelectList::parse("pegasos:lambda=1e-4, naive_bayes,knn").unwrap();
+        assert_eq!(l.entries.len(), 3);
+        assert_eq!(l.entries[0].task, Task::Pegasos);
+        let p = l.entries[0].param.as_ref().unwrap();
+        assert_eq!((p.name.as_str(), p.value, p.text.as_str()), ("lambda", 1e-4, "1e-4"));
+        assert_eq!(l.entries[1].task, Task::NaiveBayes);
+        assert_eq!(l.entries[1].param, None);
+        assert_eq!(l.entries[0].label(), "pegasos(lambda=1e-4)");
+        assert_eq!(l.entries[2].label(), "knn");
+        let back = SelectList::parse(&l.to_list_string()).unwrap();
+        assert_eq!(back, l);
+        // The user's value spelling is preserved, never re-rendered.
+        let l = SelectList::parse("ridge:lambda=1.0,lsqsgd").unwrap();
+        assert_eq!(l.entries[0].label(), "ridge(lambda=1.0)");
+        assert_eq!(l.to_list_string(), "ridge:lambda=1.0,lsqsgd");
+    }
+
+    #[test]
+    fn select_list_rejects_malformed() {
+        let bads = ["", "pegasos:", "pegasos:lambda", "pegasos:lambda=x", "nope", "pegasos,,knn"];
+        for bad in bads {
+            assert!(SelectList::parse(bad).is_err(), "{bad}");
+        }
+        assert!(SelectList::parse("pegasos:lambda=inf").is_err());
+    }
+
+    #[test]
+    fn learners_config_key_roundtrips() {
+        let cfg =
+            ExperimentConfig::parse("learners = \"pegasos:lambda=1e-3,knn,perceptron\"\n")
+                .unwrap();
+        let l = cfg.learners.as_ref().unwrap();
+        assert_eq!(l.entries.len(), 3);
+        let back = ExperimentConfig::parse(&cfg.to_text()).unwrap();
+        assert_eq!(back.learners, cfg.learners);
     }
 }

@@ -2,11 +2,26 @@
 //! learners and engine runs, and collects Table-2-style cell reports.
 //! This is the layer the CLI (`rust/src/main.rs`), the examples and the
 //! benches all drive, so every experiment in EXPERIMENTS.md is a function
-//! call away. All parallel engine selections dispatch through the pooled
-//! work-stealing executor ([`crate::cv::executor::TreeCvExecutor`]) via
-//! the repetition harness.
+//! call away.
+//!
+//! Learner dispatch is **registry-driven** ([`registry`]): one table maps
+//! every [`Task`] to its dataset family, its erased-learner constructor,
+//! its merge support and its sweepable hyperparameter — no per-task
+//! `match` arms to copy-paste, so every learner in the crate is reachable
+//! from the CLI. Engine runs go through the type-erased layer
+//! ([`crate::learner::erased`]), which delegates to the same engine code
+//! as the generic path (bit-identical results); all parallel engine
+//! selections dispatch through the pooled work-stealing executor
+//! ([`crate::cv::executor::TreeCvExecutor`]) via the repetition harness.
+//!
+//! Multi-run workloads batch through ONE executor pool: [`run_sweep`]
+//! (one task, a hyperparameter grid) and [`run_select`] (a heterogeneous
+//! learner list ranked on a common dataset — model selection in the sense
+//! of Mohr & van Rijn's learning-curve selection, scheduled the TreeCV
+//! way).
 
 pub mod paper;
+pub mod registry;
 
 use crate::config::{Engine, ExperimentConfig, StrategyCfg, Task};
 use crate::cv::folds::{Folds, Ordering};
@@ -14,17 +29,9 @@ use crate::cv::mergecv::MergeCv;
 use crate::cv::stats::{run_repetitions, EngineKind, RepetitionResult, RepetitionSpec};
 use crate::cv::sweep::{self, SweepOutcome, SweepSpec};
 use crate::cv::Strategy;
-use crate::data::synth::{
-    SyntheticBlobs, SyntheticCovertype, SyntheticMixture1d, SyntheticYearMsd,
-};
-use crate::data::{libsvm, Dataset};
-use crate::learner::histdensity::HistogramDensity;
-use crate::learner::kmeans::OnlineKMeans;
-use crate::learner::lsqsgd::LsqSgd;
-use crate::learner::naive_bayes::GaussianNb;
-use crate::learner::pegasos::Pegasos;
-use crate::learner::ridge::OnlineRidge;
-use crate::learner::{IncrementalLearner, MergeableLearner};
+use crate::data::Dataset;
+use crate::learner::erased::{DynLearner, ErasedLearner};
+use crate::learner::MergeableLearner;
 use crate::metrics::OpCounts;
 use crate::Result;
 use anyhow::bail;
@@ -60,29 +67,10 @@ impl CellReport {
     }
 }
 
-/// Build the dataset for a task (synthetic unless `data_path` is given).
+/// Build the dataset for the config's task (synthetic unless `data_path`
+/// is given) — the task's registry row decides family and preprocessing.
 pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
-    if let Some(path) = &cfg.data_path {
-        let binarize = matches!(cfg.task, Task::Pegasos | Task::NaiveBayes).then_some(1.0);
-        let mut data = libsvm::load(std::path::Path::new(path), None, binarize)?;
-        match cfg.task {
-            Task::Pegasos | Task::NaiveBayes => {
-                data.scale_to_unit_variance();
-            }
-            Task::Lsqsgd | Task::Ridge => {
-                data.scale_targets_to_unit_interval();
-            }
-            _ => {}
-        }
-        let n = cfg.n.min(data.n);
-        return Ok(data.take(n));
-    }
-    Ok(match cfg.task {
-        Task::Pegasos | Task::NaiveBayes => SyntheticCovertype::new(cfg.n, cfg.seed).generate(),
-        Task::Lsqsgd | Task::Ridge => SyntheticYearMsd::new(cfg.n, cfg.seed).generate(),
-        Task::Kmeans => SyntheticBlobs::new(cfg.n, 8, 5, cfg.seed).generate(),
-        Task::Density => SyntheticMixture1d::new(cfg.n, cfg.seed).generate(),
-    })
+    registry::entry(cfg.task).dataset.build(cfg)
 }
 
 fn engine_kind(engine: Engine) -> Result<EngineKind> {
@@ -94,11 +82,20 @@ fn engine_kind(engine: Engine) -> Result<EngineKind> {
     })
 }
 
-fn run_cells<L>(learner: &L, data: &Dataset, cfg: &ExperimentConfig) -> Result<Vec<CellReport>>
-where
-    L: IncrementalLearner + Sync,
-    L::Model: Send,
-{
+/// Run the per-k repetition cells for one (type-erased) learner.
+///
+/// Dispatch cost note: the engines call `update`/`update_logged`/
+/// `evaluate` once per tree NODE (a whole chunk each), never per point —
+/// the per-point loops live inside the concrete learner and stay
+/// monomorphized — so erasure adds O(k log k) vtable hops + boxed undo
+/// tokens per run against O(n log k) point work. `benches/dyn_overhead.rs`
+/// measures the ratio (and asserts bit-equality).
+fn run_cells(
+    learner: &dyn ErasedLearner,
+    data: &Dataset,
+    cfg: &ExperimentConfig,
+) -> Result<Vec<CellReport>> {
+    let dyn_learner = DynLearner(learner);
     let mut out = Vec::new();
     for &k_raw in &cfg.ks {
         let k = if k_raw == 0 { data.n } else { k_raw };
@@ -114,12 +111,15 @@ where
             seed: cfg.seed,
             threads: cfg.threads,
         };
-        let rep = run_repetitions(learner, data, &spec)?;
+        let rep = run_repetitions(&dyn_learner, data, &spec)?;
         out.push(CellReport::from_rep(cfg.task, cfg.engine, data.n, &rep));
     }
     Ok(out)
 }
 
+/// Izbicki fold-merging cells — generic, because merging needs the
+/// concrete [`MergeableLearner`]; the registry's `merge` hooks call this
+/// with their concrete learner.
 fn run_merge_cells<L: MergeableLearner>(
     learner: &L,
     data: &Dataset,
@@ -164,28 +164,50 @@ fn run_merge_cells<L: MergeableLearner>(
 }
 
 /// Run the experiment described by `cfg` and return one report per k.
+/// Dispatch is fully registry-driven: any task in
+/// [`registry::REGISTRY`] works here, through any engine it supports.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Vec<CellReport>> {
+    let entry = registry::entry(cfg.task);
     let data = build_dataset(cfg)?;
-    let d = data.d;
-    // The paper sets α from the full-data n; we do the same.
-    let alpha = cfg.effective_alpha(data.n);
 
     if cfg.engine == Engine::Merge {
-        return match cfg.task {
-            Task::NaiveBayes => run_merge_cells(&GaussianNb::new(d), &data, cfg),
-            Task::Density => run_merge_cells(&HistogramDensity::new(-8.0, 8.0, 64), &data, cfg),
-            Task::Ridge => run_merge_cells(&OnlineRidge::new(d, 1.0), &data, cfg),
-            t => bail!("task {t:?} is not mergeable (Izbicki's assumption does not hold)"),
+        let Some(merge) = entry.merge else {
+            bail!(
+                "task {:?} is not mergeable (Izbicki's assumption does not hold)",
+                cfg.task
+            );
         };
+        return merge(cfg, &data);
     }
 
-    match cfg.task {
-        Task::Pegasos => run_cells(&Pegasos::new(d, cfg.lambda), &data, cfg),
-        Task::Lsqsgd => run_cells(&LsqSgd::new(d, alpha), &data, cfg),
-        Task::Kmeans => run_cells(&OnlineKMeans::new(d, 5), &data, cfg),
-        Task::Density => run_cells(&HistogramDensity::new(-8.0, 8.0, 64), &data, cfg),
-        Task::NaiveBayes => run_cells(&GaussianNb::new(d), &data, cfg),
-        Task::Ridge => run_cells(&OnlineRidge::new(d, 1.0), &data, cfg),
+    let learner = (entry.build)(cfg, &data)?;
+    run_cells(&*learner, &data, cfg)
+}
+
+/// Resolve the batch subcommands' single fold count (`ks[0]`; `0` =
+/// LOOCV → n), range-checked against the dataset — shared by `run_sweep`
+/// and `run_select` so the two cannot drift. Callers have already
+/// checked `ks.len() == 1`.
+fn resolve_single_k(cfg: &ExperimentConfig, data: &Dataset) -> Result<usize> {
+    let k = if cfg.ks[0] == 0 { data.n } else { cfg.ks[0] };
+    if k > data.n {
+        bail!("k = {k} exceeds n = {}", data.n);
+    }
+    Ok(k)
+}
+
+/// The batch subcommands' shared [`SweepSpec`] derivation — `run_sweep`
+/// and `run_select` must schedule their batches identically (same
+/// ordering/strategy/repetitions/seed/threads mapping), so it lives in
+/// one place.
+fn batch_spec(cfg: &ExperimentConfig, k: usize) -> SweepSpec {
+    SweepSpec {
+        ordering: Ordering::from(cfg.ordering),
+        strategies: vec![Strategy::from(cfg.strategy)],
+        k,
+        repetitions: cfg.repetitions,
+        seed: cfg.seed,
+        threads: cfg.threads,
     }
 }
 
@@ -214,8 +236,9 @@ pub struct SweepReport {
     pub repetitions: usize,
     /// Worker-pool size the sweep actually used.
     pub threads: usize,
-    /// Executor pools spawned by the whole sweep — 1 for a multi-worker
-    /// pool, 0 for `--threads 1` (inline), never one per run.
+    /// Executor pools spawned by the whole sweep (per-pool counter) — 1
+    /// for a multi-worker pool, 0 for `--threads 1` (inline), never one
+    /// per run.
     pub pool_spawns: u64,
     /// Wall-clock of the whole pooled batch (runs overlap, so there is no
     /// meaningful per-row wall).
@@ -224,21 +247,12 @@ pub struct SweepReport {
     pub points: Vec<SweepPoint>,
 }
 
-/// The hyperparameter a task's sweep may vary, or None if the task has no
-/// sweepable knob.
-fn sweepable_param(task: Task) -> Option<&'static str> {
-    match task {
-        Task::Pegasos | Task::Ridge => Some("lambda"),
-        Task::Lsqsgd => Some("alpha"),
-        Task::Kmeans | Task::Density | Task::NaiveBayes => None,
-    }
-}
-
 /// Run the tuning workload described by `cfg`: every (grid value ×
 /// repetition) TreeCV run through ONE pooled executor
-/// ([`crate::cv::sweep::run_sweep`]), returning rows ranked by mean loss.
-/// Fold assignments are shared across grid values, so the hyperparameter
-/// is the only difference between rows.
+/// ([`crate::cv::sweep::run_sweep_erased`]), returning rows ranked by
+/// mean loss. Learners are built per grid value through the task's
+/// registry constructor; fold assignments are shared across grid values,
+/// so the hyperparameter is the only difference between rows.
 pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
     let Some(grid) = &cfg.sweep else {
         bail!("sweep needs a grid — pass --sweep name=v1,v2,... (e.g. lambda=0.1,0.01,0.001)");
@@ -246,53 +260,28 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
     if cfg.ks.len() != 1 {
         bail!("sweep uses a single fold count; got ks = {:?}", cfg.ks);
     }
-    match sweepable_param(cfg.task) {
-        None => bail!(
-            "task {} has no sweepable hyperparameter (pegasos/ridge sweep lambda=..., \
-             lsqsgd sweeps alpha=...)",
-            cfg.task.name()
-        ),
-        Some(want) if want != grid.param => bail!(
-            "task {} sweeps `{want}`, not `{}`",
-            cfg.task.name(),
-            grid.param
-        ),
-        Some(_) => {}
-    }
-    if let Some(v) = grid.values.iter().find(|&&v| v <= 0.0) {
-        bail!("sweep {}: values must be > 0, got {v}", grid.param);
-    }
+    let entry = registry::entry(cfg.task);
+    // Name + domain validation is the same shared rule the select list
+    // uses; materialize the per-value configs up front so a bad grid
+    // fails before the potentially expensive dataset build, with no
+    // second validation pass.
+    let value_cfgs: Vec<ExperimentConfig> = grid
+        .values
+        .iter()
+        .map(|&v| {
+            let mut value_cfg = cfg.clone();
+            registry::checked_apply_param(&mut value_cfg, cfg.task, &grid.param, v)?;
+            Ok(value_cfg)
+        })
+        .collect::<Result<_>>()?;
 
     let data = build_dataset(cfg)?;
-    let k = if cfg.ks[0] == 0 { data.n } else { cfg.ks[0] };
-    if k > data.n {
-        bail!("k = {k} exceeds n = {}", data.n);
-    }
-    let d = data.d;
-    let spec = SweepSpec {
-        ordering: Ordering::from(cfg.ordering),
-        strategies: vec![Strategy::from(cfg.strategy)],
-        k,
-        repetitions: cfg.repetitions,
-        seed: cfg.seed,
-        threads: cfg.threads,
-    };
-    let outcome: SweepOutcome = match cfg.task {
-        Task::Pegasos => {
-            let learners: Vec<Pegasos> = grid.values.iter().map(|&v| Pegasos::new(d, v)).collect();
-            sweep::run_sweep(&learners, &data, &spec)?
-        }
-        Task::Ridge => {
-            let learners: Vec<OnlineRidge> =
-                grid.values.iter().map(|&v| OnlineRidge::new(d, v)).collect();
-            sweep::run_sweep(&learners, &data, &spec)?
-        }
-        Task::Lsqsgd => {
-            let learners: Vec<LsqSgd> = grid.values.iter().map(|&v| LsqSgd::new(d, v)).collect();
-            sweep::run_sweep(&learners, &data, &spec)?
-        }
-        _ => unreachable!("rejected by sweepable_param above"),
-    };
+    let k = resolve_single_k(cfg, &data)?;
+    let learners: Vec<Box<dyn ErasedLearner>> =
+        value_cfgs.iter().map(|c| (entry.build)(c, &data)).collect::<Result<_>>()?;
+    let refs: Vec<&dyn ErasedLearner> = learners.iter().map(|b| &**b).collect();
+    let spec = batch_spec(cfg, k);
+    let outcome: SweepOutcome = sweep::run_sweep_erased(&refs, &data, &spec)?;
 
     let mut points: Vec<SweepPoint> = outcome
         .cells
@@ -309,6 +298,127 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
     points.sort_by(|a, b| a.mean.total_cmp(&b.mean).then(a.value.total_cmp(&b.value)));
     Ok(SweepReport {
         task: cfg.task,
+        n: data.n,
+        k,
+        repetitions: cfg.repetitions,
+        threads: outcome.threads,
+        pool_spawns: outcome.pool_spawns,
+        total_wall_secs: outcome.total_wall.as_secs_f64(),
+        points,
+    })
+}
+
+/// One ranked row of a model-selection run: a learner family (with its
+/// optional hyperparameter override).
+#[derive(Debug, Clone)]
+pub struct SelectPoint {
+    /// Display label, e.g. `pegasos(lambda=1e-4)` or `knn`.
+    pub learner: String,
+    pub task: Task,
+    pub strategy: StrategyCfg,
+    /// Mean CV estimate over the repetitions (the ranking key).
+    pub mean: f64,
+    /// Sample std over the repetitions.
+    pub std: f64,
+    /// Counters from the cell's last repetition.
+    pub ops: OpCounts,
+}
+
+/// Result of `repro select`: heterogeneous learner families ranked by
+/// mean CV loss on a common dataset, all scheduled through ONE pooled
+/// executor.
+#[derive(Debug, Clone)]
+pub struct SelectReport {
+    pub n: usize,
+    pub k: usize,
+    pub repetitions: usize,
+    /// Worker-pool size the run actually used.
+    pub threads: usize,
+    /// Executor pools spawned by the whole selection (per-pool counter) —
+    /// 1 for a multi-worker pool, 0 for `--threads 1`, never one per run
+    /// or per family.
+    pub pool_spawns: u64,
+    /// Wall-clock of the whole pooled batch.
+    pub total_wall_secs: f64,
+    /// Rows ranked by mean loss ascending.
+    pub points: Vec<SelectPoint>,
+}
+
+/// Run the model-selection workload described by `cfg`: every (learner ×
+/// repetition) TreeCV run through ONE pooled executor, via the
+/// heterogeneous sweep ([`crate::cv::sweep::run_sweep_erased`]).
+///
+/// All chosen learners must share one dataset family (the registry's
+/// [`registry::DatasetKind`]) so their CV losses are computed on a common
+/// dataset — ranking a density estimator's NLL against a classifier's
+/// error rate is meaningless, and is rejected. Fold assignments are
+/// shared across learners, so the learner really is the only difference
+/// between rows.
+pub fn run_select(cfg: &ExperimentConfig) -> Result<SelectReport> {
+    let Some(list) = &cfg.learners else {
+        bail!(
+            "select needs a learner list — pass --learners task[:param=value],... \
+             (e.g. pegasos:lambda=1e-4,naive_bayes,knn,perceptron)"
+        );
+    };
+    if cfg.ks.len() != 1 {
+        bail!("select uses a single fold count; got ks = {:?}", cfg.ks);
+    }
+    // SelectList::parse guarantees non-emptiness, but the fields are pub —
+    // guard against a programmatically built empty list.
+    if list.entries.is_empty() {
+        bail!("select needs at least one learner in the list");
+    }
+    let kind = registry::entry(list.entries[0].task).dataset;
+    for e in &list.entries {
+        let other = registry::entry(e.task).dataset;
+        if other != kind {
+            bail!(
+                "select mixes dataset families: {} runs on {kind:?} but {} runs on {other:?} — \
+                 model selection needs one common dataset (and comparable losses)",
+                list.entries[0].task.name(),
+                e.task.name(),
+            );
+        }
+    }
+
+    let data = kind.build(cfg)?;
+    let k = resolve_single_k(cfg, &data)?;
+    let mut learners: Vec<Box<dyn ErasedLearner>> = Vec::with_capacity(list.entries.len());
+    for e in &list.entries {
+        let entry = registry::entry(e.task);
+        if !entry.comparable_loss {
+            bail!(
+                "task {} is a structural test oracle — its \"loss\" is a correctness \
+                 fingerprint, not a statistical metric, so it cannot be ranked in a model \
+                 selection (it still runs under `repro cv`)",
+                e.task.name()
+            );
+        }
+        let mut learner_cfg = cfg.clone();
+        learner_cfg.task = e.task;
+        if let Some(p) = &e.param {
+            registry::checked_apply_param(&mut learner_cfg, e.task, &p.name, p.value)?;
+        }
+        learners.push((entry.build)(&learner_cfg, &data)?);
+    }
+    let refs: Vec<&dyn ErasedLearner> = learners.iter().map(|b| &**b).collect();
+    let outcome = sweep::run_sweep_erased(&refs, &data, &batch_spec(cfg, k))?;
+
+    let mut points: Vec<SelectPoint> = outcome
+        .cells
+        .iter()
+        .map(|c| SelectPoint {
+            learner: list.entries[c.config].label(),
+            task: list.entries[c.config].task,
+            strategy: StrategyCfg::from(c.strategy),
+            mean: c.mean,
+            std: c.std,
+            ops: c.ops.clone(),
+        })
+        .collect();
+    points.sort_by(|a, b| a.mean.total_cmp(&b.mean).then_with(|| a.learner.cmp(&b.learner)));
+    Ok(SelectReport {
         n: data.n,
         k,
         repetitions: cfg.repetitions,
@@ -351,6 +461,36 @@ pub fn format_sweep_table(report: &SweepReport) -> String {
     s
 }
 
+/// Pretty-print a model-selection run as its ranked table (the `select`
+/// CLI's default output; the schema is documented in EXPERIMENTS.md).
+pub fn format_select_table(report: &SelectReport) -> String {
+    let mut s = format!(
+        "select n={} k={} reps={} threads={} pool_spawns={} total_wall={:.4}s\n",
+        report.n,
+        report.k,
+        report.repetitions,
+        report.threads,
+        report.pool_spawns,
+        report.total_wall_secs,
+    );
+    s.push_str(&format!(
+        "{:>4} {:<28} {:>12} {:>12} {:>12} {:>14}\n",
+        "rank", "learner", "strategy", "mean", "std", "pts_updated"
+    ));
+    for (i, p) in report.points.iter().enumerate() {
+        s.push_str(&format!(
+            "{:>4} {:<28} {:>12} {:>12.6} {:>12.6} {:>14}\n",
+            i + 1,
+            p.learner,
+            p.strategy.name(),
+            p.mean,
+            p.std,
+            p.ops.points_updated,
+        ));
+    }
+    s
+}
+
 /// Pretty-print reports as an aligned text table (the CLI's default output).
 pub fn format_table(reports: &[CellReport]) -> String {
     let mut s = String::new();
@@ -378,7 +518,7 @@ pub fn format_table(reports: &[CellReport]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{OrderingCfg, StrategyCfg};
+    use crate::config::{OrderingCfg, SelectList, StrategyCfg};
 
     fn tiny_cfg(task: Task, engine: Engine) -> ExperimentConfig {
         ExperimentConfig {
@@ -390,21 +530,46 @@ mod tests {
             ks: vec![5],
             repetitions: 3,
             seed: 1,
-            lambda: 1e-4,
+            lambda: Some(1e-4),
             alpha: 0.0,
             data_path: None,
             out: None,
             sweep: None,
+            learners: None,
             threads: 0,
         }
     }
 
     #[test]
-    fn runs_every_task_with_treecv() {
-        for &task in Task::all() {
-            let cfg = tiny_cfg(task, Engine::Treecv);
+    fn runs_every_registry_task_with_treecv() {
+        // Every runtime-free registry task is CLI-reachable end to end;
+        // runtime-gated tasks must either run (artifact-equipped
+        // environment) or fail with the clean PJRT-unavailable error.
+        for e in registry::REGISTRY {
+            let cfg = tiny_cfg(e.task, Engine::Treecv);
+            match run_experiment(&cfg) {
+                Ok(reports) => {
+                    assert_eq!(reports.len(), 1, "{:?}", e.task);
+                    assert!(reports[0].mean.is_finite(), "{:?}", e.task);
+                }
+                Err(err) => {
+                    assert!(e.requires_runtime, "{:?} failed: {err}", e.task);
+                    let msg = format!("{err}");
+                    assert!(
+                        msg.contains("xla") || msg.contains("artifact") || msg.contains("manifest"),
+                        "{:?}: unexpected error `{msg}`",
+                        e.task
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn new_tasks_run_on_parallel_engine_too() {
+        for task in [Task::Knn, Task::Perceptron, Task::Multiset] {
+            let cfg = tiny_cfg(task, Engine::ParallelTreecv);
             let reports = run_experiment(&cfg).unwrap();
-            assert_eq!(reports.len(), 1, "{task:?}");
             assert!(reports[0].mean.is_finite(), "{task:?}");
         }
     }
@@ -452,11 +617,15 @@ mod tests {
     }
 
     #[test]
-    fn merge_engine_works_for_naive_bayes() {
+    fn merge_engine_works_for_naive_bayes_and_knn() {
         let cfg = tiny_cfg(Task::NaiveBayes, Engine::Merge);
         let reports = run_experiment(&cfg).unwrap();
         assert!(reports[0].mean.is_finite());
         assert_eq!(reports[0].ops.points_updated, 200);
+
+        let cfg = tiny_cfg(Task::Knn, Engine::Merge);
+        let reports = run_experiment(&cfg).unwrap();
+        assert!(reports[0].mean.is_finite());
     }
 
     #[test]
@@ -482,9 +651,8 @@ mod tests {
         assert_eq!(report.points.len(), 3);
         assert!(report.points.windows(2).all(|w| w[0].mean <= w[1].mean));
         assert!(report.points.iter().all(|p| p.mean.is_finite() && p.param == "lambda"));
-        // Exactly one multi-worker pool for the whole sweep (counted
-        // locally, so exact even with concurrent unit tests; the global
-        // counter corroborates it in tests/integration_sweep.rs).
+        // Exactly one multi-worker pool for the whole sweep, read off the
+        // executor's own per-pool counter.
         assert_eq!(report.pool_spawns, 1);
         assert_eq!(report.threads, 2);
         let table = format_sweep_table(&report);
@@ -522,6 +690,73 @@ mod tests {
             assert_eq!(report.points.len(), 2, "{task:?}");
             assert!(report.points[0].mean.is_finite(), "{task:?}");
         }
+    }
+
+    fn select_cfg(learners: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            ks: vec![4],
+            repetitions: 2,
+            threads: 2,
+            learners: Some(SelectList::parse(learners).unwrap()),
+            ..tiny_cfg(Task::Pegasos, Engine::ParallelTreecv)
+        }
+    }
+
+    #[test]
+    fn select_ranks_heterogeneous_families_through_one_pool() {
+        let cfg = select_cfg("pegasos:lambda=1e-4,naive_bayes,knn,perceptron");
+        let report = run_select(&cfg).unwrap();
+        assert_eq!(report.points.len(), 4);
+        assert!(report.points.windows(2).all(|w| w[0].mean <= w[1].mean), "ranked");
+        assert!(report.points.iter().all(|p| p.mean.is_finite()));
+        // ≥ 3 learner families, exactly ONE pool spawn (per-pool counter).
+        assert_eq!(report.pool_spawns, 1);
+        assert_eq!(report.threads, 2);
+        let labels: Vec<&str> = report.points.iter().map(|p| p.learner.as_str()).collect();
+        assert!(labels.contains(&"pegasos(lambda=1e-4)"), "{labels:?}");
+        assert!(labels.contains(&"knn"), "{labels:?}");
+        let table = format_select_table(&report);
+        assert!(table.contains("rank"));
+        assert!(table.contains("pool_spawns=1"));
+        assert_eq!(table.lines().count(), 2 + 4);
+    }
+
+    #[test]
+    fn select_shares_folds_across_families() {
+        // Two identical entries must produce bit-identical rows: the
+        // learner really is the only degree of freedom.
+        let cfg = select_cfg("pegasos:lambda=1e-4,pegasos:lambda=1e-4");
+        let report = run_select(&cfg).unwrap();
+        assert_eq!(report.points.len(), 2);
+        assert_eq!(report.points[0].mean.to_bits(), report.points[1].mean.to_bits());
+        assert_eq!(report.points[0].std.to_bits(), report.points[1].std.to_bits());
+    }
+
+    #[test]
+    fn select_rejects_bad_lists() {
+        // No list.
+        let mut cfg = select_cfg("pegasos,knn");
+        cfg.learners = None;
+        assert!(run_select(&cfg).is_err());
+        // Mixed dataset families (classification vs regression).
+        let err = run_select(&select_cfg("pegasos,ridge")).unwrap_err();
+        assert!(format!("{err}").contains("dataset families"), "{err}");
+        // Parameter on a task without one.
+        assert!(run_select(&select_cfg("knn:lambda=0.5,pegasos")).is_err());
+        // Wrong parameter name for the task.
+        assert!(run_select(&select_cfg("pegasos:alpha=0.5,knn")).is_err());
+        // Non-positive override values error cleanly (never a constructor
+        // panic).
+        let err = run_select(&select_cfg("pegasos:lambda=0,knn")).unwrap_err();
+        assert!(format!("{err}").contains("must be > 0"), "{err}");
+        // The multiset structural oracle shares density's dataset family
+        // but its hash-fingerprint "loss" is not a rankable metric.
+        let err = run_select(&select_cfg("density,multiset")).unwrap_err();
+        assert!(format!("{err}").contains("structural test oracle"), "{err}");
+        // Multiple ks.
+        let mut cfg = select_cfg("pegasos,knn");
+        cfg.ks = vec![4, 8];
+        assert!(run_select(&cfg).is_err());
     }
 
     #[test]

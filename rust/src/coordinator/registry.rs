@@ -1,0 +1,478 @@
+//! The learner registry: ONE table mapping every [`Task`] to its dataset
+//! family, its constructor-from-config closure (returning a type-erased
+//! learner), its merge-engine support and its sweepable hyperparameter.
+//!
+//! Before this table existed, reaching a learner from the CLI meant
+//! adding copy-pasted `match cfg.task` arms to `run_experiment`,
+//! `build_dataset` and `run_sweep` — which is why only a minority of the
+//! crate's learners were ever CLI-reachable. Now `repro cv --task <name>`
+//! works for every entry here (including the structural oracles and the
+//! XLA-backed learners, whose constructors error cleanly when the PJRT
+//! runtime or its artifacts are absent), `repro sweep` consults
+//! [`LearnerEntry::sweep_param`], and `repro select` builds heterogeneous
+//! learner sets from these constructors to rank model families against
+//! each other through one executor pool.
+//!
+//! A registry test pins the Task ↔ entry bijection, so adding a `Task`
+//! variant without a registry row (or vice versa) fails fast.
+
+use super::CellReport;
+use crate::config::{ExperimentConfig, Task};
+use crate::data::synth::{
+    SyntheticBlobs, SyntheticCovertype, SyntheticMixture1d, SyntheticYearMsd,
+};
+use crate::data::{libsvm, Dataset};
+use crate::learner::erased::{Erased, ErasedLearner};
+use crate::learner::histdensity::HistogramDensity;
+use crate::learner::kmeans::OnlineKMeans;
+use crate::learner::knn::KnnClassifier;
+use crate::learner::lsqsgd::LsqSgd;
+use crate::learner::multiset::MultisetLearner;
+use crate::learner::naive_bayes::GaussianNb;
+use crate::learner::pegasos::Pegasos;
+use crate::learner::perceptron::Perceptron;
+use crate::learner::ridge::OnlineRidge;
+#[cfg(not(treecv_pjrt))]
+use crate::runtime::xla_learner::{XlaLsqSgd, XlaPegasos};
+#[cfg(not(treecv_pjrt))]
+use crate::runtime::{Manifest, PjrtRuntime};
+use crate::Result;
+use anyhow::bail;
+
+/// Default neighbour count of the CLI-built k-NN classifier (odd avoids
+/// vote ties).
+pub const KNN_NEIGHBOURS: usize = 5;
+
+/// Default PEGASOS regularizer when the config carries no `--lambda`
+/// (the paper-scale value the CLI has always defaulted to).
+pub const PEGASOS_LAMBDA_DEFAULT: f64 = 1e-6;
+
+/// Default ridge regularizer when the config carries no `--lambda` —
+/// the value the pre-registry coordinator hardcoded, and the one the
+/// exact-LOOCV comparator oracles pin.
+pub const RIDGE_LAMBDA_DEFAULT: f64 = 1.0;
+
+/// Default number of clusters for the CLI-built online K-means (matches
+/// the synthetic blobs generator's center count).
+pub const KMEANS_CENTERS: usize = 5;
+
+/// Which synthetic dataset family a task runs on by default, and how a
+/// LIBSVM file given via `--data` is preprocessed for it. Model-selection
+/// runs (`repro select`) require all chosen learners to share one kind,
+/// so their CV losses are computed on a common dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Covertype-like binary classification (binarized labels, unit
+    /// feature variance), d = 54.
+    Covertype,
+    /// YearPredictionMSD-like regression (targets scaled to [0, 1]),
+    /// d = 90.
+    YearMsd,
+    /// Gaussian blobs for clustering, d = 8.
+    Blobs,
+    /// 1-D Gaussian mixture for density estimation.
+    Mixture1d,
+}
+
+impl DatasetKind {
+    /// Build the dataset: the LIBSVM file from `cfg.data_path` (with this
+    /// kind's preprocessing) when given, the synthetic stand-in otherwise.
+    pub fn build(&self, cfg: &ExperimentConfig) -> Result<Dataset> {
+        if let Some(path) = &cfg.data_path {
+            let binarize = matches!(self, DatasetKind::Covertype).then_some(1.0);
+            let mut data = libsvm::load(std::path::Path::new(path), None, binarize)?;
+            match self {
+                DatasetKind::Covertype => {
+                    data.scale_to_unit_variance();
+                }
+                DatasetKind::YearMsd => {
+                    data.scale_targets_to_unit_interval();
+                }
+                DatasetKind::Blobs | DatasetKind::Mixture1d => {}
+            }
+            let n = cfg.n.min(data.n);
+            return Ok(data.take(n));
+        }
+        Ok(match self {
+            DatasetKind::Covertype => SyntheticCovertype::new(cfg.n, cfg.seed).generate(),
+            DatasetKind::YearMsd => SyntheticYearMsd::new(cfg.n, cfg.seed).generate(),
+            DatasetKind::Blobs => {
+                SyntheticBlobs::new(cfg.n, 8, KMEANS_CENTERS, cfg.seed).generate()
+            }
+            DatasetKind::Mixture1d => SyntheticMixture1d::new(cfg.n, cfg.seed).generate(),
+        })
+    }
+}
+
+/// Constructor-from-config closure: builds the task's learner for the
+/// already-built dataset (dimension and size come from `data`).
+pub type BuildFn = fn(&ExperimentConfig, &Dataset) -> Result<Box<dyn ErasedLearner>>;
+
+/// Merge-engine dispatcher for learners satisfying Izbicki's mergeability
+/// assumption (kept generic — fold merging needs the concrete
+/// `MergeableLearner`, which erasure intentionally does not expose).
+pub type MergeFn = fn(&ExperimentConfig, &Dataset) -> Result<Vec<CellReport>>;
+
+/// One registry row. See the module docs for what each hook powers.
+pub struct LearnerEntry {
+    pub task: Task,
+    /// Dataset family + preprocessing the task defaults to.
+    pub dataset: DatasetKind,
+    /// Erased-learner constructor (`repro cv` / `sweep` / `select`).
+    pub build: BuildFn,
+    /// Hyperparameter the task's sweep may vary, if any.
+    pub sweep_param: Option<&'static str>,
+    /// Izbicki fold-merging dispatcher, for mergeable learners only.
+    pub merge: Option<MergeFn>,
+    /// True when `build` needs the PJRT runtime + AOT artifacts; such
+    /// entries stay CLI-reachable but error cleanly in stub builds.
+    pub requires_runtime: bool,
+    /// False for structural test oracles whose "loss" is a correctness
+    /// fingerprint, not a statistical metric — they run fine under
+    /// `repro cv` but are rejected from `repro select` rankings.
+    pub comparable_loss: bool,
+}
+
+fn build_pegasos(cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(Pegasos::new(data.d, cfg.lambda.unwrap_or(PEGASOS_LAMBDA_DEFAULT))))
+}
+
+fn build_lsqsgd(cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    // The paper sets α from the full-data n; so do we.
+    Ok(Erased::boxed(LsqSgd::new(data.d, cfg.effective_alpha(data.n))))
+}
+
+fn build_kmeans(_cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(OnlineKMeans::new(data.d, KMEANS_CENTERS)))
+}
+
+fn build_density(_cfg: &ExperimentConfig, _data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(HistogramDensity::new(-8.0, 8.0, 64)))
+}
+
+fn build_naive_bayes(_cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(GaussianNb::new(data.d)))
+}
+
+fn build_ridge(cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(OnlineRidge::new(data.d, cfg.lambda.unwrap_or(RIDGE_LAMBDA_DEFAULT))))
+}
+
+fn build_knn(_cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(KnnClassifier::new(data.d, KNN_NEIGHBOURS)))
+}
+
+fn build_perceptron(_cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(Perceptron::new(data.d)))
+}
+
+fn build_multiset(_cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    Ok(Erased::boxed(MultisetLearner::new(data.d)))
+}
+
+// The XLA builders exist in two flavors. In stub builds (everything CI
+// compiles, including plain `--features xla`), the stub runtime types are
+// trivially Send + Sync, so `Erased::boxed` compiles and the constructor
+// errors cleanly at runtime ("PJRT runtime unavailable"). In REAL
+// `cfg(treecv_pjrt)` builds the `xla` crate's executable handles have not
+// been vetted Send + Sync (the erased layer's bound, required by the
+// pooled engines) — so rather than risk an un-compilable configuration or
+// sharing one PJRT executable across worker threads untested, the
+// registry path declines with a pointer at the sequential XLA surfaces.
+#[cfg(not(treecv_pjrt))]
+fn build_xla_pegasos(cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    let rt = PjrtRuntime::cpu()?;
+    let manifest = Manifest::load_default()?;
+    let lambda = cfg.lambda.unwrap_or(PEGASOS_LAMBDA_DEFAULT);
+    Ok(Erased::boxed(XlaPegasos::from_manifest(&rt, &manifest, data.d, lambda)?))
+}
+
+#[cfg(not(treecv_pjrt))]
+fn build_xla_lsqsgd(cfg: &ExperimentConfig, data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    let rt = PjrtRuntime::cpu()?;
+    let manifest = Manifest::load_default()?;
+    let alpha = cfg.effective_alpha(data.n);
+    Ok(Erased::boxed(XlaLsqSgd::from_manifest(&rt, &manifest, data.d, alpha)?))
+}
+
+#[cfg(treecv_pjrt)]
+fn build_xla_pegasos(_cfg: &ExperimentConfig, _data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    bail!(
+        "xla_pegasos is not reachable through the CV registry in real-PJRT builds yet: the \
+         PJRT executable types are not vetted Send + Sync for the pooled engines — drive the \
+         XLA learners via `repro selfcheck`, the runtime_xla bench, or the sequential runtime \
+         integration tests"
+    )
+}
+
+#[cfg(treecv_pjrt)]
+fn build_xla_lsqsgd(_cfg: &ExperimentConfig, _data: &Dataset) -> Result<Box<dyn ErasedLearner>> {
+    bail!(
+        "xla_lsqsgd is not reachable through the CV registry in real-PJRT builds yet: the \
+         PJRT executable types are not vetted Send + Sync for the pooled engines — drive the \
+         XLA learners via `repro selfcheck`, the runtime_xla bench, or the sequential runtime \
+         integration tests"
+    )
+}
+
+fn merge_naive_bayes(cfg: &ExperimentConfig, data: &Dataset) -> Result<Vec<CellReport>> {
+    super::run_merge_cells(&GaussianNb::new(data.d), data, cfg)
+}
+
+fn merge_density(cfg: &ExperimentConfig, data: &Dataset) -> Result<Vec<CellReport>> {
+    super::run_merge_cells(&HistogramDensity::new(-8.0, 8.0, 64), data, cfg)
+}
+
+fn merge_ridge(cfg: &ExperimentConfig, data: &Dataset) -> Result<Vec<CellReport>> {
+    let lambda = cfg.lambda.unwrap_or(RIDGE_LAMBDA_DEFAULT);
+    super::run_merge_cells(&OnlineRidge::new(data.d, lambda), data, cfg)
+}
+
+fn merge_knn(cfg: &ExperimentConfig, data: &Dataset) -> Result<Vec<CellReport>> {
+    super::run_merge_cells(&KnnClassifier::new(data.d, KNN_NEIGHBOURS), data, cfg)
+}
+
+/// The registry itself: exactly one row per [`Task`] variant.
+pub static REGISTRY: &[LearnerEntry] = &[
+    LearnerEntry {
+        task: Task::Pegasos,
+        dataset: DatasetKind::Covertype,
+        build: build_pegasos,
+        sweep_param: Some("lambda"),
+        merge: None,
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::Lsqsgd,
+        dataset: DatasetKind::YearMsd,
+        build: build_lsqsgd,
+        sweep_param: Some("alpha"),
+        merge: None,
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::Kmeans,
+        dataset: DatasetKind::Blobs,
+        build: build_kmeans,
+        sweep_param: None,
+        merge: None,
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::Density,
+        dataset: DatasetKind::Mixture1d,
+        build: build_density,
+        sweep_param: None,
+        merge: Some(merge_density),
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::NaiveBayes,
+        dataset: DatasetKind::Covertype,
+        build: build_naive_bayes,
+        sweep_param: None,
+        merge: Some(merge_naive_bayes),
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::Ridge,
+        dataset: DatasetKind::YearMsd,
+        build: build_ridge,
+        sweep_param: Some("lambda"),
+        merge: Some(merge_ridge),
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::Knn,
+        dataset: DatasetKind::Covertype,
+        build: build_knn,
+        sweep_param: None,
+        merge: Some(merge_knn),
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::Perceptron,
+        dataset: DatasetKind::Covertype,
+        build: build_perceptron,
+        sweep_param: None,
+        merge: None,
+        requires_runtime: false,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::Multiset,
+        dataset: DatasetKind::Mixture1d,
+        build: build_multiset,
+        sweep_param: None,
+        merge: None,
+        requires_runtime: false,
+        // The "loss" is a hash fingerprint of the training multiset — a
+        // correctness probe, never a rankable metric.
+        comparable_loss: false,
+    },
+    LearnerEntry {
+        task: Task::XlaPegasos,
+        dataset: DatasetKind::Covertype,
+        build: build_xla_pegasos,
+        sweep_param: Some("lambda"),
+        merge: None,
+        requires_runtime: true,
+        comparable_loss: true,
+    },
+    LearnerEntry {
+        task: Task::XlaLsqSgd,
+        dataset: DatasetKind::YearMsd,
+        build: build_xla_lsqsgd,
+        sweep_param: Some("alpha"),
+        merge: None,
+        requires_runtime: true,
+        comparable_loss: true,
+    },
+];
+
+/// Look up a task's registry row. Total over [`Task`] — the bijection is
+/// pinned by a test, so a missing row is a programmer error.
+pub fn entry(task: Task) -> &'static LearnerEntry {
+    REGISTRY
+        .iter()
+        .find(|e| e.task == task)
+        .unwrap_or_else(|| panic!("no registry entry for task {task:?}"))
+}
+
+/// Apply a named hyperparameter value to a config. Valid names come from
+/// [`LearnerEntry::sweep_param`]; callers go through
+/// [`checked_apply_param`], which validates name and domain first.
+fn apply_param(cfg: &mut ExperimentConfig, param: &str, value: f64) -> Result<()> {
+    match param {
+        "lambda" => cfg.lambda = Some(value),
+        "alpha" => cfg.alpha = value,
+        other => bail!("unknown hyperparameter `{other}` (expected lambda or alpha)"),
+    }
+    Ok(())
+}
+
+/// THE per-task hyperparameter-override validation, shared by the sweep
+/// grid (`coordinator::run_sweep`, one call per grid value) and the
+/// select list (`coordinator::run_select`, one call per `task:param=v`
+/// entry), so the two CLIs cannot drift in which overrides they accept:
+/// the task must declare the parameter ([`LearnerEntry::sweep_param`])
+/// and the value must be positive (learner constructors assert
+/// positivity — reject here with a clean error instead of panicking
+/// inside a builder).
+pub fn checked_apply_param(
+    cfg: &mut ExperimentConfig,
+    task: Task,
+    param: &str,
+    value: f64,
+) -> Result<()> {
+    match entry(task).sweep_param {
+        None => {
+            // Derive the hint from the registry so it can never trail it.
+            let tunable: Vec<String> = REGISTRY
+                .iter()
+                .filter_map(|e| e.sweep_param.map(|p| format!("{} tunes {p}", e.task.name())))
+                .collect();
+            bail!(
+                "task {} has no tunable hyperparameter (got `{param}`; {})",
+                task.name(),
+                tunable.join(", ")
+            );
+        }
+        Some(want) if want != param => bail!(
+            "task {} tunes `{want}`, not `{param}`",
+            task.name()
+        ),
+        Some(_) if value <= 0.0 => bail!(
+            "task {}: {param} must be > 0, got {value}",
+            task.name()
+        ),
+        Some(_) => apply_param(cfg, param, value),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_a_bijection_over_tasks() {
+        assert_eq!(REGISTRY.len(), Task::all().len());
+        for &task in Task::all() {
+            let e = entry(task);
+            assert_eq!(e.task, task);
+        }
+        // No duplicate rows.
+        for (i, a) in REGISTRY.iter().enumerate() {
+            for b in &REGISTRY[i + 1..] {
+                assert_ne!(a.task, b.task);
+            }
+        }
+    }
+
+    #[test]
+    fn builders_construct_for_every_runtime_free_task() {
+        let cfg = ExperimentConfig { n: 60, ..ExperimentConfig::default() };
+        for e in REGISTRY.iter().filter(|e| !e.requires_runtime) {
+            let data = e.dataset.build(&cfg).unwrap();
+            let learner = (e.build)(&cfg, &data).unwrap();
+            assert!(!learner.name().is_empty(), "{:?}", e.task);
+            assert_eq!(learner.dim(), data.d, "{:?}", e.task);
+            // The built learner runs: init + one update + one evaluate.
+            let mut m = learner.init();
+            learner.update(&mut m, &data, &(0..50).collect::<Vec<_>>());
+            assert!(learner.evaluate(&m, &data, &[50, 51]).is_finite(), "{:?}", e.task);
+        }
+    }
+
+    #[test]
+    fn runtime_tasks_error_cleanly_without_pjrt() {
+        let cfg = ExperimentConfig { n: 40, ..ExperimentConfig::default() };
+        for e in REGISTRY.iter().filter(|e| e.requires_runtime) {
+            let data = e.dataset.build(&cfg).unwrap();
+            match (e.build)(&cfg, &data) {
+                // Real runtime present (artifact-equipped environment).
+                Ok(_) => {}
+                Err(err) => {
+                    let msg = format!("{err}");
+                    assert!(
+                        msg.contains("xla") || msg.contains("artifact") || msg.contains("manifest"),
+                        "{:?}: unexpected error `{msg}`",
+                        e.task
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_param_sets_known_names_only() {
+        let mut cfg = ExperimentConfig::default();
+        apply_param(&mut cfg, "lambda", 0.25).unwrap();
+        assert_eq!(cfg.lambda, Some(0.25));
+        apply_param(&mut cfg, "alpha", 0.5).unwrap();
+        assert_eq!(cfg.alpha, 0.5);
+        assert!(apply_param(&mut cfg, "gamma", 1.0).is_err());
+    }
+
+    #[test]
+    fn checked_apply_param_enforces_name_and_domain() {
+        let mut cfg = ExperimentConfig::default();
+        checked_apply_param(&mut cfg, Task::Ridge, "lambda", 0.5).unwrap();
+        assert_eq!(cfg.lambda, Some(0.5));
+        // Task without a tunable parameter.
+        assert!(checked_apply_param(&mut cfg, Task::Knn, "lambda", 0.5).is_err());
+        // Wrong parameter name for the task.
+        assert!(checked_apply_param(&mut cfg, Task::Lsqsgd, "lambda", 0.5).is_err());
+        // Non-positive values are a clean error, never a constructor panic.
+        let err = checked_apply_param(&mut cfg, Task::Pegasos, "lambda", 0.0).unwrap_err();
+        assert!(format!("{err}").contains("must be > 0"), "{err}");
+        assert!(checked_apply_param(&mut cfg, Task::Lsqsgd, "alpha", -0.1).is_err());
+    }
+}

@@ -22,7 +22,7 @@
 //!   tasks; a fork materializes one model snapshot because its two halves
 //!   may run concurrently on different workers. Every subtree at or below
 //!   the cutoff runs *inline on its worker* through the shared sequential
-//!   recursion ([`super::treecv::run_subtree`]) with the caller's chosen
+//!   recursion (`treecv::run_subtree`) with the caller's chosen
 //!   [`Strategy`]:
 //!   - [`Strategy::SaveRevert`] descends via `update_logged`/`revert` with
 //!     **zero** copies below the cutoff, so a run takes `O(workers)` model
@@ -67,18 +67,30 @@
 //! warm across runs. Each run keeps its own `(folds, seed, strategy,
 //! cutoff)`, so every result is bit-identical to running that
 //! configuration alone (`tests/integration_sweep.rs` is the battery). The
-//! process-wide [`pool_spawn_count`] instrumentation counter lets callers
-//! assert the "one pool per batch" claim.
+//! per-pool [`TreeCvExecutor::pool_spawns`] instrumentation counter lets
+//! callers assert the "one pool per batch" claim without serializing
+//! against unrelated executors in the process.
+//!
+//! **Heterogeneous batches.** [`TreeCvExecutor::run_many_erased`] is the
+//! same multiplexer over *type-erased* learners
+//! ([`crate::learner::erased`]): one batch may mix learner families
+//! (Pegasos runs next to GaussianNb next to KnnClassifier), which is what
+//! the model-selection harness (`cv::sweep::run_sweep_erased`,
+//! `repro select`) schedules. It delegates to [`TreeCvExecutor::run_many`]
+//! through [`DynLearner`], so erased runs execute the identical engine
+//! code and reproduce their generic counterparts bit for bit
+//! (`tests/integration_erased.rs`).
 
 use super::folds::{gather_ordered, node_tags, Folds, Ordering};
 use super::treecv::run_subtree;
 use super::{CvResult, Strategy};
 use crate::data::Dataset;
+use crate::learner::erased::{DynLearner, ErasedLearner};
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as MemOrdering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Extra fork levels beyond ⌈log₂ workers⌉: each level doubles the subtree
@@ -101,21 +113,6 @@ pub fn snapshot_cutoff(threads: usize) -> usize {
     ceil_log2 + SNAPSHOT_SLACK
 }
 
-/// Process-wide count of worker pools spawned by the executor: one per
-/// [`TreeCvExecutor::run_many`] batch that actually spawns threads
-/// (`threads = 1` batches run inline and spawn nothing). A whole sweep of
-/// C configs × r repetitions bumps this by exactly 1, where dispatching
-/// the runs one at a time bumps it C·r times — the sweep tests assert
-/// both. Monotonic and approximate under concurrent executor use (it is
-/// never decremented; read deltas around a batch you serialized yourself).
-static POOL_SPAWNS: AtomicU64 = AtomicU64::new(0);
-
-/// Snapshot of the pool-spawn instrumentation counter (see
-/// [`POOL_SPAWNS`]).
-pub fn pool_spawn_count() -> u64 {
-    POOL_SPAWNS.load(MemOrdering::Relaxed)
-}
-
 /// The pooled work-stealing TreeCV engine.
 #[derive(Debug, Clone)]
 pub struct TreeCvExecutor {
@@ -132,6 +129,13 @@ pub struct TreeCvExecutor {
     /// thread (no spawning, no forking — the sequential engine exactly);
     /// capped at `k` per run.
     pub threads: usize,
+    /// Per-pool spawn counter: bumped once per [`Self::run_many`] batch
+    /// that actually spawns worker threads (inline single-worker batches
+    /// spawn nothing). Shared by clones of this executor — the handle IS
+    /// the counter — and read via [`Self::pool_spawns`]. Replaces the old
+    /// process-wide counter, so concurrent executors (e.g. parallel unit
+    /// tests) no longer perturb each other's accounting.
+    spawns: Arc<AtomicU64>,
 }
 
 /// One run of a multi-run batch ([`TreeCvExecutor::run_many`]): the full
@@ -142,6 +146,20 @@ pub struct TreeCvExecutor {
 /// through a shared pool reproduces each standalone run bit for bit.
 pub struct RunSpec<'a, L: IncrementalLearner> {
     pub learner: &'a L,
+    pub folds: &'a Folds,
+    /// Seed for this run's per-node permutation streams.
+    pub seed: u64,
+    /// Model-preservation strategy for this run's inline subtrees.
+    pub strategy: Strategy,
+}
+
+/// [`RunSpec`] over the type-erased learner layer: the element of a
+/// *heterogeneous* batch ([`TreeCvExecutor::run_many_erased`]), where each
+/// run may belong to a different learner family. Same per-run contract as
+/// the generic spec: the result is a pure function of
+/// `(learner, data, folds, strategy, ordering, seed)`.
+pub struct ErasedRunSpec<'a> {
+    pub learner: &'a dyn ErasedLearner,
     pub folds: &'a Folds,
     /// Seed for this run's per-node permutation streams.
     pub seed: u64,
@@ -231,7 +249,22 @@ impl Drop for PanicSignal<'_> {
 
 impl TreeCvExecutor {
     pub fn new(strategy: Strategy, ordering: Ordering, seed: u64, threads: usize) -> Self {
-        Self { strategy, ordering, seed, threads: threads.max(1) }
+        Self {
+            strategy,
+            ordering,
+            seed,
+            threads: threads.max(1),
+            spawns: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Worker pools this executor (and its clones — they share the
+    /// counter) has spawned so far: one per multi-worker [`Self::run_many`]
+    /// batch, zero for inline (`threads = 1`) batches. A whole sweep of
+    /// C configs × r repetitions reads 1 here, where dispatching the runs
+    /// one batch at a time reads C·r — the sweep tests assert both.
+    pub fn pool_spawns(&self) -> u64 {
+        self.spawns.load(MemOrdering::Relaxed)
     }
 
     /// Pool sized to the machine's available parallelism (no rounding to a
@@ -500,7 +533,7 @@ impl TreeCvExecutor {
             // the sequential engine's work.
             self.worker(0, &shared, data);
         } else {
-            POOL_SPAWNS.fetch_add(1, MemOrdering::Relaxed);
+            self.spawns.fetch_add(1, MemOrdering::Relaxed);
             let shared_ref = &shared;
             std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..threads)
@@ -523,6 +556,47 @@ impl TreeCvExecutor {
                 )
             })
             .collect()
+    }
+
+    /// Run a single type-erased computation (see [`Self::run_many_erased`]
+    /// for the batch form and the equivalence contract).
+    pub fn run_erased(
+        &self,
+        learner: &dyn ErasedLearner,
+        data: &Dataset,
+        folds: &Folds,
+    ) -> CvResult {
+        let spec =
+            ErasedRunSpec { learner, folds, seed: self.seed, strategy: self.strategy };
+        self.run_many_erased(data, std::slice::from_ref(&spec))
+            .pop()
+            .expect("run_many_erased returns one result per run")
+    }
+
+    /// Run a **heterogeneous** batch — runs of *different* learner
+    /// families — through ONE persistent worker pool. This is
+    /// [`Self::run_many`] over the type-erased learner layer: each spec
+    /// wraps its `&dyn ErasedLearner` in a [`DynLearner`] adapter and the
+    /// whole batch executes through the identical generic machinery
+    /// (deques, fork-snapshot buffer pool, worker-local scratch), so
+    /// result `i` is bit-identical to running `runs[i]`'s learner alone
+    /// through the generic path at the same `threads` setting —
+    /// `tests/integration_erased.rs` pins this per learner. Pooled model
+    /// buffers recycle across families via `ErasedModel::clone_from`
+    /// (storage-reusing on a type match, wholesale replacement otherwise).
+    pub fn run_many_erased(&self, data: &Dataset, runs: &[ErasedRunSpec<'_>]) -> Vec<CvResult> {
+        let wrapped: Vec<DynLearner<'_>> = runs.iter().map(|r| DynLearner(r.learner)).collect();
+        let specs: Vec<RunSpec<'_, DynLearner<'_>>> = wrapped
+            .iter()
+            .zip(runs)
+            .map(|(learner, r)| RunSpec {
+                learner,
+                folds: r.folds,
+                seed: r.seed,
+                strategy: r.strategy,
+            })
+            .collect();
+        self.run_many(data, &specs)
     }
 }
 
@@ -728,6 +802,77 @@ mod tests {
         let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4);
         let out = exe.run_many::<HistogramDensity>(&data, &[]);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn per_pool_spawn_counter_is_exact_and_local() {
+        let data = SyntheticMixture1d::new(200, 111).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 16);
+        let folds = Folds::new(200, 8, 112);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4);
+        assert_eq!(exe.pool_spawns(), 0);
+        let _ = exe.run(&l, &data, &folds);
+        let _ = exe.run(&l, &data, &folds);
+        assert_eq!(exe.pool_spawns(), 2, "one spawn per multi-worker batch");
+        // Clones share the handle: the counter identifies the pool config,
+        // not the clone.
+        let clone = exe.clone();
+        let _ = clone.run(&l, &data, &folds);
+        assert_eq!(exe.pool_spawns(), 3);
+        // Inline (threads = 1) batches never spawn.
+        let inline = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 1);
+        let _ = inline.run(&l, &data, &folds);
+        assert_eq!(inline.pool_spawns(), 0);
+        // Fresh executors start at zero — the counter is per pool, not
+        // process-wide.
+        assert_eq!(TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4).pool_spawns(), 0);
+    }
+
+    #[test]
+    fn erased_heterogeneous_batch_matches_generic_standalone() {
+        // Three different learner families through ONE pool; every result
+        // must be bit-identical to the generic executor run of that
+        // learner alone at the same threads setting, counters included.
+        use crate::learner::erased::{Erased, ErasedLearner};
+        use crate::learner::knn::KnnClassifier;
+        use crate::learner::perceptron::Perceptron;
+        let data = SyntheticCovertype::new(400, 113).generate();
+        let folds = Folds::new(400, 9, 114);
+        let pegasos = Pegasos::new(54, 1e-3);
+        let perceptron = Perceptron::new(54);
+        let knn = KnnClassifier::new(54, 3);
+        let erased: [Box<dyn ErasedLearner>; 3] = [
+            Erased::boxed(pegasos.clone()),
+            Erased::boxed(perceptron.clone()),
+            Erased::boxed(knn.clone()),
+        ];
+        let specs: Vec<ErasedRunSpec<'_>> = erased
+            .iter()
+            .enumerate()
+            .map(|(i, l)| ErasedRunSpec {
+                learner: &**l,
+                folds: &folds,
+                seed: 70 + i as u64,
+                strategy: Strategy::Copy,
+            })
+            .collect();
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4);
+        let batch = exe.run_many_erased(&data, &specs);
+        assert_eq!(exe.pool_spawns(), 1, "heterogeneous batch uses one pool");
+        let alone =
+            |i: usize| TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 70 + i as u64, 4);
+        let generics = [
+            alone(0).run(&pegasos, &data, &folds),
+            alone(1).run(&perceptron, &data, &folds),
+            alone(2).run(&knn, &data, &folds),
+        ];
+        for (i, (got, want)) in batch.iter().zip(&generics).enumerate() {
+            assert_eq!(got.per_fold, want.per_fold, "run {i}");
+            assert_eq!(got.estimate.to_bits(), want.estimate.to_bits(), "run {i}");
+            assert_eq!(got.ops.points_updated, want.ops.points_updated, "run {i}");
+            assert_eq!(got.ops.model_copies, want.ops.model_copies, "run {i}");
+            assert_eq!(got.ops.bytes_copied, want.ops.bytes_copied, "run {i}");
+        }
     }
 
     #[test]

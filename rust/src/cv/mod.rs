@@ -10,15 +10,21 @@
 //!   subtrees above a snapshot cutoff (~⌈log₂ workers⌉ levels) and runs
 //!   everything below inline under the caller's [`Strategy`] — SaveRevert
 //!   therefore pays O(workers) model copies per run instead of k − 1.
-//!   Every parallel dispatch path routes through it, and its `run_many`
+//!   Every parallel dispatch path routes through it; its `run_many`
 //!   schedules whole batches of runs (each task tagged with its run id)
-//!   through one pool.
-//! * [`sweep`] — the tuning workload: every (hyperparameter config ×
-//!   strategy × repetition) TreeCV run of a grid sweep as ONE executor
-//!   batch — no per-run pool spawn, shared snapshot-buffer pools, fold
-//!   assignments common across configs so the hyperparameter is the only
-//!   difference between rows. Surfaced as the `sweep` CLI subcommand
-//!   (`--sweep lambda=0.1,0.01,0.001`).
+//!   through one pool, and `run_many_erased` extends that to
+//!   **heterogeneous** batches over the type-erased learner layer
+//!   ([`crate::learner::erased`]) — runs of different learner families in
+//!   one pool, bit-identical to their generic counterparts. Pool-spawn
+//!   accounting is per executor (`TreeCvExecutor::pool_spawns`), not
+//!   process-wide.
+//! * [`sweep`] — the tuning workload: every (learner config × strategy ×
+//!   repetition) TreeCV run of a grid sweep as ONE executor batch — no
+//!   per-run pool spawn, shared snapshot-buffer pools, fold assignments
+//!   common across configs so the config is the only difference between
+//!   rows. `run_sweep` takes one learner family's grid (`repro sweep
+//!   --sweep lambda=0.1,0.01`); `run_sweep_erased` takes a heterogeneous
+//!   learner axis — the model-selection workload behind `repro select`.
 //! * [`parallel`] — the §4.1 parallel engine facade (delegates to
 //!   [`executor`]) plus the original scoped-thread forking retained as a
 //!   bench baseline; both are strategy-aware.

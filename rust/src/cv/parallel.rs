@@ -21,7 +21,7 @@
 //! [`ScopedForkTreeCv`] preserves the original recursive `thread::scope`
 //! implementation as a measurement baseline so `benches/scaling_k.rs` can
 //! quantify the executor's win; it is not wired into any dispatch path.
-//! Its sequential tail shares [`super::treecv::run_subtree`] with the other
+//! Its sequential tail shares `treecv::run_subtree` with the other
 //! engines, so it too honors both strategies (forks above the tail must
 //! snapshot regardless, exactly like the executor's fork frontier).
 

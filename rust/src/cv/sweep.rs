@@ -1,4 +1,4 @@
-//! Sweep scheduler: every (hyperparameter config × strategy × repetition)
+//! Sweep scheduler: every (learner config × strategy × repetition)
 //! TreeCV run of a tuning workload through ONE pooled executor.
 //!
 //! The paper positions fast CV as the tool for "performance estimation
@@ -11,24 +11,36 @@
 //! [`TreeCvExecutor::run_many`], which schedules every tree node of every
 //! run — tagged `(run_id, s, e)` — from one persistent work-stealing
 //! pool. No per-run worker spin-up/teardown, no barrier between runs, no
-//! model-pool cold starts; [`SweepOutcome::pool_spawns`] records that the
-//! whole sweep cost one pool (zero for `threads = 1`, which runs inline).
+//! model-pool cold starts; [`SweepOutcome::pool_spawns`] (read off the
+//! executor's per-pool counter) records that the whole sweep cost one
+//! pool (zero for `threads = 1`, which runs inline).
+//!
+//! **The learner axis.** [`run_sweep`] is the generic single-family form
+//! (`&[L]` — e.g. one λ grid of PEGASOS configs). [`run_sweep_erased`]
+//! generalizes the axis to `&[&dyn ErasedLearner]`: the configs may be
+//! *different learner families* (Pegasos next to GaussianNb next to
+//! KnnClassifier), which turns the grid tuner into the model-selection
+//! scheduler behind `repro select`. Both forms share the same seed/fold
+//! derivation and batch through one pool; the erased form delegates to
+//! [`TreeCvExecutor::run_many_erased`], whose runs are bit-identical to
+//! their generic counterparts.
 //!
 //! Determinism contract: repetition `r` derives its fold assignment and
 //! engine seed exactly as [`super::stats::run_repetitions`] does, and the
 //! folds are shared by every config and strategy — common partitionings
-//! isolate the hyperparameter as the only difference between sweep rows
+//! isolate the learner config as the only difference between sweep rows
 //! (the multi-run analogue of the paper comparing Table-2 columns on
 //! common partitionings). Each run's result is bit-identical to running
 //! that configuration alone through the executor (or the
 //! [`super::parallel::ParallelTreeCv`] facade) at the same `threads`
 //! setting — `tests/integration_sweep.rs` is the battery.
 
-use super::executor::{RunSpec, TreeCvExecutor};
+use super::executor::{ErasedRunSpec, RunSpec, TreeCvExecutor};
 use super::folds::{Folds, Ordering};
 use super::stats::{repetition_engine_seed, repetition_fold_seed};
 use super::{CvResult, Strategy};
 use crate::data::Dataset;
+use crate::learner::erased::ErasedLearner;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, RunningStats, Timer};
 use crate::Result;
@@ -36,8 +48,8 @@ use anyhow::bail;
 use std::time::Duration;
 
 /// The sweep's shared axes: every learner config passed to [`run_sweep`]
-/// is run under every strategy in `strategies` for `repetitions`
-/// independent partitionings of k folds.
+/// (or [`run_sweep_erased`]) is run under every strategy in `strategies`
+/// for `repetitions` independent partitionings of k folds.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
     /// Feeding order (paper §5), shared by every run.
@@ -59,7 +71,7 @@ pub struct SweepSpec {
 /// estimate plus every underlying run.
 #[derive(Debug, Clone)]
 pub struct SweepCell {
-    /// Index into the `learners` slice given to [`run_sweep`].
+    /// Index into the learner slice given to the sweep entry point.
     pub config: usize,
     pub strategy: Strategy,
     /// Mean of the per-repetition CV estimates.
@@ -77,9 +89,9 @@ pub struct SweepCell {
     pub runs: Vec<CvResult>,
 }
 
-/// Everything [`run_sweep`] produced. Cells are in (config-major,
+/// Everything a sweep produced. Cells are in (config-major,
 /// strategy-minor) order — ranking is the caller's concern
-/// (`coordinator::run_sweep` sorts by mean loss).
+/// (`coordinator::run_sweep`/`run_select` sort by mean loss).
 #[derive(Debug, Clone)]
 pub struct SweepOutcome {
     pub cells: Vec<SweepCell>,
@@ -89,25 +101,17 @@ pub struct SweepOutcome {
     pub threads: usize,
     /// Wall-clock of the whole pooled batch.
     pub total_wall: Duration,
-    /// Executor pools spawned by this sweep: 1 for a multi-worker pool,
-    /// 0 for a single-worker batch (runs inline) — never one per run.
-    /// Known locally (the sweep makes exactly one `run_many` call, which
-    /// spawns iff the pool has more than one worker), so the count is
-    /// exact even when other executors run concurrently in the process;
-    /// the global [`super::executor::pool_spawn_count`] counter
-    /// corroborates it in `tests/integration_sweep.rs`.
+    /// Executor pools spawned by this sweep, read directly off the
+    /// executor's per-pool counter ([`TreeCvExecutor::pool_spawns`]):
+    /// 1 for a multi-worker pool, 0 for a single-worker batch (runs
+    /// inline) — never one per run.
     pub pool_spawns: u64,
 }
 
-/// Run the full sweep: `learners.len() × spec.strategies.len() ×
-/// spec.repetitions` TreeCV runs through one pooled executor.
-pub fn run_sweep<L>(learners: &[L], data: &Dataset, spec: &SweepSpec) -> Result<SweepOutcome>
-where
-    L: IncrementalLearner + Sync,
-    L::Model: Send,
-{
-    if learners.is_empty() {
-        bail!("sweep needs at least one hyperparameter config");
+/// Shared validation for both sweep forms.
+fn validate(n_configs: usize, data: &Dataset, spec: &SweepSpec) -> Result<()> {
+    if n_configs == 0 {
+        bail!("sweep needs at least one learner config");
     }
     if spec.strategies.is_empty() {
         bail!("sweep needs at least one strategy");
@@ -118,36 +122,23 @@ where
     if spec.k < 1 || spec.k > data.n {
         bail!("sweep k = {} out of range 1..={}", spec.k, data.n);
     }
+    Ok(())
+}
 
-    // One fold assignment per repetition, shared by every config and
-    // strategy, derived exactly as the repetition harness derives it.
-    let folds: Vec<Folds> = (0..spec.repetitions)
-        .map(|r| Folds::new(data.n, spec.k, repetition_fold_seed(spec.seed, r)))
-        .collect();
+/// One fold assignment per repetition, shared by every config and
+/// strategy, derived exactly as the repetition harness derives it.
+fn repetition_folds(n: usize, spec: &SweepSpec) -> Vec<Folds> {
+    (0..spec.repetitions)
+        .map(|r| Folds::new(n, spec.k, repetition_fold_seed(spec.seed, r)))
+        .collect()
+}
 
-    let mut runs = Vec::with_capacity(learners.len() * spec.strategies.len() * spec.repetitions);
-    for learner in learners {
-        for &strategy in &spec.strategies {
-            for (r, f) in folds.iter().enumerate() {
-                let seed = repetition_engine_seed(spec.seed, r);
-                runs.push(RunSpec { learner, folds: f, seed, strategy });
-            }
-        }
-    }
-
-    let timer = Timer::start();
-    let engine = TreeCvExecutor::with_threads_knob(spec.strategies[0], spec.ordering, spec.threads);
-    // The pool size the executor will actually use (its own clamp,
-    // mirrored on the batch's total leaf count) — and, from it, the exact
-    // spawn count: one run_many call spawns iff the pool is multi-worker.
-    let threads_used = engine.threads.min(runs.len() * spec.k);
-    let results = engine.run_many(data, &runs);
-    let total_wall = timer.elapsed();
-    let pool_spawns = u64::from(threads_used > 1);
-
-    let mut cells = Vec::with_capacity(learners.len() * spec.strategies.len());
+/// Fold the flat (config-major, strategy, repetition) result stream back
+/// into aggregated cells.
+fn collect_cells(results: Vec<CvResult>, n_configs: usize, spec: &SweepSpec) -> Vec<SweepCell> {
+    let mut cells = Vec::with_capacity(n_configs * spec.strategies.len());
     let mut results = results.into_iter();
-    for config in 0..learners.len() {
+    for config in 0..n_configs {
         for &strategy in &spec.strategies {
             let cell_runs: Vec<CvResult> = results.by_ref().take(spec.repetitions).collect();
             let mut stats = RunningStats::default();
@@ -165,13 +156,103 @@ where
             });
         }
     }
-    Ok(SweepOutcome { cells, threads: threads_used, total_wall, pool_spawns })
+    cells
+}
+
+/// Build the batch's run list in THE canonical (config-major, strategy,
+/// repetition) order both [`collect_cells`] and the equivalence tests
+/// assume; `make` constructs one run from its `(config, folds, seed,
+/// strategy)` cell. One implementation for both spec types so the
+/// generic and erased entry points cannot drift.
+fn build_runs<'a, T>(
+    n_configs: usize,
+    spec: &SweepSpec,
+    folds: &'a [Folds],
+    mut make: impl FnMut(usize, &'a Folds, u64, Strategy) -> T,
+) -> Vec<T> {
+    let mut runs = Vec::with_capacity(n_configs * spec.strategies.len() * spec.repetitions);
+    for config in 0..n_configs {
+        for &strategy in &spec.strategies {
+            for (r, f) in folds.iter().enumerate() {
+                runs.push(make(config, f, repetition_engine_seed(spec.seed, r), strategy));
+            }
+        }
+    }
+    runs
+}
+
+/// Shared dispatch tail: size one executor from the spec's knobs, run
+/// the whole batch through it, and fold the flat results into cells plus
+/// the pool accounting. `n_runs` is the batch's run count (for the
+/// threads clamp, mirroring the executor's own `leaves_total` clamp).
+fn dispatch_batch(
+    n_configs: usize,
+    n_runs: usize,
+    spec: &SweepSpec,
+    run_batch: impl FnOnce(&TreeCvExecutor) -> Vec<CvResult>,
+) -> SweepOutcome {
+    let timer = Timer::start();
+    let engine = TreeCvExecutor::with_threads_knob(spec.strategies[0], spec.ordering, spec.threads);
+    let threads_used = engine.threads.min(n_runs * spec.k);
+    let results = run_batch(&engine);
+    SweepOutcome {
+        cells: collect_cells(results, n_configs, spec),
+        threads: threads_used,
+        total_wall: timer.elapsed(),
+        pool_spawns: engine.pool_spawns(),
+    }
+}
+
+/// Run the full single-family sweep: `learners.len() ×
+/// spec.strategies.len() × spec.repetitions` TreeCV runs through one
+/// pooled executor.
+pub fn run_sweep<L>(learners: &[L], data: &Dataset, spec: &SweepSpec) -> Result<SweepOutcome>
+where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    validate(learners.len(), data, spec)?;
+    let folds = repetition_folds(data.n, spec);
+    let runs = build_runs(learners.len(), spec, &folds, |c, folds, seed, strategy| RunSpec {
+        learner: &learners[c],
+        folds,
+        seed,
+        strategy,
+    });
+    Ok(dispatch_batch(learners.len(), runs.len(), spec, |engine| {
+        engine.run_many(data, &runs)
+    }))
+}
+
+/// Run the **heterogeneous** sweep: the learner axis holds type-erased
+/// configs that may belong to different families — the model-selection
+/// workload. Same seed/fold derivation, same one-pool batching, same
+/// (config-major, strategy-minor) cell layout as [`run_sweep`]; each
+/// run's result is bit-identical to its generic standalone counterpart.
+pub fn run_sweep_erased(
+    learners: &[&dyn ErasedLearner],
+    data: &Dataset,
+    spec: &SweepSpec,
+) -> Result<SweepOutcome> {
+    validate(learners.len(), data, spec)?;
+    let folds = repetition_folds(data.n, spec);
+    let runs =
+        build_runs(learners.len(), spec, &folds, |c, folds, seed, strategy| ErasedRunSpec {
+            learner: learners[c],
+            folds,
+            seed,
+            strategy,
+        });
+    Ok(dispatch_batch(learners.len(), runs.len(), spec, |engine| {
+        engine.run_many_erased(data, &runs)
+    }))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::SyntheticMixture1d;
+    use crate::learner::erased::Erased;
     use crate::learner::histdensity::HistogramDensity;
 
     fn spec(threads: usize) -> SweepSpec {
@@ -212,11 +293,43 @@ mod tests {
     }
 
     #[test]
+    fn erased_sweep_matches_generic_sweep_bitwise() {
+        // Same configs through run_sweep (generic) and run_sweep_erased:
+        // the erased learner axis must reproduce the generic cells bit
+        // for bit — means, stds, per-fold vectors and counters.
+        let data = SyntheticMixture1d::new(260, 143).generate();
+        let generic =
+            vec![HistogramDensity::new(-8.0, 8.0, 16), HistogramDensity::new(-8.0, 8.0, 48)];
+        let erased: Vec<Erased<HistogramDensity>> =
+            generic.iter().map(|l| Erased(l.clone())).collect();
+        let refs: Vec<&dyn crate::learner::erased::ErasedLearner> =
+            erased.iter().map(|l| l as &dyn crate::learner::erased::ErasedLearner).collect();
+        let mut s = spec(3);
+        s.strategies = vec![Strategy::Copy, Strategy::SaveRevert];
+        let a = run_sweep(&generic, &data, &s).unwrap();
+        let b = run_sweep_erased(&refs, &data, &s).unwrap();
+        assert_eq!(a.cells.len(), b.cells.len());
+        assert_eq!(a.pool_spawns, 1);
+        assert_eq!(b.pool_spawns, 1);
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+            assert_eq!(x.std.to_bits(), y.std.to_bits());
+            for (ra, rb) in x.runs.iter().zip(&y.runs) {
+                assert_eq!(ra.per_fold, rb.per_fold);
+                assert_eq!(ra.ops.points_updated, rb.ops.points_updated);
+                assert_eq!(ra.ops.model_copies, rb.ops.model_copies);
+                assert_eq!(ra.ops.bytes_copied, rb.ops.bytes_copied);
+            }
+        }
+    }
+
+    #[test]
     fn rejects_degenerate_specs() {
         let data = SyntheticMixture1d::new(50, 142).generate();
         let l = vec![HistogramDensity::new(-8.0, 8.0, 16)];
         let empty: Vec<HistogramDensity> = Vec::new();
         assert!(run_sweep(&empty, &data, &spec(1)).is_err());
+        assert!(run_sweep_erased(&[], &data, &spec(1)).is_err());
         let mut s = spec(1);
         s.repetitions = 0;
         assert!(run_sweep(&l, &data, &s).is_err());

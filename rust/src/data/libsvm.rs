@@ -143,4 +143,61 @@ mod tests {
         assert!(parse("1 abc\n".as_bytes(), None, None).is_err());
         assert!(parse("x 1:1\n".as_bytes(), None, None).is_err());
     }
+
+    #[test]
+    fn indices_are_one_based_and_may_be_out_of_order() {
+        // LIBSVM indices are 1-based: index 1 lands in column 0. Sparse
+        // rows need not list indices in ascending order — real dumps
+        // occasionally don't — and densification must not care.
+        let text = "1 3:3.0 1:1.0 2:2.0\n-1 2:5.0\n";
+        let d = parse(text.as_bytes(), None, None).unwrap();
+        assert_eq!(d.d, 3);
+        assert_eq!(d.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(d.row(1), &[0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn duplicate_index_last_wins() {
+        // Not legal LIBSVM strictly speaking, but the parser's write-into-
+        // dense semantics make the behavior well-defined: pin it.
+        let d = parse("1 1:1.0 1:9.0\n".as_bytes(), None, None).unwrap();
+        assert_eq!(d.row(0), &[9.0]);
+    }
+
+    #[test]
+    fn tolerates_trailing_and_mixed_whitespace() {
+        // Trailing spaces/tabs, CRLF line endings, and runs of interior
+        // whitespace between tokens must all parse.
+        let text = "1 1:0.5 2:1.5   \n-1\t1:2.0\t \r\n  1 \t 2:3.0  \n";
+        let d = parse(text.as_bytes(), None, None).unwrap();
+        assert_eq!(d.n, 3);
+        assert_eq!(d.d, 2);
+        assert_eq!(d.row(0), &[0.5, 1.5]);
+        assert_eq!(d.row(1), &[2.0, 0.0]);
+        assert_eq!(d.row(2), &[0.0, 3.0]);
+        assert_eq!(d.y, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn label_only_rows_are_valid_and_all_zero() {
+        // A row may hold no features at all (all-zero sparse row).
+        let d = parse("1\n-1 1:1\n".as_bytes(), None, None).unwrap();
+        assert_eq!(d.n, 2);
+        assert_eq!(d.row(0), &[0.0]);
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_numbers() {
+        // Each malformed shape reports the 1-based line it came from.
+        for (text, needle) in [
+            ("1 1:1\n1 :2\n", "line 2"),          // empty index
+            ("1 1:1\n\n1 2:\n", "line 3"),        // empty value (blank line skipped)
+            ("1 1:1\n1 x:1\n", "bad index"),      // non-numeric index
+            ("1 1:1\n1 2:y\n", "bad value"),      // non-numeric value
+            ("1 0:1\n", "1-based"),               // zero index
+        ] {
+            let err = parse(text.as_bytes(), None, None).unwrap_err();
+            assert!(format!("{err}").contains(needle), "`{text}` -> {err}");
+        }
+    }
 }

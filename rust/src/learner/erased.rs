@@ -1,0 +1,411 @@
+//! Type-erased, object-safe view of [`IncrementalLearner`] — the layer
+//! that lets ONE executor pool schedule runs of *different* learner
+//! families (the model-selection workload: rank `{Pegasos(λ), GaussianNb,
+//! OnlineRidge(λ), KnnClassifier, …}` on a common dataset).
+//!
+//! The generic trait is not object-safe: its associated `Model`/`Undo`
+//! types monomorphize every engine per learner, so a heterogeneous batch
+//! cannot share `TreeCvExecutor::run_many`'s deques. This module erases
+//! exactly those associated types and nothing else:
+//!
+//! * [`DynModel`] — a boxed model with object-safe `clone_box` /
+//!   `clone_from_dyn`. The latter is what keeps the engines' pooled-buffer
+//!   recycling alive through erasure: [`ErasedModel`]'s `Clone::clone_from`
+//!   forwards to the concrete model's storage-reusing `clone_from` when
+//!   the buffer holds the same model type, and falls back to a fresh
+//!   `clone_box` when a recycled buffer came from a *different* learner
+//!   family (possible in heterogeneous batches, where the fork-snapshot
+//!   pool is shared across runs).
+//! * [`ErasedLearner`] — `update`/`update_logged`/`revert`/`loss`/
+//!   `evaluate`/`model_bytes` forwarding over [`ErasedModel`]. `evaluate`
+//!   is forwarded explicitly (not reconstructed from `loss`) so learners
+//!   with amortized chunk evaluation (ridge's lazy solve, XLA batching)
+//!   keep their override — a requirement for bit-identical results.
+//! * [`Erased`] — the blanket adapter: `Erased(learner)` implements
+//!   [`ErasedLearner`] for every `IncrementalLearner` by downcasting the
+//!   erased model/undo back to the concrete types.
+//! * [`DynLearner`] — the reverse adapter: gives `&dyn ErasedLearner` the
+//!   *generic* interface (`Model = ErasedModel`), so the erased path runs
+//!   through the very same engines — `run_subtree`, `TreeCvExecutor`,
+//!   `TreeCv`, `StandardCv` — instead of a parallel implementation. Every
+//!   arithmetic operation an erased run performs is the concrete
+//!   learner's own, in the same order, so per-run results are
+//!   **bit-identical** to the generic path (`tests/integration_erased.rs`
+//!   pins this for every learner in the crate).
+
+use super::IncrementalLearner;
+use crate::data::Dataset;
+use std::any::Any;
+
+/// Object-safe model handle: clonable (into a fresh box, or storage-reusing
+/// into an existing same-typed box) and downcastable.
+///
+/// Implemented blanketly for every `Clone + Send + 'static` type, so
+/// concrete learner models need nothing beyond what the generic trait
+/// already demands.
+pub trait DynModel: Send {
+    /// Fresh boxed copy (the erased analogue of `Clone::clone`).
+    fn clone_box(&self) -> Box<dyn DynModel>;
+
+    /// Storage-reusing copy from `src` into `self` — the erased analogue
+    /// of `Clone::clone_from`. Returns `false` (leaving `self` untouched)
+    /// when `src` is a different concrete type, so callers can fall back
+    /// to [`Self::clone_box`].
+    fn clone_from_dyn(&mut self, src: &dyn DynModel) -> bool;
+
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+impl<M: Clone + Send + 'static> DynModel for M {
+    fn clone_box(&self) -> Box<dyn DynModel> {
+        Box::new(self.clone())
+    }
+
+    fn clone_from_dyn(&mut self, src: &dyn DynModel) -> bool {
+        match src.as_any().downcast_ref::<M>() {
+            Some(src) => {
+                self.clone_from(src);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// A type-erased model: what the engines carry when driven through
+/// [`DynLearner`]. `Clone::clone_from` preserves the storage-reusing
+/// semantics of the concrete model's `clone_from` whenever the target
+/// buffer holds the same model type (see module docs).
+pub struct ErasedModel(Box<dyn DynModel>);
+
+impl ErasedModel {
+    /// Borrow the concrete model, if it is an `M`.
+    pub fn downcast_ref<M: 'static>(&self) -> Option<&M> {
+        self.0.as_any().downcast_ref()
+    }
+
+    /// Mutably borrow the concrete model, if it is an `M`.
+    pub fn downcast_mut<M: 'static>(&mut self) -> Option<&mut M> {
+        self.0.as_any_mut().downcast_mut()
+    }
+}
+
+impl Clone for ErasedModel {
+    fn clone(&self) -> Self {
+        ErasedModel(self.0.clone_box())
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        // Same concrete type: reuse this buffer's storage. Different type
+        // (a pooled buffer recycled from another learner family's run):
+        // replace the box wholesale — correct either way, and the engines'
+        // op counters never observe the difference.
+        if !self.0.clone_from_dyn(&*src.0) {
+            self.0 = src.0.clone_box();
+        }
+    }
+}
+
+/// Object-safe undo token (the erased analogue of the generic trait's
+/// associated `Undo`); consumed by [`ErasedLearner::revert`].
+pub trait DynUndo: Send {
+    /// Unwrap for downcasting back to the concrete undo type.
+    fn into_any(self: Box<Self>) -> Box<dyn Any>;
+}
+
+impl<U: Send + 'static> DynUndo for U {
+    fn into_any(self: Box<Self>) -> Box<dyn Any> {
+        self
+    }
+}
+
+/// Object-safe incremental learner: the paper's `L : (M ∪ {∅}) × Z* → M`
+/// with the model type erased, so heterogeneous collections (`Vec<Box<dyn
+/// ErasedLearner>>`, registry constructors) and heterogeneous executor
+/// batches ([`crate::cv::executor::TreeCvExecutor::run_many_erased`]) are
+/// expressible. Obtain one with [`Erased`]; drive engines with
+/// [`DynLearner`].
+pub trait ErasedLearner: Send + Sync {
+    /// Short human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Expected feature dimension.
+    fn dim(&self) -> usize;
+
+    /// The empty model `∅`.
+    fn init(&self) -> ErasedModel;
+
+    /// Incremental update (ordered index slice, as in the generic trait).
+    fn update(&self, model: &mut ErasedModel, data: &Dataset, idx: &[u32]);
+
+    /// Update recording an undo token (save/revert strategy, §4.1).
+    fn update_logged(&self, model: &mut ErasedModel, data: &Dataset, idx: &[u32])
+        -> Box<dyn DynUndo>;
+
+    /// Restore the model to its state before the matching
+    /// [`Self::update_logged`] call.
+    fn revert(&self, model: &mut ErasedModel, data: &Dataset, undo: Box<dyn DynUndo>);
+
+    /// Single held-out point loss.
+    fn loss(&self, model: &ErasedModel, data: &Dataset, i: u32) -> f64;
+
+    /// Mean loss over a held-out chunk — forwards the concrete learner's
+    /// `evaluate` (overrides included) for bit-identical results.
+    fn evaluate(&self, model: &ErasedModel, data: &Dataset, idx: &[u32]) -> f64;
+
+    /// Approximate model size in bytes.
+    fn model_bytes(&self, model: &ErasedModel) -> usize;
+}
+
+/// Blanket adapter from the generic trait to the erased one: wrap any
+/// learner as `Erased(learner)` and it becomes a `dyn ErasedLearner`.
+pub struct Erased<L>(pub L);
+
+impl<L> Erased<L> {
+    /// Box the wrapped learner as a trait object (registry constructors).
+    pub fn boxed(learner: L) -> Box<dyn ErasedLearner>
+    where
+        L: IncrementalLearner + Send + Sync + 'static,
+        L::Model: 'static,
+        L::Undo: 'static,
+    {
+        Box::new(Erased(learner))
+    }
+}
+
+/// Downcast an erased model to `L`'s concrete model. A mismatch means the
+/// caller fed a model from a different learner into this one — a bug in
+/// the engine layer, never recoverable — so it panics with the pairing.
+fn concrete<'m, L: IncrementalLearner>(model: &'m mut ErasedModel, name: &str) -> &'m mut L::Model
+where
+    L::Model: 'static,
+{
+    model
+        .downcast_mut::<L::Model>()
+        .unwrap_or_else(|| panic!("erased model fed to wrong learner `{name}`"))
+}
+
+impl<L> ErasedLearner for Erased<L>
+where
+    L: IncrementalLearner + Send + Sync,
+    L::Model: 'static,
+    L::Undo: 'static,
+{
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn init(&self) -> ErasedModel {
+        ErasedModel(Box::new(self.0.init()))
+    }
+
+    fn update(&self, model: &mut ErasedModel, data: &Dataset, idx: &[u32]) {
+        self.0.update(concrete::<L>(model, self.0.name()), data, idx);
+    }
+
+    fn update_logged(
+        &self,
+        model: &mut ErasedModel,
+        data: &Dataset,
+        idx: &[u32],
+    ) -> Box<dyn DynUndo> {
+        Box::new(self.0.update_logged(concrete::<L>(model, self.0.name()), data, idx))
+    }
+
+    fn revert(&self, model: &mut ErasedModel, data: &Dataset, undo: Box<dyn DynUndo>) {
+        let undo = undo
+            .into_any()
+            .downcast::<L::Undo>()
+            .unwrap_or_else(|_| panic!("erased undo fed to wrong learner `{}`", self.0.name()));
+        self.0.revert(concrete::<L>(model, self.0.name()), data, *undo);
+    }
+
+    fn loss(&self, model: &ErasedModel, data: &Dataset, i: u32) -> f64 {
+        self.0.loss(self.model_ref(model), data, i)
+    }
+
+    fn evaluate(&self, model: &ErasedModel, data: &Dataset, idx: &[u32]) -> f64 {
+        self.0.evaluate(self.model_ref(model), data, idx)
+    }
+
+    fn model_bytes(&self, model: &ErasedModel) -> usize {
+        self.0.model_bytes(self.model_ref(model))
+    }
+}
+
+impl<L> Erased<L>
+where
+    L: IncrementalLearner,
+    L::Model: 'static,
+{
+    fn model_ref<'m>(&self, model: &'m ErasedModel) -> &'m L::Model {
+        model
+            .downcast_ref::<L::Model>()
+            .unwrap_or_else(|| panic!("erased model fed to wrong learner `{}`", self.0.name()))
+    }
+}
+
+/// Adapter giving `&dyn ErasedLearner` the *generic* [`IncrementalLearner`]
+/// interface (`Model = ErasedModel`), so the erased path drives the exact
+/// same engine code — `run_subtree`, the executor, `TreeCv`, `StandardCv`
+/// — as the generic path.
+#[derive(Clone, Copy)]
+pub struct DynLearner<'a>(pub &'a dyn ErasedLearner);
+
+impl IncrementalLearner for DynLearner<'_> {
+    type Model = ErasedModel;
+    type Undo = Box<dyn DynUndo>;
+
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn init(&self) -> ErasedModel {
+        self.0.init()
+    }
+
+    fn update(&self, model: &mut ErasedModel, data: &Dataset, idx: &[u32]) {
+        self.0.update(model, data, idx);
+    }
+
+    fn update_logged(
+        &self,
+        model: &mut ErasedModel,
+        data: &Dataset,
+        idx: &[u32],
+    ) -> Box<dyn DynUndo> {
+        self.0.update_logged(model, data, idx)
+    }
+
+    fn revert(&self, model: &mut ErasedModel, data: &Dataset, undo: Box<dyn DynUndo>) {
+        self.0.revert(model, data, undo);
+    }
+
+    fn loss(&self, model: &ErasedModel, data: &Dataset, i: u32) -> f64 {
+        self.0.loss(model, data, i)
+    }
+
+    fn evaluate(&self, model: &ErasedModel, data: &Dataset, idx: &[u32]) -> f64 {
+        // Forward the erased override chain instead of the generic default
+        // so learners with amortized chunk evaluation stay bit-identical.
+        self.0.evaluate(model, data, idx)
+    }
+
+    fn model_bytes(&self, model: &ErasedModel) -> usize {
+        self.0.model_bytes(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::{Folds, Ordering};
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::{CvEngine, Strategy};
+    use crate::data::synth::{SyntheticCovertype, SyntheticYearMsd};
+    use crate::learner::histdensity::HistogramDensity;
+    use crate::learner::pegasos::Pegasos;
+    use crate::learner::perceptron::Perceptron;
+    use crate::learner::ridge::OnlineRidge;
+
+    #[test]
+    fn erased_forwards_update_and_loss() {
+        let data = SyntheticCovertype::new(200, 61).generate();
+        let l = Pegasos::new(54, 1e-3);
+        let e: Box<dyn ErasedLearner> = Erased::boxed(l.clone());
+        let idx: Vec<u32> = (0..150).collect();
+        let mut gm = l.init();
+        l.update(&mut gm, &data, &idx);
+        let mut em = e.init();
+        e.update(&mut em, &data, &idx);
+        let held: Vec<u32> = (150..200).collect();
+        assert_eq!(l.evaluate(&gm, &data, &held), e.evaluate(&em, &data, &held));
+        assert_eq!(l.loss(&gm, &data, 150), e.loss(&em, &data, 150));
+        assert_eq!(l.model_bytes(&gm), e.model_bytes(&em));
+        assert_eq!(e.name(), "pegasos");
+        assert_eq!(e.dim(), 54);
+    }
+
+    #[test]
+    fn erased_update_logged_revert_roundtrip() {
+        // The perceptron has a genuinely sparse undo log; erased revert
+        // must restore exactly what the concrete revert restores.
+        let data = SyntheticCovertype::new(300, 62).generate();
+        let l = Perceptron::new(54);
+        let e: Box<dyn ErasedLearner> = Erased::boxed(l.clone());
+        let idx: Vec<u32> = (0..200).collect();
+        let mut gm = l.init();
+        let mut em = e.init();
+        l.update(&mut gm, &data, &idx);
+        e.update(&mut em, &data, &idx);
+        let gu = l.update_logged(&mut gm, &data, &(200..300).collect::<Vec<_>>());
+        let eu = e.update_logged(&mut em, &data, &(200..300).collect::<Vec<_>>());
+        l.revert(&mut gm, &data, gu);
+        e.revert(&mut em, &data, eu);
+        let got = em.downcast_ref::<crate::learner::perceptron::PerceptronModel>().unwrap();
+        assert_eq!(got.w, gm.w);
+        assert_eq!(got.bias, gm.bias);
+        assert_eq!(got.mistakes, gm.mistakes);
+    }
+
+    #[test]
+    fn clone_from_reuses_same_type_and_replaces_mismatch() {
+        let l = Erased(HistogramDensity::new(-8.0, 8.0, 32));
+        let data = crate::data::synth::SyntheticMixture1d::new(50, 63).generate();
+        let mut a = ErasedLearner::init(&l);
+        l.update(&mut a, &data, &(0..50).collect::<Vec<_>>());
+        // Same-typed buffer: storage-reusing path.
+        let mut buf = ErasedLearner::init(&l);
+        buf.clone_from(&a);
+        assert_eq!(l.evaluate(&buf, &data, &[0, 1]), l.evaluate(&a, &data, &[0, 1]));
+        // Mismatched buffer (a pegasos model): wholesale replacement.
+        let other = Erased(Pegasos::new(54, 1e-3));
+        let mut buf = ErasedLearner::init(&other);
+        buf.clone_from(&a);
+        assert_eq!(l.evaluate(&buf, &data, &[0, 1]), l.evaluate(&a, &data, &[0, 1]));
+    }
+
+    #[test]
+    fn dyn_learner_through_treecv_is_bit_identical() {
+        // Ridge overrides `evaluate` (lazy solve); the erased path must
+        // still match the generic engine bit for bit.
+        let data = SyntheticYearMsd::new(240, 64).generate();
+        let l = OnlineRidge::new(90, 0.5);
+        let folds = Folds::new(240, 8, 65);
+        let engine = TreeCv::new(Strategy::Copy, Ordering::Fixed, 3);
+        let generic = engine.run(&l, &data, &folds);
+        let erased_l = Erased(l);
+        let erased = engine.run(&DynLearner(&erased_l), &data, &folds);
+        assert_eq!(generic.per_fold, erased.per_fold);
+        assert_eq!(generic.estimate.to_bits(), erased.estimate.to_bits());
+        assert_eq!(generic.ops.points_updated, erased.ops.points_updated);
+        assert_eq!(generic.ops.bytes_copied, erased.ops.bytes_copied);
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong learner")]
+    fn model_learner_mismatch_panics() {
+        let data = SyntheticCovertype::new(10, 66).generate();
+        let pegasos = Erased(Pegasos::new(54, 1e-3));
+        let hist = Erased(HistogramDensity::new(-8.0, 8.0, 8));
+        let mut m = ErasedLearner::init(&hist);
+        pegasos.update(&mut m, &data, &[0]);
+    }
+}

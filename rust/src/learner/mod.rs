@@ -33,7 +33,20 @@
 //!
 //! The XLA-backed learners (running the AOT Pallas/JAX artifacts through
 //! PJRT) live in [`crate::runtime`] and implement the same trait.
+//!
+//! ## Generic vs erased
+//!
+//! [`IncrementalLearner`] is the *generic* interface: associated
+//! `Model`/`Undo` types, zero-cost static dispatch, one monomorphized
+//! engine per learner. [`erased`] adds the *object-safe* view on top —
+//! [`erased::ErasedLearner`] / [`erased::DynModel`] with storage-reusing
+//! `clone_from_dyn` — so heterogeneous learner collections (the
+//! coordinator's registry, `repro select`) can schedule runs of different
+//! families through one executor pool. The erased path delegates to the
+//! same engine code via [`erased::DynLearner`], so its results are
+//! bit-identical to the generic path, learner by learner.
 
+pub mod erased;
 pub mod histdensity;
 pub mod kmeans;
 pub mod knn;

@@ -8,12 +8,17 @@
 //! * `dist`    — the §4.1 distributed simulation (communication accounting).
 //! * `grid`    — the intro's motivation: hyper-parameter grid search driven
 //!               by fast CV.
+//! * `sweep`   — a hyperparameter grid through ONE pooled executor.
+//! * `select`  — model selection across learner families (registry-built,
+//!               heterogeneous batch through ONE pooled executor).
 //! * `selfcheck` — verify the PJRT runtime and AOT artifacts end-to-end.
 //!
 //! Argument parsing is in-tree (`--flag value` / `--flag` booleans); run
 //! `repro help` for usage.
 
-use treecv::config::{Engine, ExperimentConfig, OrderingCfg, StrategyCfg, SweepGrid, Task};
+use treecv::config::{
+    Engine, ExperimentConfig, OrderingCfg, SelectList, StrategyCfg, SweepGrid, Task,
+};
 use treecv::coordinator::{self, paper};
 use treecv::report::{Json, ToJson};
 use treecv::Result;
@@ -24,8 +29,10 @@ repro — TreeCV (IJCAI 2015) reproduction driver
 USAGE: repro <command> [--flag value ...]
 
 COMMANDS
-  cv         Run a CV experiment.
-             --task pegasos|lsqsgd|kmeans|density|naive_bayes|ridge
+  cv         Run a CV experiment. Every learner in the registry is
+             reachable; xla_* tasks need the PJRT runtime + artifacts.
+             --task pegasos|lsqsgd|kmeans|density|naive_bayes|ridge|
+                    knn|perceptron|multiset|xla_pegasos|xla_lsqsgd
              --engine treecv|standard|parallel_treecv|merge
                                   (parallel_treecv — alias: executor — runs
                                    on the pooled work-stealing executor)
@@ -39,7 +46,9 @@ COMMANDS
                                    standard/merge, never silently copy
              --threads 0           worker-pool size for parallel_treecv
                                    (0 = all cores)
-             --lambda 1e-6  --alpha 0  --data FILE.libsvm
+             --lambda L            regularizer (default: pegasos 1e-6,
+                                   ridge 1.0)
+             --alpha 0  --data FILE.libsvm
              --config FILE         load a config file (flags override)
              --json                emit JSON
   table2     Reproduce Table 2.   --task --n --ks --reps --seed --json
@@ -53,6 +62,14 @@ COMMANDS
              ranked by mean loss (best first).
              --task pegasos|ridge|lsqsgd
              --sweep lambda=1e-3,1e-4,1e-5   (lsqsgd: alpha=...)
+             --k 10  --n 20000  --reps 20  --seed 42
+             --threads 0          pool size (0 = all cores)
+             --randomized --save-revert --json --config FILE
+  select     Model selection across learner FAMILIES: every (learner x
+             repetition) TreeCV run batches through ONE pooled executor;
+             prints a table ranked by mean loss. All learners must share
+             one dataset family (e.g. the covertype classifiers).
+             --learners pegasos:lambda=1e-4,naive_bayes,knn,perceptron
              --k 10  --n 20000  --reps 20  --seed 42
              --threads 0          pool size (0 = all cores)
              --randomized --save-revert --json --config FILE
@@ -127,6 +144,35 @@ impl Args {
     }
 }
 
+/// Shared flag plumbing of the pooled-batch subcommands (`sweep`,
+/// `select`): config-file load, the common numeric overrides, single-k
+/// resolution, ordering/strategy switches, and `--data` — one
+/// implementation so the two subcommands cannot drift.
+fn batch_cfg(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.n = args.get_parse("n", cfg.n)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.repetitions = args.get_parse("reps", cfg.repetitions)?;
+    cfg.threads = args.get_parse("threads", cfg.threads)?;
+    // Batch runs use a single fold count: keep a single configured k,
+    // else fall back to 10; `--k` overrides either.
+    let default_k = if cfg.ks.len() == 1 { cfg.ks[0] } else { 10 };
+    cfg.ks = vec![args.get_parse("k", default_k)?];
+    if args.has("randomized") {
+        cfg.ordering = OrderingCfg::Randomized;
+    }
+    if args.has("save-revert") {
+        cfg.strategy = StrategyCfg::SaveRevert;
+    }
+    if let Some(d) = args.get("data") {
+        cfg.data_path = Some(d.to_string());
+    }
+    Ok(cfg)
+}
+
 fn cell_reports_json(reports: &[coordinator::CellReport]) -> Json {
     Json::Arr(
         reports
@@ -179,7 +225,10 @@ fn main() -> Result<()> {
             if args.has("save-revert") {
                 cfg.strategy = StrategyCfg::SaveRevert;
             }
-            cfg.lambda = args.get_parse("lambda", cfg.lambda)?;
+            if let Some(v) = args.get("lambda") {
+                cfg.lambda =
+                    Some(v.parse().map_err(|e| anyhow::anyhow!("--lambda {v}: {e}"))?);
+            }
             cfg.alpha = args.get_parse("alpha", cfg.alpha)?;
             if let Some(d) = args.get("data") {
                 cfg.data_path = Some(d.to_string());
@@ -241,36 +290,31 @@ fn main() -> Result<()> {
         }
         "sweep" => {
             let args = Args::parse(rest, &["randomized", "save-revert", "json"])?;
-            let mut cfg = match args.get("config") {
-                Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
-                None => ExperimentConfig::default(),
-            };
+            let mut cfg = batch_cfg(&args)?;
             if let Some(t) = args.get("task") {
                 cfg.task = Task::parse(t)?;
             }
-            cfg.n = args.get_parse("n", cfg.n)?;
-            cfg.seed = args.get_parse("seed", cfg.seed)?;
-            cfg.repetitions = args.get_parse("reps", cfg.repetitions)?;
-            cfg.threads = args.get_parse("threads", cfg.threads)?;
-            let default_k = if cfg.ks.len() == 1 { cfg.ks[0] } else { 10 };
-            cfg.ks = vec![args.get_parse("k", default_k)?];
-            if args.has("randomized") {
-                cfg.ordering = OrderingCfg::Randomized;
-            }
-            if args.has("save-revert") {
-                cfg.strategy = StrategyCfg::SaveRevert;
-            }
             if let Some(g) = args.get("sweep") {
                 cfg.sweep = Some(SweepGrid::parse(g)?);
-            }
-            if let Some(d) = args.get("data") {
-                cfg.data_path = Some(d.to_string());
             }
             let report = coordinator::run_sweep(&cfg)?;
             if args.has("json") {
                 println!("{}", report.to_json().render_pretty());
             } else {
                 print!("{}", coordinator::format_sweep_table(&report));
+            }
+        }
+        "select" => {
+            let args = Args::parse(rest, &["randomized", "save-revert", "json"])?;
+            let mut cfg = batch_cfg(&args)?;
+            if let Some(l) = args.get("learners") {
+                cfg.learners = Some(SelectList::parse(l)?);
+            }
+            let report = coordinator::run_select(&cfg)?;
+            if args.has("json") {
+                println!("{}", report.to_json().render_pretty());
+            } else {
+                print!("{}", coordinator::format_select_table(&report));
             }
         }
         "selfcheck" => paper::selfcheck()?,

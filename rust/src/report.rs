@@ -177,6 +177,37 @@ impl ToJson for crate::coordinator::SweepReport {
     }
 }
 
+impl ToJson for crate::coordinator::SelectReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("repetitions", Json::num(self.repetitions as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("pool_spawns", Json::num(self.pool_spawns as f64)),
+            ("total_wall_secs", Json::Num(self.total_wall_secs)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("learner", Json::str(p.learner.clone())),
+                                ("task", Json::str(p.task.name())),
+                                ("strategy", Json::str(p.strategy.name())),
+                                ("mean", Json::Num(p.mean)),
+                                ("std", Json::Num(p.std)),
+                                ("ops", p.ops.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

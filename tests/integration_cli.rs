@@ -21,8 +21,55 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_commands() {
     let text = run_ok(&["help"]);
-    for cmd in ["cv", "table2", "figure2", "loocv", "dist", "grid", "sweep", "selfcheck"] {
+    let cmds = ["cv", "table2", "figure2", "loocv", "dist", "grid", "sweep", "select", "selfcheck"];
+    for cmd in cmds {
         assert!(text.contains(cmd), "missing {cmd}");
+    }
+}
+
+/// Every runtime-free registry task round-trips through `repro cv`: the
+/// name parses, the registry builds the learner, the engine runs, and the
+/// table echoes the task name back.
+#[test]
+fn every_registry_task_roundtrips_through_cv() {
+    let tasks = [
+        "pegasos",
+        "lsqsgd",
+        "kmeans",
+        "density",
+        "naive_bayes",
+        "ridge",
+        "knn",
+        "perceptron",
+        "multiset",
+    ];
+    for task in tasks {
+        let text = run_ok(&["cv", "--task", task, "--n", "120", "--ks", "3", "--reps", "1"]);
+        assert!(text.contains(task), "{task}:\n{text}");
+        assert_eq!(text.lines().count(), 2, "{task}:\n{text}"); // header + one row
+    }
+}
+
+/// The XLA-backed registry tasks are CLI-reachable too: the name parses
+/// and dispatches; without the PJRT runtime + artifacts the run exits
+/// nonzero with the clean "built without the `xla` feature" /
+/// missing-artifact error, never a parse failure.
+#[test]
+fn xla_tasks_are_reachable_and_fail_cleanly_without_runtime() {
+    for task in ["xla_pegasos", "xla_lsqsgd"] {
+        let out = repro()
+            .args(["cv", "--task", task, "--n", "100", "--ks", "3", "--reps", "1"])
+            .output()
+            .unwrap();
+        let err = String::from_utf8_lossy(&out.stderr);
+        if out.status.success() {
+            continue; // artifact-equipped environment: the run worked
+        }
+        assert!(
+            err.contains("xla") || err.contains("artifact") || err.contains("manifest"),
+            "{task}: unexpected failure:\n{err}"
+        );
+        assert!(!err.contains("unknown task"), "{task} must parse:\n{err}");
     }
 }
 
@@ -183,6 +230,76 @@ fn sweep_malformed_grid_exits_nonzero() {
         &["sweep", "--task", "pegasos", "--n", "100", "--sweep", "alpha=0.1"],
         // No grid given.
         &["sweep", "--task", "pegasos", "--n", "100"],
+    ];
+    for args in cases {
+        let out = repro().args(args).output().unwrap();
+        assert!(!out.status.success(), "`repro {args:?}` should fail");
+    }
+}
+
+/// The acceptance criterion end to end: a heterogeneous `repro select`
+/// run batches ≥ 3 learner families through exactly ONE pool spawn
+/// (per-pool counter, echoed in the table header) and ranks them by mean
+/// loss.
+#[test]
+fn select_ranks_learner_families_through_one_pool() {
+    let text = run_ok(&[
+        "select",
+        "--learners",
+        "pegasos:lambda=1e-4,naive_bayes,knn,perceptron",
+        "--n",
+        "240",
+        "--k",
+        "4",
+        "--reps",
+        "2",
+        "--threads",
+        "3",
+        "--seed",
+        "9",
+    ]);
+    assert!(text.contains("pool_spawns=1"), "one pool for the whole selection:\n{text}");
+    assert!(text.contains("rank"), "{text}");
+    for name in ["pegasos(lambda=1e-4)", "naive_bayes", "knn", "perceptron"] {
+        assert!(text.contains(name), "missing {name}:\n{text}");
+    }
+    // Header + column line + one row per learner.
+    assert_eq!(text.lines().count(), 6, "{text}");
+    // Rows are ranked by mean loss ascending (mean is the 4th column).
+    let means: Vec<f64> = text
+        .lines()
+        .skip(2)
+        .map(|l| l.split_whitespace().nth(3).unwrap().parse().unwrap())
+        .collect();
+    assert!(means.windows(2).all(|w| w[0] <= w[1]), "not ranked: {means:?}");
+}
+
+#[test]
+fn select_json_output() {
+    let text = run_ok(&[
+        "select", "--learners", "pegasos,knn,naive_bayes", "--n", "160", "--k", "4", "--reps",
+        "2", "--threads", "2", "--json",
+    ]);
+    assert!(text.trim_start().starts_with('{'), "{text}");
+    assert!(text.contains("\"points\""), "{text}");
+    assert!(text.contains("\"pool_spawns\": 1"), "{text}");
+    assert!(text.contains("\"learner\""), "{text}");
+    assert_eq!(text.matches("\"mean\"").count(), 3);
+}
+
+#[test]
+fn select_rejects_bad_lists() {
+    let cases: [&[&str]; 5] = [
+        // No list given.
+        &["select", "--n", "100"],
+        // Mixed dataset families (classification vs regression).
+        &["select", "--learners", "pegasos,ridge", "--n", "100"],
+        // Parameter on a task that has none.
+        &["select", "--learners", "knn:lambda=0.5,pegasos", "--n", "100"],
+        // Unknown task name.
+        &["select", "--learners", "pegasos,bogus", "--n", "100"],
+        // Non-positive override value (clean error, not a panic).
+        &["select", "--learners", "pegasos:lambda=0,knn", "--n", "100"],
     ];
     for args in cases {
         let out = repro().args(args).output().unwrap();

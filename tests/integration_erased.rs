@@ -1,0 +1,257 @@
+//! Erased-vs-generic equivalence battery (the acceptance criterion of the
+//! object-safe learner layer): for EVERY learner in the crate, the
+//! type-erased path — `Erased(learner)` driven through
+//! `TreeCvExecutor::run_erased` / `run_many_erased` — must reproduce the
+//! generic `TreeCvExecutor` path **bit-identically**: same estimate, same
+//! per-fold scores, same work counters, across both model-preservation
+//! strategies and worker counts {1, 3, 8}, under both feeding orders.
+//!
+//! The XLA-backed learners run the same check when the PJRT runtime and
+//! AOT artifacts are present, and skip cleanly otherwise (stub builds).
+
+use treecv::cv::executor::{ErasedRunSpec, TreeCvExecutor};
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::{CvResult, Strategy};
+use treecv::data::synth::{
+    SyntheticBlobs, SyntheticCovertype, SyntheticMixture1d, SyntheticYearMsd,
+};
+use treecv::data::Dataset;
+use treecv::learner::erased::{Erased, ErasedLearner};
+use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::kmeans::OnlineKMeans;
+use treecv::learner::knn::KnnClassifier;
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::multiset::MultisetLearner;
+use treecv::learner::naive_bayes::GaussianNb;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::perceptron::Perceptron;
+use treecv::learner::ridge::OnlineRidge;
+use treecv::learner::IncrementalLearner;
+
+const WORKER_COUNTS: [usize; 3] = [1, 3, 8];
+
+fn assert_bit_identical(generic: &CvResult, erased: &CvResult, ctx: &str) {
+    assert_eq!(generic.per_fold, erased.per_fold, "{ctx}: per_fold");
+    assert_eq!(generic.estimate.to_bits(), erased.estimate.to_bits(), "{ctx}: estimate");
+    let (g, e) = (&generic.ops, &erased.ops);
+    assert_eq!(g.update_calls, e.update_calls, "{ctx}: update_calls");
+    assert_eq!(g.points_updated, e.points_updated, "{ctx}: points_updated");
+    assert_eq!(g.model_copies, e.model_copies, "{ctx}: model_copies");
+    assert_eq!(g.bytes_copied, e.bytes_copied, "{ctx}: bytes_copied");
+    assert_eq!(g.model_restores, e.model_restores, "{ctx}: model_restores");
+    assert_eq!(g.evals, e.evals, "{ctx}: evals");
+    assert_eq!(g.points_evaluated, e.points_evaluated, "{ctx}: points_evaluated");
+    assert_eq!(g.points_permuted, e.points_permuted, "{ctx}: points_permuted");
+}
+
+/// The battery core: run `learner` generically and erased through the
+/// executor at every (strategy × workers × ordering) combination and
+/// demand bit-identical results. Takes the learner by value: the generic
+/// runs borrow it, then the SAME instance is erased, so both paths use
+/// identical hyperparameters.
+fn check_learner<L>(name: &str, learner: L, data: &Dataset, k: usize)
+where
+    L: IncrementalLearner + Send + Sync + 'static,
+    L::Model: Send + 'static,
+    L::Undo: 'static,
+{
+    let folds = Folds::new(data.n, k, 901);
+    let mut generic: Vec<(String, CvResult)> = Vec::new();
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        for ordering in [Ordering::Fixed, Ordering::Randomized] {
+            for threads in WORKER_COUNTS {
+                let res = TreeCvExecutor::new(strategy, ordering, 17, threads)
+                    .run(&learner, data, &folds);
+                let ctx = format!("{name} {strategy:?} {ordering:?} threads={threads}");
+                generic.push((ctx, res));
+            }
+        }
+    }
+    let erased: Box<dyn ErasedLearner> = Erased::boxed(learner);
+    let mut it = generic.into_iter();
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        for ordering in [Ordering::Fixed, Ordering::Randomized] {
+            for threads in WORKER_COUNTS {
+                let res = TreeCvExecutor::new(strategy, ordering, 17, threads)
+                    .run_erased(&*erased, data, &folds);
+                let (ctx, want) = it.next().expect("same combination count");
+                assert_bit_identical(&want, &res, &ctx);
+            }
+        }
+    }
+}
+
+fn covertype(n: usize) -> Dataset {
+    SyntheticCovertype::new(n, 501).generate()
+}
+
+#[test]
+fn pegasos_erased_is_bit_identical() {
+    check_learner("pegasos", Pegasos::new(54, 1e-3), &covertype(180), 7);
+}
+
+#[test]
+fn perceptron_erased_is_bit_identical() {
+    check_learner("perceptron", Perceptron::new(54), &covertype(180), 7);
+}
+
+#[test]
+fn knn_erased_is_bit_identical() {
+    check_learner("knn", KnnClassifier::new(54, 3), &covertype(150), 6);
+}
+
+#[test]
+fn naive_bayes_erased_is_bit_identical() {
+    check_learner("gaussian-nb", GaussianNb::new(54), &covertype(180), 7);
+}
+
+#[test]
+fn multiset_erased_is_bit_identical() {
+    let data = SyntheticMixture1d::new(160, 502).generate();
+    check_learner("multiset", MultisetLearner::new(1), &data, 7);
+}
+
+#[test]
+fn histdensity_erased_is_bit_identical() {
+    let data = SyntheticMixture1d::new(200, 503).generate();
+    check_learner("hist-density", HistogramDensity::new(-8.0, 8.0, 32), &data, 9);
+}
+
+#[test]
+fn kmeans_erased_is_bit_identical() {
+    let data = SyntheticBlobs::new(180, 8, 5, 504).generate();
+    check_learner("online-kmeans", OnlineKMeans::new(8, 5), &data, 7);
+}
+
+#[test]
+fn lsqsgd_erased_is_bit_identical() {
+    let data = SyntheticYearMsd::new(180, 505).generate();
+    check_learner("lsqsgd", LsqSgd::new(90, 0.05), &data, 7);
+}
+
+#[test]
+fn ridge_erased_is_bit_identical() {
+    // Ridge overrides `evaluate` (lazy closed-form solve per chunk); the
+    // erased layer must forward that override, not rebuild from `loss`.
+    let data = SyntheticYearMsd::new(150, 506).generate();
+    check_learner("online-ridge", OnlineRidge::new(90, 0.7), &data, 6);
+}
+
+/// XLA learners: same battery, gated on the PJRT runtime + artifacts
+/// actually being present (clean skip in stub builds — constructors
+/// error, never panic).
+#[test]
+fn xla_learners_erased_bit_identical_when_runtime_available() {
+    use treecv::runtime::{xla_learner, Manifest, PjrtRuntime};
+    let rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(err) => {
+            eprintln!("skipping XLA erased battery: {err}");
+            return;
+        }
+    };
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(err) => {
+            eprintln!("skipping XLA erased battery: {err}");
+            return;
+        }
+    };
+    let data = covertype(128);
+    match xla_learner::XlaPegasos::from_manifest(&rt, &manifest, data.d, 1e-3) {
+        Ok(l) => check_learner("xla-pegasos", l, &data, 5),
+        Err(err) => eprintln!("skipping xla-pegasos: {err}"),
+    }
+    let data = SyntheticYearMsd::new(128, 507).generate();
+    match xla_learner::XlaLsqSgd::from_manifest(&rt, &manifest, data.d, 0.05) {
+        Ok(l) => check_learner("xla-lsqsgd", l, &data, 5),
+        Err(err) => eprintln!("skipping xla-lsqsgd: {err}"),
+    }
+}
+
+/// Heterogeneous `run_many_erased` batches: runs of four different
+/// learner families (mixed strategies and seeds) through ONE pool must
+/// each be bit-identical to their standalone generic executor run at the
+/// same worker count — and cost exactly one pool spawn per multi-worker
+/// batch on the executor's per-pool counter.
+#[test]
+fn heterogeneous_batch_bit_identical_to_generic_standalone() {
+    let data = covertype(160);
+    let folds_a = Folds::new(160, 7, 902);
+    let folds_b = Folds::new(160, 12, 903);
+    let pegasos = Pegasos::new(54, 1e-4);
+    let nb = GaussianNb::new(54);
+    let knn = KnnClassifier::new(54, 3);
+    let perceptron = Perceptron::new(54);
+    let erased: [Box<dyn ErasedLearner>; 4] = [
+        Erased::boxed(pegasos.clone()),
+        Erased::boxed(nb.clone()),
+        Erased::boxed(knn.clone()),
+        Erased::boxed(perceptron.clone()),
+    ];
+    let strategies =
+        [Strategy::Copy, Strategy::SaveRevert, Strategy::Copy, Strategy::SaveRevert];
+
+    for threads in WORKER_COUNTS {
+        let specs: Vec<ErasedRunSpec<'_>> = erased
+            .iter()
+            .zip(strategies)
+            .enumerate()
+            .map(|(i, (l, strategy))| ErasedRunSpec {
+                learner: &**l,
+                folds: if i % 2 == 0 { &folds_a } else { &folds_b },
+                seed: 40 + i as u64,
+                strategy,
+            })
+            .collect();
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads);
+        let batch = exe.run_many_erased(&data, &specs);
+        assert_eq!(exe.pool_spawns(), u64::from(threads > 1), "threads={threads}");
+        assert_eq!(batch.len(), 4);
+
+        let standalone = |spec_idx: usize| -> CvResult {
+            let spec = &specs[spec_idx];
+            let engine = TreeCvExecutor::new(spec.strategy, Ordering::Fixed, spec.seed, threads);
+            match spec_idx {
+                0 => engine.run(&pegasos, &data, spec.folds),
+                1 => engine.run(&nb, &data, spec.folds),
+                2 => engine.run(&knn, &data, spec.folds),
+                _ => engine.run(&perceptron, &data, spec.folds),
+            }
+        };
+        for (i, got) in batch.iter().enumerate() {
+            let want = standalone(i);
+            assert_bit_identical(&want, got, &format!("run {i} threads={threads}"));
+        }
+    }
+}
+
+/// Run-twice determinism of a heterogeneous batch: scheduling and
+/// stealing may differ between invocations, results may not.
+#[test]
+fn heterogeneous_batch_is_run_twice_deterministic() {
+    let data = covertype(140);
+    let folds = Folds::new(140, 9, 904);
+    let erased: [Box<dyn ErasedLearner>; 3] = [
+        Erased::boxed(Pegasos::new(54, 1e-3)),
+        Erased::boxed(KnnClassifier::new(54, 3)),
+        Erased::boxed(GaussianNb::new(54)),
+    ];
+    let specs: Vec<ErasedRunSpec<'_>> = erased
+        .iter()
+        .enumerate()
+        .map(|(i, l)| ErasedRunSpec {
+            learner: &**l,
+            folds: &folds,
+            seed: i as u64,
+            strategy: Strategy::Copy,
+        })
+        .collect();
+    let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 0, 6);
+    let a = exe.run_many_erased(&data, &specs);
+    let b = exe.run_many_erased(&data, &specs);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_bit_identical(x, y, &format!("run {i}"));
+    }
+    assert_eq!(exe.pool_spawns(), 2);
+}

@@ -7,11 +7,13 @@
 //! the full sweep table, and the pool-spawn accounting (one pool per
 //! sweep; one per run for standalone dispatch; zero inline).
 //!
-//! Every test takes [`POOL_LOCK`]: the spawn counter is process-wide, so
-//! pool users in this binary are serialized to keep deltas exact.
+//! Spawn accounting reads the executor's *per-pool* counter
+//! (`TreeCvExecutor::pool_spawns`, surfaced as `SweepOutcome::
+//! pool_spawns`), so these tests run concurrently with any other pool
+//! user in the binary — the old process-wide counter and its file-local
+//! serialization lock are gone.
 
-use std::sync::{Mutex, MutexGuard};
-use treecv::cv::executor::{pool_spawn_count, TreeCvExecutor};
+use treecv::cv::executor::TreeCvExecutor;
 use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::parallel::ParallelTreeCv;
 use treecv::cv::stats::{repetition_engine_seed, repetition_fold_seed};
@@ -20,13 +22,6 @@ use treecv::cv::Strategy;
 use treecv::data::synth::{SyntheticCovertype, SyntheticMixture1d};
 use treecv::learner::histdensity::HistogramDensity;
 use treecv::learner::pegasos::Pegasos;
-
-/// Serializes every pool-creating test in this binary (see module docs).
-static POOL_LOCK: Mutex<()> = Mutex::new(());
-
-fn lock() -> MutexGuard<'static, ()> {
-    POOL_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-}
 
 fn sweep_spec(strategies: Vec<Strategy>, k: usize, reps: usize, threads: usize) -> SweepSpec {
     SweepSpec { ordering: Ordering::Fixed, strategies, k, repetitions: reps, seed: 42, threads }
@@ -40,7 +35,6 @@ fn sweep_spec(strategies: Vec<Strategy>, k: usize, reps: usize, threads: usize) 
 /// for SaveRevert at any pool size.
 #[test]
 fn sweep_runs_bit_identical_to_standalone_across_workers_and_strategies() {
-    let _g = lock();
     let n = 600;
     let data = SyntheticCovertype::new(n, 51).generate();
     let lambdas = [1e-3, 1e-4, 1e-5];
@@ -83,7 +77,6 @@ fn sweep_runs_bit_identical_to_standalone_across_workers_and_strategies() {
 /// per-(run-seed, node), so pooling runs cannot perturb them.
 #[test]
 fn sweep_randomized_ordering_bit_identical_to_standalone() {
-    let _g = lock();
     let n = 420;
     let data = SyntheticMixture1d::new(n, 57).generate();
     let learners =
@@ -112,7 +105,6 @@ fn sweep_randomized_ordering_bit_identical_to_standalone() {
 /// no matter how the pool schedules or steals.
 #[test]
 fn sweep_table_is_run_twice_deterministic() {
-    let _g = lock();
     let data = SyntheticMixture1d::new(500, 52).generate();
     let learners = vec![
         HistogramDensity::new(-8.0, 8.0, 16),
@@ -153,45 +145,45 @@ fn sweep_table_is_run_twice_deterministic() {
 /// runs inline and spawns none.
 #[test]
 fn whole_sweep_uses_exactly_one_pool() {
-    let _g = lock();
     let n = 400;
     let data = SyntheticCovertype::new(n, 53).generate();
     let lambdas = [1e-3, 1e-4, 1e-5, 1e-6];
     let learners: Vec<Pegasos> = lambdas.iter().map(|&l| Pegasos::new(54, l)).collect();
     let (k, reps) = (8usize, 3usize);
 
-    // 4 configs × 2 strategies × 3 reps = 24 runs, one pool.
+    // 4 configs × 2 strategies × 3 reps = 24 runs, one pool. The count
+    // comes off the sweep executor's own per-pool counter, so concurrent
+    // tests cannot perturb it.
     let spec = sweep_spec(vec![Strategy::Copy, Strategy::SaveRevert], k, reps, 3);
-    let before = pool_spawn_count();
     let out = run_sweep(&learners, &data, &spec).unwrap();
-    assert_eq!(pool_spawn_count() - before, 1, "sweep must spawn exactly one pool");
-    assert_eq!(out.pool_spawns, 1);
+    assert_eq!(out.pool_spawns, 1, "sweep must spawn exactly one pool");
     assert_eq!(out.cells.len(), 8);
 
-    // Standalone dispatch of the same 24 runs pays 24 pool spawns.
-    let before = pool_spawn_count();
+    // Standalone dispatch of the same 24 runs pays 24 pool spawns: one
+    // per executor batch (each executor's counter reads exactly 1).
+    let mut standalone_spawns = 0;
     for learner in &learners {
         for strategy in [Strategy::Copy, Strategy::SaveRevert] {
             for r in 0..reps {
                 let folds = Folds::new(n, k, repetition_fold_seed(spec.seed, r));
-                let _ = TreeCvExecutor::new(
+                let engine = TreeCvExecutor::new(
                     strategy,
                     Ordering::Fixed,
                     repetition_engine_seed(spec.seed, r),
                     3,
-                )
-                .run(learner, &data, &folds);
+                );
+                let _ = engine.run(learner, &data, &folds);
+                assert_eq!(engine.pool_spawns(), 1);
+                standalone_spawns += engine.pool_spawns();
             }
         }
     }
-    assert_eq!(pool_spawn_count() - before, 24, "standalone dispatch spawns one pool per run");
+    assert_eq!(standalone_spawns, 24, "standalone dispatch spawns one pool per run");
 
     // Inline sweeps (threads = 1) never spawn.
     let spec1 = sweep_spec(vec![Strategy::Copy], k, reps, 1);
-    let before = pool_spawn_count();
     let out = run_sweep(&learners, &data, &spec1).unwrap();
-    assert_eq!(pool_spawn_count() - before, 0, "threads=1 must run inline");
-    assert_eq!(out.pool_spawns, 0);
+    assert_eq!(out.pool_spawns, 0, "threads=1 must run inline");
 }
 
 /// Fold assignments are shared across configs: two identical learner
@@ -199,7 +191,6 @@ fn whole_sweep_uses_exactly_one_pool() {
 /// seeds — the hyperparameter really is the only degree of freedom).
 #[test]
 fn identical_configs_share_partitionings() {
-    let _g = lock();
     let data = SyntheticCovertype::new(350, 54).generate();
     let learners = vec![Pegasos::new(54, 1e-4), Pegasos::new(54, 1e-4)];
     let out = run_sweep(&learners, &data, &sweep_spec(vec![Strategy::Copy], 7, 3, 3)).unwrap();
@@ -215,7 +206,6 @@ fn identical_configs_share_partitionings() {
 /// pool accounting and a table ranked by mean loss.
 #[test]
 fn coordinator_sweep_ranked_and_pooled() {
-    let _g = lock();
     use treecv::config::{ExperimentConfig, SweepGrid, Task};
     let cfg = ExperimentConfig {
         task: Task::Pegasos,
