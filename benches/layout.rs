@@ -1,0 +1,195 @@
+//! Fold-contiguous layout vs classic indexed node streams: the hot-loop
+//! memory-layout experiment, and the seed of the repo's machine-readable
+//! perf trajectory.
+//!
+//! Every scenario runs the SAME computation twice — indexed (`run`) and
+//! folded (`run_folded` over a prebuilt [`FoldedDataset`]) — asserts the
+//! results are **bit-identical** in-bench (per-fold scores, estimate,
+//! semantic counters) before any number is reported, then records both
+//! timings plus the layout-sensitive metrics (`stream_allocs`,
+//! `points_updated`) into `BENCH_layout.json` via `benchkit::JsonReport`.
+//!
+//! Run: `cargo bench --bench layout` (env `LAYOUT_N`, `LAYOUT_K`,
+//! `LAYOUT_THREADS`, `LAYOUT_JSON` for the output path; `BENCH_SAMPLES`
+//! / `BENCH_WARMUP` as usual). Committed output is the perf baseline
+//! subsequent PRs diff against — regenerate it on a quiet machine.
+
+use treecv::benchkit::{Bench, JsonReport};
+use treecv::cv::executor::TreeCvExecutor;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::{CvEngine, CvResult, Strategy};
+use treecv::data::folded::FoldedDataset;
+use treecv::data::synth::{SyntheticCovertype, SyntheticYearMsd};
+use treecv::data::Dataset;
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::pegasos::Pegasos;
+
+fn assert_bit_identical(indexed: &CvResult, folded: &CvResult, ctx: &str) {
+    assert_eq!(indexed.per_fold, folded.per_fold, "{ctx}: per_fold diverged");
+    assert_eq!(indexed.estimate.to_bits(), folded.estimate.to_bits(), "{ctx}: estimate");
+    assert_eq!(indexed.ops.points_updated, folded.ops.points_updated, "{ctx}: points_updated");
+    assert_eq!(indexed.ops.update_calls, folded.ops.update_calls, "{ctx}: update_calls");
+    assert_eq!(indexed.ops.model_copies, folded.ops.model_copies, "{ctx}: model_copies");
+    assert_eq!(indexed.ops.points_permuted, folded.ops.points_permuted, "{ctx}: points_permuted");
+    assert_eq!(indexed.ops.evals, folded.ops.evals, "{ctx}: evals");
+}
+
+/// Bench one indexed-vs-folded pair; returns (indexed median, folded
+/// median) and pushes both scenarios (with counters + speedup) into the
+/// JSON report.
+///
+/// `stable_allocs`: whether the folded run's `stream_allocs` is a pure
+/// function of the configuration. It is for everything except
+/// multi-worker randomized runs (there it is 1..=workers, depending on
+/// which workers touch an update phase) — those pass `false` so the
+/// committed baseline never records a schedule-dependent number.
+fn pair<FI, FF>(
+    bench: &mut Bench,
+    report: &mut JsonReport,
+    name: &str,
+    data: &Dataset,
+    stable_allocs: bool,
+    mut indexed: FI,
+    mut folded: FF,
+) -> (f64, f64)
+where
+    FI: FnMut(&Dataset) -> CvResult,
+    FF: FnMut(&Dataset) -> CvResult,
+{
+    let want = indexed(data);
+    let got = folded(data);
+    assert_bit_identical(&want, &got, name);
+
+    let si = bench.run(&format!("{name}/indexed"), || {
+        std::hint::black_box(indexed(data));
+    });
+    let (ti, si) = (si.median(), si.clone());
+    let sf = bench.run(&format!("{name}/folded"), || {
+        std::hint::black_box(folded(data));
+    });
+    let (tf, sf) = (sf.median(), sf.clone());
+    println!("  folded speedup: {:.3}x", ti / tf.max(1e-12));
+
+    report.push_samples(
+        &si,
+        &[
+            ("stream_allocs", want.ops.stream_allocs as f64),
+            ("points_updated", want.ops.points_updated as f64),
+        ],
+    );
+    let mut folded_metrics = vec![
+        ("points_updated", got.ops.points_updated as f64),
+        ("speedup_vs_indexed", ti / tf.max(1e-12)),
+    ];
+    if stable_allocs {
+        folded_metrics.push(("stream_allocs", got.ops.stream_allocs as f64));
+    }
+    report.push_samples(&sf, &folded_metrics);
+    (ti, tf)
+}
+
+fn main() {
+    let n: usize = std::env::var("LAYOUT_N").ok().and_then(|v| v.parse().ok()).unwrap_or(16_384);
+    let k: usize = std::env::var("LAYOUT_K").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    let threads: usize = std::env::var("LAYOUT_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+    let json_path =
+        std::env::var("LAYOUT_JSON").unwrap_or_else(|_| "BENCH_layout.json".to_string());
+
+    println!("== folded vs indexed node streams (n = {n}, k = {k}, {threads} workers) ==");
+    let mut bench = Bench::default();
+    let mut report = JsonReport::new("layout");
+    report.env("n", n as f64);
+    report.env("k", k as f64);
+    report.env("threads", threads as f64);
+
+    // PEGASOS on Covertype-like data: the crate's cheapest per-point
+    // update, so stream overhead is maximally visible.
+    {
+        let data = SyntheticCovertype::new(n, 31).generate();
+        let learner = Pegasos::new(data.d, 1e-4);
+        let folds = Folds::new(n, k, 32);
+        let folded = FoldedDataset::build(&data, &folds);
+
+        let build = bench.run("layout/build", || {
+            std::hint::black_box(FoldedDataset::build(&data, &folds));
+        });
+        let build = build.clone();
+        report.push_samples(&build, &[("rows_copied", n as f64)]);
+
+        let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 5);
+        pair(
+            &mut bench,
+            &mut report,
+            "layout/pegasos/treecv/fixed",
+            &data,
+            true,
+            |d| seq.run(&learner, d, &folds),
+            |d| seq.run_folded(&learner, d, &folded),
+        );
+
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, threads);
+        pair(
+            &mut bench,
+            &mut report,
+            "layout/pegasos/executor/fixed",
+            &data,
+            true,
+            |d| exe.run(&learner, d, &folds),
+            |d| exe.run_folded(&learner, d, &folded),
+        );
+
+        let std_engine = StandardCv::new(Ordering::Fixed, 5);
+        pair(
+            &mut bench,
+            &mut report,
+            "layout/pegasos/standard/fixed",
+            &data,
+            true,
+            |d| std_engine.run(&learner, d, &folds),
+            |d| std_engine.run_folded(&learner, d, &folded),
+        );
+
+        // Randomized ordering: the folded win here is allocation removal
+        // (recycled scratch), not sequential access — keep it honest.
+        let exe_r = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 5, threads);
+        pair(
+            &mut bench,
+            &mut report,
+            "layout/pegasos/executor/randomized",
+            &data,
+            false,
+            |d| exe_r.run(&learner, d, &folds),
+            |d| exe_r.run_folded(&learner, d, &folded),
+        );
+    }
+
+    // LSQSGD on YearMSD-like data: denser rows (d = 90), every point
+    // touches the full row — the bandwidth-bound regime.
+    {
+        let data = SyntheticYearMsd::new(n / 2, 33).generate();
+        let learner = LsqSgd::with_paper_step(data.d, n / 2);
+        let folds = Folds::new(n / 2, k, 34);
+        let folded = FoldedDataset::build(&data, &folds);
+        let seq = TreeCv::new(Strategy::Copy, Ordering::Fixed, 6);
+        pair(
+            &mut bench,
+            &mut report,
+            "layout/lsqsgd/treecv/fixed",
+            &data,
+            true,
+            |d| seq.run(&learner, d, &folds),
+            |d| seq.run_folded(&learner, d, &folded),
+        );
+    }
+
+    println!("\nCSV summary:\n{}", bench.csv());
+    match report.write(&json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

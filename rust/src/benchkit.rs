@@ -2,9 +2,13 @@
 //! criterion). Benches under `benches/` are `harness = false` binaries that
 //! drive [`Bench`]: warmup, repeated timed samples, and a summary with
 //! median / mean / std / min, plus CSV emission so EXPERIMENTS.md rows are
-//! copy-pasteable. Deliberately simple — the experiments here measure
-//! milliseconds-to-seconds-scale end-to-end CV runs, not nanosecond ops.
+//! copy-pasteable — and [`JsonReport`] for machine-readable perf
+//! trajectories (`BENCH_<name>.json` files committed at the repo root so
+//! later PRs have a baseline to diff against). Deliberately simple — the
+//! experiments here measure milliseconds-to-seconds-scale end-to-end CV
+//! runs, not nanosecond ops.
 
+use crate::report::Json;
 use std::time::{Duration, Instant};
 
 /// One benchmark's samples.
@@ -134,6 +138,81 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench report: one object per scenario (sample
+/// statistics plus free-form numeric metrics such as op counts or derived
+/// speedups), rendered as pretty JSON with a stable schema:
+///
+/// ```json
+/// {
+///   "bench": "layout", "schema": 1, "measured": true,
+///   "env": { "n": 16384, ... },
+///   "scenarios": [
+///     { "name": "...", "median_s": 0.01, ..., "stream_allocs": 0 }, ...
+///   ]
+/// }
+/// ```
+///
+/// `measured: false` marks a committed hand-authored placeholder (same
+/// schema, wall-clock fields null, op-count-derived metrics only) —
+/// rerunning the bench on a real machine overwrites it with measured
+/// numbers and `measured: true`.
+pub struct JsonReport {
+    bench: String,
+    env: Vec<(String, f64)>,
+    scenarios: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), env: Vec::new(), scenarios: Vec::new() }
+    }
+
+    /// Record a run-configuration knob (shown once, under `"env"`).
+    pub fn env(&mut self, key: &str, value: f64) -> &mut Self {
+        self.env.push((key.to_string(), value));
+        self
+    }
+
+    /// Add a scenario from measured [`Samples`] plus extra numeric
+    /// metrics (op counts, ratios).
+    pub fn push_samples(&mut self, s: &Samples, metrics: &[(&str, f64)]) {
+        let mut pairs = vec![
+            ("name", Json::str(s.name.clone())),
+            ("median_s", Json::Num(s.median())),
+            ("mean_s", Json::Num(s.mean())),
+            ("std_s", Json::Num(s.std())),
+            ("min_s", Json::Num(s.min())),
+            ("samples", Json::num(s.secs.len() as f64)),
+        ];
+        for &(k, v) in metrics {
+            pairs.push((k, Json::Num(v)));
+        }
+        self.scenarios.push(Json::obj(pairs));
+    }
+
+    /// The report as a JSON value. Reports produced here are always
+    /// `measured: true`; the `false` variant exists only for committed
+    /// placeholders authored without a toolchain.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(self.bench.clone())),
+            ("schema", Json::num(1.0)),
+            ("measured", Json::Bool(true)),
+            (
+                "env",
+                Json::Obj(self.env.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+            ),
+            ("scenarios", Json::Arr(self.scenarios.clone())),
+        ])
+    }
+
+    /// Write the pretty-rendered report to `path` (trailing newline
+    /// included, so committed files are diff-friendly).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().render_pretty() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +240,19 @@ mod tests {
     fn median_odd() {
         let s = Samples { name: "x".into(), secs: vec![3.0, 1.0, 2.0] };
         assert_eq!(s.median(), 2.0);
+    }
+
+    #[test]
+    fn json_report_schema() {
+        let mut r = JsonReport::new("layout");
+        r.env("n", 16.0);
+        let s = Samples { name: "a/b".into(), secs: vec![1.0, 3.0] };
+        r.push_samples(&s, &[("stream_allocs", 0.0)]);
+        let out = r.to_json().render();
+        assert!(out.contains("\"bench\":\"layout\""), "{out}");
+        assert!(out.contains("\"measured\":true"), "{out}");
+        assert!(out.contains("\"median_s\":2"), "{out}");
+        assert!(out.contains("\"stream_allocs\":0"), "{out}");
+        assert!(out.contains("\"n\":16"), "{out}");
     }
 }

@@ -80,10 +80,28 @@
 //! through [`DynLearner`], so erased runs execute the identical engine
 //! code and reproduce their generic counterparts bit for bit
 //! (`tests/integration_erased.rs`).
+//!
+//! **Fold-contiguous layout.** A run whose spec carries a
+//! [`FoldedDataset`] ([`RunSpec::folded`]; built once per run from the
+//! batch dataset) draws its node streams from contiguous row slices:
+//! fixed-order updates and leaf evaluations go through the learners'
+//! `update_rows`/`evaluate_rows` fast paths with **zero** per-node
+//! index-vector allocations, and randomized updates shuffle ids in
+//! recycled worker-local buffers. Results are bit-identical to the
+//! indexed path per run (`tests/integration_layout.rs`), and folded and
+//! indexed runs mix freely in one batch.
+//!
+//! **Idle waiting.** A worker whose steal sweep comes up dry parks its
+//! thread (`std::thread::park`) after registering on a sleeper list;
+//! task pushes unpark one sleeper and batch completion (or a panic)
+//! unparks all. Compared to the earlier yield-then-100µs-sleep backoff,
+//! idle workers burn zero CPU during long serial phases (e.g. a root
+//! node's O(n) updates) and wake in microseconds when work appears.
 
-use super::folds::{gather_ordered, node_tags, Folds, Ordering};
-use super::treecv::run_subtree;
+use super::folds::{node_tags, Folds, Ordering};
+use super::treecv::{run_subtree, NodeCtx, StreamScratch};
 use super::{CvResult, Strategy};
+use crate::data::folded::FoldedDataset;
 use crate::data::Dataset;
 use crate::learner::erased::{DynLearner, ErasedLearner};
 use crate::learner::IncrementalLearner;
@@ -91,6 +109,7 @@ use crate::metrics::{OpCounts, Timer};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as MemOrdering};
 use std::sync::{Arc, Mutex};
+use std::thread::Thread;
 use std::time::Duration;
 
 /// Extra fork levels beyond ⌈log₂ workers⌉: each level doubles the subtree
@@ -151,6 +170,12 @@ pub struct RunSpec<'a, L: IncrementalLearner> {
     pub seed: u64,
     /// Model-preservation strategy for this run's inline subtrees.
     pub strategy: Strategy,
+    /// Fold-contiguous layout of the batch dataset realizing exactly
+    /// `folds` (asserted at dispatch). When present, this run's node
+    /// streams are contiguous slice feeds / recycled scratch shuffles
+    /// instead of per-node gathered index vectors — bit-identical results
+    /// either way. `None` keeps the classic indexed path.
+    pub folded: Option<&'a FoldedDataset>,
 }
 
 /// [`RunSpec`] over the type-erased learner layer: the element of a
@@ -165,6 +190,9 @@ pub struct ErasedRunSpec<'a> {
     pub seed: u64,
     /// Model-preservation strategy for this run's inline subtrees.
     pub strategy: Strategy,
+    /// Fold-contiguous layout (see [`RunSpec::folded`]); forwarded
+    /// through the erased adapter unchanged.
+    pub folded: Option<&'a FoldedDataset>,
 }
 
 /// One unit of executor work: the TreeCV subtree of run `run` rooted at
@@ -186,6 +214,7 @@ struct Task<M> {
 struct RunShared<'a, L: IncrementalLearner> {
     learner: &'a L,
     folds: &'a Folds,
+    folded: Option<&'a FoldedDataset>,
     seed: u64,
     strategy: Strategy,
     /// First non-forking depth for THIS run, computed from the engine's
@@ -229,20 +258,57 @@ struct Shared<'a, L: IncrementalLearner> {
     /// Set when all leaves are done (or a worker panicked) so idle workers
     /// exit their steal loop.
     done: AtomicBool,
+    /// Idle workers parked waiting for work: `(worker id, thread handle)`.
+    /// A worker registers itself here *before* its final verification
+    /// sweep and then `park()`s; producers pop-and-unpark one entry per
+    /// task push ([`wake_one`]), and batch completion / panic unparks
+    /// everyone ([`wake_all`]). Replaces the old 100µs-sleep idle backoff:
+    /// parked workers burn zero CPU and wake in ~µs instead of up to a
+    /// sleep quantum.
+    parked: Mutex<Vec<(usize, Thread)>>,
     /// Batch clock (per-run completion times are read off it).
     timer: Timer,
 }
 
-/// Sets the shared `done` flag if its thread unwinds, so a panicking
-/// worker cannot leave the rest of the pool spinning forever.
+/// Pop one parked worker (if any) and unpark it — called after making new
+/// work visible in a deque. Unparking a worker that raced back to running
+/// merely sets its park token (its next `park()` returns immediately and
+/// re-sweeps), so a stale entry can delay a wakeup but never lose one:
+/// tasks are only ever consumed by sweeps, not by notifications.
+fn wake_one(parked: &Mutex<Vec<(usize, Thread)>>) {
+    let popped = parked.lock().unwrap().pop();
+    if let Some((_, t)) = popped {
+        t.unpark();
+    }
+}
+
+/// Unpark every parked worker (batch done, or a worker panicked).
+fn wake_all(parked: &Mutex<Vec<(usize, Thread)>>) {
+    let drained: Vec<_> = std::mem::take(&mut *parked.lock().unwrap());
+    for (_, t) in drained {
+        t.unpark();
+    }
+}
+
+/// Remove `wid`'s registration (idempotent — the producer that woke us may
+/// already have popped it).
+fn unregister(parked: &Mutex<Vec<(usize, Thread)>>, wid: usize) {
+    parked.lock().unwrap().retain(|(w, _)| *w != wid);
+}
+
+/// Sets the shared `done` flag and wakes all parked workers if its thread
+/// unwinds, so a panicking worker cannot leave the rest of the pool
+/// spinning — or sleeping — forever.
 struct PanicSignal<'a> {
     done: &'a AtomicBool,
+    parked: &'a Mutex<Vec<(usize, Thread)>>,
 }
 
 impl Drop for PanicSignal<'_> {
     fn drop(&mut self) {
         if std::thread::panicking() {
             self.done.store(true, MemOrdering::Release);
+            wake_all(self.parked);
         }
     }
 }
@@ -301,24 +367,31 @@ impl TreeCvExecutor {
         data: &Dataset,
         ops_by_run: &mut [OpCounts],
         scratch: &mut Vec<L::Model>,
+        streams: &mut StreamScratch,
     ) where
         L: IncrementalLearner + Sync,
     {
         let Task { run, s, e, depth, model } = task;
         let rs = &shared.runs[run];
         let ops = &mut ops_by_run[run];
+        // The run's node-stream context (all borrows) — the same
+        // abstraction the sequential engine recurses with, so fork-node
+        // updates and inline subtrees draw streams from one source.
+        let ctx = NodeCtx {
+            learner: rs.learner,
+            data,
+            folds: rs.folds,
+            folded: rs.folded,
+            strategy: rs.strategy,
+            ordering: self.ordering,
+            seed: rs.seed,
+        };
         // Root tasks init lazily (pure, so scheduling cannot affect it).
         let mut model = model.unwrap_or_else(|| rs.learner.init());
         if s < e && depth < rs.cutoff {
             let m = (s + e) / 2;
             // Node tags shared with the sequential engine.
             let (tag_right, tag_left) = node_tags(s, e);
-
-            let right =
-                gather_ordered(rs.folds, m + 1, e, rs.seed, self.ordering, tag_right, ops);
-            let left = gather_ordered(rs.folds, s, m, rs.seed, self.ordering, tag_left, ops);
-            ops.update_calls += 2;
-            ops.points_updated += (right.len() + left.len()) as u64;
 
             // The two halves may run concurrently on different workers, so
             // a fork must snapshot regardless of strategy — this is the
@@ -339,12 +412,17 @@ impl TreeCvExecutor {
             // As in Algorithm 1: the model fed the *second* group serves
             // the left child (s, m); the model fed the *first* group
             // serves the right child (m+1, e).
-            rs.learner.update(&mut model, data, &right);
-            rs.learner.update(&mut sibling, data, &left);
+            ctx.update_phase(&mut model, m + 1, e, tag_right, ops, streams);
+            ctx.update_phase(&mut sibling, s, m, tag_left, ops, streams);
 
-            let mut dq = shared.deques[wid].lock().unwrap();
-            dq.push_back(Task { run, s, e: m, depth: depth + 1, model: Some(model) });
-            dq.push_back(Task { run, s: m + 1, e, depth: depth + 1, model: Some(sibling) });
+            {
+                let mut dq = shared.deques[wid].lock().unwrap();
+                dq.push_back(Task { run, s, e: m, depth: depth + 1, model: Some(model) });
+                dq.push_back(Task { run, s: m + 1, e, depth: depth + 1, model: Some(sibling) });
+            }
+            // This worker keeps one child; the other is new stealable
+            // work — wake one sleeper for it.
+            wake_one(&shared.parked);
             return;
         }
 
@@ -352,23 +430,10 @@ impl TreeCvExecutor {
         // strategy, into a local buffer (one per-fold lock per subtree
         // instead of one per leaf). Copy-strategy snapshots inside the
         // subtree recycle through this worker's scratch free-list, which
-        // lives for the whole batch — tasks of every run share it.
+        // lives for the whole batch — tasks of every run share it (as do
+        // the randomized-stream id buffers in `streams`).
         let mut local = vec![0.0; e - s + 1];
-        run_subtree(
-            rs.learner,
-            data,
-            rs.folds,
-            rs.strategy,
-            self.ordering,
-            rs.seed,
-            &mut model,
-            s,
-            e,
-            s,
-            &mut local,
-            ops,
-            scratch,
-        );
+        run_subtree(&ctx, &mut model, s, e, s, &mut local, ops, scratch, streams);
         rs.per_fold.lock().unwrap()[s..=e].copy_from_slice(&local);
         // Recycle the model storage for future fork-node snapshots
         // (bounded — beyond the cap, just drop it).
@@ -385,17 +450,28 @@ impl TreeCvExecutor {
         let done_before = shared.leaves_done.fetch_add(leaves, MemOrdering::AcqRel);
         if done_before + leaves == shared.leaves_total {
             shared.done.store(true, MemOrdering::Release);
+            wake_all(&shared.parked);
         }
     }
 
-    /// Worker loop: drain own deque LIFO, steal FIFO when empty, exit once
-    /// every leaf of every run is recorded. Counters are tallied per run
-    /// locally and merged into the shared per-run totals on exit.
+    /// Worker loop: drain own deque LIFO, steal FIFO when empty, park when
+    /// a full sweep comes up dry, exit once every leaf of every run is
+    /// recorded. Counters are tallied per run locally and merged into the
+    /// shared per-run totals on exit.
+    ///
+    /// Parking protocol (lost-wakeup-free): register on `shared.parked`
+    /// FIRST, then re-sweep, then `park()`. A producer pushes its task
+    /// before calling [`wake_one`], so either the push precedes our
+    /// registration (and the verification re-sweep finds it) or the
+    /// producer sees a registered sleeper and unparks one. `unpark` on a
+    /// running thread banks a token that makes the next `park()` return
+    /// immediately, so even a race with a stale registration only costs
+    /// one extra sweep, never a hang.
     fn worker<L>(&self, wid: usize, shared: &Shared<'_, L>, data: &Dataset)
     where
         L: IncrementalLearner + Sync,
     {
-        let _signal = PanicSignal { done: &shared.done };
+        let _signal = PanicSignal { done: &shared.done, parked: &shared.parked };
         let mut ops_by_run: Vec<OpCounts> = vec![OpCounts::default(); shared.runs.len()];
         let n_workers = shared.deques.len();
         // Worker-local free-list for inline-subtree Copy snapshots; lives
@@ -403,40 +479,54 @@ impl TreeCvExecutor {
         // whole batch (held count is bounded by the subtree recursion
         // depth, ≤ ⌈log₂ k⌉ of the deepest run).
         let mut scratch: Vec<L::Model> = Vec::new();
-        // Consecutive empty steal sweeps; drives the idle backoff below.
-        let mut dry_sweeps = 0u32;
+        // Worker-local free-list for randomized-stream id buffers (folded
+        // layout); same lifetime as `scratch`.
+        let mut streams = StreamScratch::new();
+        let sweep = || -> Option<Task<L::Model>> {
+            let own = shared.deques[wid].lock().unwrap().pop_back();
+            own.or_else(|| {
+                (1..n_workers).find_map(|offset| {
+                    let victim = (wid + offset) % n_workers;
+                    shared.deques[victim].lock().unwrap().pop_front()
+                })
+            })
+        };
         loop {
-            let task = {
-                let own = shared.deques[wid].lock().unwrap().pop_back();
-                match own {
-                    Some(t) => Some(t),
-                    None => (1..n_workers).find_map(|offset| {
-                        let victim = (wid + offset) % n_workers;
-                        shared.deques[victim].lock().unwrap().pop_front()
-                    }),
-                }
-            };
-            match task {
-                Some(t) => {
-                    dry_sweeps = 0;
-                    self.process(wid, t, shared, data, &mut ops_by_run, &mut scratch);
-                }
+            // Sweep; on a dry sweep, run the park protocol, which may
+            // still hand back a task (the verification sweep). One
+            // `process` call site either way.
+            let task = match sweep() {
+                Some(t) => Some(t),
                 None => {
                     if shared.done.load(MemOrdering::Acquire) {
                         break;
                     }
-                    // Tiered backoff: spin-yield briefly (work usually
-                    // appears within a node's two updates), then sleep so
-                    // idle workers stop hammering the deque mutexes during
-                    // long serial phases (e.g. the root node's O(n) updates
-                    // while only one task exists).
-                    dry_sweeps += 1;
-                    if dry_sweeps < 16 {
-                        std::thread::yield_now();
-                    } else {
-                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    {
+                        let mut p = shared.parked.lock().unwrap();
+                        p.retain(|(w, _)| *w != wid);
+                        p.push((wid, std::thread::current()));
+                    }
+                    // Verification sweep: anything pushed before our
+                    // registration became visible is caught here.
+                    match sweep() {
+                        Some(t) => {
+                            unregister(&shared.parked, wid);
+                            Some(t)
+                        }
+                        None => {
+                            if shared.done.load(MemOrdering::Acquire) {
+                                unregister(&shared.parked, wid);
+                                break;
+                            }
+                            std::thread::park();
+                            unregister(&shared.parked, wid);
+                            None
+                        }
                     }
                 }
+            };
+            if let Some(t) = task {
+                self.process(wid, t, shared, data, &mut ops_by_run, &mut scratch, &mut streams);
             }
         }
         // Publish this worker's tallies into each run's shared totals.
@@ -453,7 +543,32 @@ impl TreeCvExecutor {
         L: IncrementalLearner + Sync,
         L::Model: Send,
     {
-        let spec = RunSpec { learner, folds, seed: self.seed, strategy: self.strategy };
+        let spec =
+            RunSpec { learner, folds, seed: self.seed, strategy: self.strategy, folded: None };
+        self.run_many(data, std::slice::from_ref(&spec))
+            .pop()
+            .expect("run_many returns one result per run")
+    }
+
+    /// Run a single computation over the fold-contiguous layout (see
+    /// [`RunSpec::folded`]): identical scheduling and bit-identical
+    /// results to [`Self::run`] on `folded.folds()`, with fixed-order
+    /// node streams fed as contiguous slices (zero per-node index-vector
+    /// allocations) and randomized streams drawn from recycled
+    /// worker-local buffers. `data` must be the dataset `folded` was
+    /// built from.
+    pub fn run_folded<L>(&self, learner: &L, data: &Dataset, folded: &FoldedDataset) -> CvResult
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        let spec = RunSpec {
+            learner,
+            folds: folded.folds(),
+            seed: self.seed,
+            strategy: self.strategy,
+            folded: Some(folded),
+        };
         self.run_many(data, std::slice::from_ref(&spec))
             .pop()
             .expect("run_many returns one result per run")
@@ -481,6 +596,16 @@ impl TreeCvExecutor {
         if runs.is_empty() {
             return Vec::new();
         }
+        for (i, r) in runs.iter().enumerate() {
+            if let Some(f) = r.folded {
+                assert_eq!(f.n(), data.n, "run {i}: folded layout built for a different dataset");
+                assert_eq!(f.d(), data.d, "run {i}: folded layout built for a different dataset");
+                assert!(
+                    f.matches_folds(r.folds),
+                    "run {i}: folded layout does not realize the spec's fold partition"
+                );
+            }
+        }
         let leaves_total: usize = runs.iter().map(|r| r.folds.k()).sum();
         let threads = self.threads.max(1).min(leaves_total);
         let cutoff_of = |k: usize| snapshot_cutoff(self.threads.max(1).min(k));
@@ -498,6 +623,7 @@ impl TreeCvExecutor {
                 .map(|r| RunShared {
                     learner: r.learner,
                     folds: r.folds,
+                    folded: r.folded,
                     seed: r.seed,
                     strategy: r.strategy,
                     cutoff: cutoff_of(r.folds.k()),
@@ -511,6 +637,7 @@ impl TreeCvExecutor {
             leaves_total,
             leaves_done: AtomicUsize::new(0),
             done: AtomicBool::new(false),
+            parked: Mutex::new(Vec::new()),
             timer: Timer::start(),
         };
         // Seed the root tasks round-robin so a batch starts spread across
@@ -566,8 +693,34 @@ impl TreeCvExecutor {
         data: &Dataset,
         folds: &Folds,
     ) -> CvResult {
-        let spec =
-            ErasedRunSpec { learner, folds, seed: self.seed, strategy: self.strategy };
+        let spec = ErasedRunSpec {
+            learner,
+            folds,
+            seed: self.seed,
+            strategy: self.strategy,
+            folded: None,
+        };
+        self.run_many_erased(data, std::slice::from_ref(&spec))
+            .pop()
+            .expect("run_many_erased returns one result per run")
+    }
+
+    /// Type-erased counterpart of [`Self::run_folded`]: the erased
+    /// adapter forwards the contiguous fast paths, so results stay
+    /// bit-identical to the generic folded run.
+    pub fn run_erased_folded(
+        &self,
+        learner: &dyn ErasedLearner,
+        data: &Dataset,
+        folded: &FoldedDataset,
+    ) -> CvResult {
+        let spec = ErasedRunSpec {
+            learner,
+            folds: folded.folds(),
+            seed: self.seed,
+            strategy: self.strategy,
+            folded: Some(folded),
+        };
         self.run_many_erased(data, std::slice::from_ref(&spec))
             .pop()
             .expect("run_many_erased returns one result per run")
@@ -594,6 +747,7 @@ impl TreeCvExecutor {
                 folds: r.folds,
                 seed: r.seed,
                 strategy: r.strategy,
+                folded: r.folded,
             })
             .collect();
         self.run_many(data, &specs)
@@ -753,6 +907,7 @@ mod tests {
                     folds: f,
                     seed: 60 + r as u64,
                     strategy: Strategy::Copy,
+                    folded: None,
                 };
                 specs.push(spec);
             }
@@ -783,7 +938,13 @@ mod tests {
             .iter()
             .zip(strategies)
             .enumerate()
-            .map(|(i, (f, strategy))| RunSpec { learner: &l, folds: f, seed: i as u64, strategy })
+            .map(|(i, (f, strategy))| RunSpec {
+                learner: &l,
+                folds: f,
+                seed: i as u64,
+                strategy,
+                folded: None,
+            })
             .collect();
         let batch =
             TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 0, 3).run_many(&data, &specs);
@@ -854,6 +1015,7 @@ mod tests {
                 folds: &folds,
                 seed: 70 + i as u64,
                 strategy: Strategy::Copy,
+                folded: None,
             })
             .collect();
         let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4);
@@ -872,6 +1034,110 @@ mod tests {
             assert_eq!(got.ops.points_updated, want.ops.points_updated, "run {i}");
             assert_eq!(got.ops.model_copies, want.ops.model_copies, "run {i}");
             assert_eq!(got.ops.bytes_copied, want.ops.bytes_copied, "run {i}");
+        }
+    }
+
+    #[test]
+    fn folded_run_matches_indexed_at_every_worker_count() {
+        // Same pool, same schedule, two physical layouts: per-fold scores,
+        // estimate and every semantic counter must agree bit for bit; the
+        // fixed-order folded run additionally allocates zero node streams.
+        use crate::data::folded::FoldedDataset;
+        let data = SyntheticCovertype::new(900, 115).generate();
+        let l = Pegasos::new(54, 1e-3);
+        let folds = Folds::new(900, 13, 116); // remainder folds
+        let folded = FoldedDataset::build(&data, &folds);
+        for ordering in [Ordering::Fixed, Ordering::Randomized] {
+            for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+                for threads in [1usize, 3, 6, 8] {
+                    let exe = TreeCvExecutor::new(strategy, ordering, 3, threads);
+                    let a = exe.run(&l, &data, &folds);
+                    let b = exe.run_folded(&l, &data, &folded);
+                    let ctx = format!("{strategy:?} {ordering:?} threads={threads}");
+                    assert_eq!(a.per_fold, b.per_fold, "{ctx}");
+                    assert_eq!(a.estimate.to_bits(), b.estimate.to_bits(), "{ctx}");
+                    assert_eq!(a.ops.points_updated, b.ops.points_updated, "{ctx}");
+                    assert_eq!(a.ops.points_permuted, b.ops.points_permuted, "{ctx}");
+                    assert_eq!(a.ops.model_copies, b.ops.model_copies, "{ctx}");
+                    assert_eq!(a.ops.update_calls, b.ops.update_calls, "{ctx}");
+                    if ordering == Ordering::Fixed {
+                        assert_eq!(b.ops.stream_allocs, 0, "{ctx}: folded fixed must not alloc");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_mixes_folded_and_indexed_runs() {
+        use crate::data::folded::FoldedDataset;
+        let data = SyntheticMixture1d::new(400, 117).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds_a = Folds::new(400, 7, 118);
+        let folds_b = Folds::new(400, 16, 119);
+        let folded_a = FoldedDataset::build(&data, &folds_a);
+        let specs = [
+            RunSpec {
+                learner: &l,
+                folds: folded_a.folds(),
+                seed: 1,
+                strategy: Strategy::Copy,
+                folded: Some(&folded_a),
+            },
+            RunSpec {
+                learner: &l,
+                folds: &folds_b,
+                seed: 2,
+                strategy: Strategy::SaveRevert,
+                folded: None,
+            },
+        ];
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 3);
+        let batch = exe.run_many(&data, &specs);
+        let alone_a = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 1, 3)
+            .run(&l, &data, &folds_a);
+        let alone_b = TreeCvExecutor::new(Strategy::SaveRevert, Ordering::Fixed, 2, 3)
+            .run(&l, &data, &folds_b);
+        assert_eq!(batch[0].per_fold, alone_a.per_fold);
+        assert_eq!(batch[1].per_fold, alone_b.per_fold);
+        assert_eq!(batch[0].ops.stream_allocs, 0, "folded run allocates no streams");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not realize")]
+    fn folded_layout_fold_mismatch_panics() {
+        use crate::data::folded::FoldedDataset;
+        let data = SyntheticMixture1d::new(60, 120).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 8);
+        let folds = Folds::new(60, 5, 121);
+        let other = Folds::new(60, 5, 122);
+        let folded = FoldedDataset::build(&data, &other);
+        let spec = RunSpec {
+            learner: &l,
+            folds: &folds,
+            seed: 0,
+            strategy: Strategy::Copy,
+            folded: Some(&folded),
+        };
+        let _ = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 2)
+            .run_many(&data, std::slice::from_ref(&spec));
+    }
+
+    #[test]
+    fn parked_workers_complete_long_serial_batches() {
+        // Regression smoke for the park/unpark idle protocol: a k = 2 tree
+        // has ONE fork and long serial phases, so with many workers most
+        // of the pool parks and must be woken for the forked child and for
+        // batch completion; the erased-heterogeneous path shares the same
+        // worker loop. A hang here = lost wakeup.
+        let data = SyntheticMixture1d::new(4_000, 123).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 64);
+        let folds = Folds::new(4_000, 2, 124);
+        let seq = TreeCv::default().run(&l, &data, &folds);
+        for _ in 0..20 {
+            let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 8)
+                .run(&l, &data, &folds);
+            assert_eq!(seq.per_fold, exe.per_fold);
         }
     }
 

@@ -101,12 +101,22 @@ impl Folds {
     /// fixed order.
     pub fn gather_except(&self, i: usize) -> Vec<u32> {
         let mut out = Vec::with_capacity(self.n - self.chunks[i].len());
+        self.gather_except_into(i, &mut out);
+        out
+    }
+
+    /// Like [`Self::gather_except`], but into a caller-owned buffer so the
+    /// k training sequences of one standard-CV run reuse ONE allocation
+    /// instead of materializing k fresh `≈(k−1)·n/k` vectors
+    /// ([`super::standard::StandardCv`] is the caller).
+    pub fn gather_except_into(&self, i: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.n - self.chunks[i].len());
         for (c, chunk) in self.chunks.iter().enumerate() {
             if c != i {
                 out.extend_from_slice(chunk);
             }
         }
-        out
     }
 }
 
@@ -127,6 +137,11 @@ pub fn node_tags(s: usize, e: usize) -> (u64, u64) {
 /// a pure function of its arguments — never drawn from a shared
 /// sequential source — which is what lets any execution order reproduce
 /// the sequential engine exactly.
+///
+/// This is the *indexed* node-stream path: it materializes (and counts,
+/// via `OpCounts::stream_allocs`) one fresh index vector per call. The
+/// fold-contiguous layout ([`crate::data::folded::FoldedDataset`]) feeds
+/// the same point sequence from contiguous slices instead.
 pub fn gather_ordered(
     folds: &Folds,
     lo: usize,
@@ -137,6 +152,7 @@ pub fn gather_ordered(
     ops: &mut OpCounts,
 ) -> Vec<u32> {
     let mut idx = folds.gather_range(lo, hi);
+    ops.stream_allocs += 1;
     let mut rng = Rng::derive(seed, tag);
     ordering.apply(&mut idx, &mut rng, ops);
     idx
@@ -304,6 +320,20 @@ mod tests {
         let idx = gather_ordered(&f, 0, 1, 7, Ordering::Fixed, 42, &mut ops);
         assert_eq!(idx, f.gather_range(0, 1));
         assert_eq!(ops.points_permuted, 0);
+        assert_eq!(ops.stream_allocs, 1);
+    }
+
+    #[test]
+    fn gather_except_into_reuses_buffer() {
+        let f = Folds::contiguous(9, 3);
+        let mut buf = Vec::new();
+        for i in 0..3 {
+            f.gather_except_into(i, &mut buf);
+            assert_eq!(buf, f.gather_except(i), "fold {i}");
+        }
+        let cap = buf.capacity();
+        f.gather_except_into(0, &mut buf);
+        assert_eq!(buf.capacity(), cap, "refill must not reallocate");
     }
 
     #[test]

@@ -33,7 +33,13 @@
 //! * [`exact`] — closed-form ridge LOOCV (hat-matrix), the external
 //!   correctness comparator from the classical fast-CV literature.
 //! * [`folds`] — fold assignment and the fixed/randomized data-ordering
-//!   policies of the paper's §5.
+//!   policies of the paper's §5. The *physical* counterpart is the
+//!   fold-contiguous layout ([`crate::data::folded::FoldedDataset`]):
+//!   every engine accepts one via its `run_folded` entry (or
+//!   [`executor::RunSpec::folded`]) and then feeds node streams as
+//!   contiguous row slices through the learners' `update_rows` /
+//!   `evaluate_rows` fast paths — bit-identical results, zero per-node
+//!   index-vector allocations under fixed ordering.
 //! * [`stats`] — the repetition harness producing Table-2-style
 //!   `mean ± std` rows.
 

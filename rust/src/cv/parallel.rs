@@ -27,7 +27,7 @@
 
 use super::executor::TreeCvExecutor;
 use super::folds::{gather_ordered, node_tags, Folds, Ordering};
-use super::treecv::run_subtree;
+use super::treecv::{run_subtree, NodeCtx, StreamScratch};
 use super::{CvResult, Strategy};
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
@@ -163,21 +163,17 @@ impl ScopedForkTreeCv {
             // Sequential tail (also handles leaves): the shared recursion
             // under the engine's strategy, writing `per_fold[i - s]`.
             let mut scratch = Vec::new();
-            run_subtree(
+            let mut streams = StreamScratch::new();
+            let ctx = NodeCtx {
                 learner,
                 data,
                 folds,
-                self.strategy,
-                self.ordering,
-                self.seed,
-                &mut model,
-                s,
-                e,
-                s,
-                per_fold,
-                &mut ops,
-                &mut scratch,
-            );
+                folded: None,
+                strategy: self.strategy,
+                ordering: self.ordering,
+                seed: self.seed,
+            };
+            run_subtree(&ctx, &mut model, s, e, s, per_fold, &mut ops, &mut scratch, &mut streams);
             return ops;
         }
         let m = (s + e) / 2;

@@ -89,6 +89,7 @@ impl RepeatedCv {
                         folds: f,
                         seed: rep_seed(r) ^ 0x5EED,
                         strategy,
+                        folded: None,
                     })
                     .collect();
                 TreeCvExecutor::with_threads_knob(strategy, self.ordering, self.threads)

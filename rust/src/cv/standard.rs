@@ -5,6 +5,7 @@
 
 use super::folds::{Folds, Ordering};
 use super::CvResult;
+use crate::data::folded::FoldedDataset;
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
@@ -27,6 +28,64 @@ impl StandardCv {
     pub fn new(ordering: Ordering, seed: u64) -> Self {
         Self { ordering, seed }
     }
+
+    /// Run the baseline over the fold-contiguous layout. "All chunks but
+    /// fold `i`" is exactly two contiguous row blocks there, so
+    /// fixed-order training feeds the learner's `update_rows` fast path
+    /// with **no index vector at all** (the indexed engine pays one reused
+    /// `≈(k−1)·n/k` gather buffer per run); randomized training shuffles
+    /// one recycled id buffer. Results — estimate, per-fold scores in
+    /// original fold numbering, all semantic counters — are bit-identical
+    /// to [`super::CvEngine::run`]. `data` must be the dataset `folded`
+    /// was built from.
+    pub fn run_folded<L: IncrementalLearner>(
+        &self,
+        learner: &L,
+        data: &Dataset,
+        folded: &FoldedDataset,
+    ) -> CvResult {
+        assert_eq!(folded.n(), data.n, "folded layout built for a different dataset (n)");
+        assert_eq!(folded.d(), data.d, "folded layout built for a different dataset (d)");
+        let timer = Timer::start();
+        let folds = folded.folds();
+        let k = folds.k();
+        let mut ops = OpCounts::default();
+        let mut per_fold = vec![0.0; k];
+        // One recycled id buffer for every randomized training sequence.
+        let mut scratch: Vec<u32> = Vec::new();
+        if self.ordering == Ordering::Randomized {
+            ops.stream_allocs += 1;
+        }
+        for i in 0..k {
+            let mut model = learner.init();
+            ops.update_calls += 1;
+            ops.points_updated += (folds.n() - folds.chunk(i).len()) as u64;
+            match self.ordering {
+                Ordering::Fixed => {
+                    // Two contiguous blocks in gather_except's order; the
+                    // split into two feeds is invisible to a per-point
+                    // incremental update.
+                    let (x, y, ids) = folded.rows_before(i);
+                    learner.update_rows(&mut model, x, y, data, ids);
+                    let (x, y, ids) = folded.rows_after(i);
+                    learner.update_rows(&mut model, x, y, data, ids);
+                }
+                Ordering::Randomized => {
+                    scratch.clear();
+                    scratch.extend_from_slice(folded.ids_before(i));
+                    scratch.extend_from_slice(folded.ids_after(i));
+                    let mut rng = Rng::derive(self.seed, i as u64);
+                    self.ordering.apply(&mut scratch, &mut rng, &mut ops);
+                    learner.update(&mut model, data, &scratch);
+                }
+            }
+            let (x, y, ids) = folded.rows(i, i);
+            per_fold[i] = learner.evaluate_rows(&model, x, y, data, ids);
+            ops.evals += 1;
+            ops.points_evaluated += ids.len() as u64;
+        }
+        CvResult::from_folds(per_fold, ops, timer.elapsed())
+    }
 }
 
 impl super::CvEngine for StandardCv {
@@ -39,8 +98,12 @@ impl super::CvEngine for StandardCv {
         let k = folds.k();
         let mut ops = OpCounts::default();
         let mut per_fold = vec![0.0; k];
+        // One training-sequence buffer reused across all k folds (the old
+        // per-fold `gather_except` allocated k fresh ≈(k−1)·n/k vectors).
+        let mut idx: Vec<u32> = Vec::new();
+        ops.stream_allocs += 1;
         for i in 0..k {
-            let mut idx = folds.gather_except(i);
+            folds.gather_except_into(i, &mut idx);
             let mut rng = Rng::derive(self.seed, i as u64);
             self.ordering.apply(&mut idx, &mut rng, &mut ops);
             let mut model = learner.init();
@@ -126,6 +189,37 @@ mod tests {
             assert_eq!(res.ops.points_updated, expected, "k={k}");
             assert_eq!(res.ops.model_copies, 0);
         }
+    }
+
+    /// Folded standard CV must be bit-identical to the indexed engine —
+    /// pinned here with the index-sensitive multiset oracle and a real
+    /// learner, under both orderings, including a remainder shape.
+    #[test]
+    fn folded_matches_indexed_bitwise() {
+        use crate::data::folded::FoldedDataset;
+        let data = SyntheticMixture1d::new(103, 89).generate();
+        let hist = HistogramDensity::new(-8.0, 8.0, 32);
+        let oracle = MultisetLearner::new(1);
+        let folds = Folds::new(103, 10, 90);
+        let folded = FoldedDataset::build(&data, &folds);
+        for ordering in [Ordering::Fixed, Ordering::Randomized] {
+            let engine = StandardCv::new(ordering, 4);
+            let a = engine.run(&hist, &data, &folds);
+            let b = engine.run_folded(&hist, &data, &folded);
+            assert_eq!(a.per_fold, b.per_fold, "{ordering:?}");
+            assert_eq!(a.ops.update_calls, b.ops.update_calls);
+            assert_eq!(a.ops.points_updated, b.ops.points_updated);
+            assert_eq!(a.ops.points_permuted, b.ops.points_permuted);
+            let oa = engine.run(&oracle, &data, &folds);
+            let ob = engine.run_folded(&oracle, &data, &folded);
+            assert_eq!(oa.per_fold, ob.per_fold, "{ordering:?} oracle");
+            if ordering == Ordering::Fixed {
+                assert_eq!(b.ops.stream_allocs, 0, "fixed folded runs allocate no streams");
+            }
+        }
+        // The indexed engine now pays ONE reused buffer per run, not k.
+        let res = StandardCv::default().run(&hist, &data, &folds);
+        assert_eq!(res.ops.stream_allocs, 1);
     }
 
     /// Randomized ordering changes the per-fold sequence but not the

@@ -122,6 +122,7 @@ where
                     folds: f,
                     seed: repetition_engine_seed(spec.seed, r),
                     strategy: spec.strategy,
+                    folded: None,
                 })
                 .collect();
             TreeCvExecutor::with_threads_knob(spec.strategy, spec.ordering, spec.threads)

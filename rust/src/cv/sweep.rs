@@ -218,6 +218,7 @@ where
         folds,
         seed,
         strategy,
+        folded: None,
     });
     Ok(dispatch_batch(learners.len(), runs.len(), spec, |engine| {
         engine.run_many(data, &runs)
@@ -242,6 +243,7 @@ pub fn run_sweep_erased(
             folds,
             seed,
             strategy,
+            folded: None,
         });
     Ok(dispatch_batch(learners.len(), runs.len(), spec, |engine| {
         engine.run_many_erased(data, &runs)

@@ -23,18 +23,180 @@
 
 use super::folds::{gather_ordered, node_tags, Folds, Ordering};
 use super::{CvResult, Strategy};
+use crate::data::folded::FoldedDataset;
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
+use crate::rng::Rng;
+
+/// Free-list of recycled `Vec<u32>` node-stream buffers: randomized
+/// orderings on the fold-contiguous layout permute into one of these
+/// (copy + in-place shuffle) instead of allocating per node. Popping an
+/// empty list allocates a fresh buffer and counts it in
+/// `OpCounts::stream_allocs`; every buffer is returned after its update,
+/// so a sequential run holds exactly one and an executor worker holds one
+/// per pool lifetime.
+pub(crate) struct StreamScratch(Vec<Vec<u32>>);
+
+impl StreamScratch {
+    pub(crate) fn new() -> Self {
+        Self(Vec::new())
+    }
+
+    fn acquire(&mut self, ops: &mut OpCounts) -> Vec<u32> {
+        self.0.pop().unwrap_or_else(|| {
+            ops.stream_allocs += 1;
+            Vec::new()
+        })
+    }
+
+    fn release(&mut self, buf: Vec<u32>) {
+        self.0.push(buf);
+    }
+}
+
+/// The per-run inputs every TreeCV node shares: learner, data access
+/// (indexed, plus the optional fold-contiguous layout), strategy,
+/// ordering, and the permutation-stream seed. One `NodeCtx` describes one
+/// run; the engines build it once (or once per task, it is all borrows)
+/// and thread it through [`run_subtree`].
+///
+/// When `folded` is `Some`, its layout MUST realize exactly `folds`
+/// (callers assert [`FoldedDataset::matches_folds`]) and have been built
+/// from `data`. Node streams then come from the layout: fixed-order
+/// updates and all leaf evaluations feed contiguous row slices through
+/// the learner's `update_rows`/`evaluate_rows` fast paths with no index
+/// vector at all; randomized updates shuffle a recycled id buffer.
+/// Indexed calls (randomized streams, `update_logged`, the fast-path
+/// *defaults*) always receive **original** indices against the original
+/// `data`, which is why every engine × strategy × ordering combination is
+/// bit-identical across layouts — including index-dependent learners.
+pub(crate) struct NodeCtx<'a, L: IncrementalLearner> {
+    pub learner: &'a L,
+    pub data: &'a Dataset,
+    pub folds: &'a Folds,
+    pub folded: Option<&'a FoldedDataset>,
+    pub strategy: Strategy,
+    pub ordering: Ordering,
+    pub seed: u64,
+}
+
+impl<L: IncrementalLearner> NodeCtx<'_, L> {
+    /// Shared tail of both update phases for every case that reaches the
+    /// learner through an *indexed* call: materialize the phase's id
+    /// stream — a recycled, shuffled copy of the folded layout's
+    /// contiguous id slice, or the classic per-node `gather_ordered` —
+    /// and hand it to `feed`. One copy of the stream derivation, so the
+    /// plain and logged phases cannot drift. (Fixed ordering on a folded
+    /// layout never comes here: it feeds contiguous slices directly.)
+    fn with_id_stream<R>(
+        &self,
+        lo: usize,
+        hi: usize,
+        tag: u64,
+        ops: &mut OpCounts,
+        streams: &mut StreamScratch,
+        feed: impl FnOnce(&Dataset, &[u32]) -> R,
+    ) -> R {
+        match self.folded {
+            Some(f) => {
+                let ids = f.ids(lo, hi);
+                ops.points_updated += ids.len() as u64;
+                let mut buf = streams.acquire(ops);
+                buf.clear();
+                buf.extend_from_slice(ids);
+                let mut rng = Rng::derive(self.seed, tag);
+                self.ordering.apply(&mut buf, &mut rng, ops);
+                let out = feed(self.data, &buf);
+                streams.release(buf);
+                out
+            }
+            None => {
+                let idx = gather_ordered(self.folds, lo, hi, self.seed, self.ordering, tag, ops);
+                ops.points_updated += idx.len() as u64;
+                feed(self.data, &idx)
+            }
+        }
+    }
+
+    /// One update phase: feed chunks `lo..=hi` (under the run's ordering,
+    /// with the node-phase `tag`'s derived stream) into `model` via
+    /// `update`. Counter contract: one `update_calls` bump and the phase's
+    /// point count, identical across layouts.
+    pub(crate) fn update_phase(
+        &self,
+        model: &mut L::Model,
+        lo: usize,
+        hi: usize,
+        tag: u64,
+        ops: &mut OpCounts,
+        streams: &mut StreamScratch,
+    ) {
+        ops.update_calls += 1;
+        if let (Some(f), Ordering::Fixed) = (self.folded, self.ordering) {
+            let (x, y, ids) = f.rows(lo, hi);
+            ops.points_updated += ids.len() as u64;
+            self.learner.update_rows(model, x, y, self.data, ids);
+            return;
+        }
+        self.with_id_stream(lo, hi, tag, ops, streams, |data, ids| {
+            self.learner.update(model, data, ids);
+        });
+    }
+
+    /// [`Self::update_phase`] via `update_logged` (save/revert strategy).
+    /// The logged path stays indexed — undo logs speak in original
+    /// indices — but on the folded layout the fixed-order id slice is a
+    /// borrow, so it is still free of per-node index-vector allocations.
+    pub(crate) fn update_phase_logged(
+        &self,
+        model: &mut L::Model,
+        lo: usize,
+        hi: usize,
+        tag: u64,
+        ops: &mut OpCounts,
+        streams: &mut StreamScratch,
+    ) -> L::Undo {
+        ops.update_calls += 1;
+        if let (Some(f), Ordering::Fixed) = (self.folded, self.ordering) {
+            let ids = f.ids(lo, hi);
+            ops.points_updated += ids.len() as u64;
+            return self.learner.update_logged(model, self.data, ids);
+        }
+        self.with_id_stream(lo, hi, tag, ops, streams, |data, ids| {
+            self.learner.update_logged(model, data, ids)
+        })
+    }
+
+    /// Leaf evaluation of fold `s` (held-out chunk, in chunk order under
+    /// both orderings — the paper randomizes training streams only).
+    pub(crate) fn eval_leaf(&self, model: &L::Model, s: usize, ops: &mut OpCounts) -> f64 {
+        ops.evals += 1;
+        match self.folded {
+            Some(f) => {
+                let (x, y, ids) = f.rows(s, s);
+                ops.points_evaluated += ids.len() as u64;
+                self.learner.evaluate_rows(model, x, y, self.data, ids)
+            }
+            None => {
+                let chunk = self.folds.chunk(s);
+                ops.points_evaluated += chunk.len() as u64;
+                self.learner.evaluate(model, self.data, chunk)
+            }
+        }
+    }
+}
 
 /// Run the TreeCV recursion (Algorithm 1) over the subtree rooted at
-/// `(s, e)`, sequentially, with the given model-preservation strategy.
+/// `(s, e)`, sequentially, with the context's model-preservation strategy.
 ///
 /// This is *the* sequential recursion: [`TreeCv`] runs it over the whole
 /// tree, the pooled executor ([`super::executor::TreeCvExecutor`]) runs it
 /// inline on a worker for every subtree below its snapshot cutoff, and
 /// [`super::parallel::ScopedForkTreeCv`] runs it as its sequential tail —
-/// one implementation instead of three hand-synchronized copies.
+/// one implementation instead of three hand-synchronized copies. Node
+/// streams come from [`NodeCtx`], so the fold-contiguous layout and the
+/// indexed path share every line of scheduling logic.
 ///
 /// `model` must be trained on every chunk outside `s..=e`; fold `i`'s score
 /// is written to `per_fold[i - base]` (callers hand a slice covering
@@ -47,17 +209,13 @@ use crate::metrics::{OpCounts, Timer};
 /// `scratch` is a free-list of model buffers for Copy-strategy snapshots:
 /// each interior node pops a buffer (`clone_from` reuses its storage) and
 /// pushes the spent one back at its restore, so steady-state allocation is
-/// the recursion depth, not one fresh model per node. Callers pass an
-/// empty `Vec` (or a longer-lived one to recycle across calls, as the
-/// executor's workers do); SaveRevert never touches it.
+/// the recursion depth, not one fresh model per node. `streams` plays the
+/// same role for randomized-ordering id buffers on the folded layout.
+/// Callers pass empty containers (or longer-lived ones to recycle across
+/// calls, as the executor's workers do).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_subtree<L: IncrementalLearner>(
-    learner: &L,
-    data: &Dataset,
-    folds: &Folds,
-    strategy: Strategy,
-    ordering: Ordering,
-    seed: u64,
+    ctx: &NodeCtx<'_, L>,
     model: &mut L::Model,
     s: usize,
     e: usize,
@@ -65,12 +223,10 @@ pub(crate) fn run_subtree<L: IncrementalLearner>(
     per_fold: &mut [f64],
     ops: &mut OpCounts,
     scratch: &mut Vec<L::Model>,
+    streams: &mut StreamScratch,
 ) {
     if s == e {
-        let chunk = folds.chunk(s);
-        per_fold[s - base] = learner.evaluate(model, data, chunk);
-        ops.evals += 1;
-        ops.points_evaluated += chunk.len() as u64;
+        per_fold[s - base] = ctx.eval_leaf(model, s, ops);
         return;
     }
     let m = (s + e) / 2;
@@ -78,7 +234,7 @@ pub(crate) fn run_subtree<L: IncrementalLearner>(
     // with the parallel engines via `folds::node_tags`.
     let (tag_right, tag_left) = node_tags(s, e);
 
-    match strategy {
+    match ctx.strategy {
         Strategy::Copy => {
             let saved = match scratch.pop() {
                 Some(mut buf) => {
@@ -88,51 +244,27 @@ pub(crate) fn run_subtree<L: IncrementalLearner>(
                 None => model.clone(),
             };
             ops.model_copies += 1;
-            ops.bytes_copied += learner.model_bytes(&saved) as u64;
+            ops.bytes_copied += ctx.learner.model_bytes(&saved) as u64;
 
-            let right = gather_ordered(folds, m + 1, e, seed, ordering, tag_right, ops);
-            learner.update(model, data, &right);
-            ops.update_calls += 1;
-            ops.points_updated += right.len() as u64;
-            run_subtree(
-                learner, data, folds, strategy, ordering, seed, model, s, m, base, per_fold, ops,
-                scratch,
-            );
+            ctx.update_phase(model, m + 1, e, tag_right, ops, streams);
+            run_subtree(ctx, model, s, m, base, per_fold, ops, scratch, streams);
 
             // Restore the snapshot and recycle the spent buffer for a
             // descendant's next snapshot.
             let spent = std::mem::replace(model, saved);
             scratch.push(spent);
-            let left = gather_ordered(folds, s, m, seed, ordering, tag_left, ops);
-            learner.update(model, data, &left);
-            ops.update_calls += 1;
-            ops.points_updated += left.len() as u64;
-            run_subtree(
-                learner, data, folds, strategy, ordering, seed, model, m + 1, e, base, per_fold,
-                ops, scratch,
-            );
+            ctx.update_phase(model, s, m, tag_left, ops, streams);
+            run_subtree(ctx, model, m + 1, e, base, per_fold, ops, scratch, streams);
         }
         Strategy::SaveRevert => {
-            let right = gather_ordered(folds, m + 1, e, seed, ordering, tag_right, ops);
-            let undo = learner.update_logged(model, data, &right);
-            ops.update_calls += 1;
-            ops.points_updated += right.len() as u64;
-            run_subtree(
-                learner, data, folds, strategy, ordering, seed, model, s, m, base, per_fold, ops,
-                scratch,
-            );
-            learner.revert(model, data, undo);
+            let undo = ctx.update_phase_logged(model, m + 1, e, tag_right, ops, streams);
+            run_subtree(ctx, model, s, m, base, per_fold, ops, scratch, streams);
+            ctx.learner.revert(model, ctx.data, undo);
             ops.model_restores += 1;
 
-            let left = gather_ordered(folds, s, m, seed, ordering, tag_left, ops);
-            let undo = learner.update_logged(model, data, &left);
-            ops.update_calls += 1;
-            ops.points_updated += left.len() as u64;
-            run_subtree(
-                learner, data, folds, strategy, ordering, seed, model, m + 1, e, base, per_fold,
-                ops, scratch,
-            );
-            learner.revert(model, data, undo);
+            let undo = ctx.update_phase_logged(model, s, m, tag_left, ops, streams);
+            run_subtree(ctx, model, m + 1, e, base, per_fold, ops, scratch, streams);
+            ctx.learner.revert(model, ctx.data, undo);
             ops.model_restores += 1;
         }
     }
@@ -159,6 +291,53 @@ impl TreeCv {
     pub fn new(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
         Self { strategy, ordering, seed }
     }
+
+    fn run_ctx<L: IncrementalLearner>(&self, ctx: &NodeCtx<'_, L>) -> CvResult {
+        let timer = Timer::start();
+        let k = ctx.folds.k();
+        let mut ops = OpCounts::default();
+        let mut per_fold = vec![0.0; k];
+        let mut model = ctx.learner.init();
+        let mut scratch = Vec::new();
+        let mut streams = StreamScratch::new();
+        run_subtree(
+            ctx,
+            &mut model,
+            0,
+            k - 1,
+            0,
+            &mut per_fold,
+            &mut ops,
+            &mut scratch,
+            &mut streams,
+        );
+        CvResult::from_folds(per_fold, ops, timer.elapsed())
+    }
+
+    /// Run the engine over the fold-contiguous layout: identical
+    /// scheduling, identical results (estimate, per-fold scores in
+    /// original fold numbering, all semantic counters) — but fixed-order
+    /// node streams are contiguous slice feeds with zero index-vector
+    /// allocations, and randomized streams recycle one scratch buffer.
+    /// `data` must be the dataset `folded` was built from.
+    pub fn run_folded<L: IncrementalLearner>(
+        &self,
+        learner: &L,
+        data: &Dataset,
+        folded: &FoldedDataset,
+    ) -> CvResult {
+        assert_eq!(folded.n(), data.n, "folded layout built for a different dataset (n)");
+        assert_eq!(folded.d(), data.d, "folded layout built for a different dataset (d)");
+        self.run_ctx(&NodeCtx {
+            learner,
+            data,
+            folds: folded.folds(),
+            folded: Some(folded),
+            strategy: self.strategy,
+            ordering: self.ordering,
+            seed: self.seed,
+        })
+    }
 }
 
 impl super::CvEngine for TreeCv {
@@ -167,28 +346,15 @@ impl super::CvEngine for TreeCv {
     }
 
     fn run<L: IncrementalLearner>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult {
-        let timer = Timer::start();
-        let k = folds.k();
-        let mut ops = OpCounts::default();
-        let mut per_fold = vec![0.0; k];
-        let mut model = learner.init();
-        let mut scratch = Vec::new();
-        run_subtree(
+        self.run_ctx(&NodeCtx {
             learner,
             data,
             folds,
-            self.strategy,
-            self.ordering,
-            self.seed,
-            &mut model,
-            0,
-            k - 1,
-            0,
-            &mut per_fold,
-            &mut ops,
-            &mut scratch,
-        );
-        CvResult::from_folds(per_fold, ops, timer.elapsed())
+            folded: None,
+            strategy: self.strategy,
+            ordering: self.ordering,
+            seed: self.seed,
+        })
     }
 }
 
@@ -322,6 +488,35 @@ mod tests {
         let res = TreeCv::new(Strategy::SaveRevert, Ordering::Fixed, 0).run(&l, &data, &folds);
         assert_eq!(res.ops.model_copies, 0);
         assert_eq!(res.ops.model_restores, 2 * (k - 1) as u64); // 2 per interior node
+    }
+
+    /// The folded layout must reproduce the indexed path bit-for-bit even
+    /// for an index-*sensitive* learner (the multiset oracle's loss hashes
+    /// the training indices), because fallback calls keep feeding original
+    /// indices — and fixed-order folded runs allocate zero index vectors.
+    #[test]
+    fn folded_run_matches_indexed_bitwise() {
+        use crate::data::folded::FoldedDataset;
+        let n = 43; // remainder folds
+        let data = dummy(n);
+        let folds = Folds::new(n, 8, 77);
+        let folded = FoldedDataset::build(&data, &folds);
+        let l = MultisetLearner::new(1);
+        for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+            for ordering in [Ordering::Fixed, Ordering::Randomized] {
+                let engine = TreeCv::new(strategy, ordering, 3);
+                let a = engine.run(&l, &data, &folds);
+                let b = engine.run_folded(&l, &data, &folded);
+                assert_eq!(a.per_fold, b.per_fold, "{strategy:?} {ordering:?}");
+                assert_eq!(a.ops.points_updated, b.ops.points_updated);
+                assert_eq!(a.ops.points_permuted, b.ops.points_permuted);
+                assert_eq!(a.ops.model_copies, b.ops.model_copies);
+                match ordering {
+                    Ordering::Fixed => assert_eq!(b.ops.stream_allocs, 0, "{strategy:?}"),
+                    Ordering::Randomized => assert_eq!(b.ops.stream_allocs, 1, "one recycled buf"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Fold-contiguous physical data layout.
+//!
+//! The CV engines stream *chunk groups* into incremental learners: every
+//! TreeCV node feeds the concatenation of chunks `Z_lo..Z_hi`, and every
+//! standard-CV repetition feeds "all chunks but one". With the logical
+//! [`Folds`] partition alone, each of those streams is a fresh `Vec<u32>`
+//! of row indices scattered across the whole `n × d` matrix — Θ(k log k)
+//! transient allocations per TreeCV run and a random-access pattern the
+//! hardware prefetcher cannot help with.
+//!
+//! [`FoldedDataset`] fixes the *physical* side once per run: it permutes
+//! the dataset's rows so that each fold chunk occupies one contiguous row
+//! range (chunks in fold order, rows in chunk order). Every hierarchical
+//! chunk group `lo..=hi` — and standard CV's "all but fold i", which
+//! becomes exactly two such groups — is then a contiguous slice of the
+//! permuted `x`/`y` storage, which the engines feed straight into the
+//! learners' contiguous fast paths
+//! ([`crate::learner::IncrementalLearner::update_rows`] /
+//! [`crate::learner::IncrementalLearner::evaluate_rows`]) with **no
+//! index vector at all**.
+//!
+//! The layout changes *where rows live*, never *which points are fed in
+//! which order*:
+//!
+//! * The permutation concatenates `folds.chunk(0..k)` in order, so the
+//!   contiguous block of chunks `lo..=hi` lists the same points in the
+//!   same order as [`Folds::gather_range`].
+//! * The forward map [`FoldedDataset::ids`] exposes the **original**
+//!   dataset indices of any block as a contiguous `&[u32]` slice, so
+//!   index-dependent learners (k-NN's training-set model, the multiset
+//!   oracle) and save/revert undo logs keep speaking in original indices
+//!   against the original dataset — bit-identical to the unfolded path.
+//! * Randomized-ordering streams shuffle a copy of that id slice with the
+//!   same per-node derived RNG stream the unfolded path uses, so the
+//!   shuffled sequence is identical too (the engines recycle the copy
+//!   buffer through a free list instead of allocating per node).
+//!
+//! Per-fold results therefore stay in the *original* fold numbering, and
+//! `tests/integration_layout.rs` pins bit-identity of the folded path
+//! against the unfolded one across every engine × strategy × ordering ×
+//! worker-count combination.
+
+use super::Dataset;
+use crate::cv::folds::Folds;
+
+/// A dataset physically re-ordered so each fold chunk is one contiguous
+/// row range. Built once per run with [`FoldedDataset::build`]; carries
+/// the forward (`position → original id`) and inverse (`original id →
+/// position`) permutations plus the owning [`Folds`] partition.
+#[derive(Debug, Clone)]
+pub struct FoldedDataset {
+    /// The permuted copy: row `p` holds original row `orig[p]`.
+    data: Dataset,
+    /// The logical partition this layout realizes (original indices).
+    folds: Folds,
+    /// Forward permutation: `orig[p]` = original index of folded row `p`.
+    orig: Vec<u32>,
+    /// Inverse permutation: `pos[i]` = folded position of original row `i`.
+    pos: Vec<u32>,
+    /// Chunk boundaries: chunk `c` occupies rows `starts[c]..starts[c+1]`.
+    starts: Vec<usize>,
+}
+
+impl FoldedDataset {
+    /// Build the fold-contiguous layout of `data` under `folds`. Copies
+    /// the dataset once (`O(n·d)`); every per-node stream afterwards is a
+    /// slice borrow.
+    pub fn build(data: &Dataset, folds: &Folds) -> Self {
+        assert_eq!(
+            folds.n(),
+            data.n,
+            "fold partition covers {} points but the dataset has {}",
+            folds.n(),
+            data.n
+        );
+        let k = folds.k();
+        let orig = folds.gather_range(0, k - 1);
+        let mut starts = Vec::with_capacity(k + 1);
+        let mut off = 0usize;
+        starts.push(0);
+        for c in 0..k {
+            off += folds.chunk(c).len();
+            starts.push(off);
+        }
+        debug_assert_eq!(off, data.n);
+        let mut pos = vec![0u32; data.n];
+        for (p, &i) in orig.iter().enumerate() {
+            pos[i as usize] = p as u32;
+        }
+        Self { data: data.subset(&orig), folds: folds.clone(), orig, pos, starts }
+    }
+
+    /// The logical fold partition (original indices, original numbering).
+    pub fn folds(&self) -> &Folds {
+        &self.folds
+    }
+
+    /// The permuted physical copy (row `p` = original row
+    /// [`Self::original_of`]`(p)`). Exposed for benches and tests; the
+    /// engines only hand out its slices.
+    pub fn folded_data(&self) -> &Dataset {
+        &self.data
+    }
+
+    pub fn n(&self) -> usize {
+        self.data.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.data.d
+    }
+
+    pub fn k(&self) -> usize {
+        self.folds.k()
+    }
+
+    /// Original dataset index of folded row `p`.
+    pub fn original_of(&self, p: u32) -> u32 {
+        self.orig[p as usize]
+    }
+
+    /// Folded row position of original dataset index `i`.
+    pub fn position_of(&self, i: u32) -> u32 {
+        self.pos[i as usize]
+    }
+
+    /// Original ids of the contiguous block of chunks `lo..=hi` — the
+    /// same sequence [`Folds::gather_range`]`(lo, hi)` returns, borrowed
+    /// instead of allocated.
+    pub fn ids(&self, lo: usize, hi: usize) -> &[u32] {
+        &self.orig[self.starts[lo]..self.starts[hi + 1]]
+    }
+
+    /// Contiguous row block of chunks `lo..=hi` as
+    /// `(features, outcomes, original ids)` — the learner fast-path
+    /// triple: `features` is row-major `ids.len() × d`, and element `j`
+    /// of each slice describes the same point.
+    pub fn rows(&self, lo: usize, hi: usize) -> (&[f32], &[f32], &[u32]) {
+        let (a, b) = (self.starts[lo], self.starts[hi + 1]);
+        (&self.data.x[a * self.data.d..b * self.data.d], &self.data.y[a..b], &self.orig[a..b])
+    }
+
+    /// Row block of every chunk *before* `i` (empty for `i = 0`).
+    /// Together with [`Self::rows_after`] this is standard CV's training
+    /// set "all chunks but `i`", in exactly
+    /// [`Folds::gather_except`]'s order.
+    pub fn rows_before(&self, i: usize) -> (&[f32], &[f32], &[u32]) {
+        let b = self.starts[i];
+        (&self.data.x[..b * self.data.d], &self.data.y[..b], &self.orig[..b])
+    }
+
+    /// Row block of every chunk *after* `i` (empty for `i = k − 1`).
+    pub fn rows_after(&self, i: usize) -> (&[f32], &[f32], &[u32]) {
+        let a = self.starts[i + 1];
+        (&self.data.x[a * self.data.d..], &self.data.y[a..], &self.orig[a..])
+    }
+
+    /// Original ids of every chunk before `i`.
+    pub fn ids_before(&self, i: usize) -> &[u32] {
+        &self.orig[..self.starts[i]]
+    }
+
+    /// Original ids of every chunk after `i`.
+    pub fn ids_after(&self, i: usize) -> &[u32] {
+        &self.orig[self.starts[i + 1]..]
+    }
+
+    /// Whether this layout realizes exactly the partition `folds` (same
+    /// chunks, same within-chunk order). The engines assert this when a
+    /// caller pairs a layout with separately-supplied folds.
+    pub fn matches_folds(&self, folds: &Folds) -> bool {
+        if std::ptr::eq(folds, &self.folds) {
+            return true;
+        }
+        self.folds.k() == folds.k()
+            && self.folds.n() == folds.n()
+            && (0..folds.k()).all(|c| self.folds.chunk(c) == folds.chunk(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn arange_data(n: usize, d: usize) -> Dataset {
+        let x: Vec<f32> = (0..n * d).map(|v| v as f32).collect();
+        let y: Vec<f32> = (0..n).map(|v| -(v as f32)).collect();
+        Dataset::new(x, y, d)
+    }
+
+    #[test]
+    fn permutation_round_trip() {
+        let mut rng = Rng::new(0xF01DED);
+        for _ in 0..30 {
+            let n = 2 + rng.below(200) as usize;
+            let k = 1 + rng.below(n as u64) as usize;
+            let data = arange_data(n, 3);
+            let folds = Folds::new(n, k, (n * 31 + k) as u64);
+            let f = FoldedDataset::build(&data, &folds);
+            assert_eq!(f.n(), n);
+            assert_eq!(f.d(), 3);
+            assert_eq!(f.k(), k);
+            for p in 0..n as u32 {
+                assert_eq!(f.position_of(f.original_of(p)), p, "n={n} k={k} p={p}");
+            }
+            for i in 0..n as u32 {
+                assert_eq!(f.original_of(f.position_of(i)), i, "n={n} k={k} i={i}");
+            }
+            // Folded row p holds the original row orig[p].
+            for p in 0..n as u32 {
+                let i = f.original_of(p);
+                assert_eq!(f.folded_data().row(p), data.row(i));
+                assert_eq!(f.folded_data().label(p), data.label(i));
+            }
+        }
+    }
+
+    #[test]
+    fn ids_match_gather_range_and_except() {
+        let n = 103; // remainder folds
+        let k = 10;
+        let data = arange_data(n, 2);
+        let folds = Folds::new(n, k, 7);
+        let f = FoldedDataset::build(&data, &folds);
+        for lo in 0..k {
+            for hi in lo..k {
+                assert_eq!(f.ids(lo, hi), folds.gather_range(lo, hi), "({lo},{hi})");
+            }
+        }
+        for i in 0..k {
+            let mut joined = f.ids_before(i).to_vec();
+            joined.extend_from_slice(f.ids_after(i));
+            assert_eq!(joined, folds.gather_except(i), "fold {i}");
+        }
+    }
+
+    #[test]
+    fn row_blocks_are_materialized_gathers() {
+        let n = 37;
+        let k = 5;
+        let data = arange_data(n, 4);
+        let folds = Folds::new(n, k, 9);
+        let f = FoldedDataset::build(&data, &folds);
+        let (x, y, ids) = f.rows(1, 3);
+        assert_eq!(ids, folds.gather_range(1, 3));
+        assert_eq!(x.len(), ids.len() * 4);
+        assert_eq!(y.len(), ids.len());
+        for (j, &i) in ids.iter().enumerate() {
+            assert_eq!(&x[j * 4..(j + 1) * 4], data.row(i), "j={j}");
+            assert_eq!(y[j], data.label(i), "j={j}");
+        }
+        // Boundary blocks are empty, not out of range.
+        assert!(f.rows_before(0).2.is_empty());
+        assert!(f.rows_after(k - 1).2.is_empty());
+    }
+
+    #[test]
+    fn matches_folds_detects_mismatch() {
+        let data = arange_data(40, 1);
+        let folds = Folds::new(40, 5, 11);
+        let f = FoldedDataset::build(&data, &folds);
+        assert!(f.matches_folds(&folds));
+        assert!(f.matches_folds(&folds.clone()));
+        let other = Folds::new(40, 5, 12);
+        assert!(!f.matches_folds(&other));
+        let other_k = Folds::new(40, 8, 11);
+        assert!(!f.matches_folds(&other_k));
+    }
+
+    #[test]
+    #[should_panic(expected = "fold partition covers")]
+    fn wrong_dataset_size_panics() {
+        let data = arange_data(10, 1);
+        let folds = Folds::new(9, 3, 1);
+        let _ = FoldedDataset::build(&data, &folds);
+    }
+
+    #[test]
+    fn loocv_layout() {
+        let data = arange_data(7, 2);
+        let folds = Folds::loocv(7);
+        let f = FoldedDataset::build(&data, &folds);
+        assert_eq!(f.k(), 7);
+        for i in 0..7 {
+            assert_eq!(f.ids(i, i), folds.chunk(i));
+        }
+    }
+}

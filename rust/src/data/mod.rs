@@ -1,9 +1,12 @@
-//! Dataset substrate: dense in-memory datasets, synthetic generators that
-//! stand in for the paper's UCI workloads, and a LIBSVM-format parser so
-//! the real files drop in when available.
+//! Dataset substrate: dense in-memory datasets, the fold-contiguous
+//! physical layout the CV engines' hot loops stream over, synthetic
+//! generators that stand in for the paper's UCI workloads, and a
+//! LIBSVM-format parser so the real files drop in when available.
 
 pub mod dataset;
+pub mod folded;
 pub mod libsvm;
 pub mod synth;
 
 pub use dataset::Dataset;
+pub use folded::FoldedDataset;

@@ -162,6 +162,31 @@ pub trait ErasedLearner: Send + Sync {
     /// `evaluate` (overrides included) for bit-identical results.
     fn evaluate(&self, model: &ErasedModel, data: &Dataset, idx: &[u32]) -> f64;
 
+    /// Contiguous fast path (same slice contract as the generic
+    /// [`IncrementalLearner::update_rows`]): forwards the concrete
+    /// learner's override, so the fold-contiguous layout keeps both its
+    /// speed and its bit-identity through erasure.
+    fn update_rows(
+        &self,
+        model: &mut ErasedModel,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    );
+
+    /// Contiguous chunk evaluation (see
+    /// [`IncrementalLearner::evaluate_rows`]); forwards the concrete
+    /// override chain.
+    fn evaluate_rows(
+        &self,
+        model: &ErasedModel,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    ) -> f64;
+
     /// Approximate model size in bytes.
     fn model_bytes(&self, model: &ErasedModel) -> usize;
 }
@@ -241,6 +266,28 @@ where
         self.0.evaluate(self.model_ref(model), data, idx)
     }
 
+    fn update_rows(
+        &self,
+        model: &mut ErasedModel,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    ) {
+        self.0.update_rows(concrete::<L>(model, self.0.name()), x, y, data, ids);
+    }
+
+    fn evaluate_rows(
+        &self,
+        model: &ErasedModel,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    ) -> f64 {
+        self.0.evaluate_rows(self.model_ref(model), x, y, data, ids)
+    }
+
     fn model_bytes(&self, model: &ErasedModel) -> usize {
         self.0.model_bytes(self.model_ref(model))
     }
@@ -306,6 +353,31 @@ impl IncrementalLearner for DynLearner<'_> {
         // Forward the erased override chain instead of the generic default
         // so learners with amortized chunk evaluation stay bit-identical.
         self.0.evaluate(model, data, idx)
+    }
+
+    fn update_rows(
+        &self,
+        model: &mut ErasedModel,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    ) {
+        // Forward the erased override chain so the dense learners'
+        // contiguous sweeps survive erasure (the generic default would
+        // silently fall back to the indexed loop).
+        self.0.update_rows(model, x, y, data, ids);
+    }
+
+    fn evaluate_rows(
+        &self,
+        model: &ErasedModel,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    ) -> f64 {
+        self.0.evaluate_rows(model, x, y, data, ids)
     }
 
     fn model_bytes(&self, model: &ErasedModel) -> usize {
@@ -397,6 +469,27 @@ mod tests {
         assert_eq!(generic.estimate.to_bits(), erased.estimate.to_bits());
         assert_eq!(generic.ops.points_updated, erased.ops.points_updated);
         assert_eq!(generic.ops.bytes_copied, erased.ops.bytes_copied);
+    }
+
+    #[test]
+    fn erased_forwards_contiguous_fast_paths() {
+        // The erased layer must forward the dense learners' update_rows /
+        // evaluate_rows overrides, bit-identically to the generic calls.
+        let data = SyntheticCovertype::new(120, 67).generate();
+        let l = Pegasos::new(54, 1e-3);
+        let e: Box<dyn ErasedLearner> = Erased::boxed(l.clone());
+        let idx: Vec<u32> = (0..90).collect();
+        let block = data.subset(&idx);
+        let mut gm = l.init();
+        l.update_rows(&mut gm, &block.x, &block.y, &data, &idx);
+        let mut em = e.init();
+        e.update_rows(&mut em, &block.x, &block.y, &data, &idx);
+        let held: Vec<u32> = (90..120).collect();
+        let hb = data.subset(&held);
+        let want = l.evaluate_rows(&gm, &hb.x, &hb.y, &data, &held);
+        let got = e.evaluate_rows(&em, &hb.x, &hb.y, &data, &held);
+        assert_eq!(want.to_bits(), got.to_bits());
+        assert_eq!(want.to_bits(), l.evaluate(&gm, &data, &held).to_bits());
     }
 
     #[test]

@@ -113,6 +113,22 @@ impl IncrementalLearner for OnlineKMeans {
         }
     }
 
+    /// Contiguous fast path: identical `step` sequence over a row-major
+    /// slice (labels are `NoLabel` here and ignored; bit-identical).
+    fn update_rows(
+        &self,
+        m: &mut KMeansModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) {
+        debug_assert_eq!(x.len(), y.len() * self.d);
+        for row in x.chunks_exact(self.d) {
+            let _ = self.step(m, row);
+        }
+    }
+
     fn update_logged(&self, m: &mut KMeansModel, data: &Dataset, idx: &[u32]) -> Self::Undo {
         idx.iter().map(|&i| self.step(m, data.row(i))).collect()
     }
@@ -141,6 +157,28 @@ impl IncrementalLearner for OnlineKMeans {
             // Unseeded model: quantize to the origin (the zero center).
             None => linalg::norm_sq(x),
         }
+    }
+
+    fn evaluate_rows(
+        &self,
+        m: &KMeansModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let d = self.d;
+        let mut s = 0f64;
+        for row in x.chunks_exact(d) {
+            s += match m.nearest(d, row) {
+                Some(j) => loss::quantization_error(row, &m.centers[j * d..(j + 1) * d]),
+                None => linalg::norm_sq(row),
+            };
+        }
+        s / y.len() as f64
     }
 
     fn model_bytes(&self, m: &KMeansModel) -> usize {
@@ -186,6 +224,25 @@ mod tests {
         l.update(&mut m, &data, &[0, 1, 2, 3]);
         assert!((m.centers[0] - 4.0).abs() < 1e-6);
         assert_eq!(m.counts[0], 4);
+    }
+
+    #[test]
+    fn contiguous_fast_path_is_bit_identical() {
+        let data = SyntheticBlobs::new(300, 4, 3, 45).generate();
+        let idx: Vec<u32> = (0..250).collect();
+        let block = data.subset(&idx);
+        let l = OnlineKMeans::new(4, 3);
+        let mut a = l.init();
+        l.update(&mut a, &data, &idx);
+        let mut b = l.init();
+        l.update_rows(&mut b, &block.x, &block.y, &data, &idx);
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.seeded, b.seeded);
+        let held: Vec<u32> = (250..300).collect();
+        let hb = data.subset(&held);
+        let fast = l.evaluate_rows(&a, &hb.x, &hb.y, &data, &held);
+        assert_eq!(l.evaluate(&a, &data, &held).to_bits(), fast.to_bits());
     }
 
     #[test]

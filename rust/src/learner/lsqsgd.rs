@@ -110,6 +110,22 @@ impl IncrementalLearner for LsqSgd {
         }
     }
 
+    /// Contiguous fast path: identical `step` sequence over a row-major
+    /// slice (folded-layout contract — bit-identical to `update`).
+    fn update_rows(
+        &self,
+        m: &mut LsqSgdModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) {
+        debug_assert_eq!(x.len(), y.len() * self.d);
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            self.step(m, row, yi);
+        }
+    }
+
     fn update_logged(&self, m: &mut LsqSgdModel, data: &Dataset, idx: &[u32]) -> LsqSgdModel {
         let snap = m.clone();
         self.update(m, data, idx);
@@ -122,6 +138,24 @@ impl IncrementalLearner for LsqSgd {
 
     fn loss(&self, m: &LsqSgdModel, data: &Dataset, i: u32) -> f64 {
         loss::squared_error(m.predict(data.row(i)), data.label(i))
+    }
+
+    fn evaluate_rows(
+        &self,
+        m: &LsqSgdModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0f64;
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            s += loss::squared_error(m.predict(row), yi);
+        }
+        s / y.len() as f64
     }
 
     fn model_bytes(&self, m: &LsqSgdModel) -> usize {
@@ -201,6 +235,25 @@ mod tests {
         for j in 0..90 {
             assert!((m1.wavg[j] - m2.wavg[j]).abs() < 1e-6, "j={j}");
         }
+    }
+
+    #[test]
+    fn contiguous_fast_path_is_bit_identical() {
+        let data = SyntheticYearMsd::new(150, 26).generate();
+        let idx: Vec<u32> = (10..120).collect();
+        let block = data.subset(&idx);
+        let l = LsqSgd::new(90, 0.05);
+        let mut a = l.init();
+        l.update(&mut a, &data, &idx);
+        let mut b = l.init();
+        l.update_rows(&mut b, &block.x, &block.y, &data, &idx);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.wavg, b.wavg);
+        assert_eq!(a.t, b.t);
+        let held: Vec<u32> = (120..150).collect();
+        let hb = data.subset(&held);
+        let fast = l.evaluate_rows(&a, &hb.x, &hb.y, &data, &held);
+        assert_eq!(l.evaluate(&a, &data, &held).to_bits(), fast.to_bits());
     }
 
     #[test]

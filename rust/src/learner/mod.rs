@@ -6,7 +6,11 @@
 //! from scratch. [`IncrementalLearner`] captures exactly that interface,
 //! plus the two mechanisms TreeCV needs at interior tree nodes (paper §4.1):
 //! copying a model, or reverting the in-place changes an update made
-//! (`update_logged` / `revert`).
+//! (`update_logged` / `revert`). The contiguous fast paths
+//! (`update_rows` / `evaluate_rows`) let the engines stream the
+//! fold-contiguous layout ([`crate::data::folded::FoldedDataset`])
+//! without per-node index vectors; the dense learners override them,
+//! everything else inherits the (bit-identical) indexed defaults.
 //!
 //! Implementations:
 //! * [`pegasos::Pegasos`] — linear PEGASOS SVM (paper §5, Table 2 top).
@@ -83,6 +87,15 @@ pub trait IncrementalLearner {
 
     /// Incremental update: feed the points `data[idx]`, in order, into the
     /// model.
+    ///
+    /// Contract: updates must be *call-splittable* —
+    /// `update(m, A); update(m, B)` must equal `update(m, A ++ B)` — the
+    /// defining property of an incremental learner (the paper's
+    /// `L(L(m, A), B) = L(m, A ++ B)`), which every engine relies on and
+    /// the fold-contiguous standard-CV path exploits by feeding "all but
+    /// fold i" as two contiguous blocks. Learners with per-call batch
+    /// structure (e.g. device-padded block execution) must make the
+    /// split invisible in their results.
     fn update(&self, model: &mut Self::Model, data: &Dataset, idx: &[u32]);
 
     /// Like [`update`](Self::update), but records an undo token so the
@@ -113,6 +126,49 @@ pub trait IncrementalLearner {
             s += self.loss(model, data, i);
         }
         s / idx.len() as f64
+    }
+
+    /// Contiguous fast path for [`update`](Self::update): feed the
+    /// `ids.len()` points whose features are the row-major block `x`
+    /// (`ids.len() × dim`) and whose outcomes are `y`, in slice order.
+    ///
+    /// Contract (upheld by [`crate::data::folded::FoldedDataset`], the
+    /// only producer): the slices are a materialized copy of rows `ids`
+    /// of `data` — `x[j·d..(j+1)·d] == data.row(ids[j])` and
+    /// `y[j] == data.label(ids[j])` for every `j`. Implementations MUST
+    /// compute exactly what the indexed [`update`](Self::update) would
+    /// compute for `ids`; the engines' cross-layout bit-identity
+    /// guarantees depend on it. The default forwards to the indexed path
+    /// (correct for every learner, including index-dependent models like
+    /// k-NN's training-index set); the dense learners override it so
+    /// their inner loops sweep `x` linearly at memory bandwidth.
+    fn update_rows(
+        &self,
+        model: &mut Self::Model,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    ) {
+        let _ = (x, y);
+        self.update(model, data, ids);
+    }
+
+    /// Contiguous fast path for [`evaluate`](Self::evaluate), under the
+    /// same slice contract as [`update_rows`](Self::update_rows). The
+    /// default forwards to `evaluate` — not a per-point loop — so
+    /// per-chunk overrides (ridge's one-shot solve, XLA batching)
+    /// survive on the folded layout too.
+    fn evaluate_rows(
+        &self,
+        model: &Self::Model,
+        x: &[f32],
+        y: &[f32],
+        data: &Dataset,
+        ids: &[u32],
+    ) -> f64 {
+        let _ = (x, y);
+        self.evaluate(model, data, ids)
     }
 
     /// Approximate model size in bytes (drives the copy-cost metrics and

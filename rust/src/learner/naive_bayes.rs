@@ -154,6 +154,19 @@ impl IncrementalLearner for GaussianNb {
         }
     }
 
+    /// Contiguous fast path: identical per-point accumulation over a
+    /// row-major slice (folded-layout contract, bit-identical).
+    fn update_rows(&self, m: &mut NbModel, x: &[f32], y: &[f32], _data: &Dataset, _ids: &[u32]) {
+        debug_assert_eq!(x.len(), y.len() * self.d);
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            if yi > 0.0 {
+                m.pos.add_point(row);
+            } else {
+                m.neg.add_point(row);
+            }
+        }
+    }
+
     fn update_logged(&self, m: &mut NbModel, data: &Dataset, idx: &[u32]) -> Vec<u32> {
         self.update(m, data, idx);
         idx.to_vec()
@@ -172,6 +185,24 @@ impl IncrementalLearner for GaussianNb {
     fn loss(&self, m: &NbModel, data: &Dataset, i: u32) -> f64 {
         let s = self.score(m, data.row(i)) as f32;
         loss::misclassification(s, data.label(i))
+    }
+
+    fn evaluate_rows(
+        &self,
+        m: &NbModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0f64;
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            s += loss::misclassification(self.score(m, row) as f32, yi);
+        }
+        s / y.len() as f64
     }
 
     fn model_bytes(&self, _m: &NbModel) -> usize {
@@ -265,6 +296,23 @@ mod tests {
             assert!((m.pos.sum[j] - before.pos.sum[j]).abs() < 1e-9);
             assert!((m.neg.sumsq[j] - before.neg.sumsq[j]).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn contiguous_fast_path_is_bit_identical() {
+        let data = SyntheticCovertype::new(240, 65).generate();
+        let idx: Vec<u32> = (0..200).collect();
+        let block = data.subset(&idx);
+        let l = GaussianNb::new(54);
+        let mut a = l.init();
+        l.update(&mut a, &data, &idx);
+        let mut b = l.init();
+        l.update_rows(&mut b, &block.x, &block.y, &data, &idx);
+        assert_eq!(a, b);
+        let held: Vec<u32> = (200..240).collect();
+        let hb = data.subset(&held);
+        let fast = l.evaluate_rows(&a, &hb.x, &hb.y, &data, &held);
+        assert_eq!(l.evaluate(&a, &data, &held).to_bits(), fast.to_bits());
     }
 
     #[test]

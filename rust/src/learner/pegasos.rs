@@ -134,6 +134,23 @@ impl IncrementalLearner for Pegasos {
         }
     }
 
+    /// Contiguous fast path: the same per-point `step` sequence, swept
+    /// over a row-major slice instead of gathered rows — bit-identical,
+    /// prefetcher-friendly.
+    fn update_rows(
+        &self,
+        m: &mut PegasosModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) {
+        debug_assert_eq!(x.len(), y.len() * self.d);
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            self.step(m, row, yi);
+        }
+    }
+
     fn update_logged(&self, m: &mut PegasosModel, data: &Dataset, idx: &[u32]) -> PegasosModel {
         let snap = m.clone();
         self.update(m, data, idx);
@@ -146,6 +163,24 @@ impl IncrementalLearner for Pegasos {
 
     fn loss(&self, m: &PegasosModel, data: &Dataset, i: u32) -> f64 {
         loss::misclassification(m.score(data.row(i)), data.label(i))
+    }
+
+    fn evaluate_rows(
+        &self,
+        m: &PegasosModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0f64;
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            s += loss::misclassification(m.score(row), yi);
+        }
+        s / y.len() as f64
     }
 
     fn model_bytes(&self, m: &PegasosModel) -> usize {
@@ -246,6 +281,31 @@ mod tests {
         assert_eq!(before.t, m.t);
         assert_eq!(before.scale, m.scale);
         assert_eq!(before.v, m.v);
+    }
+
+    #[test]
+    fn contiguous_fast_path_is_bit_identical() {
+        // update_rows/evaluate_rows over a materialized row block must
+        // reproduce the indexed path exactly (the folded-layout contract).
+        let data = SyntheticCovertype::new(120, 17).generate();
+        let idx: Vec<u32> = (20..100).collect();
+        let block = data.subset(&idx);
+        let l = Pegasos::new(54, 1e-3);
+        let mut a = l.init();
+        l.update(&mut a, &data, &idx);
+        let mut b = l.init();
+        l.update_rows(&mut b, &block.x, &block.y, &data, &idx);
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.scale, b.scale);
+        assert_eq!(a.t, b.t);
+        let held: Vec<u32> = (100..120).collect();
+        let hb = data.subset(&held);
+        let fast = l.evaluate_rows(&a, &hb.x, &hb.y, &data, &held);
+        assert_eq!(l.evaluate(&a, &data, &held).to_bits(), fast.to_bits());
+        // Empty block: a no-op, not a panic.
+        l.update_rows(&mut b, &[], &[], &data, &[]);
+        assert_eq!(a.t, b.t);
+        assert_eq!(l.evaluate_rows(&a, &[], &[], &data, &[]), 0.0);
     }
 
     #[test]

@@ -104,6 +104,22 @@ impl IncrementalLearner for Perceptron {
         }
     }
 
+    /// Contiguous fast path: identical mistake-driven `step` sequence
+    /// over a row-major slice (folded-layout contract, bit-identical).
+    fn update_rows(
+        &self,
+        m: &mut PerceptronModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) {
+        debug_assert_eq!(x.len(), y.len() * self.d);
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            self.step(m, row, yi);
+        }
+    }
+
     fn update_logged(
         &self,
         m: &mut PerceptronModel,
@@ -130,6 +146,24 @@ impl IncrementalLearner for Perceptron {
 
     fn loss(&self, m: &PerceptronModel, data: &Dataset, i: u32) -> f64 {
         loss::misclassification(linalg::dot(&m.w, data.row(i)) + m.bias, data.label(i))
+    }
+
+    fn evaluate_rows(
+        &self,
+        m: &PerceptronModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0f64;
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            s += loss::misclassification(linalg::dot(&m.w, row) + m.bias, yi);
+        }
+        s / y.len() as f64
     }
 
     fn model_bytes(&self, m: &PerceptronModel) -> usize {
@@ -196,6 +230,25 @@ mod tests {
                 before.w[j]
             );
         }
+    }
+
+    #[test]
+    fn contiguous_fast_path_is_bit_identical() {
+        let data = SyntheticCovertype::new(300, 33).generate();
+        let idx: Vec<u32> = (0..240).collect();
+        let block = data.subset(&idx);
+        let l = Perceptron::new(54);
+        let mut a = l.init();
+        l.update(&mut a, &data, &idx);
+        let mut b = l.init();
+        l.update_rows(&mut b, &block.x, &block.y, &data, &idx);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.bias, b.bias);
+        assert_eq!(a.mistakes, b.mistakes);
+        let held: Vec<u32> = (240..300).collect();
+        let hb = data.subset(&held);
+        let fast = l.evaluate_rows(&a, &hb.x, &hb.y, &data, &held);
+        assert_eq!(l.evaluate(&a, &data, &held).to_bits(), fast.to_bits());
     }
 
     #[test]

@@ -104,6 +104,24 @@ impl IncrementalLearner for OnlineRidge {
         }
     }
 
+    /// Contiguous fast path: the same rank-one accumulation swept over a
+    /// row-major slice (bit-identical; the d² Gram update is the hot
+    /// loop, so the linear read pattern matters most here).
+    fn update_rows(
+        &self,
+        m: &mut RidgeModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) {
+        debug_assert_eq!(x.len(), y.len() * self.d);
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            self.rank_one(m, row, yi, 1.0);
+            m.n += 1;
+        }
+    }
+
     fn update_logged(&self, m: &mut RidgeModel, data: &Dataset, idx: &[u32]) -> RidgeUndo {
         self.update(m, data, idx);
         idx.to_vec()
@@ -138,6 +156,28 @@ impl IncrementalLearner for OnlineRidge {
             s += loss::squared_error(pred as f32, data.label(i));
         }
         s / idx.len() as f64
+    }
+
+    /// Contiguous chunk evaluation: one solve, then score the row-major
+    /// slice — the folded analogue of [`Self::evaluate`], bit-identical.
+    fn evaluate_rows(
+        &self,
+        m: &RidgeModel,
+        x: &[f32],
+        y: &[f32],
+        _data: &Dataset,
+        _ids: &[u32],
+    ) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let w = self.solve(m);
+        let mut s = 0f64;
+        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
+            let pred: f64 = (0..self.d).map(|j| w[j] * row[j] as f64).sum();
+            s += loss::squared_error(pred as f32, yi);
+        }
+        s / y.len() as f64
     }
 
     fn model_bytes(&self, m: &RidgeModel) -> usize {
@@ -240,6 +280,25 @@ mod tests {
         let fast = l.evaluate(&m, &data, &idx);
         let slow: f64 = idx.iter().map(|&i| l.loss(&m, &data, i)).sum::<f64>() / idx.len() as f64;
         assert!((fast - slow).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contiguous_fast_path_is_bit_identical() {
+        let data = SyntheticYearMsd::new(120, 77).generate();
+        let idx: Vec<u32> = (0..90).collect();
+        let block = data.subset(&idx);
+        let l = OnlineRidge::new(90, 0.5);
+        let mut a = l.init();
+        l.update(&mut a, &data, &idx);
+        let mut b = l.init();
+        l.update_rows(&mut b, &block.x, &block.y, &data, &idx);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.a, b.a);
+        assert_eq!(a.b, b.b);
+        let held: Vec<u32> = (90..120).collect();
+        let hb = data.subset(&held);
+        let fast = l.evaluate_rows(&a, &hb.x, &hb.y, &data, &held);
+        assert_eq!(l.evaluate(&a, &data, &held).to_bits(), fast.to_bits());
     }
 
     #[test]

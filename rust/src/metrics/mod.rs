@@ -29,6 +29,16 @@ pub struct OpCounts {
     pub points_evaluated: u64,
     /// Points passed through a random permutation (randomized variants).
     pub points_permuted: u64,
+    /// Node-stream index vectors materialized via a fresh heap allocation
+    /// (`gather_ordered`'s per-node `Vec`, standard CV's training-sequence
+    /// buffer, a fold-contiguous run's first scratch buffer). This is the
+    /// ONE counter that is *layout-dependent by design*: the indexed path
+    /// pays one per training phase, the fold-contiguous layout
+    /// ([`crate::data::folded::FoldedDataset`]) pays zero under fixed
+    /// ordering and O(1) recycled buffers per worker under randomized
+    /// ordering — while every other counter in this struct stays
+    /// bit-identical across layouts (`tests/integration_layout.rs`).
+    pub stream_allocs: u64,
 }
 
 impl OpCounts {
@@ -42,6 +52,7 @@ impl OpCounts {
         self.evals += other.evals;
         self.points_evaluated += other.points_evaluated;
         self.points_permuted += other.points_permuted;
+        self.stream_allocs += other.stream_allocs;
     }
 }
 
@@ -103,11 +114,18 @@ mod tests {
     #[test]
     fn opcounts_merge_adds() {
         let mut a = OpCounts { update_calls: 1, points_updated: 10, ..Default::default() };
-        let b = OpCounts { update_calls: 2, points_updated: 20, evals: 3, ..Default::default() };
+        let b = OpCounts {
+            update_calls: 2,
+            points_updated: 20,
+            evals: 3,
+            stream_allocs: 4,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.update_calls, 3);
         assert_eq!(a.points_updated, 30);
         assert_eq!(a.evals, 3);
+        assert_eq!(a.stream_allocs, 4);
     }
 
     #[test]

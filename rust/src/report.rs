@@ -141,6 +141,7 @@ impl ToJson for crate::metrics::OpCounts {
             ("evals", Json::num(self.evals as f64)),
             ("points_evaluated", Json::num(self.points_evaluated as f64)),
             ("points_permuted", Json::num(self.points_permuted as f64)),
+            ("stream_allocs", Json::num(self.stream_allocs as f64)),
         ])
     }
 }

@@ -202,6 +202,7 @@ fn heterogeneous_batch_bit_identical_to_generic_standalone() {
                 folds: if i % 2 == 0 { &folds_a } else { &folds_b },
                 seed: 40 + i as u64,
                 strategy,
+                folded: None,
             })
             .collect();
         let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads);
@@ -245,6 +246,7 @@ fn heterogeneous_batch_is_run_twice_deterministic() {
             folds: &folds,
             seed: i as u64,
             strategy: Strategy::Copy,
+            folded: None,
         })
         .collect();
     let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 0, 6);

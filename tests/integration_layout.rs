@@ -1,0 +1,274 @@
+//! Fold-contiguous layout equivalence battery (the acceptance criterion
+//! of the physical-layout optimization): for EVERY pure-Rust learner in
+//! the crate, running on the [`FoldedDataset`] layout must reproduce the
+//! classic indexed path **bit-identically** — same estimate, same
+//! per-fold scores in *original* fold numbering, same semantic work
+//! counters — across engines {StandardCv, TreeCv, TreeCvExecutor},
+//! strategies {Copy, SaveRevert}, orderings {Fixed, Randomized} and
+//! worker counts {1, 3, 8}, including remainder-fold (`n % k ≠ 0`) and
+//! LOOCV shapes.
+//!
+//! `stream_allocs` is the one layout-dependent counter (that is its
+//! point): fixed-order folded runs must report **zero** node-stream
+//! allocations, which is the "no index vector at all" claim made
+//! observable.
+
+use treecv::cv::executor::TreeCvExecutor;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::{CvEngine, CvResult, Strategy};
+use treecv::data::folded::FoldedDataset;
+use treecv::data::synth::{
+    SyntheticBlobs, SyntheticCovertype, SyntheticMixture1d, SyntheticYearMsd,
+};
+use treecv::data::Dataset;
+use treecv::learner::erased::{Erased, ErasedLearner};
+use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::kmeans::OnlineKMeans;
+use treecv::learner::knn::KnnClassifier;
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::multiset::MultisetLearner;
+use treecv::learner::naive_bayes::GaussianNb;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::perceptron::Perceptron;
+use treecv::learner::ridge::OnlineRidge;
+use treecv::learner::IncrementalLearner;
+
+const WORKER_COUNTS: [usize; 3] = [1, 3, 8];
+
+/// Bitwise equality of results and of every *semantic* counter.
+/// `stream_allocs` is deliberately excluded — it is the layout-dependent
+/// metric the optimization exists to change.
+fn assert_bit_identical(indexed: &CvResult, folded: &CvResult, ctx: &str) {
+    assert_eq!(indexed.per_fold.len(), folded.per_fold.len(), "{ctx}: fold count");
+    for (i, (a, b)) in indexed.per_fold.iter().zip(&folded.per_fold).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: per_fold[{i}] {a} vs {b}");
+    }
+    assert_eq!(indexed.estimate.to_bits(), folded.estimate.to_bits(), "{ctx}: estimate");
+    let (a, b) = (&indexed.ops, &folded.ops);
+    assert_eq!(a.update_calls, b.update_calls, "{ctx}: update_calls");
+    assert_eq!(a.points_updated, b.points_updated, "{ctx}: points_updated");
+    assert_eq!(a.model_copies, b.model_copies, "{ctx}: model_copies");
+    assert_eq!(a.bytes_copied, b.bytes_copied, "{ctx}: bytes_copied");
+    assert_eq!(a.model_restores, b.model_restores, "{ctx}: model_restores");
+    assert_eq!(a.evals, b.evals, "{ctx}: evals");
+    assert_eq!(a.points_evaluated, b.points_evaluated, "{ctx}: points_evaluated");
+    assert_eq!(a.points_permuted, b.points_permuted, "{ctx}: points_permuted");
+}
+
+/// The battery core: every engine × strategy × ordering × worker count,
+/// indexed vs folded, on one `(learner, data, k)` cell.
+fn check_learner<L>(name: &str, learner: &L, data: &Dataset, k: usize)
+where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    let folds = Folds::new(data.n, k, 0xF01D + k as u64);
+    let folded = FoldedDataset::build(data, &folds);
+    for ordering in [Ordering::Fixed, Ordering::Randomized] {
+        // Standard CV (no strategy axis: it never rewinds a model).
+        let engine = StandardCv::new(ordering, 7);
+        let a = engine.run(learner, data, &folds);
+        let b = engine.run_folded(learner, data, &folded);
+        assert_bit_identical(&a, &b, &format!("{name} standard {ordering:?}"));
+        if ordering == Ordering::Fixed {
+            assert_eq!(b.ops.stream_allocs, 0, "{name} standard: folded fixed allocated");
+        }
+        for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+            let engine = TreeCv::new(strategy, ordering, 5);
+            let a = engine.run(learner, data, &folds);
+            let b = engine.run_folded(learner, data, &folded);
+            let ctx = format!("{name} treecv {strategy:?} {ordering:?}");
+            assert_bit_identical(&a, &b, &ctx);
+            if ordering == Ordering::Fixed {
+                assert_eq!(b.ops.stream_allocs, 0, "{ctx}: folded fixed allocated");
+            }
+            for threads in WORKER_COUNTS {
+                let exe = TreeCvExecutor::new(strategy, ordering, 5, threads);
+                let ai = exe.run(learner, data, &folds);
+                let bi = exe.run_folded(learner, data, &folded);
+                let ctx = format!("{name} executor {strategy:?} {ordering:?} t={threads}");
+                assert_bit_identical(&ai, &bi, &ctx);
+                if ordering == Ordering::Fixed {
+                    assert_eq!(bi.ops.stream_allocs, 0, "{ctx}: folded fixed allocated");
+                }
+            }
+        }
+    }
+}
+
+fn covertype(n: usize) -> Dataset {
+    SyntheticCovertype::new(n, 601).generate()
+}
+
+#[test]
+fn pegasos_folded_is_bit_identical() {
+    check_learner("pegasos", &Pegasos::new(54, 1e-3), &covertype(180), 7);
+}
+
+#[test]
+fn perceptron_folded_is_bit_identical() {
+    check_learner("perceptron", &Perceptron::new(54), &covertype(180), 7);
+}
+
+#[test]
+fn knn_folded_is_bit_identical() {
+    // Index-dependent model (the training set IS indices): exercises the
+    // original-ids fallback path.
+    check_learner("knn", &KnnClassifier::new(54, 3), &covertype(150), 6);
+}
+
+#[test]
+fn naive_bayes_folded_is_bit_identical() {
+    check_learner("gaussian-nb", &GaussianNb::new(54), &covertype(180), 7);
+}
+
+#[test]
+fn multiset_folded_is_bit_identical() {
+    // The structural oracle: its loss hashes the training *indices*, so
+    // any engine that leaked folded positions into a learner would fail
+    // loudly here.
+    let data = SyntheticMixture1d::new(160, 602).generate();
+    check_learner("multiset", &MultisetLearner::new(1), &data, 7);
+}
+
+#[test]
+fn histdensity_folded_is_bit_identical() {
+    let data = SyntheticMixture1d::new(200, 603).generate();
+    check_learner("hist-density", &HistogramDensity::new(-8.0, 8.0, 32), &data, 9);
+}
+
+#[test]
+fn kmeans_folded_is_bit_identical() {
+    let data = SyntheticBlobs::new(180, 8, 5, 604).generate();
+    check_learner("online-kmeans", &OnlineKMeans::new(8, 5), &data, 7);
+}
+
+#[test]
+fn lsqsgd_folded_is_bit_identical() {
+    let data = SyntheticYearMsd::new(180, 605).generate();
+    check_learner("lsqsgd", &LsqSgd::new(90, 0.05), &data, 7);
+}
+
+#[test]
+fn ridge_folded_is_bit_identical() {
+    // Ridge overrides both `evaluate` (lazy solve) and the contiguous
+    // fast paths; all four variants must agree bitwise.
+    let data = SyntheticYearMsd::new(150, 606).generate();
+    check_learner("online-ridge", &OnlineRidge::new(90, 0.7), &data, 6);
+}
+
+#[test]
+fn remainder_folds_are_bit_identical() {
+    // n % k != 0 puts the +1-sized chunks first; boundary arithmetic in
+    // the contiguous ranges must match the logical chunks exactly.
+    let data = SyntheticMixture1d::new(103, 607).generate();
+    check_learner("hist-density", &HistogramDensity::new(-8.0, 8.0, 16), &data, 10);
+    let data = covertype(94);
+    check_learner("pegasos", &Pegasos::new(54, 1e-3), &data, 9);
+}
+
+#[test]
+fn loocv_is_bit_identical() {
+    // k = n: every chunk is a single contiguous row; the tree is as deep
+    // as it gets and the leaf-evaluation fast path fires n times.
+    let data = SyntheticMixture1d::new(48, 608).generate();
+    check_learner("hist-density", &HistogramDensity::new(-8.0, 8.0, 16), &data, 48);
+    let data = SyntheticMixture1d::new(40, 609).generate();
+    check_learner("multiset", &MultisetLearner::new(1), &data, 40);
+}
+
+#[test]
+fn erased_folded_matches_generic_folded() {
+    // The layout must survive type erasure: run_erased_folded ==
+    // run_folded bit for bit (ridge included, for its evaluate override).
+    let data = SyntheticYearMsd::new(150, 610).generate();
+    let ridge = OnlineRidge::new(90, 0.5);
+    let folds = Folds::new(150, 8, 611);
+    let folded = FoldedDataset::build(&data, &folds);
+    let erased: Box<dyn ErasedLearner> = Erased::boxed(ridge.clone());
+    for threads in WORKER_COUNTS {
+        for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+            for ordering in [Ordering::Fixed, Ordering::Randomized] {
+                let exe = TreeCvExecutor::new(strategy, ordering, 13, threads);
+                let want = exe.run_folded(&ridge, &data, &folded);
+                let got = exe.run_erased_folded(&*erased, &data, &folded);
+                let ctx = format!("ridge erased {strategy:?} {ordering:?} t={threads}");
+                assert_bit_identical(&want, &got, &ctx);
+                // stream_allocs is schedule-dependent for multi-worker
+                // randomized runs (one buffer per worker that touches an
+                // update phase), so only the Fixed case has a pinnable
+                // value — zero.
+                if ordering == Ordering::Fixed {
+                    assert_eq!(want.ops.stream_allocs, 0, "{ctx}");
+                    assert_eq!(got.ops.stream_allocs, 0, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn permutation_round_trip_property() {
+    // Forward/inverse permutation bijection + content preservation, over
+    // random shapes including k = 1, k = n and remainder folds.
+    let mut seed = 0x5EEDu64;
+    for _ in 0..25 {
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let n = 2 + (seed >> 33) as usize % 240;
+        let k = 1 + (seed >> 17) as usize % n;
+        let data = SyntheticMixture1d::new(n, seed).generate();
+        let folds = Folds::new(n, k, seed ^ 0xF01D5);
+        let f = FoldedDataset::build(&data, &folds);
+        for p in 0..n as u32 {
+            assert_eq!(f.position_of(f.original_of(p)), p, "n={n} k={k}");
+            let i = f.original_of(p);
+            assert_eq!(f.folded_data().row(p), data.row(i), "n={n} k={k}");
+            assert_eq!(f.folded_data().label(p), data.label(i), "n={n} k={k}");
+        }
+        assert_eq!(f.ids(0, k - 1), folds.gather_range(0, k - 1).as_slice(), "n={n} k={k}");
+        for c in 0..k {
+            assert_eq!(f.ids(c, c), folds.chunk(c), "n={n} k={k} chunk {c}");
+        }
+    }
+}
+
+#[test]
+fn indexed_paths_report_their_allocations() {
+    // The other side of the zero-alloc claim: the indexed engines now
+    // *count* their node-stream materializations — 2 per interior node
+    // for the tree engines, one reused buffer for standard CV.
+    let data = SyntheticMixture1d::new(128, 612).generate();
+    let l = HistogramDensity::new(-8.0, 8.0, 16);
+    let k = 16;
+    let folds = Folds::new(128, k, 613);
+    let tree = TreeCv::default().run(&l, &data, &folds);
+    assert_eq!(tree.ops.stream_allocs, 2 * (k as u64 - 1));
+    let std_res = StandardCv::default().run(&l, &data, &folds);
+    assert_eq!(std_res.ops.stream_allocs, 1);
+    let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4).run(&l, &data, &folds);
+    assert_eq!(exe.ops.stream_allocs, 2 * (k as u64 - 1));
+    // Folded + randomized: streams come from recycled buffers — at most
+    // one fresh allocation per worker, instead of 2(k−1) per run.
+    let folded = FoldedDataset::build(&data, &folds);
+    let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 0, 4)
+        .run_folded(&l, &data, &folded);
+    assert!(
+        exe.ops.stream_allocs <= 4,
+        "folded randomized allocated {} buffers (> workers)",
+        exe.ops.stream_allocs
+    );
+}
+
+#[test]
+fn folded_runs_are_run_twice_deterministic() {
+    let data = covertype(160);
+    let l = Pegasos::new(54, 1e-3);
+    let folds = Folds::new(160, 9, 614);
+    let folded = FoldedDataset::build(&data, &folds);
+    let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 2, 6);
+    let a = exe.run_folded(&l, &data, &folded);
+    let b = exe.run_folded(&l, &data, &folded);
+    assert_bit_identical(&a, &b, "run-twice");
+}
