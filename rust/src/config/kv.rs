@@ -26,6 +26,13 @@ impl Value {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected boolean, got {other:?}"),
+        }
+    }
+
     pub fn as_usize(&self) -> Result<usize> {
         match self {
             Value::Int(i) if *i >= 0 => Ok(*i as usize),
@@ -238,6 +245,10 @@ mod tests {
         assert!(Value::Str("x".into()).as_f64().is_err());
         assert!(Value::Int(3).as_f64().is_ok());
         assert!(Value::Int(3).as_str().is_err());
+        assert!(Value::Bool(true).as_bool().unwrap());
+        assert!(!Value::Bool(false).as_bool().unwrap());
+        assert!(Value::Int(1).as_bool().is_err());
+        assert!(Value::Str("true".into()).as_bool().is_err());
     }
 
     #[test]

@@ -388,6 +388,16 @@ pub struct ExperimentConfig {
     pub learners: Option<SelectList>,
     /// Worker-pool size for pooled engines; `0` = machine parallelism.
     pub threads: usize,
+    /// Race the sweep (`repro sweep --race`): eliminate losing grid
+    /// values mid-flight with a sequential sign test instead of running
+    /// every cell to completion. `false` is the exhaustive sweep.
+    pub race: bool,
+    /// Decision rounds of a raced sweep (boundaries at
+    /// `⌈repetitions·(j+1)/rounds⌉`).
+    pub race_rounds: usize,
+    /// Significance level of the race's per-round sign test; `0.0` never
+    /// eliminates (the exhaustive sweep, bit for bit).
+    pub race_alpha: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -408,6 +418,9 @@ impl Default for ExperimentConfig {
             sweep: None,
             learners: None,
             threads: 0,
+            race: false,
+            race_rounds: 4,
+            race_alpha: 0.05,
         }
     }
 }
@@ -440,6 +453,9 @@ impl ExperimentConfig {
                 "lambda" => cfg.lambda = Some(value.as_f64()?),
                 "alpha" => cfg.alpha = value.as_f64()?,
                 "threads" => cfg.threads = value.as_usize()?,
+                "race" => cfg.race = value.as_bool()?,
+                "race_rounds" => cfg.race_rounds = value.as_usize()?,
+                "race_alpha" => cfg.race_alpha = value.as_f64()?,
                 "sweep" => sweep_str = Some(SweepGrid::parse(value.as_str()?)?),
                 "sweep_param" => sweep_param = Some(value.as_str()?.to_string()),
                 "sweep_values" => sweep_values = Some(value.as_f64_array()?),
@@ -482,6 +498,17 @@ impl ExperimentConfig {
         s.push_str(&format!("alpha = {}\n", self.alpha));
         if self.threads != 0 {
             s.push_str(&format!("threads = {}\n", self.threads));
+        }
+        // Racing knobs are emitted only off their defaults, so existing
+        // dumped configs are byte-stable.
+        if self.race {
+            s.push_str("race = true\n");
+        }
+        if self.race_rounds != 4 {
+            s.push_str(&format!("race_rounds = {}\n", self.race_rounds));
+        }
+        if self.race_alpha != 0.05 {
+            s.push_str(&format!("race_alpha = {}\n", self.race_alpha));
         }
         if let Some(g) = &self.sweep {
             s.push_str(&format!("sweep = \"{}\"\n", g.to_grid_string()));
@@ -586,6 +613,35 @@ mod tests {
         .is_err());
         assert!(ExperimentConfig::parse("sweep_param = \"lambda\"\n").is_err());
         assert!(ExperimentConfig::parse("sweep_values = [0.1]\n").is_err());
+    }
+
+    #[test]
+    fn race_keys_parse_default_and_roundtrip() {
+        // Defaults: racing off, 4 rounds, alpha 0.05.
+        let cfg = ExperimentConfig::parse("task = \"pegasos\"\n").unwrap();
+        assert!(!cfg.race);
+        assert_eq!(cfg.race_rounds, 4);
+        assert_eq!(cfg.race_alpha, 0.05);
+        // Defaults are not emitted, so pre-racing dumped configs are
+        // byte-stable.
+        assert!(!cfg.to_text().contains("race"));
+
+        let cfg = ExperimentConfig::parse(
+            "race = true\nrace_rounds = 6\nrace_alpha = 0.01\nsweep = \"lambda=0.1,0.01\"\n",
+        )
+        .unwrap();
+        assert!(cfg.race);
+        assert_eq!(cfg.race_rounds, 6);
+        assert_eq!(cfg.race_alpha, 0.01);
+        let back = ExperimentConfig::parse(&cfg.to_text()).unwrap();
+        assert!(back.race);
+        assert_eq!(back.race_rounds, 6);
+        assert_eq!(back.race_alpha, 0.01);
+        assert_eq!(back.sweep, cfg.sweep);
+        // Type errors are hard errors.
+        assert!(ExperimentConfig::parse("race = 1\n").is_err());
+        assert!(ExperimentConfig::parse("race_rounds = \"many\"\n").is_err());
+        assert!(ExperimentConfig::parse("race_alpha = \"low\"\n").is_err());
     }
 
     #[test]

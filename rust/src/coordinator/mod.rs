@@ -18,14 +18,19 @@
 //! (one task, a hyperparameter grid) and [`run_select`] (a heterogeneous
 //! learner list ranked on a common dataset — model selection in the sense
 //! of Mohr & van Rijn's learning-curve selection, scheduled the TreeCV
-//! way).
+//! way). [`run_race_sweep`] is the sweep's racing mode (`repro sweep
+//! --race`): the same batch dispatched through the executor's
+//! cancellation layer with Krueger-style sequential elimination
+//! ([`crate::cv::race`]), reported as a [`RaceReport`] with the full
+//! elimination trace and work-saved counters.
 
 pub mod paper;
 pub mod registry;
 
-use crate::config::{Engine, ExperimentConfig, StrategyCfg, Task};
+use crate::config::{Engine, ExperimentConfig, StrategyCfg, SweepGrid, Task};
 use crate::cv::folds::{Folds, Ordering};
 use crate::cv::mergecv::MergeCv;
+use crate::cv::race::{self, RaceSpec};
 use crate::cv::stats::{run_repetitions, EngineKind, RepetitionResult, RepetitionSpec};
 use crate::cv::sweep::{self, SweepOutcome, SweepSpec};
 use crate::cv::Strategy;
@@ -247,13 +252,14 @@ pub struct SweepReport {
     pub points: Vec<SweepPoint>,
 }
 
-/// Run the tuning workload described by `cfg`: every (grid value ×
-/// repetition) TreeCV run through ONE pooled executor
-/// ([`crate::cv::sweep::run_sweep_erased`]), returning rows ranked by
-/// mean loss. Learners are built per grid value through the task's
-/// registry constructor; fold assignments are shared across grid values,
-/// so the hyperparameter is the only difference between rows.
-pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
+/// The sweep subcommand's shared front half — validate the grid, build
+/// the dataset, resolve the fold count and construct one learner per
+/// grid value — so the exhaustive ([`run_sweep`]) and racing
+/// ([`run_race_sweep`]) modes evaluate EXACTLY the same batch and differ
+/// only in scheduling.
+fn sweep_inputs(
+    cfg: &ExperimentConfig,
+) -> Result<(SweepGrid, Dataset, usize, Vec<Box<dyn ErasedLearner>>)> {
     let Some(grid) = &cfg.sweep else {
         bail!("sweep needs a grid — pass --sweep name=v1,v2,... (e.g. lambda=0.1,0.01,0.001)");
     };
@@ -279,6 +285,17 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
     let k = resolve_single_k(cfg, &data)?;
     let learners: Vec<Box<dyn ErasedLearner>> =
         value_cfgs.iter().map(|c| (entry.build)(c, &data)).collect::<Result<_>>()?;
+    Ok((grid.clone(), data, k, learners))
+}
+
+/// Run the tuning workload described by `cfg`: every (grid value ×
+/// repetition) TreeCV run through ONE pooled executor
+/// ([`crate::cv::sweep::run_sweep_erased`]), returning rows ranked by
+/// mean loss. Learners are built per grid value through the task's
+/// registry constructor; fold assignments are shared across grid values,
+/// so the hyperparameter is the only difference between rows.
+pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
+    let (grid, data, k, learners) = sweep_inputs(cfg)?;
     let refs: Vec<&dyn ErasedLearner> = learners.iter().map(|b| &**b).collect();
     let spec = batch_spec(cfg, k);
     let outcome: SweepOutcome = sweep::run_sweep_erased(&refs, &data, &spec)?;
@@ -305,6 +322,160 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> Result<SweepReport> {
         pool_spawns: outcome.pool_spawns,
         total_wall_secs: outcome.total_wall.as_secs_f64(),
         points,
+    })
+}
+
+/// One ranked row of a racing sweep: a (hyperparameter value, strategy)
+/// cell plus its racing status.
+#[derive(Debug, Clone)]
+pub struct RacePoint {
+    /// Swept parameter name (`lambda` / `alpha`).
+    pub param: String,
+    pub value: f64,
+    pub strategy: StrategyCfg,
+    /// Mean CV estimate over the counted repetitions.
+    pub mean: f64,
+    /// Sample std over the counted repetitions.
+    pub std: f64,
+    /// Repetitions the aggregate counts: the elimination boundary for an
+    /// eliminated value, the full repetition count for a survivor.
+    pub reps_used: usize,
+    /// The round (0-based) that eliminated this value, if any.
+    pub eliminated_round: Option<usize>,
+    /// Counters from the cell's last counted repetition.
+    pub ops: OpCounts,
+}
+
+/// One row of the race's elimination trace, in (round, cell) order —
+/// deterministic given the seed.
+#[derive(Debug, Clone)]
+pub struct RaceTracePoint {
+    pub round: usize,
+    /// Repetitions counted at this round's boundary.
+    pub reps_used: usize,
+    pub param: String,
+    pub value: f64,
+    pub strategy: StrategyCfg,
+    /// Mean estimate over the counted repetitions.
+    pub mean: f64,
+    /// Incumbent wins in the paired sign test (0 on the incumbent row).
+    pub wins: usize,
+    /// Non-tied repetitions in the test (0 on the incumbent row).
+    pub n_eff: usize,
+    pub p_value: f64,
+    pub eliminated: bool,
+}
+
+/// Result of `repro sweep --race`: survivors ranked first, eliminated
+/// values after (latest-surviving first), plus the full
+/// [`EliminationTrace`](crate::cv::race::EliminationTrace) and the
+/// work-saved accounting.
+#[derive(Debug, Clone)]
+pub struct RaceReport {
+    pub task: Task,
+    pub n: usize,
+    pub k: usize,
+    pub repetitions: usize,
+    /// Decision rounds the race was configured with.
+    pub rounds: usize,
+    /// Sign-test significance level.
+    pub alpha: f64,
+    /// Worker-pool size the race actually used.
+    pub threads: usize,
+    /// Executor pools spawned by the whole race — 1 for a multi-worker
+    /// pool, 0 for `--threads 1` (inline), never one per run.
+    pub pool_spawns: u64,
+    /// Wall-clock of the whole raced batch.
+    pub total_wall_secs: f64,
+    /// Work-saved counters: runs the grid scheduled…
+    pub runs_scheduled: usize,
+    /// …runs that ran to completion…
+    pub runs_completed: usize,
+    /// …and runs cancelled mid-batch by eliminations (scheduling-
+    /// dependent, unlike the trace: a fast pool may finish a loser's
+    /// runs before its cancellation lands).
+    pub runs_cancelled: usize,
+    /// Tree tasks dropped by those cancellations.
+    pub tree_tasks_cancelled: u64,
+    /// Ranked rows: survivors by mean ascending, then eliminated values
+    /// by elimination round descending (lasted longer ranks higher).
+    pub points: Vec<RacePoint>,
+    /// The per-round decision record.
+    pub trace: Vec<RaceTracePoint>,
+}
+
+/// Run the tuning workload as a race (`repro sweep --race`): the same
+/// batch as [`run_sweep`] — same grid, dataset, folds, seeds — but
+/// scheduled by [`crate::cv::race::run_race_erased`], which eliminates
+/// losing values at round boundaries and cancels their outstanding runs.
+/// `alpha = 0` reproduces the exhaustive table bit for bit.
+pub fn run_race_sweep(cfg: &ExperimentConfig) -> Result<RaceReport> {
+    let (grid, data, k, learners) = sweep_inputs(cfg)?;
+    let refs: Vec<&dyn ErasedLearner> = learners.iter().map(|b| &**b).collect();
+    let spec =
+        RaceSpec { sweep: batch_spec(cfg, k), rounds: cfg.race_rounds, alpha: cfg.race_alpha };
+    let outcome = race::run_race_erased(&refs, &data, &spec)?;
+
+    let mut points: Vec<RacePoint> = outcome
+        .cells
+        .iter()
+        .map(|c| RacePoint {
+            param: grid.param.clone(),
+            value: grid.values[c.config],
+            strategy: StrategyCfg::from(c.strategy),
+            mean: c.mean,
+            std: c.std,
+            reps_used: c.reps_used,
+            eliminated_round: c.eliminated_round,
+            ops: c.ops.clone(),
+        })
+        .collect();
+    // Survivors first (ranked exactly as the exhaustive sweep ranks, so
+    // alpha = 0 reproduces its table order), then eliminated values by
+    // how long they lasted; means across different rep counts are not
+    // comparable, so elimination round outranks mean there.
+    points.sort_by(|a, b| match (a.eliminated_round, b.eliminated_round) {
+        (None, None) => a.mean.total_cmp(&b.mean).then(a.value.total_cmp(&b.value)),
+        (None, Some(_)) => std::cmp::Ordering::Less,
+        (Some(_), None) => std::cmp::Ordering::Greater,
+        (Some(ra), Some(rb)) => rb
+            .cmp(&ra)
+            .then(a.mean.total_cmp(&b.mean))
+            .then(a.value.total_cmp(&b.value)),
+    });
+    let trace = outcome
+        .trace
+        .rows
+        .iter()
+        .map(|r| RaceTracePoint {
+            round: r.round,
+            reps_used: r.reps_used,
+            param: grid.param.clone(),
+            value: grid.values[r.config],
+            strategy: StrategyCfg::from(r.strategy),
+            mean: r.mean,
+            wins: r.wins,
+            n_eff: r.n_eff,
+            p_value: r.p_value,
+            eliminated: r.eliminated,
+        })
+        .collect();
+    Ok(RaceReport {
+        task: cfg.task,
+        n: data.n,
+        k,
+        repetitions: cfg.repetitions,
+        rounds: cfg.race_rounds,
+        alpha: cfg.race_alpha,
+        threads: outcome.threads,
+        pool_spawns: outcome.pool_spawns,
+        total_wall_secs: outcome.total_wall.as_secs_f64(),
+        runs_scheduled: outcome.runs_scheduled,
+        runs_completed: outcome.runs_completed,
+        runs_cancelled: outcome.runs_cancelled,
+        tree_tasks_cancelled: outcome.tasks_cancelled,
+        points,
+        trace,
     })
 }
 
@@ -461,6 +632,73 @@ pub fn format_sweep_table(report: &SweepReport) -> String {
     s
 }
 
+/// Pretty-print a race as its ranked table plus the elimination trace
+/// (the `sweep --race` CLI's default output; the schema is documented in
+/// EXPERIMENTS.md).
+pub fn format_race_table(report: &RaceReport) -> String {
+    let mut s = format!(
+        "race task={} n={} k={} reps={} rounds={} alpha={} threads={} pool_spawns={} \
+         total_wall={:.4}s\n",
+        report.task.name(),
+        report.n,
+        report.k,
+        report.repetitions,
+        report.rounds,
+        report.alpha,
+        report.threads,
+        report.pool_spawns,
+        report.total_wall_secs,
+    );
+    s.push_str(&format!(
+        "work_saved: runs_scheduled={} runs_completed={} runs_cancelled={} \
+         tree_tasks_cancelled={}\n",
+        report.runs_scheduled,
+        report.runs_completed,
+        report.runs_cancelled,
+        report.tree_tasks_cancelled,
+    ));
+    s.push_str(&format!(
+        "{:>4} {:>10} {:>14} {:>12} {:>12} {:>12} {:>5} {:>10}\n",
+        "rank", "param", "value", "strategy", "mean", "std", "reps", "status"
+    ));
+    for (i, p) in report.points.iter().enumerate() {
+        let status = match p.eliminated_round {
+            Some(r) => format!("out@r{r}"),
+            None => "survived".to_string(),
+        };
+        s.push_str(&format!(
+            "{:>4} {:>10} {:>14e} {:>12} {:>12.6} {:>12.6} {:>5} {:>10}\n",
+            i + 1,
+            p.param,
+            p.value,
+            p.strategy.name(),
+            p.mean,
+            p.std,
+            p.reps_used,
+            status,
+        ));
+    }
+    s.push_str("trace:\n");
+    s.push_str(&format!(
+        "{:>5} {:>5} {:>14} {:>12} {:>5} {:>6} {:>10} {:>10}\n",
+        "round", "reps", "value", "mean", "wins", "n_eff", "p", "decision"
+    ));
+    for t in &report.trace {
+        s.push_str(&format!(
+            "{:>5} {:>5} {:>14e} {:>12.6} {:>5} {:>6} {:>10.6} {:>10}\n",
+            t.round,
+            t.reps_used,
+            t.value,
+            t.mean,
+            t.wins,
+            t.n_eff,
+            t.p_value,
+            if t.eliminated { "eliminate" } else { "keep" },
+        ));
+    }
+    s
+}
+
 /// Pretty-print a model-selection run as its ranked table (the `select`
 /// CLI's default output; the schema is documented in EXPERIMENTS.md).
 pub fn format_select_table(report: &SelectReport) -> String {
@@ -537,6 +775,9 @@ mod tests {
             sweep: None,
             learners: None,
             threads: 0,
+            race: false,
+            race_rounds: 4,
+            race_alpha: 0.05,
         }
     }
 
@@ -689,6 +930,55 @@ mod tests {
             let report = run_sweep(&sweep_cfg(task, grid)).unwrap();
             assert_eq!(report.points.len(), 2, "{task:?}");
             assert!(report.points[0].mean.is_finite(), "{task:?}");
+        }
+    }
+
+    #[test]
+    fn race_alpha_zero_reproduces_exhaustive_sweep_report() {
+        let mut cfg = sweep_cfg(Task::Pegasos, "lambda=1e-3,1e-4,1e-5");
+        cfg.repetitions = 4;
+        cfg.race_alpha = 0.0;
+        cfg.race_rounds = 2;
+        let race = run_race_sweep(&cfg).unwrap();
+        let sweep = run_sweep(&cfg).unwrap();
+        // Nothing eliminated, nothing cancelled, and the ranked rows are
+        // the exhaustive rows bit for bit, in the same order.
+        assert_eq!(race.runs_cancelled, 0);
+        assert_eq!(race.runs_completed, race.runs_scheduled);
+        assert_eq!(race.points.len(), sweep.points.len());
+        for (rp, sp) in race.points.iter().zip(&sweep.points) {
+            assert_eq!(rp.eliminated_round, None);
+            assert_eq!(rp.reps_used, cfg.repetitions);
+            assert_eq!(rp.value, sp.value);
+            assert_eq!(rp.mean.to_bits(), sp.mean.to_bits());
+            assert_eq!(rp.std.to_bits(), sp.std.to_bits());
+        }
+        // One trace row per (round, value).
+        assert_eq!(race.trace.len(), 2 * 3);
+        let table = format_race_table(&race);
+        assert!(table.contains("work_saved:"));
+        assert!(table.contains("survived"));
+        assert!(table.contains("trace:"));
+    }
+
+    #[test]
+    fn race_report_ranks_survivors_before_eliminated() {
+        let mut cfg = sweep_cfg(Task::Ridge, "lambda=0.1,1000000.0");
+        cfg.repetitions = 8;
+        cfg.threads = 1;
+        cfg.race_rounds = 4;
+        cfg.race_alpha = 0.5;
+        let report = run_race_sweep(&cfg).unwrap();
+        assert_eq!(report.points.len(), 2);
+        let mut seen_eliminated = false;
+        for p in &report.points {
+            if p.eliminated_round.is_some() {
+                seen_eliminated = true;
+                assert!(p.reps_used < cfg.repetitions);
+            } else {
+                assert!(!seen_eliminated, "survivor ranked below an eliminated value");
+                assert_eq!(p.reps_used, cfg.repetitions);
+            }
         }
     }
 

@@ -11,7 +11,10 @@
 //! runtime or its artifacts are absent), `repro sweep` consults
 //! [`LearnerEntry::sweep_param`], and `repro select` builds heterogeneous
 //! learner sets from these constructors to rank model families against
-//! each other through one executor pool.
+//! each other through one executor pool. The constructors feed both
+//! sweep schedulers identically — the exhaustive scheduler and the
+//! racing one (`repro sweep --race`) build the same learner-per-grid-
+//! value set here; only the dispatch downstream differs.
 //!
 //! A registry test pins the Task ↔ entry bijection, so adding a `Task`
 //! variant without a registry row (or vice versa) fails fast.

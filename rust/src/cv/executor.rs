@@ -97,6 +97,36 @@
 //! unparks all. Compared to the earlier yield-then-100µs-sleep backoff,
 //! idle workers burn zero CPU during long serial phases (e.g. a root
 //! node's O(n) updates) and wake in microseconds when work appears.
+//!
+//! **Cancellation, priorities and incremental delivery.** Every spec
+//! carries a [`RunCtrl`] — a shared [`CancelToken`] plus an integer
+//! priority. The cancellation contract:
+//!
+//! * Workers check the token when they pop one of the run's tasks and
+//!   again at fork points (after the two update phases, before the
+//!   children are queued). A cancelled task's whole subtree is dropped:
+//!   its leaves are accounted as *dropped* (so batch termination still
+//!   fires), and its model buffer returns to the shared snapshot pool
+//!   under the same retention cap as a completed subtree — the pool stays
+//!   warm and bounded, and the executor handle stays reusable for
+//!   subsequent batches.
+//! * Root tasks start in a shared *injector* rather than the deques;
+//!   an idle worker whose sweep (own deque, then steals) comes up dry
+//!   pops the injector entry whose run has the highest current priority
+//!   ([`RunCtrl::priority`]; FIFO among equals). Priorities order who
+//!   *starts* next — they never affect a run's result, which stays a pure
+//!   function of `(learner, data, folds, strategy, ordering, seed)`.
+//! * [`TreeCvExecutor::run_many_outcomes`] reports each run as a
+//!   [`RunOutcome`]: `Completed` carries the usual [`CvResult`],
+//!   `Cancelled` is a distinct status with drop accounting (never a bogus
+//!   zero-filled result), `Failed` captures a panicking run (the panic is
+//!   caught per task; sibling runs keep going unless the caller cancels
+//!   them). An optional `on_result` callback delivers each run's outcome
+//!   the moment its last leaf lands — racing schedulers
+//!   ([`super::race`]) eliminate losers mid-batch from that callback.
+//!   [`TreeCvExecutor::run_many`] is the strict facade: it cancels every
+//!   sibling on the first failure and panics with the original message,
+//!   preserving the historical all-or-nothing contract.
 
 use super::folds::{node_tags, Folds, Ordering};
 use super::treecv::{run_subtree, NodeCtx, StreamScratch};
@@ -107,7 +137,8 @@ use crate::learner::erased::{DynLearner, ErasedLearner};
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as MemOrdering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering as MemOrdering};
 use std::sync::{Arc, Mutex};
 use std::thread::Thread;
 use std::time::Duration;
@@ -130,6 +161,119 @@ pub fn snapshot_cutoff(threads: usize) -> usize {
     // ⌈log₂ threads⌉ for threads ≥ 2.
     let ceil_log2 = (usize::BITS - (threads - 1).leading_zeros()) as usize;
     ceil_log2 + SNAPSHOT_SLACK
+}
+
+/// Shared cancellation flag for one run (cheaply clonable; all clones
+/// observe the same flag). Cancelling is a request, not an interrupt:
+/// in-flight node updates finish, but no further task of the run starts
+/// and no further child is queued. Cancelling a run whose last leaf
+/// already landed is a harmless no-op — the run still reports
+/// [`RunOutcome::Completed`].
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, MemOrdering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(MemOrdering::Acquire)
+    }
+}
+
+/// Per-run scheduling controls: a [`CancelToken`] plus an integer
+/// priority. Clones share state with the original, so a caller holding a
+/// clone can cancel or re-prioritize the run while the batch executes.
+///
+/// The priority is read *live* each time an idle worker picks its next
+/// root task from the injector (higher starts first; FIFO among equals),
+/// so raising a survivor's priority mid-batch moves its queued runs ahead
+/// of lower-priority work. Neither knob ever changes a non-cancelled
+/// run's result — only when it runs and whether it finishes.
+#[derive(Clone, Debug, Default)]
+pub struct RunCtrl {
+    cancel: CancelToken,
+    priority: Arc<AtomicI64>,
+}
+
+impl RunCtrl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A control block with an initial priority (default is 0).
+    pub fn with_priority(priority: i64) -> Self {
+        let ctrl = Self::default();
+        ctrl.set_priority(priority);
+        ctrl
+    }
+
+    /// The shared cancellation token (clone it to hand out).
+    pub fn token(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    /// Request cancellation of the run (idempotent).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    pub fn priority(&self) -> i64 {
+        self.priority.load(MemOrdering::Relaxed)
+    }
+
+    pub fn set_priority(&self, priority: i64) {
+        self.priority.store(priority, MemOrdering::Relaxed);
+    }
+}
+
+/// Terminal status of one batched run
+/// ([`TreeCvExecutor::run_many_outcomes`]).
+#[derive(Debug, Clone)]
+pub enum RunOutcome {
+    /// Every leaf completed; the result is bit-identical to the same spec
+    /// in a batch with no cancellations.
+    Completed(CvResult),
+    /// The run's token was cancelled before its last leaf landed. No
+    /// `CvResult` is fabricated from the partial per-fold buffer — a
+    /// cancelled run has a *status*, not an estimate.
+    Cancelled {
+        /// Leaves that completed before the cancellation took effect.
+        leaves_done: usize,
+        /// Leaves dropped without being evaluated.
+        leaves_dropped: usize,
+        /// Queued tree tasks dropped (at pop or at a fork point).
+        tasks_dropped: usize,
+    },
+    /// A task of this run panicked; the payload message is captured and
+    /// the rest of the run is implicitly cancelled. Sibling runs are NOT
+    /// affected unless the caller cancels them (as
+    /// [`TreeCvExecutor::run_many`] does).
+    Failed { error: String },
+}
+
+impl RunOutcome {
+    /// The completed result, if any.
+    pub fn completed(&self) -> Option<&CvResult> {
+        match self {
+            RunOutcome::Completed(res) => Some(res),
+            _ => None,
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, RunOutcome::Cancelled { .. })
+    }
 }
 
 /// The pooled work-stealing TreeCV engine.
@@ -176,6 +320,10 @@ pub struct RunSpec<'a, L: IncrementalLearner> {
     /// instead of per-node gathered index vectors — bit-identical results
     /// either way. `None` keeps the classic indexed path.
     pub folded: Option<&'a FoldedDataset>,
+    /// Scheduling controls (cancellation + priority). The default is a
+    /// fresh never-cancelled token at priority 0; callers that want to
+    /// steer the run keep a clone.
+    pub ctrl: RunCtrl,
 }
 
 /// [`RunSpec`] over the type-erased learner layer: the element of a
@@ -193,6 +341,9 @@ pub struct ErasedRunSpec<'a> {
     /// Fold-contiguous layout (see [`RunSpec::folded`]); forwarded
     /// through the erased adapter unchanged.
     pub folded: Option<&'a FoldedDataset>,
+    /// Scheduling controls (see [`RunSpec::ctrl`]); forwarded through the
+    /// erased adapter unchanged.
+    pub ctrl: RunCtrl,
 }
 
 /// One unit of executor work: the TreeCV subtree of run `run` rooted at
@@ -226,9 +377,23 @@ struct RunShared<'a, L: IncrementalLearner> {
     k: usize,
     /// Per-fold outputs; distinct indices are written exactly once each.
     per_fold: Mutex<Vec<f64>>,
-    /// Leaves of this run completed so far (done at `k`).
+    /// Scheduling controls (shared with the caller's spec clone).
+    ctrl: RunCtrl,
+    /// Leaves of this run evaluated and recorded so far.
     leaves_done: AtomicUsize,
-    /// Work counters, merged from every worker's run-local tallies.
+    /// Leaves dropped by cancellation (or a task panic) — never evaluated.
+    leaves_dropped: AtomicUsize,
+    /// Queued tree tasks dropped by cancellation.
+    tasks_dropped: AtomicUsize,
+    /// Completed + dropped leaves: the run finishes — exactly once, on
+    /// whichever worker accounts the k-th leaf — when this reaches `k`.
+    leaves_acct: AtomicUsize,
+    /// First captured panic message of this run's tasks, if any.
+    failed: Mutex<Option<String>>,
+    /// The run's terminal status, written by the finishing worker.
+    outcome: Mutex<Option<RunOutcome>>,
+    /// Work counters, merged per task BEFORE the task's leaves are
+    /// accounted — so the finishing worker always reads complete totals.
     ops: Mutex<OpCounts>,
     /// Elapsed time from batch start when the run's last leaf landed.
     wall: Mutex<Duration>,
@@ -240,6 +405,12 @@ struct Shared<'a, L: IncrementalLearner> {
     /// front. A plain mutexed deque keeps the implementation obviously
     /// correct; contention is negligible at subtree granularity.
     deques: Vec<Mutex<VecDeque<Task<L::Model>>>>,
+    /// Root tasks awaiting their first pop, as `(admission seq, task)`.
+    /// An idle worker whose deque sweep comes up dry pops the entry whose
+    /// run has the highest *current* priority (FIFO among equals) — so
+    /// in-flight subtrees drain before new runs start, and priorities
+    /// steer who starts next. Filled once before the workers start.
+    injector: Mutex<Vec<(u64, Task<L::Model>)>>,
     /// Recycled model buffers (`clone_from` targets for fork-node
     /// snapshots), shared by every run in the batch — later runs start
     /// with a warm pool. Retention is capped at [`Shared::pool_cap`] so
@@ -253,7 +424,8 @@ struct Shared<'a, L: IncrementalLearner> {
     runs: Vec<RunShared<'a, L>>,
     /// Total leaf count across all runs.
     leaves_total: usize,
-    /// Leaves completed so far across all runs.
+    /// Leaves accounted (completed or dropped) so far across all runs —
+    /// the batch terminates when this reaches `leaves_total`.
     leaves_done: AtomicUsize,
     /// Set when all leaves are done (or a worker panicked) so idle workers
     /// exit their steal loop.
@@ -294,6 +466,103 @@ fn wake_all(parked: &Mutex<Vec<(usize, Thread)>>) {
 /// already have popped it).
 fn unregister(parked: &Mutex<Vec<(usize, Thread)>>, wid: usize) {
     parked.lock().unwrap().retain(|(w, _)| *w != wid);
+}
+
+/// Incremental-delivery callback: called with `(run index, outcome)` on
+/// the worker thread that accounts a run's last leaf, before the batch
+/// returns. Must not panic.
+pub type OnResult<'cb> = dyn Fn(usize, &RunOutcome) + Sync + 'cb;
+
+/// Return a model buffer to the shared snapshot pool (bounded — beyond
+/// the cap, just drop it). Cancelled subtrees recycle through here too,
+/// so cancellation never grows the pool past its cap.
+fn recycle<L: IncrementalLearner>(shared: &Shared<'_, L>, model: L::Model) {
+    let mut pool = shared.pool.lock().unwrap();
+    if pool.len() < shared.pool_cap {
+        pool.push(model);
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked (non-string payload)".to_string()
+    }
+}
+
+/// Account `leaves` of run `run` as completed or dropped. Whichever
+/// worker's call brings the run's accounted total to `k` finishes the
+/// run: it stamps the wall clock, builds the terminal [`RunOutcome`],
+/// fires the incremental-delivery callback, and publishes the outcome.
+/// Then the batch-wide tally is bumped; the call that completes it flips
+/// `done` and wakes every parked worker.
+fn account<L: IncrementalLearner>(
+    shared: &Shared<'_, L>,
+    run: usize,
+    leaves: usize,
+    dropped: bool,
+    on_result: Option<&OnResult<'_>>,
+) {
+    let rs = &shared.runs[run];
+    if dropped {
+        rs.leaves_dropped.fetch_add(leaves, MemOrdering::AcqRel);
+    } else {
+        rs.leaves_done.fetch_add(leaves, MemOrdering::AcqRel);
+    }
+    if rs.leaves_acct.fetch_add(leaves, MemOrdering::AcqRel) + leaves == rs.k {
+        let outcome = finish_run(rs, shared.timer.elapsed());
+        if let Some(cb) = on_result {
+            cb(run, &outcome);
+        }
+        *rs.outcome.lock().unwrap() = Some(outcome);
+    }
+    let done_before = shared.leaves_done.fetch_add(leaves, MemOrdering::AcqRel);
+    if done_before + leaves == shared.leaves_total {
+        shared.done.store(true, MemOrdering::Release);
+        wake_all(&shared.parked);
+    }
+}
+
+/// Build run `rs`'s terminal status once its last leaf is accounted.
+/// Failure wins over cancellation; a run whose every leaf completed
+/// before its token landed is `Completed` (cancellation came too late to
+/// save any work, and the result is valid).
+fn finish_run<L: IncrementalLearner>(rs: &RunShared<'_, L>, wall: Duration) -> RunOutcome {
+    *rs.wall.lock().unwrap() = wall;
+    if let Some(error) = rs.failed.lock().unwrap().take() {
+        return RunOutcome::Failed { error };
+    }
+    let leaves_dropped = rs.leaves_dropped.load(MemOrdering::Acquire);
+    if leaves_dropped > 0 {
+        return RunOutcome::Cancelled {
+            leaves_done: rs.leaves_done.load(MemOrdering::Acquire),
+            leaves_dropped,
+            tasks_dropped: rs.tasks_dropped.load(MemOrdering::Acquire),
+        };
+    }
+    let per_fold = std::mem::take(&mut *rs.per_fold.lock().unwrap());
+    let ops = std::mem::take(&mut *rs.ops.lock().unwrap());
+    RunOutcome::Completed(CvResult::from_folds(per_fold, ops, wall))
+}
+
+/// A task of run `run` panicked: record the message (first wins), cancel
+/// the rest of the run's tree, and account the task's whole leaf range as
+/// dropped so the batch still terminates.
+fn fail_run<L: IncrementalLearner>(
+    shared: &Shared<'_, L>,
+    run: usize,
+    leaves: usize,
+    payload: Box<dyn std::any::Any + Send>,
+    on_result: Option<&OnResult<'_>>,
+) {
+    let rs = &shared.runs[run];
+    rs.failed.lock().unwrap().get_or_insert(panic_message(&*payload));
+    rs.ctrl.cancel();
+    account(shared, run, leaves, true, on_result);
 }
 
 /// Sets the shared `done` flag and wakes all parked workers if its thread
@@ -359,21 +628,37 @@ impl TreeCvExecutor {
     /// worker's own deque; everything else — leaves and whole subtrees at
     /// or below the cutoff — runs inline through the shared sequential
     /// recursion with the run's strategy.
+    ///
+    /// Cancellation is checked twice: at pop (drop the whole subtree) and
+    /// at the fork point after the update phases, before the children
+    /// become visible (drop both halves). Either way the task's leaf
+    /// range is accounted as dropped and its model buffers recycle. A
+    /// panic inside the learner work is caught here, recorded on the run,
+    /// and converted into an implicit cancellation of the rest of its
+    /// tree — sibling runs keep executing.
     fn process<L>(
         &self,
         wid: usize,
         task: Task<L::Model>,
         shared: &Shared<'_, L>,
         data: &Dataset,
-        ops_by_run: &mut [OpCounts],
         scratch: &mut Vec<L::Model>,
         streams: &mut StreamScratch,
+        on_result: Option<&OnResult<'_>>,
     ) where
         L: IncrementalLearner + Sync,
     {
         let Task { run, s, e, depth, model } = task;
         let rs = &shared.runs[run];
-        let ops = &mut ops_by_run[run];
+        let leaves = e - s + 1;
+        if rs.ctrl.is_cancelled() {
+            if let Some(m) = model {
+                recycle(shared, m);
+            }
+            rs.tasks_dropped.fetch_add(1, MemOrdering::AcqRel);
+            account(shared, run, leaves, true, on_result);
+            return;
+        }
         // The run's node-stream context (all borrows) — the same
         // abstraction the sequential engine recurses with, so fork-node
         // updates and inline subtrees draw streams from one source.
@@ -386,6 +671,10 @@ impl TreeCvExecutor {
             ordering: self.ordering,
             seed: rs.seed,
         };
+        // This task's tallies; merged into the run's shared totals before
+        // its leaves (or children) become visible to other workers, so
+        // whoever finishes the run reads complete counters.
+        let mut ops = OpCounts::default();
         // Root tasks init lazily (pure, so scheduling cannot affect it).
         let mut model = model.unwrap_or_else(|| rs.learner.init());
         if s < e && depth < rs.cutoff {
@@ -393,28 +682,49 @@ impl TreeCvExecutor {
             // Node tags shared with the sequential engine.
             let (tag_right, tag_left) = node_tags(s, e);
 
-            // The two halves may run concurrently on different workers, so
-            // a fork must snapshot regardless of strategy — this is the
-            // only copy a SaveRevert run pays. The snapshot goes into a
-            // pooled buffer (clone_from reuses its storage) when one is
-            // available.
-            let recycled = shared.pool.lock().unwrap().pop();
-            let mut sibling = match recycled {
-                Some(mut buf) => {
-                    buf.clone_from(&model);
-                    buf
+            let work = catch_unwind(AssertUnwindSafe(|| {
+                // The two halves may run concurrently on different
+                // workers, so a fork must snapshot regardless of strategy
+                // — this is the only copy a SaveRevert run pays. The
+                // snapshot goes into a pooled buffer (clone_from reuses
+                // its storage) when one is available.
+                let recycled = shared.pool.lock().unwrap().pop();
+                let mut sibling = match recycled {
+                    Some(mut buf) => {
+                        buf.clone_from(&model);
+                        buf
+                    }
+                    None => model.clone(),
+                };
+                ops.model_copies += 1;
+                ops.bytes_copied += rs.learner.model_bytes(&model) as u64;
+
+                // As in Algorithm 1: the model fed the *second* group
+                // serves the left child (s, m); the model fed the *first*
+                // group serves the right child (m+1, e).
+                ctx.update_phase(&mut model, m + 1, e, tag_right, &mut ops, streams);
+                ctx.update_phase(&mut sibling, s, m, tag_left, &mut ops, streams);
+                sibling
+            }));
+            let sibling = match work {
+                Ok(sibling) => sibling,
+                Err(payload) => {
+                    fail_run(shared, run, leaves, payload, on_result);
+                    return;
                 }
-                None => model.clone(),
             };
-            ops.model_copies += 1;
-            ops.bytes_copied += rs.learner.model_bytes(&model) as u64;
+            rs.ops.lock().unwrap().merge(&ops);
 
-            // As in Algorithm 1: the model fed the *second* group serves
-            // the left child (s, m); the model fed the *first* group
-            // serves the right child (m+1, e).
-            ctx.update_phase(&mut model, m + 1, e, tag_right, ops, streams);
-            ctx.update_phase(&mut sibling, s, m, tag_left, ops, streams);
-
+            // Fork-point cancellation check: drop both halves instead of
+            // queueing them. (The update work above is wasted, but the
+            // whole subtree below — the expensive part — is saved.)
+            if rs.ctrl.is_cancelled() {
+                recycle(shared, model);
+                recycle(shared, sibling);
+                rs.tasks_dropped.fetch_add(2, MemOrdering::AcqRel);
+                account(shared, run, leaves, true, on_result);
+                return;
+            }
             {
                 let mut dq = shared.deques[wid].lock().unwrap();
                 dq.push_back(Task { run, s, e: m, depth: depth + 1, model: Some(model) });
@@ -432,32 +742,31 @@ impl TreeCvExecutor {
         // subtree recycle through this worker's scratch free-list, which
         // lives for the whole batch — tasks of every run share it (as do
         // the randomized-stream id buffers in `streams`).
-        let mut local = vec![0.0; e - s + 1];
-        run_subtree(&ctx, &mut model, s, e, s, &mut local, ops, scratch, streams);
-        rs.per_fold.lock().unwrap()[s..=e].copy_from_slice(&local);
-        // Recycle the model storage for future fork-node snapshots
-        // (bounded — beyond the cap, just drop it).
-        {
-            let mut pool = shared.pool.lock().unwrap();
-            if pool.len() < shared.pool_cap {
-                pool.push(model);
+        let work = catch_unwind(AssertUnwindSafe(|| {
+            let mut local = vec![0.0; leaves];
+            run_subtree(&ctx, &mut model, s, e, s, &mut local, &mut ops, scratch, streams);
+            local
+        }));
+        let local = match work {
+            Ok(local) => local,
+            Err(payload) => {
+                fail_run(shared, run, leaves, payload, on_result);
+                return;
             }
-        }
-        let leaves = e - s + 1;
-        if rs.leaves_done.fetch_add(leaves, MemOrdering::AcqRel) + leaves == rs.k {
-            *rs.wall.lock().unwrap() = shared.timer.elapsed();
-        }
-        let done_before = shared.leaves_done.fetch_add(leaves, MemOrdering::AcqRel);
-        if done_before + leaves == shared.leaves_total {
-            shared.done.store(true, MemOrdering::Release);
-            wake_all(&shared.parked);
-        }
+        };
+        rs.per_fold.lock().unwrap()[s..=e].copy_from_slice(&local);
+        // Recycle the model storage for future fork-node snapshots.
+        recycle(shared, model);
+        rs.ops.lock().unwrap().merge(&ops);
+        account(shared, run, leaves, false, on_result);
     }
 
-    /// Worker loop: drain own deque LIFO, steal FIFO when empty, park when
-    /// a full sweep comes up dry, exit once every leaf of every run is
-    /// recorded. Counters are tallied per run locally and merged into the
-    /// shared per-run totals on exit.
+    /// Worker loop: drain own deque LIFO, steal FIFO when empty, admit the
+    /// highest-priority root task from the injector when every deque is
+    /// dry, park when the full sweep comes up empty, exit once every leaf
+    /// of every run is accounted (completed or dropped). Counters are
+    /// tallied per task and merged into the run's shared totals inside
+    /// [`TreeCvExecutor::process`].
     ///
     /// Parking protocol (lost-wakeup-free): register on `shared.parked`
     /// FIRST, then re-sweep, then `park()`. A producer pushes its task
@@ -467,12 +776,16 @@ impl TreeCvExecutor {
     /// running thread banks a token that makes the next `park()` return
     /// immediately, so even a race with a stale registration only costs
     /// one extra sweep, never a hang.
-    fn worker<L>(&self, wid: usize, shared: &Shared<'_, L>, data: &Dataset)
-    where
+    fn worker<L>(
+        &self,
+        wid: usize,
+        shared: &Shared<'_, L>,
+        data: &Dataset,
+        on_result: Option<&OnResult<'_>>,
+    ) where
         L: IncrementalLearner + Sync,
     {
         let _signal = PanicSignal { done: &shared.done, parked: &shared.parked };
-        let mut ops_by_run: Vec<OpCounts> = vec![OpCounts::default(); shared.runs.len()];
         let n_workers = shared.deques.len();
         // Worker-local free-list for inline-subtree Copy snapshots; lives
         // across tasks — and across runs — so buffers recycle for the
@@ -482,6 +795,21 @@ impl TreeCvExecutor {
         // Worker-local free-list for randomized-stream id buffers (folded
         // layout); same lifetime as `scratch`.
         let mut streams = StreamScratch::new();
+        // Injector pop: the pending root task whose run has the highest
+        // current priority; FIFO (admission sequence) among equals.
+        // Cancelled runs' roots are popped like any other — `process`
+        // drops them with full accounting, never silently.
+        let pop_injector = || -> Option<Task<L::Model>> {
+            let mut inj = shared.injector.lock().unwrap();
+            let best = inj
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, (seq, t))| {
+                    (shared.runs[t.run].ctrl.priority(), std::cmp::Reverse(*seq))
+                })
+                .map(|(idx, _)| idx)?;
+            Some(inj.swap_remove(best).1)
+        };
         let sweep = || -> Option<Task<L::Model>> {
             let own = shared.deques[wid].lock().unwrap().pop_back();
             own.or_else(|| {
@@ -490,6 +818,7 @@ impl TreeCvExecutor {
                     shared.deques[victim].lock().unwrap().pop_front()
                 })
             })
+            .or_else(|| pop_injector())
         };
         loop {
             // Sweep; on a dry sweep, run the park protocol, which may
@@ -526,12 +855,8 @@ impl TreeCvExecutor {
                 }
             };
             if let Some(t) = task {
-                self.process(wid, t, shared, data, &mut ops_by_run, &mut scratch, &mut streams);
+                self.process(wid, t, shared, data, &mut scratch, &mut streams, on_result);
             }
-        }
-        // Publish this worker's tallies into each run's shared totals.
-        for (rs, ops) in shared.runs.iter().zip(&ops_by_run) {
-            rs.ops.lock().unwrap().merge(ops);
         }
     }
 
@@ -543,8 +868,14 @@ impl TreeCvExecutor {
         L: IncrementalLearner + Sync,
         L::Model: Send,
     {
-        let spec =
-            RunSpec { learner, folds, seed: self.seed, strategy: self.strategy, folded: None };
+        let spec = RunSpec {
+            learner,
+            folds,
+            seed: self.seed,
+            strategy: self.strategy,
+            folded: None,
+            ctrl: RunCtrl::default(),
+        };
         self.run_many(data, std::slice::from_ref(&spec))
             .pop()
             .expect("run_many returns one result per run")
@@ -568,6 +899,7 @@ impl TreeCvExecutor {
             seed: self.seed,
             strategy: self.strategy,
             folded: Some(folded),
+            ctrl: RunCtrl::default(),
         };
         self.run_many(data, std::slice::from_ref(&spec))
             .pop()
@@ -588,7 +920,58 @@ impl TreeCvExecutor {
     /// same `threads` setting. Results come back in run order; each
     /// `wall` is the elapsed time from batch start to the run's last
     /// leaf.
+    ///
+    /// This strict form requires every run to complete: the first
+    /// [`RunOutcome::Failed`] cancels all sibling runs (fast wind-down)
+    /// and re-panics with the original message, and a run cancelled by
+    /// the caller's own token panics with a pointer to
+    /// [`Self::run_many_outcomes`] — the cancellation-aware form that
+    /// reports per-run statuses instead.
     pub fn run_many<L>(&self, data: &Dataset, runs: &[RunSpec<'_, L>]) -> Vec<CvResult>
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        let abort_siblings = |_idx: usize, out: &RunOutcome| {
+            if matches!(out, RunOutcome::Failed { .. }) {
+                for r in runs {
+                    r.ctrl.cancel();
+                }
+            }
+        };
+        let outcomes = self.run_many_outcomes(data, runs, Some(&abort_siblings));
+        for out in &outcomes {
+            if let RunOutcome::Failed { error } = out {
+                panic!("executor worker panicked: {error}");
+            }
+        }
+        outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, out)| match out {
+                RunOutcome::Completed(res) => res,
+                RunOutcome::Cancelled { .. } => panic!(
+                    "run {i} was cancelled mid-batch; run_many returns plain CvResults — \
+                     dispatch cancellable batches through run_many_outcomes"
+                ),
+                RunOutcome::Failed { .. } => unreachable!("failures re-panic above"),
+            })
+            .collect()
+    }
+
+    /// Cancellation-aware batch execution: like [`Self::run_many`] but
+    /// each run terminates in a [`RunOutcome`] — `Completed` (bit-identical
+    /// to the strict form), `Cancelled` (its [`RunCtrl`] token fired
+    /// before the last leaf) or `Failed` (a task panicked; siblings keep
+    /// going). `on_result` is invoked on a worker thread the moment each
+    /// run's outcome is decided, enabling mid-batch reactions — a racing
+    /// scheduler cancels losers and re-prioritizes survivors from here.
+    pub fn run_many_outcomes<L>(
+        &self,
+        data: &Dataset,
+        runs: &[RunSpec<'_, L>],
+        on_result: Option<&OnResult<'_>>,
+    ) -> Vec<RunOutcome>
     where
         L: IncrementalLearner + Sync,
         L::Model: Send,
@@ -616,6 +999,21 @@ impl TreeCvExecutor {
         let pool_cap = threads * (max_cutoff + 2) * if runs.len() > 1 { 2 } else { 1 };
         let shared: Shared<'_, L> = Shared {
             deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            // Root tasks all start in the priority injector (admission
+            // sequence = run order, so equal priorities run in batch
+            // order). Root models are `None` (lazily inited on first pop)
+            // so a wide batch doesn't hold every run's full model before
+            // work starts.
+            injector: Mutex::new(
+                runs.iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        let task =
+                            Task { run: i, s: 0, e: r.folds.k() - 1, depth: 0, model: None };
+                        (i as u64, task)
+                    })
+                    .collect(),
+            ),
             pool: Mutex::new(Vec::new()),
             pool_cap,
             runs: runs
@@ -629,7 +1027,13 @@ impl TreeCvExecutor {
                     cutoff: cutoff_of(r.folds.k()),
                     k: r.folds.k(),
                     per_fold: Mutex::new(vec![0.0; r.folds.k()]),
+                    ctrl: r.ctrl.clone(),
                     leaves_done: AtomicUsize::new(0),
+                    leaves_dropped: AtomicUsize::new(0),
+                    tasks_dropped: AtomicUsize::new(0),
+                    leaves_acct: AtomicUsize::new(0),
+                    failed: Mutex::new(None),
+                    outcome: Mutex::new(None),
                     ops: Mutex::new(OpCounts::default()),
                     wall: Mutex::new(Duration::ZERO),
                 })
@@ -640,31 +1044,17 @@ impl TreeCvExecutor {
             parked: Mutex::new(Vec::new()),
             timer: Timer::start(),
         };
-        // Seed the root tasks round-robin so a batch starts spread across
-        // the deques. Placement never affects results — only who steals
-        // first — and a single run lands on deque 0 as before. Root
-        // models are `None` (lazily inited on first pop) so a wide batch
-        // doesn't hold every run's full model before work starts.
-        for (i, r) in runs.iter().enumerate() {
-            shared.deques[i % threads].lock().unwrap().push_back(Task {
-                run: i,
-                s: 0,
-                e: r.folds.k() - 1,
-                depth: 0,
-                model: None,
-            });
-        }
 
         if threads == 1 {
             // Inline on the calling thread: zero spawn cost, and exactly
             // the sequential engine's work.
-            self.worker(0, &shared, data);
+            self.worker(0, &shared, data, on_result);
         } else {
             self.spawns.fetch_add(1, MemOrdering::Relaxed);
             let shared_ref = &shared;
             std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..threads)
-                    .map(|wid| scope.spawn(move || self.worker(wid, shared_ref, data)))
+                    .map(|wid| scope.spawn(move || self.worker(wid, shared_ref, data, on_result)))
                     .collect();
                 for handle in handles {
                     handle.join().expect("executor worker panicked");
@@ -676,11 +1066,10 @@ impl TreeCvExecutor {
             .runs
             .into_iter()
             .map(|rs| {
-                CvResult::from_folds(
-                    rs.per_fold.into_inner().unwrap(),
-                    rs.ops.into_inner().unwrap(),
-                    rs.wall.into_inner().unwrap(),
-                )
+                rs.outcome
+                    .into_inner()
+                    .unwrap()
+                    .expect("every run accounts all its leaves before the batch returns")
             })
             .collect()
     }
@@ -699,6 +1088,7 @@ impl TreeCvExecutor {
             seed: self.seed,
             strategy: self.strategy,
             folded: None,
+            ctrl: RunCtrl::default(),
         };
         self.run_many_erased(data, std::slice::from_ref(&spec))
             .pop()
@@ -720,6 +1110,7 @@ impl TreeCvExecutor {
             seed: self.seed,
             strategy: self.strategy,
             folded: Some(folded),
+            ctrl: RunCtrl::default(),
         };
         self.run_many_erased(data, std::slice::from_ref(&spec))
             .pop()
@@ -739,7 +1130,32 @@ impl TreeCvExecutor {
     /// (storage-reusing on a type match, wholesale replacement otherwise).
     pub fn run_many_erased(&self, data: &Dataset, runs: &[ErasedRunSpec<'_>]) -> Vec<CvResult> {
         let wrapped: Vec<DynLearner<'_>> = runs.iter().map(|r| DynLearner(r.learner)).collect();
-        let specs: Vec<RunSpec<'_, DynLearner<'_>>> = wrapped
+        let specs = Self::erased_specs(&wrapped, runs);
+        self.run_many(data, &specs)
+    }
+
+    /// Cancellation-aware heterogeneous batch: [`Self::run_many_outcomes`]
+    /// over the type-erased learner layer. Each spec's [`RunCtrl`] is
+    /// shared with the adapter spec, so cancelling/re-prioritizing
+    /// through a caller-held clone steers the erased run directly.
+    pub fn run_many_erased_outcomes(
+        &self,
+        data: &Dataset,
+        runs: &[ErasedRunSpec<'_>],
+        on_result: Option<&OnResult<'_>>,
+    ) -> Vec<RunOutcome> {
+        let wrapped: Vec<DynLearner<'_>> = runs.iter().map(|r| DynLearner(r.learner)).collect();
+        let specs = Self::erased_specs(&wrapped, runs);
+        self.run_many_outcomes(data, &specs, on_result)
+    }
+
+    /// Adapter specs for an erased batch; each shares its source spec's
+    /// control block (same token, same priority cell).
+    fn erased_specs<'a>(
+        wrapped: &'a [DynLearner<'a>],
+        runs: &'a [ErasedRunSpec<'a>],
+    ) -> Vec<RunSpec<'a, DynLearner<'a>>> {
+        wrapped
             .iter()
             .zip(runs)
             .map(|(learner, r)| RunSpec {
@@ -748,9 +1164,9 @@ impl TreeCvExecutor {
                 seed: r.seed,
                 strategy: r.strategy,
                 folded: r.folded,
+                ctrl: r.ctrl.clone(),
             })
-            .collect();
-        self.run_many(data, &specs)
+            .collect()
     }
 }
 
@@ -908,6 +1324,7 @@ mod tests {
                     seed: 60 + r as u64,
                     strategy: Strategy::Copy,
                     folded: None,
+                    ctrl: RunCtrl::default(),
                 };
                 specs.push(spec);
             }
@@ -944,6 +1361,7 @@ mod tests {
                 seed: i as u64,
                 strategy,
                 folded: None,
+                ctrl: RunCtrl::default(),
             })
             .collect();
         let batch =
@@ -1016,6 +1434,7 @@ mod tests {
                 seed: 70 + i as u64,
                 strategy: Strategy::Copy,
                 folded: None,
+                ctrl: RunCtrl::default(),
             })
             .collect();
         let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4);
@@ -1083,6 +1502,7 @@ mod tests {
                 seed: 1,
                 strategy: Strategy::Copy,
                 folded: Some(&folded_a),
+                ctrl: RunCtrl::default(),
             },
             RunSpec {
                 learner: &l,
@@ -1090,6 +1510,7 @@ mod tests {
                 seed: 2,
                 strategy: Strategy::SaveRevert,
                 folded: None,
+                ctrl: RunCtrl::default(),
             },
         ];
         let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 3);
@@ -1118,6 +1539,7 @@ mod tests {
             seed: 0,
             strategy: Strategy::Copy,
             folded: Some(&folded),
+            ctrl: RunCtrl::default(),
         };
         let _ = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 2)
             .run_many(&data, std::slice::from_ref(&spec));
@@ -1139,6 +1561,214 @@ mod tests {
                 .run(&l, &data, &folds);
             assert_eq!(seq.per_fold, exe.per_fold);
         }
+    }
+
+    /// Delegates to a histogram learner but (optionally) panics on every
+    /// held-out evaluation — drives the Failed-outcome paths.
+    struct PanicAtEval {
+        inner: HistogramDensity,
+        fail: bool,
+    }
+
+    impl IncrementalLearner for PanicAtEval {
+        type Model = <HistogramDensity as IncrementalLearner>::Model;
+        type Undo = <HistogramDensity as IncrementalLearner>::Undo;
+
+        fn name(&self) -> &'static str {
+            "panic_at_eval"
+        }
+
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+
+        fn init(&self) -> Self::Model {
+            self.inner.init()
+        }
+
+        fn update(&self, model: &mut Self::Model, data: &Dataset, idx: &[u32]) {
+            self.inner.update(model, data, idx);
+        }
+
+        fn update_logged(
+            &self,
+            model: &mut Self::Model,
+            data: &Dataset,
+            idx: &[u32],
+        ) -> Self::Undo {
+            self.inner.update_logged(model, data, idx)
+        }
+
+        fn revert(&self, model: &mut Self::Model, data: &Dataset, undo: Self::Undo) {
+            self.inner.revert(model, data, undo);
+        }
+
+        fn loss(&self, model: &Self::Model, data: &Dataset, i: u32) -> f64 {
+            if self.fail {
+                panic!("synthetic eval failure");
+            }
+            self.inner.loss(model, data, i)
+        }
+
+        fn model_bytes(&self, model: &Self::Model) -> usize {
+            self.inner.model_bytes(model)
+        }
+    }
+
+    #[test]
+    fn pre_cancelled_runs_report_distinct_status() {
+        // A token cancelled before dispatch drops the run at its root pop:
+        // zero leaves complete, all k drop, one task drops — at EVERY
+        // worker count (the check happens before any work starts).
+        // Sibling runs stay bit-identical to standalone, and the same
+        // executor handle stays reusable afterwards.
+        let data = SyntheticMixture1d::new(300, 130).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(300, 8, 131);
+        let alone =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 7, 3).run(&l, &data, &folds);
+        for threads in [1usize, 3, 8] {
+            let mk = || RunSpec {
+                learner: &l,
+                folds: &folds,
+                seed: 7,
+                strategy: Strategy::Copy,
+                folded: None,
+                ctrl: RunCtrl::default(),
+            };
+            let specs = [mk(), mk(), mk()];
+            specs[1].ctrl.cancel();
+            let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 7, threads);
+            let out = exe.run_many_outcomes(&data, &specs, None);
+            match &out[1] {
+                RunOutcome::Cancelled { leaves_done, leaves_dropped, tasks_dropped } => {
+                    assert_eq!(*leaves_done, 0, "threads={threads}");
+                    assert_eq!(*leaves_dropped, 8, "threads={threads}");
+                    assert_eq!(*tasks_dropped, 1, "threads={threads}");
+                }
+                other => panic!("threads={threads}: expected Cancelled, got {other:?}"),
+            }
+            for i in [0usize, 2] {
+                let res = out[i].completed().unwrap_or_else(|| panic!("run {i} completed"));
+                assert_eq!(res.per_fold, alone.per_fold, "threads={threads} run {i}");
+                assert_eq!(res.ops.model_copies, alone.ops.model_copies, "threads={threads}");
+            }
+            // Handle reuse after a cancellation: a fresh strict batch on
+            // the SAME executor matches the standalone run bit for bit.
+            let again = exe.run(&l, &data, &folds);
+            assert_eq!(again.per_fold, alone.per_fold, "threads={threads} reuse");
+        }
+    }
+
+    #[test]
+    fn priorities_order_run_starts_on_one_worker() {
+        // threads = 1 makes scheduling deterministic: the lone worker pops
+        // the highest-priority injector root, runs that tree to completion
+        // (LIFO own deque), then admits the next — so completion order IS
+        // priority order, FIFO among equals. Results stay bit-identical
+        // regardless (asserted against the equal-priority batch).
+        let data = SyntheticMixture1d::new(240, 132).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let folds = Folds::new(240, 6, 133);
+        let mk = |priority: i64| RunSpec {
+            learner: &l,
+            folds: &folds,
+            seed: 11,
+            strategy: Strategy::Copy,
+            folded: None,
+            ctrl: RunCtrl::with_priority(priority),
+        };
+        let specs = [mk(1), mk(3), mk(2)];
+        let order = Mutex::new(Vec::new());
+        let record = |i: usize, _out: &RunOutcome| order.lock().unwrap().push(i);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 11, 1);
+        let out = exe.run_many_outcomes(&data, &specs, Some(&record));
+        assert_eq!(*order.lock().unwrap(), vec![1, 2, 0], "highest priority starts first");
+        let flat = [mk(0), mk(0), mk(0)];
+        let base = exe.run_many_outcomes(&data, &flat, None);
+        for (i, (a, b)) in out.iter().zip(&base).enumerate() {
+            let (a, b) = (a.completed().unwrap(), b.completed().unwrap());
+            assert_eq!(a.per_fold, b.per_fold, "run {i}: priority must not change results");
+        }
+    }
+
+    #[test]
+    fn callback_can_cancel_siblings_mid_batch() {
+        // Incremental delivery reacts mid-batch: when run 0 completes, the
+        // callback cancels run 1. At threads = 1 with equal priorities the
+        // admission order is run order, so run 1's root has not started —
+        // the outcome split is deterministic.
+        let data = SyntheticMixture1d::new(200, 134).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 16);
+        let folds = Folds::new(200, 5, 135);
+        let mk = || RunSpec {
+            learner: &l,
+            folds: &folds,
+            seed: 3,
+            strategy: Strategy::Copy,
+            folded: None,
+            ctrl: RunCtrl::default(),
+        };
+        let specs = [mk(), mk()];
+        let cancel_other = |i: usize, _out: &RunOutcome| {
+            if i == 0 {
+                specs[1].ctrl.cancel();
+            }
+        };
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 3, 1);
+        let out = exe.run_many_outcomes(&data, &specs, Some(&cancel_other));
+        assert!(out[0].completed().is_some());
+        assert!(out[1].is_cancelled());
+    }
+
+    #[test]
+    fn failed_run_is_isolated_and_reported() {
+        // A panicking task is caught on the worker: the run reports
+        // Failed with the payload message, its remaining tree is dropped,
+        // and sibling runs complete normally under outcomes dispatch.
+        let data = SyntheticMixture1d::new(200, 136).generate();
+        let good = PanicAtEval { inner: HistogramDensity::new(-8.0, 8.0, 16), fail: false };
+        let bad = PanicAtEval { inner: HistogramDensity::new(-8.0, 8.0, 16), fail: true };
+        let folds = Folds::new(200, 6, 137);
+        let mk = |learner: &'_ PanicAtEval| RunSpec {
+            learner,
+            folds: &folds,
+            seed: 5,
+            strategy: Strategy::Copy,
+            folded: None,
+            ctrl: RunCtrl::default(),
+        };
+        let specs = [mk(&good), mk(&bad)];
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, 2);
+        let out = exe.run_many_outcomes(&data, &specs, None);
+        let alone =
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, 2).run(&good, &data, &folds);
+        assert_eq!(out[0].completed().unwrap().per_fold, alone.per_fold);
+        match &out[1] {
+            RunOutcome::Failed { error } => {
+                assert!(error.contains("synthetic eval failure"), "{error}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert!(specs[1].ctrl.is_cancelled(), "failure implies cancellation of the run");
+    }
+
+    #[test]
+    #[should_panic(expected = "synthetic eval failure")]
+    fn strict_run_many_repanics_on_failure() {
+        let data = SyntheticMixture1d::new(120, 138).generate();
+        let bad = PanicAtEval { inner: HistogramDensity::new(-8.0, 8.0, 16), fail: true };
+        let folds = Folds::new(120, 4, 139);
+        let spec = RunSpec {
+            learner: &bad,
+            folds: &folds,
+            seed: 0,
+            strategy: Strategy::Copy,
+            folded: None,
+            ctrl: RunCtrl::default(),
+        };
+        let _ = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 2)
+            .run_many(&data, std::slice::from_ref(&spec));
     }
 
     #[test]

@@ -25,6 +25,12 @@
 //!   rows. `run_sweep` takes one learner family's grid (`repro sweep
 //!   --sweep lambda=0.1,0.01`); `run_sweep_erased` takes a heterogeneous
 //!   learner axis — the model-selection workload behind `repro select`.
+//! * [`race`] — racing sweeps (`repro sweep --race`): the same batch as
+//!   [`sweep`] dispatched through the executor's cancellation layer, with
+//!   a Krueger-style sequential sign test eliminating losing configs at
+//!   round boundaries and cancelling their outstanding runs mid-flight.
+//!   Deterministic given the seed; `alpha = 0` reproduces the exhaustive
+//!   sweep bit for bit.
 //! * [`parallel`] — the §4.1 parallel engine facade (delegates to
 //!   [`executor`]) plus the original scoped-thread forking retained as a
 //!   bench baseline; both are strategy-aware.
@@ -48,6 +54,7 @@ pub mod executor;
 pub mod folds;
 pub mod mergecv;
 pub mod parallel;
+pub mod race;
 pub mod repeated;
 pub mod standard;
 pub mod stats;

@@ -1,0 +1,658 @@
+//! Racing sweeps: statistically eliminate losing configurations
+//! mid-flight instead of running every sweep cell to completion.
+//!
+//! The exhaustive scheduler ([`super::sweep`]) spends `C × S × R` full
+//! TreeCV runs on a grid of C configs × S strategies × R repetitions —
+//! linear in grid size even though most cells are obvious losers early.
+//! Krueger et al. (*Fast Cross-Validation via Sequential Testing*) show a
+//! sequential test over partial results can drop most configurations
+//! after a fraction of the work. This module implements that discipline
+//! on top of the executor's cancellation layer
+//! ([`super::executor::RunCtrl`] / `run_many_outcomes`):
+//!
+//! * **Rounds.** The R repetitions are split into `rounds` round
+//!   boundaries `r_j = ⌈R·(j+1)/rounds⌉` (deduplicated; the last is
+//!   always R). The whole `C × S × R` batch is dispatched through ONE
+//!   executor pool up front — rounds are *decision points*, not barriers:
+//!   round j fires the moment every still-alive cell has its first `r_j`
+//!   repetitions delivered (the executor's incremental callback), while
+//!   later repetitions keep streaming.
+//! * **Elimination test.** At each non-final boundary, the *incumbent* is
+//!   the alive cell with the lowest mean estimate over the first `r_j`
+//!   repetitions (lowest cell index on ties). Every other alive cell is
+//!   compared to it by a paired sign test over those repetitions: with
+//!   `w` = repetitions where the incumbent's estimate is strictly lower
+//!   and `n` = non-tied repetitions, the p-value is the exact binomial
+//!   upper tail `P(W ≥ w)` for `W ~ Binomial(n, ½)`. A cell with
+//!   `p ≤ alpha` is eliminated: its [`RunCtrl`] token is cancelled, so
+//!   its outstanding runs (queued roots and in-flight subtrees) are
+//!   dropped and their workers freed; survivors' priorities are raised so
+//!   their remaining runs start ahead of anything stale in the injector.
+//! * **Determinism.** Decisions depend only on the estimates of the
+//!   counted repetition prefix — pure functions of `(learner, data,
+//!   folds, seed)` — and round triggers are *set-based* (fire when the
+//!   prefix is complete, processed in round order under one lock), never
+//!   on arrival order. The [`EliminationTrace`] is therefore identical
+//!   for a given seed across worker counts and across re-runs; only
+//!   wall-clock and the work-saved counters (how many of a loser's runs
+//!   were actually cancelled vs. already finished) vary with scheduling.
+//!   With `alpha = 0` the test can never reject (`p > 0` always), so the
+//!   race degenerates to the exhaustive sweep and reproduces
+//!   [`super::sweep::run_sweep`]'s cells bit for bit —
+//!   `tests/integration_race.rs` pins both properties.
+//!
+//! Aggregation: an eliminated cell reports `mean ± std` over exactly its
+//! counted prefix (`reps_used = r_j` at elimination) — never over
+//! whichever extra in-flight repetitions happened to finish — and a
+//! survivor over all R, exactly as the exhaustive scheduler aggregates.
+
+use super::executor::{ErasedRunSpec, OnResult, RunCtrl, RunOutcome, RunSpec, TreeCvExecutor};
+use super::sweep::{build_runs, repetition_folds, validate, SweepSpec};
+use super::{CvResult, Strategy};
+use crate::data::Dataset;
+use crate::learner::erased::ErasedLearner;
+use crate::learner::IncrementalLearner;
+use crate::metrics::{OpCounts, RunningStats, Timer};
+use crate::Result;
+use anyhow::bail;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A racing sweep's axes: the exhaustive sweep's axes plus the racing
+/// knobs.
+#[derive(Debug, Clone)]
+pub struct RaceSpec {
+    /// The underlying grid (configs × strategies × repetitions, seeds,
+    /// threads) — identical semantics to the exhaustive scheduler.
+    pub sweep: SweepSpec,
+    /// Number of decision rounds the repetitions are split into
+    /// (boundaries at `⌈R·(j+1)/rounds⌉`). `1` means a single final
+    /// round, i.e. no elimination opportunities.
+    pub rounds: usize,
+    /// Significance level of the per-round sign test; a cell is
+    /// eliminated when its p-value is `≤ alpha`. `0.0` never eliminates
+    /// (the exhaustive sweep, bit for bit).
+    pub alpha: f64,
+}
+
+/// One row of the [`EliminationTrace`]: cell × round, with the round's
+/// statistic and decision. Rows are emitted in (round, cell-index) order
+/// and only for cells still alive at that round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRow {
+    /// Cell index in canonical (config-major, strategy-minor) order.
+    pub cell: usize,
+    /// Index into the learner axis.
+    pub config: usize,
+    pub strategy: Strategy,
+    /// Decision round (0-based).
+    pub round: usize,
+    /// Repetitions counted at this round (the boundary `r_j`).
+    pub reps_used: usize,
+    /// Mean estimate over the counted repetitions.
+    pub mean: f64,
+    /// Incumbent wins in the paired sign test (0 for the incumbent row).
+    pub wins: usize,
+    /// Non-tied repetitions in the test (0 for the incumbent row).
+    pub n_eff: usize,
+    /// Exact binomial upper-tail p-value (1.0 for the incumbent row).
+    pub p_value: f64,
+    /// Whether this round eliminated the cell.
+    pub eliminated: bool,
+}
+
+/// The full, deterministic record of a race's decisions: identical for a
+/// given seed across worker counts and re-runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EliminationTrace {
+    /// Round boundaries `r_j` (ascending; the last equals R).
+    pub boundaries: Vec<usize>,
+    /// Per-(round, alive cell) decision rows.
+    pub rows: Vec<TraceRow>,
+}
+
+/// One (config, strategy) cell of a race — the racing analogue of
+/// [`super::sweep::SweepCell`], plus its elimination status.
+#[derive(Debug, Clone)]
+pub struct RaceCell {
+    /// Index into the learner axis.
+    pub config: usize,
+    pub strategy: Strategy,
+    /// Mean estimate over the counted repetitions (`runs`).
+    pub mean: f64,
+    /// Sample std over the counted repetitions.
+    pub std: f64,
+    /// Counters from the last counted repetition.
+    pub ops: OpCounts,
+    /// Repetitions this cell's aggregate counts: the elimination
+    /// boundary for a loser, R for a survivor.
+    pub reps_used: usize,
+    /// The round that eliminated this cell, if any.
+    pub eliminated_round: Option<usize>,
+    /// The counted repetitions' full results, in repetition order; each
+    /// is bit-identical to the exhaustive sweep's corresponding run.
+    pub runs: Vec<CvResult>,
+}
+
+/// Everything a race produced. Cells are in canonical (config-major,
+/// strategy-minor) order — ranking is the caller's concern.
+#[derive(Debug, Clone)]
+pub struct RaceOutcome {
+    pub cells: Vec<RaceCell>,
+    pub trace: EliminationTrace,
+    /// Worker-pool size the batch actually used (knob resolved and
+    /// clamped exactly as the exhaustive scheduler reports it).
+    pub threads: usize,
+    /// Wall-clock of the whole raced batch.
+    pub total_wall: Duration,
+    /// Executor pools spawned (1 for a multi-worker pool, 0 inline).
+    pub pool_spawns: u64,
+    /// Work-saved accounting: every run the grid scheduled…
+    pub runs_scheduled: usize,
+    /// …how many ran to completion (includes a loser's in-flight runs
+    /// that finished before its cancellation landed)…
+    pub runs_completed: usize,
+    /// …and how many were cancelled outright. Scheduling-dependent
+    /// (unlike the trace): a fast pool may finish a loser's runs before
+    /// the token lands.
+    pub runs_cancelled: usize,
+    /// Tree tasks dropped by those cancellations (executor accounting).
+    pub tasks_cancelled: u64,
+}
+
+/// Round boundaries `⌈R·(j+1)/rounds⌉` for `j in 0..rounds`, deduplicated
+/// (more rounds than repetitions collapses to one boundary per
+/// repetition). The last boundary is always R.
+fn round_boundaries(repetitions: usize, rounds: usize) -> Vec<usize> {
+    let mut b: Vec<usize> =
+        (1..=rounds).map(|j| (repetitions * j + rounds - 1) / rounds).collect();
+    b.dedup();
+    b
+}
+
+/// Exact upper tail `P(W ≥ wins)` for `W ~ Binomial(n_eff, ½)`, computed
+/// with the iterative term recurrence `C(n,t+1) = C(n,t)·(n−t)/(t+1)` in
+/// f64 — deterministic across platforms (pure IEEE arithmetic, fixed
+/// evaluation order). `n_eff = 0` (all ties, or the incumbent row)
+/// yields 1.0.
+fn sign_test_p(wins: usize, n_eff: usize) -> f64 {
+    if n_eff == 0 {
+        return 1.0;
+    }
+    let n = n_eff as f64;
+    let mut term = 0.5f64.powi(n_eff as i32); // C(n, 0) / 2^n
+    let mut p = 0.0;
+    for t in 0..=n_eff {
+        if t >= wins {
+            p += term;
+        }
+        term *= (n - t as f64) / (t as f64 + 1.0);
+    }
+    p
+}
+
+/// Mutable race state, guarded by the controller's lock.
+struct RaceState {
+    /// Delivered estimates, `[cell][repetition]`.
+    estimates: Vec<Vec<Option<f64>>>,
+    alive: Vec<bool>,
+    elim_round: Vec<Option<usize>>,
+    /// Next round awaiting its trigger.
+    next_round: usize,
+    rows: Vec<TraceRow>,
+    /// First failure message, if any run failed.
+    failed: Option<String>,
+}
+
+/// The sequential-elimination controller: receives each run's outcome
+/// from the executor's incremental-delivery callback and advances the
+/// round cascade under one lock, so decisions are serialized and
+/// arrival-order-independent.
+struct Controller<'a> {
+    state: Mutex<RaceState>,
+    /// One shared control block per cell (cloned into its R run specs).
+    ctrls: &'a [RunCtrl],
+    /// `(config, strategy)` per cell, canonical order.
+    meta: &'a [(usize, Strategy)],
+    boundaries: &'a [usize],
+    repetitions: usize,
+    alpha: f64,
+}
+
+impl<'a> Controller<'a> {
+    fn new(
+        ctrls: &'a [RunCtrl],
+        meta: &'a [(usize, Strategy)],
+        boundaries: &'a [usize],
+        repetitions: usize,
+        alpha: f64,
+    ) -> Self {
+        let n_cells = ctrls.len();
+        Self {
+            state: Mutex::new(RaceState {
+                estimates: vec![vec![None; repetitions]; n_cells],
+                alive: vec![true; n_cells],
+                elim_round: vec![None; n_cells],
+                next_round: 0,
+                rows: Vec::new(),
+                failed: None,
+            }),
+            ctrls,
+            meta,
+            boundaries,
+            repetitions,
+            alpha,
+        }
+    }
+
+    /// Incremental-delivery entry: record run `run_idx`'s outcome and
+    /// fire every round whose trigger it completes.
+    fn record(&self, run_idx: usize, out: &RunOutcome) {
+        let (cell, rep) = (run_idx / self.repetitions, run_idx % self.repetitions);
+        let mut st = self.state.lock().unwrap();
+        match out {
+            RunOutcome::Completed(res) => st.estimates[cell][rep] = Some(res.estimate),
+            RunOutcome::Failed { error } => {
+                // One failed repetition aborts the whole race: cancel
+                // every cell so the batch winds down fast; the entry
+                // point surfaces the error.
+                if st.failed.is_none() {
+                    st.failed = Some(error.clone());
+                    for ctrl in self.ctrls {
+                        ctrl.cancel();
+                    }
+                }
+                return;
+            }
+            RunOutcome::Cancelled { .. } => return,
+        }
+        if st.failed.is_some() {
+            return;
+        }
+        self.advance(&mut st);
+    }
+
+    /// Fire rounds in order while their triggers hold: round j fires
+    /// once every alive cell has estimates for the full counted prefix
+    /// `[0, r_j)`. Eliminations shrink the alive set, which may complete
+    /// the next round's trigger immediately — hence the cascade loop.
+    fn advance(&self, st: &mut RaceState) {
+        while st.next_round < self.boundaries.len() {
+            let r = self.boundaries[st.next_round];
+            let n_cells = self.ctrls.len();
+            let ready = (0..n_cells)
+                .filter(|&c| st.alive[c])
+                .all(|c| st.estimates[c][..r].iter().all(Option::is_some));
+            if !ready {
+                return;
+            }
+            let round = st.next_round;
+            let is_final = r == self.repetitions;
+            let means: Vec<(usize, f64)> = (0..n_cells)
+                .filter(|&c| st.alive[c])
+                .map(|c| {
+                    let sum: f64 =
+                        st.estimates[c][..r].iter().map(|e| e.expect("trigger held")).sum();
+                    (c, sum / r as f64)
+                })
+                .collect();
+            // Incumbent: lowest mean; `min_by` keeps the first (= lowest
+            // cell index) among exact ties.
+            let &(inc, _) =
+                means.iter().min_by(|a, b| a.1.total_cmp(&b.1)).expect("≥ 1 alive cell");
+            for &(c, mean) in &means {
+                let (wins, n_eff) = if c == inc {
+                    (0, 0)
+                } else {
+                    let mut wins = 0;
+                    let mut n_eff = 0;
+                    for rep in 0..r {
+                        let a = st.estimates[inc][rep].expect("trigger held");
+                        let b = st.estimates[c][rep].expect("trigger held");
+                        if a < b {
+                            wins += 1;
+                        }
+                        if a != b {
+                            n_eff += 1;
+                        }
+                    }
+                    (wins, n_eff)
+                };
+                let p_value = if c == inc { 1.0 } else { sign_test_p(wins, n_eff) };
+                let eliminated = !is_final && c != inc && p_value <= self.alpha;
+                let (config, strategy) = self.meta[c];
+                st.rows.push(TraceRow {
+                    cell: c,
+                    config,
+                    strategy,
+                    round,
+                    reps_used: r,
+                    mean,
+                    wins,
+                    n_eff,
+                    p_value,
+                    eliminated,
+                });
+                if eliminated {
+                    st.alive[c] = false;
+                    st.elim_round[c] = Some(round);
+                    self.ctrls[c].cancel();
+                }
+            }
+            // Survivors outrank anything admitted for an earlier round
+            // still sitting in the injector.
+            for &(c, _) in &means {
+                if st.alive[c] {
+                    self.ctrls[c].set_priority((round + 1) as i64);
+                }
+            }
+            st.next_round += 1;
+        }
+    }
+
+    /// Fold the batch's outcomes and the recorded decisions into the
+    /// final report.
+    fn finish(
+        self,
+        outcomes: Vec<RunOutcome>,
+        total_wall: Duration,
+        threads: usize,
+        pool_spawns: u64,
+    ) -> Result<RaceOutcome> {
+        let st = self.state.into_inner().unwrap();
+        if let Some(error) = st.failed {
+            bail!("race aborted: a repetition failed: {error}");
+        }
+        let runs_scheduled = outcomes.len();
+        let runs_completed = outcomes.iter().filter(|o| o.completed().is_some()).count();
+        let runs_cancelled = outcomes.iter().filter(|o| o.is_cancelled()).count();
+        let tasks_cancelled: u64 = outcomes
+            .iter()
+            .map(|o| match o {
+                RunOutcome::Cancelled { tasks_dropped, .. } => *tasks_dropped as u64,
+                _ => 0,
+            })
+            .sum();
+        let mut slots: Vec<Option<RunOutcome>> = outcomes.into_iter().map(Some).collect();
+        let cells = (0..self.ctrls.len())
+            .map(|c| {
+                let reps_used = match st.elim_round[c] {
+                    Some(round) => self.boundaries[round],
+                    None => self.repetitions,
+                };
+                let runs: Vec<CvResult> = (0..reps_used)
+                    .map(|rep| {
+                        let taken = slots[c * self.repetitions + rep].take();
+                        match taken {
+                            Some(RunOutcome::Completed(res)) => res,
+                            _ => panic!(
+                                "race invariant violated: counted repetition {rep} of cell {c} \
+                                 did not complete"
+                            ),
+                        }
+                    })
+                    .collect();
+                let mut stats = RunningStats::default();
+                for res in &runs {
+                    stats.push(res.estimate);
+                }
+                let (config, strategy) = self.meta[c];
+                RaceCell {
+                    config,
+                    strategy,
+                    mean: stats.mean(),
+                    std: stats.std(),
+                    ops: runs.last().expect("reps_used >= 1").ops.clone(),
+                    reps_used,
+                    eliminated_round: st.elim_round[c],
+                    runs,
+                }
+            })
+            .collect();
+        Ok(RaceOutcome {
+            cells,
+            trace: EliminationTrace { boundaries: self.boundaries.to_vec(), rows: st.rows },
+            threads,
+            total_wall,
+            pool_spawns,
+            runs_scheduled,
+            runs_completed,
+            runs_cancelled,
+            tasks_cancelled,
+        })
+    }
+}
+
+/// Racing-specific validation, on top of the shared sweep validation.
+fn validate_race(spec: &RaceSpec) -> Result<()> {
+    if spec.rounds == 0 {
+        bail!("race needs rounds >= 1");
+    }
+    if !spec.alpha.is_finite() || !(0.0..=1.0).contains(&spec.alpha) {
+        bail!("race alpha = {} must lie in [0, 1]", spec.alpha);
+    }
+    Ok(())
+}
+
+/// `(config, strategy)` per cell in canonical order, plus one fresh
+/// control block per cell.
+fn cell_axes(n_configs: usize, spec: &SweepSpec) -> (Vec<(usize, Strategy)>, Vec<RunCtrl>) {
+    let mut meta = Vec::with_capacity(n_configs * spec.strategies.len());
+    for config in 0..n_configs {
+        for &strategy in &spec.strategies {
+            meta.push((config, strategy));
+        }
+    }
+    let ctrls = meta.iter().map(|_| RunCtrl::default()).collect();
+    (meta, ctrls)
+}
+
+/// Shared dispatch tail for both race forms.
+fn dispatch_race(
+    n_runs: usize,
+    ctrls: &[RunCtrl],
+    meta: &[(usize, Strategy)],
+    spec: &RaceSpec,
+    run_batch: impl FnOnce(&TreeCvExecutor, &OnResult<'_>) -> Vec<RunOutcome>,
+) -> Result<RaceOutcome> {
+    let timer = Timer::start();
+    let engine = TreeCvExecutor::with_threads_knob(
+        spec.sweep.strategies[0],
+        spec.sweep.ordering,
+        spec.sweep.threads,
+    );
+    let threads_used = engine.threads.min(n_runs * spec.sweep.k);
+    let boundaries = round_boundaries(spec.sweep.repetitions, spec.rounds);
+    let controller = Controller::new(ctrls, meta, &boundaries, spec.sweep.repetitions, spec.alpha);
+    let record = |i: usize, out: &RunOutcome| controller.record(i, out);
+    let outcomes = run_batch(&engine, &record);
+    controller.finish(outcomes, timer.elapsed(), threads_used, engine.pool_spawns())
+}
+
+/// Race a single-family grid: same batch construction (folds, seeds,
+/// canonical run order) as [`super::sweep::run_sweep`], dispatched
+/// through the executor's cancellation layer with the sequential
+/// elimination test deciding at each round boundary.
+pub fn run_race<L>(learners: &[L], data: &Dataset, spec: &RaceSpec) -> Result<RaceOutcome>
+where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    validate(learners.len(), data, &spec.sweep)?;
+    validate_race(spec)?;
+    let folds = repetition_folds(data.n, &spec.sweep);
+    let (meta, ctrls) = cell_axes(learners.len(), &spec.sweep);
+    let reps = spec.sweep.repetitions;
+    let mut idx = 0;
+    let runs = build_runs(learners.len(), &spec.sweep, &folds, |c, folds, seed, strategy| {
+        let ctrl = ctrls[idx / reps].clone();
+        idx += 1;
+        RunSpec { learner: &learners[c], folds, seed, strategy, folded: None, ctrl }
+    });
+    dispatch_race(runs.len(), &ctrls, &meta, spec, |engine, record| {
+        engine.run_many_outcomes(data, &runs, Some(record))
+    })
+}
+
+/// Race a **heterogeneous** learner axis (the model-selection workload):
+/// the erased counterpart of [`run_race`], batch-constructed exactly as
+/// [`super::sweep::run_sweep_erased`].
+pub fn run_race_erased(
+    learners: &[&dyn ErasedLearner],
+    data: &Dataset,
+    spec: &RaceSpec,
+) -> Result<RaceOutcome> {
+    validate(learners.len(), data, &spec.sweep)?;
+    validate_race(spec)?;
+    let folds = repetition_folds(data.n, &spec.sweep);
+    let (meta, ctrls) = cell_axes(learners.len(), &spec.sweep);
+    let reps = spec.sweep.repetitions;
+    let mut idx = 0;
+    let runs = build_runs(learners.len(), &spec.sweep, &folds, |c, folds, seed, strategy| {
+        let ctrl = ctrls[idx / reps].clone();
+        idx += 1;
+        ErasedRunSpec { learner: learners[c], folds, seed, strategy, folded: None, ctrl }
+    });
+    dispatch_race(runs.len(), &ctrls, &meta, spec, |engine, record| {
+        engine.run_many_erased_outcomes(data, &runs, Some(record))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::Ordering;
+    use crate::cv::sweep::run_sweep;
+    use crate::data::synth::SyntheticMixture1d;
+    use crate::learner::histdensity::HistogramDensity;
+
+    fn race_spec(threads: usize, rounds: usize, alpha: f64) -> RaceSpec {
+        RaceSpec {
+            sweep: SweepSpec {
+                ordering: Ordering::Fixed,
+                strategies: vec![Strategy::Copy],
+                k: 6,
+                repetitions: 8,
+                seed: 21,
+                threads,
+            },
+            rounds,
+            alpha,
+        }
+    }
+
+    /// A grid with one clearly dominated config: far too few histogram
+    /// bins loses on (essentially) every partitioning.
+    fn graded_learners() -> Vec<HistogramDensity> {
+        vec![
+            HistogramDensity::new(-8.0, 8.0, 64),
+            HistogramDensity::new(-8.0, 8.0, 48),
+            HistogramDensity::new(-8.0, 8.0, 2),
+        ]
+    }
+
+    #[test]
+    fn boundaries_shape() {
+        assert_eq!(round_boundaries(8, 4), vec![2, 4, 6, 8]);
+        assert_eq!(round_boundaries(8, 1), vec![8]);
+        assert_eq!(round_boundaries(3, 4), vec![1, 2, 3]);
+        assert_eq!(round_boundaries(20, 3), vec![7, 14, 20]);
+        assert_eq!(round_boundaries(1, 5), vec![1]);
+    }
+
+    #[test]
+    fn sign_test_exact_values() {
+        // n = 4: P(W ≥ 4) = 1/16, P(W ≥ 3) = 5/16, P(W ≥ 0) = 1.
+        assert_eq!(sign_test_p(4, 4), 1.0 / 16.0);
+        assert_eq!(sign_test_p(3, 4), 5.0 / 16.0);
+        assert_eq!(sign_test_p(0, 4), 1.0);
+        assert_eq!(sign_test_p(0, 0), 1.0);
+        // p is always strictly positive, so alpha = 0 never eliminates.
+        assert!(sign_test_p(6, 6) > 0.0);
+    }
+
+    #[test]
+    fn alpha_zero_reproduces_exhaustive_sweep_bitwise() {
+        let data = SyntheticMixture1d::new(260, 150).generate();
+        let learners = graded_learners();
+        let spec = race_spec(3, 4, 0.0);
+        let race = run_race(&learners, &data, &spec).unwrap();
+        let sweep = run_sweep(&learners, &data, &spec.sweep).unwrap();
+        assert_eq!(race.cells.len(), sweep.cells.len());
+        assert_eq!(race.runs_cancelled, 0);
+        assert_eq!(race.runs_completed, race.runs_scheduled);
+        for (rc, sc) in race.cells.iter().zip(&sweep.cells) {
+            assert_eq!(rc.eliminated_round, None);
+            assert_eq!(rc.reps_used, 8);
+            assert_eq!(rc.mean.to_bits(), sc.mean.to_bits());
+            assert_eq!(rc.std.to_bits(), sc.std.to_bits());
+            for (a, b) in rc.runs.iter().zip(&sc.runs) {
+                assert_eq!(a.per_fold, b.per_fold);
+                assert_eq!(a.ops.points_updated, b.ops.points_updated);
+            }
+        }
+    }
+
+    #[test]
+    fn dominated_config_is_eliminated_and_trace_is_deterministic() {
+        let data = SyntheticMixture1d::new(260, 151).generate();
+        let learners = graded_learners();
+        // alpha = 0.3 > 1/4 = P(W ≥ 2 | n = 2): a clean sweep of the
+        // first boundary's 2 repetitions is already significant.
+        let spec = race_spec(1, 4, 0.3);
+        let a = run_race(&learners, &data, &spec).unwrap();
+        assert_eq!(
+            a.cells[2].eliminated_round,
+            Some(0),
+            "dominated config must fall at the first boundary: {:?}",
+            a.trace.rows
+        );
+        assert_eq!(a.cells[2].reps_used, 2);
+        assert!(a.cells[0].eliminated_round.is_none() || a.cells[1].eliminated_round.is_none());
+        // threads = 1 admits cells in canonical order, so by the time the
+        // last cell's prefix triggers round 0 the others already finished
+        // all 8 repetitions — the loser's remaining 6 runs are cancelled.
+        assert_eq!(a.runs_cancelled, 6);
+        assert!(a.tasks_cancelled > 0);
+        // Same seed ⇒ identical trace, whatever the worker count.
+        for threads in [2usize, 8] {
+            let b = run_race(&learners, &data, &race_spec(threads, 4, 0.3)).unwrap();
+            assert_eq!(a.trace, b.trace, "threads={threads}");
+        }
+        let c = run_race(&learners, &data, &spec).unwrap();
+        assert_eq!(a.trace, c.trace, "re-run");
+        // Eliminated aggregates count exactly the decision prefix.
+        for res in &a.cells[2].runs {
+            assert!(res.estimate.is_finite());
+        }
+        assert_eq!(a.cells[2].runs.len(), 2);
+    }
+
+    #[test]
+    fn single_cell_race_never_eliminates() {
+        let data = SyntheticMixture1d::new(120, 152).generate();
+        let learners = vec![HistogramDensity::new(-8.0, 8.0, 16)];
+        let out = run_race(&learners, &data, &race_spec(2, 3, 0.5)).unwrap();
+        assert_eq!(out.cells.len(), 1);
+        assert_eq!(out.cells[0].eliminated_round, None);
+        assert_eq!(out.runs_cancelled, 0);
+        // One trace row per round, all incumbent rows.
+        assert!(out.trace.rows.iter().all(|r| r.p_value == 1.0 && !r.eliminated));
+        assert_eq!(out.trace.rows.len(), out.trace.boundaries.len());
+    }
+
+    #[test]
+    fn rejects_bad_racing_knobs() {
+        let data = SyntheticMixture1d::new(60, 153).generate();
+        let learners = vec![HistogramDensity::new(-8.0, 8.0, 16)];
+        let mut spec = race_spec(1, 0, 0.05);
+        assert!(run_race(&learners, &data, &spec).is_err());
+        spec.rounds = 2;
+        spec.alpha = -0.1;
+        assert!(run_race(&learners, &data, &spec).is_err());
+        spec.alpha = 1.5;
+        assert!(run_race(&learners, &data, &spec).is_err());
+        spec.alpha = f64::NAN;
+        assert!(run_race(&learners, &data, &spec).is_err());
+    }
+}

@@ -10,7 +10,7 @@
 //! naively. The struct also reports the across-partitioning spread, which
 //! is exactly the ± column of the paper's Table 2.
 
-use super::executor::{RunSpec, TreeCvExecutor};
+use super::executor::{RunCtrl, RunSpec, TreeCvExecutor};
 use super::folds::{Folds, Ordering};
 use super::standard::StandardCv;
 use super::stats::repetition_fold_seed;
@@ -81,6 +81,10 @@ impl RepeatedCv {
                 let folds: Vec<Folds> = (0..self.partitionings)
                     .map(|r| Folds::new(data.n, k, rep_seed(r)))
                     .collect();
+                // One shared control block: a partitioning that fails
+                // mid-batch cancels its siblings' outstanding tree tasks
+                // instead of letting the batch run to completion first.
+                let batch_ctrl = RunCtrl::new();
                 let specs: Vec<RunSpec<'_, L>> = folds
                     .iter()
                     .enumerate()
@@ -90,6 +94,7 @@ impl RepeatedCv {
                         seed: rep_seed(r) ^ 0x5EED,
                         strategy,
                         folded: None,
+                        ctrl: batch_ctrl.clone(),
                     })
                     .collect();
                 TreeCvExecutor::with_threads_knob(strategy, self.ordering, self.threads)

@@ -5,7 +5,7 @@
 //! permutations), runs an engine, and the harness accumulates mean ± std
 //! of the resulting estimates plus aggregate work counters.
 
-use super::executor::{RunSpec, TreeCvExecutor};
+use super::executor::{RunCtrl, RunSpec, TreeCvExecutor};
 use super::folds::{Folds, Ordering};
 use super::standard::StandardCv;
 use super::treecv::TreeCv;
@@ -114,6 +114,12 @@ where
             let folds: Vec<Folds> = (0..spec.repetitions)
                 .map(|r| Folds::new(data.n, spec.k, repetition_fold_seed(spec.seed, r)))
                 .collect();
+            // All repetitions share ONE control block: a repetition that
+            // fails mid-batch cancels its siblings' outstanding tree
+            // tasks (fast wind-down) instead of running the batch to
+            // completion before the failure surfaces. `run_many`
+            // re-panics with the original failure either way.
+            let batch_ctrl = RunCtrl::new();
             let runs: Vec<RunSpec<'_, L>> = folds
                 .iter()
                 .enumerate()
@@ -123,6 +129,7 @@ where
                     seed: repetition_engine_seed(spec.seed, r),
                     strategy: spec.strategy,
                     folded: None,
+                    ctrl: batch_ctrl.clone(),
                 })
                 .collect();
             TreeCvExecutor::with_threads_knob(spec.strategy, spec.ordering, spec.threads)

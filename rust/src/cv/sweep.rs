@@ -34,8 +34,15 @@
 //! that configuration alone through the executor (or the
 //! [`super::parallel::ParallelTreeCv`] facade) at the same `threads`
 //! setting — `tests/integration_sweep.rs` is the battery.
+//!
+//! **Exhaustive vs racing.** This module always runs every cell to
+//! completion (the `--no-race` behavior). [`super::race`] layers a
+//! sequential-elimination scheduler on the same batch construction —
+//! shared `validate`/`repetition_folds`/`build_runs` helpers, identical
+//! canonical run order — so a race with `alpha = 0` (never eliminate)
+//! reproduces this module's cells bit for bit.
 
-use super::executor::{ErasedRunSpec, RunSpec, TreeCvExecutor};
+use super::executor::{ErasedRunSpec, RunCtrl, RunSpec, TreeCvExecutor};
 use super::folds::{Folds, Ordering};
 use super::stats::{repetition_engine_seed, repetition_fold_seed};
 use super::{CvResult, Strategy};
@@ -108,8 +115,9 @@ pub struct SweepOutcome {
     pub pool_spawns: u64,
 }
 
-/// Shared validation for both sweep forms.
-fn validate(n_configs: usize, data: &Dataset, spec: &SweepSpec) -> Result<()> {
+/// Shared validation for both sweep forms (and the racing scheduler,
+/// [`super::race`], which layers its own knobs on top).
+pub(crate) fn validate(n_configs: usize, data: &Dataset, spec: &SweepSpec) -> Result<()> {
     if n_configs == 0 {
         bail!("sweep needs at least one learner config");
     }
@@ -127,7 +135,7 @@ fn validate(n_configs: usize, data: &Dataset, spec: &SweepSpec) -> Result<()> {
 
 /// One fold assignment per repetition, shared by every config and
 /// strategy, derived exactly as the repetition harness derives it.
-fn repetition_folds(n: usize, spec: &SweepSpec) -> Vec<Folds> {
+pub(crate) fn repetition_folds(n: usize, spec: &SweepSpec) -> Vec<Folds> {
     (0..spec.repetitions)
         .map(|r| Folds::new(n, spec.k, repetition_fold_seed(spec.seed, r)))
         .collect()
@@ -164,7 +172,7 @@ fn collect_cells(results: Vec<CvResult>, n_configs: usize, spec: &SweepSpec) -> 
 /// assume; `make` constructs one run from its `(config, folds, seed,
 /// strategy)` cell. One implementation for both spec types so the
 /// generic and erased entry points cannot drift.
-fn build_runs<'a, T>(
+pub(crate) fn build_runs<'a, T>(
     n_configs: usize,
     spec: &SweepSpec,
     folds: &'a [Folds],
@@ -219,6 +227,7 @@ where
         seed,
         strategy,
         folded: None,
+        ctrl: RunCtrl::default(),
     });
     Ok(dispatch_batch(learners.len(), runs.len(), spec, |engine| {
         engine.run_many(data, &runs)
@@ -244,6 +253,7 @@ pub fn run_sweep_erased(
             seed,
             strategy,
             folded: None,
+            ctrl: RunCtrl::default(),
         });
     Ok(dispatch_batch(learners.len(), runs.len(), spec, |engine| {
         engine.run_many_erased(data, &runs)

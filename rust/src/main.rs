@@ -64,6 +64,18 @@ COMMANDS
              --sweep lambda=1e-3,1e-4,1e-5   (lsqsgd: alpha=...)
              --k 10  --n 20000  --reps 20  --seed 42
              --threads 0          pool size (0 = all cores)
+             --race               race the grid: a sequential sign test
+                                  eliminates losing values at round
+                                  boundaries and cancels their remaining
+                                  runs; prints ranked survivors, the
+                                  elimination trace and work-saved
+                                  counters. Deterministic per seed;
+                                  --alpha 0 reproduces the exhaustive
+                                  table bit for bit.
+             --rounds 4           decision rounds of the race
+             --alpha 0.05         sign-test significance level
+             --no-race            force the exhaustive sweep (overrides a
+                                  config file's `race = true`)
              --randomized --save-revert --json --config FILE
   select     Model selection across learner FAMILIES: every (learner x
              repetition) TreeCV run batches through ONE pooled executor;
@@ -289,7 +301,8 @@ fn main() -> Result<()> {
             print!("{}", paper::grid_search(n, k, &lls, seed)?);
         }
         "sweep" => {
-            let args = Args::parse(rest, &["randomized", "save-revert", "json"])?;
+            let args =
+                Args::parse(rest, &["randomized", "save-revert", "json", "race", "no-race"])?;
             let mut cfg = batch_cfg(&args)?;
             if let Some(t) = args.get("task") {
                 cfg.task = Task::parse(t)?;
@@ -297,11 +310,31 @@ fn main() -> Result<()> {
             if let Some(g) = args.get("sweep") {
                 cfg.sweep = Some(SweepGrid::parse(g)?);
             }
-            let report = coordinator::run_sweep(&cfg)?;
-            if args.has("json") {
-                println!("{}", report.to_json().render_pretty());
+            if args.has("race") && args.has("no-race") {
+                anyhow::bail!("--race and --no-race are mutually exclusive");
+            }
+            if args.has("race") {
+                cfg.race = true;
+            }
+            if args.has("no-race") {
+                cfg.race = false;
+            }
+            cfg.race_rounds = args.get_parse("rounds", cfg.race_rounds)?;
+            cfg.race_alpha = args.get_parse("alpha", cfg.race_alpha)?;
+            if cfg.race {
+                let report = coordinator::run_race_sweep(&cfg)?;
+                if args.has("json") {
+                    println!("{}", report.to_json().render_pretty());
+                } else {
+                    print!("{}", coordinator::format_race_table(&report));
+                }
             } else {
-                print!("{}", coordinator::format_sweep_table(&report));
+                let report = coordinator::run_sweep(&cfg)?;
+                if args.has("json") {
+                    println!("{}", report.to_json().render_pretty());
+                } else {
+                    print!("{}", coordinator::format_sweep_table(&report));
+                }
             }
         }
         "select" => {

@@ -178,6 +178,74 @@ impl ToJson for crate::coordinator::SweepReport {
     }
 }
 
+impl ToJson for crate::coordinator::RaceReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::str(self.task.name())),
+            ("n", Json::num(self.n as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("repetitions", Json::num(self.repetitions as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("alpha", Json::Num(self.alpha)),
+            ("threads", Json::num(self.threads as f64)),
+            ("pool_spawns", Json::num(self.pool_spawns as f64)),
+            ("total_wall_secs", Json::Num(self.total_wall_secs)),
+            ("runs_scheduled", Json::num(self.runs_scheduled as f64)),
+            ("runs_completed", Json::num(self.runs_completed as f64)),
+            ("runs_cancelled", Json::num(self.runs_cancelled as f64)),
+            ("tree_tasks_cancelled", Json::num(self.tree_tasks_cancelled as f64)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("param", Json::str(p.param.clone())),
+                                ("value", Json::Num(p.value)),
+                                ("strategy", Json::str(p.strategy.name())),
+                                ("mean", Json::Num(p.mean)),
+                                ("std", Json::Num(p.std)),
+                                ("reps_used", Json::num(p.reps_used as f64)),
+                                (
+                                    "eliminated_round",
+                                    match p.eliminated_round {
+                                        Some(r) => Json::num(r as f64),
+                                        None => Json::Null,
+                                    },
+                                ),
+                                ("ops", p.ops.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "trace",
+                Json::Arr(
+                    self.trace
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("round", Json::num(t.round as f64)),
+                                ("reps_used", Json::num(t.reps_used as f64)),
+                                ("param", Json::str(t.param.clone())),
+                                ("value", Json::Num(t.value)),
+                                ("strategy", Json::str(t.strategy.name())),
+                                ("mean", Json::Num(t.mean)),
+                                ("wins", Json::num(t.wins as f64)),
+                                ("n_eff", Json::num(t.n_eff as f64)),
+                                ("p_value", Json::Num(t.p_value)),
+                                ("eliminated", Json::Bool(t.eliminated)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 impl ToJson for crate::coordinator::SelectReport {
     fn to_json(&self) -> Json {
         Json::obj(vec![

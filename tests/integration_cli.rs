@@ -237,6 +237,71 @@ fn sweep_malformed_grid_exits_nonzero() {
     }
 }
 
+/// Drop the wall-clock token (the only legitimately nondeterministic
+/// field) so two sweep tables can be compared for equality.
+fn strip_wall(s: &str) -> String {
+    s.lines()
+        .map(|l| {
+            l.split_whitespace()
+                .filter(|t| !t.starts_with("total_wall="))
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// `--no-race` forces the exhaustive sweep: identical output (modulo
+/// wall-clock) to the same sweep with no racing flag at all — the
+/// escape hatch when a config file sets `race = true`. `--race
+/// --no-race` together is an error.
+#[test]
+fn sweep_no_race_is_the_exhaustive_sweep() {
+    let base = [
+        "sweep", "--task", "ridge", "--n", "160", "--k", "5", "--reps", "4", "--sweep",
+        "lambda=0.1,1.0", "--threads", "1", "--seed", "9",
+    ];
+    let plain = run_ok(&base);
+    assert!(plain.starts_with("sweep task=ridge"), "{plain}");
+    let mut no_race = base.to_vec();
+    no_race.push("--no-race");
+    assert_eq!(strip_wall(&plain), strip_wall(&run_ok(&no_race)));
+    let mut both = base.to_vec();
+    both.extend(["--race", "--no-race"]);
+    let out = repro().args(&both).output().unwrap();
+    assert!(!out.status.success(), "--race --no-race must be rejected");
+}
+
+/// `sweep --race` end to end on a dominated grid: the race header echoes
+/// the knobs, the work-saved line shows the scheduled/completed/cancelled
+/// split, survivors are ranked above the eliminated value, and the
+/// elimination trace renders with its decision column. The JSON form
+/// carries the same counters and trace.
+#[test]
+fn sweep_race_prints_trace_and_work_saved() {
+    let args = [
+        "sweep", "--task", "ridge", "--n", "160", "--k", "5", "--reps", "8", "--sweep",
+        "lambda=0.1,1000000.0", "--threads", "1", "--seed", "9", "--race", "--rounds", "4",
+        "--alpha", "0.5",
+    ];
+    let text = run_ok(&args);
+    assert!(text.starts_with("race task=ridge"), "{text}");
+    assert!(text.contains("rounds=4 alpha=0.5"), "{text}");
+    assert!(text.contains("work_saved: runs_scheduled=16"), "{text}");
+    assert!(text.contains("survived"), "{text}");
+    assert!(text.contains("out@r"), "{text}");
+    assert!(text.contains("trace:"), "{text}");
+    assert!(text.contains("eliminate"), "{text}");
+
+    let mut json_args = args.to_vec();
+    json_args.push("--json");
+    let json = run_ok(&json_args);
+    assert!(json.trim_start().starts_with('{'), "{json}");
+    assert!(json.contains("\"runs_cancelled\""), "{json}");
+    assert!(json.contains("\"trace\""), "{json}");
+    assert!(json.contains("\"eliminated_round\""), "{json}");
+}
+
 /// The acceptance criterion end to end: a heterogeneous `repro select`
 /// run batches ≥ 3 learner families through exactly ONE pool spawn
 /// (per-pool counter, echoed in the table header) and ranks them by mean

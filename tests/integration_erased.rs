@@ -9,7 +9,7 @@
 //! The XLA-backed learners run the same check when the PJRT runtime and
 //! AOT artifacts are present, and skip cleanly otherwise (stub builds).
 
-use treecv::cv::executor::{ErasedRunSpec, TreeCvExecutor};
+use treecv::cv::executor::{ErasedRunSpec, RunCtrl, TreeCvExecutor};
 use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::{CvResult, Strategy};
 use treecv::data::synth::{
@@ -203,6 +203,7 @@ fn heterogeneous_batch_bit_identical_to_generic_standalone() {
                 seed: 40 + i as u64,
                 strategy,
                 folded: None,
+                ctrl: RunCtrl::default(),
             })
             .collect();
         let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads);
@@ -247,6 +248,7 @@ fn heterogeneous_batch_is_run_twice_deterministic() {
             seed: i as u64,
             strategy: Strategy::Copy,
             folded: None,
+            ctrl: RunCtrl::default(),
         })
         .collect();
     let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 0, 6);

@@ -9,7 +9,7 @@
 //! `model_restores` carrying the rest. Seeded trials stand in for proptest
 //! (unavailable offline), mirroring `tests/integration_cv.rs`.
 
-use treecv::cv::executor::{snapshot_cutoff, TreeCvExecutor};
+use treecv::cv::executor::{snapshot_cutoff, RunCtrl, RunOutcome, RunSpec, TreeCvExecutor};
 use treecv::cv::folds::{Folds, Ordering};
 use treecv::cv::parallel::{ParallelTreeCv, ScopedForkTreeCv};
 use treecv::cv::treecv::TreeCv;
@@ -248,5 +248,183 @@ fn executor_copy_accounting_is_pool_size_independent() {
         assert_eq!(exe.ops.model_copies, (k - 1) as u64, "threads={threads}");
         assert_eq!(exe.ops.model_restores, 0, "threads={threads}");
         assert_eq!(exe.ops.evals, k as u64, "threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cancellation-path hardening: the executor's cancellation contract.
+// ---------------------------------------------------------------------------
+
+/// The batch a hardening test dispatches: four histogram-density runs over
+/// the same folds with distinct per-run seeds, each holding a clone of the
+/// caller's control block.
+fn batch_specs<'a>(
+    l: &'a HistogramDensity,
+    folds: &'a Folds,
+    ctrls: &'a [RunCtrl],
+) -> Vec<RunSpec<'a, HistogramDensity>> {
+    ctrls
+        .iter()
+        .enumerate()
+        .map(|(i, ctrl)| RunSpec {
+            learner: l,
+            folds,
+            seed: 70 + i as u64,
+            strategy: Strategy::Copy,
+            folded: None,
+            ctrl: ctrl.clone(),
+        })
+        .collect()
+}
+
+fn assert_same_result(want: &treecv::cv::CvResult, got: &treecv::cv::CvResult, ctx: &str) {
+    assert_eq!(want.per_fold, got.per_fold, "{ctx}: per_fold");
+    assert_eq!(want.estimate.to_bits(), got.estimate.to_bits(), "{ctx}: estimate");
+    assert_eq!(want.ops.points_updated, got.ops.points_updated, "{ctx}: points_updated");
+    assert_eq!(want.ops.model_copies, got.ops.model_copies, "{ctx}: model_copies");
+    assert_eq!(want.ops.evals, got.ops.evals, "{ctx}: evals");
+}
+
+/// A run whose token is cancelled before dispatch is dropped whole at the
+/// injector pop — zero leaves evaluated, every leaf reported dropped,
+/// exactly its root task counted — at EVERY worker count, while sibling
+/// runs complete bit-identically to the same specs in a cancellation-free
+/// batch. Cancelled runs report a distinct status, never a fabricated
+/// `CvResult` over a partial per-fold buffer.
+#[test]
+fn pre_cancelled_runs_drop_whole_and_siblings_are_unaffected() {
+    let n = 240;
+    let k = 8;
+    let data = SyntheticMixture1d::new(n, 601).generate();
+    let l = HistogramDensity::new(-8.0, 8.0, 32);
+    let folds = Folds::new(n, k, 602);
+    let standalone: Vec<_> = (0..4u64)
+        .map(|i| {
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 70 + i, 1).run(&l, &data, &folds)
+        })
+        .collect();
+    for threads in [1usize, 3, 8] {
+        let ctrls: Vec<RunCtrl> = (0..4).map(|_| RunCtrl::new()).collect();
+        ctrls[1].cancel();
+        ctrls[3].cancel();
+        let specs = batch_specs(&l, &folds, &ctrls);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads);
+        let outs = exe.run_many_outcomes(&data, &specs, None);
+        assert_eq!(outs.len(), 4, "threads={threads}");
+        for survivor in [0usize, 2] {
+            let res = outs[survivor]
+                .completed()
+                .unwrap_or_else(|| panic!("threads={threads}: run {survivor} must complete"));
+            assert_same_result(&standalone[survivor], res, &format!("threads={threads}"));
+        }
+        for loser in [1usize, 3] {
+            match &outs[loser] {
+                RunOutcome::Cancelled { leaves_done, leaves_dropped, tasks_dropped } => {
+                    assert_eq!(*leaves_done, 0, "threads={threads} run {loser}");
+                    assert_eq!(*leaves_dropped, k, "threads={threads} run {loser}");
+                    assert_eq!(*tasks_dropped, 1, "threads={threads} run {loser}");
+                }
+                other => panic!("threads={threads} run {loser}: expected Cancelled, got {other:?}"),
+            }
+            assert!(outs[loser].completed().is_none(), "no CvResult for a cancelled run");
+            assert!(outs[loser].is_cancelled(), "threads={threads} run {loser}");
+        }
+    }
+}
+
+/// Mid-flight cancellation from the incremental-delivery callback: the
+/// moment run 0's outcome lands, every sibling is cancelled. Scheduling
+/// decides how far the siblings got, so the invariants are the
+/// schedule-independent ones — run 0 completes bit-identically, and each
+/// sibling either completed (bit-identical) or was cancelled with its
+/// leaf ledger balancing exactly (`leaves_done + leaves_dropped == k`).
+/// With one worker the injector admits runs in order, so all three
+/// siblings must report Cancelled there.
+#[test]
+fn callback_cancellation_mid_flight_keeps_invariants() {
+    let n = 240;
+    let k = 8;
+    let data = SyntheticMixture1d::new(n, 603).generate();
+    let l = HistogramDensity::new(-8.0, 8.0, 32);
+    let folds = Folds::new(n, k, 604);
+    let standalone: Vec<_> = (0..4u64)
+        .map(|i| {
+            TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 70 + i, 1).run(&l, &data, &folds)
+        })
+        .collect();
+    for threads in [1usize, 3, 8] {
+        let ctrls: Vec<RunCtrl> = (0..4).map(|_| RunCtrl::new()).collect();
+        let specs = batch_specs(&l, &folds, &ctrls);
+        let on_result = |idx: usize, _out: &RunOutcome| {
+            if idx == 0 {
+                for c in &ctrls[1..] {
+                    c.cancel();
+                }
+            }
+        };
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads);
+        let outs = exe.run_many_outcomes(&data, &specs, Some(&on_result));
+        let res = outs[0].completed().expect("run 0 is never cancelled");
+        assert_same_result(&standalone[0], res, &format!("threads={threads} run 0"));
+        let mut cancelled = 0usize;
+        for (i, out) in outs.iter().enumerate().skip(1) {
+            match out {
+                RunOutcome::Completed(res) => {
+                    assert_same_result(&standalone[i], res, &format!("threads={threads} run {i}"));
+                }
+                RunOutcome::Cancelled { leaves_done, leaves_dropped, .. } => {
+                    cancelled += 1;
+                    assert_eq!(
+                        leaves_done + leaves_dropped,
+                        k,
+                        "threads={threads} run {i}: leaf ledger must balance"
+                    );
+                }
+                RunOutcome::Failed { error } => {
+                    panic!("threads={threads} run {i} failed: {error}")
+                }
+            }
+        }
+        if threads == 1 {
+            assert_eq!(cancelled, 3, "inline worker admits runs in order");
+        }
+    }
+}
+
+/// A batch with cancellations leaves the executor handle fully reusable:
+/// a subsequent cancellation-free `run_many` on the SAME handle is
+/// bit-identical to the same batch on a fresh handle (the per-batch
+/// buffer pool is torn down with the batch, and cancelled subtrees
+/// recycle their buffers through the same capped pool, so nothing leaks
+/// across batches), and the per-pool spawn counter keeps counting.
+#[test]
+fn pool_is_reusable_after_a_cancelled_batch() {
+    let n = 240;
+    let k = 8;
+    let data = SyntheticMixture1d::new(n, 605).generate();
+    let l = HistogramDensity::new(-8.0, 8.0, 32);
+    let folds = Folds::new(n, k, 606);
+    for threads in [1usize, 3, 8] {
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads);
+        // Batch 1: half the runs cancelled up front.
+        let ctrls: Vec<RunCtrl> = (0..4).map(|_| RunCtrl::new()).collect();
+        ctrls[0].cancel();
+        ctrls[2].cancel();
+        let specs = batch_specs(&l, &folds, &ctrls);
+        let outs = exe.run_many_outcomes(&data, &specs, None);
+        assert_eq!(outs.iter().filter(|o| o.is_cancelled()).count(), 2, "threads={threads}");
+        // Batch 2 on the same handle, nothing cancelled: must equal the
+        // identical batch on a fresh executor, bit for bit.
+        let clean: Vec<RunCtrl> = (0..4).map(|_| RunCtrl::new()).collect();
+        let again = exe.run_many(&data, &batch_specs(&l, &folds, &clean));
+        let fresh_ctrls: Vec<RunCtrl> = (0..4).map(|_| RunCtrl::new()).collect();
+        let fresh = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, threads)
+            .run_many(&data, &batch_specs(&l, &folds, &fresh_ctrls));
+        for (i, (a, b)) in fresh.iter().zip(&again).enumerate() {
+            assert_same_result(a, b, &format!("threads={threads} run {i} (reused pool)"));
+        }
+        // Two multi-worker batches → two pool spawns on the shared handle
+        // (inline single-worker batches spawn nothing).
+        assert_eq!(exe.pool_spawns(), 2 * u64::from(threads > 1), "threads={threads}");
     }
 }

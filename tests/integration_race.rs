@@ -1,0 +1,203 @@
+//! Deterministic-race battery (the racing scheduler's acceptance
+//! criteria): for a fixed seed the race's [`EliminationTrace`] and final
+//! per-cell aggregates must be identical across worker counts {1, 3, 8}
+//! and across re-runs — decisions are a pure function of the counted
+//! repetition prefix, never of scheduling. With `alpha = 0` the sign
+//! test can never reject, so the race must reproduce the exhaustive
+//! sweep bit for bit. And on a grid with a clearly dominated value, the
+//! coordinator's `RaceReport` must show real work saved: cancelled runs
+//! > 0, ranked survivors ahead of the eliminated value, and a trace that
+//! records the elimination.
+
+use treecv::config::ExperimentConfig;
+use treecv::coordinator::{format_race_table, run_race_sweep};
+use treecv::cv::folds::Ordering;
+use treecv::cv::race::{run_race, RaceOutcome, RaceSpec};
+use treecv::cv::sweep::{run_sweep, SweepSpec};
+use treecv::cv::Strategy;
+use treecv::data::synth::SyntheticMixture1d;
+use treecv::learner::histdensity::HistogramDensity;
+
+const WORKER_COUNTS: [usize; 3] = [1, 3, 8];
+
+fn race_spec(threads: usize, rounds: usize, alpha: f64) -> RaceSpec {
+    RaceSpec {
+        sweep: SweepSpec {
+            ordering: Ordering::Fixed,
+            strategies: vec![Strategy::Copy],
+            k: 6,
+            repetitions: 8,
+            seed: 33,
+            threads,
+        },
+        rounds,
+        alpha,
+    }
+}
+
+/// A grid with one clearly dominated configuration: a 2-bin histogram
+/// density loses to the 64- and 48-bin models on essentially every
+/// partitioning.
+fn graded_learners() -> Vec<HistogramDensity> {
+    vec![
+        HistogramDensity::new(-8.0, 8.0, 64),
+        HistogramDensity::new(-8.0, 8.0, 48),
+        HistogramDensity::new(-8.0, 8.0, 2),
+    ]
+}
+
+/// The schedule-independent summary of a race: the full decision trace
+/// plus each cell's aggregate, with float fields compared by bits.
+fn summary(out: &RaceOutcome) -> Vec<(usize, Option<usize>, usize, u64, u64)> {
+    out.cells
+        .iter()
+        .map(|c| (c.config, c.eliminated_round, c.reps_used, c.mean.to_bits(), c.std.to_bits()))
+        .collect()
+}
+
+/// Same seed ⇒ identical elimination trace AND final ranking inputs,
+/// across worker counts {1, 3, 8} and across two runs at the same count.
+/// Only the work-saved counters may differ with scheduling.
+#[test]
+fn race_trace_and_ranking_deterministic_across_workers_and_reruns() {
+    let data = SyntheticMixture1d::new(300, 77).generate();
+    let learners = graded_learners();
+    let baseline = run_race(&learners, &data, &race_spec(1, 4, 0.3)).unwrap();
+    assert!(
+        baseline.cells.iter().any(|c| c.eliminated_round.is_some()),
+        "the dominated config must actually be eliminated for this test to bite: {:?}",
+        baseline.trace.rows
+    );
+    for threads in WORKER_COUNTS {
+        let a = run_race(&learners, &data, &race_spec(threads, 4, 0.3)).unwrap();
+        let b = run_race(&learners, &data, &race_spec(threads, 4, 0.3)).unwrap();
+        assert_eq!(baseline.trace, a.trace, "threads={threads}");
+        assert_eq!(a.trace, b.trace, "threads={threads} (re-run)");
+        assert_eq!(summary(&baseline), summary(&a), "threads={threads}");
+        assert_eq!(summary(&a), summary(&b), "threads={threads} (re-run)");
+        // Per-run results of counted repetitions are bit-identical too.
+        for (x, y) in baseline.cells.iter().zip(&a.cells) {
+            assert_eq!(x.runs.len(), y.runs.len(), "threads={threads}");
+            for (rx, ry) in x.runs.iter().zip(&y.runs) {
+                assert_eq!(rx.per_fold, ry.per_fold, "threads={threads}");
+            }
+        }
+    }
+}
+
+/// `alpha = 0` never eliminates (the exact binomial upper tail is always
+/// strictly positive), so the race degenerates to the exhaustive sweep:
+/// same cells, same means and stds to the bit, same per-fold vectors and
+/// work counters, zero cancellations.
+#[test]
+fn alpha_zero_race_is_bitwise_identical_to_exhaustive_sweep() {
+    let data = SyntheticMixture1d::new(300, 78).generate();
+    let learners = graded_learners();
+    let spec = race_spec(3, 4, 0.0);
+    let race = run_race(&learners, &data, &spec).unwrap();
+    let sweep = run_sweep(&learners, &data, &spec.sweep).unwrap();
+    assert_eq!(race.runs_scheduled, 24);
+    assert_eq!(race.runs_completed, 24);
+    assert_eq!(race.runs_cancelled, 0);
+    assert_eq!(race.tasks_cancelled, 0);
+    assert_eq!(race.cells.len(), sweep.cells.len());
+    for (rc, sc) in race.cells.iter().zip(&sweep.cells) {
+        assert_eq!(rc.config, sc.config);
+        assert_eq!(rc.eliminated_round, None);
+        assert_eq!(rc.reps_used, 8);
+        assert_eq!(rc.mean.to_bits(), sc.mean.to_bits());
+        assert_eq!(rc.std.to_bits(), sc.std.to_bits());
+        assert_eq!(rc.runs.len(), sc.runs.len());
+        for (a, b) in rc.runs.iter().zip(&sc.runs) {
+            assert_eq!(a.per_fold, b.per_fold);
+            assert_eq!(a.estimate.to_bits(), b.estimate.to_bits());
+            assert_eq!(a.ops.points_updated, b.ops.points_updated);
+            assert_eq!(a.ops.model_copies, b.ops.model_copies);
+            assert_eq!(a.ops.evals, b.ops.evals);
+        }
+    }
+    // Every cell gets a decision row at every boundary, none eliminated.
+    assert_eq!(race.trace.boundaries, vec![2, 4, 6, 8]);
+    assert_eq!(race.trace.rows.len(), 4 * 3);
+    assert!(race.trace.rows.iter().all(|r| !r.eliminated));
+}
+
+/// The coordinator's racing mode on a dominated hyperparameter grid
+/// (`ridge` with a reasonable and an absurd regularizer): the
+/// `RaceReport` shows real work saved — cancelled runs > 0 — ranks the
+/// survivor ahead of the eliminated value, and the rendered table carries
+/// the work-saved and trace sections.
+#[test]
+fn dominated_grid_race_report_saves_work() {
+    let cfg = ExperimentConfig::parse(
+        "task = \"ridge\"\n\
+         n = 160\n\
+         ks = [5]\n\
+         repetitions = 8\n\
+         seed = 9\n\
+         threads = 1\n\
+         sweep = \"lambda=0.1,1000000.0\"\n\
+         race = true\n\
+         race_rounds = 4\n\
+         race_alpha = 0.5\n",
+    )
+    .unwrap();
+    assert!(cfg.race);
+    let report = run_race_sweep(&cfg).unwrap();
+    assert_eq!(report.rounds, 4);
+    assert_eq!(report.alpha, 0.5);
+    assert_eq!(report.runs_scheduled, 16);
+    assert_eq!(report.runs_completed + report.runs_cancelled, 16, "no run may fail");
+    assert!(report.runs_cancelled > 0, "the dominated value must have runs cancelled");
+    assert!(report.tree_tasks_cancelled > 0);
+    // Exactly one value is eliminated, and it is ranked after the
+    // survivor with a short repetition prefix.
+    assert_eq!(report.points.len(), 2);
+    assert_eq!(report.points[0].eliminated_round, None);
+    assert_eq!(report.points[0].reps_used, 8);
+    let loser = &report.points[1];
+    assert!(loser.eliminated_round.is_some());
+    assert!(loser.reps_used < 8, "a loser aggregates only its counted prefix");
+    // The trace records the elimination with a significant p-value.
+    let elim: Vec<_> = report.trace.iter().filter(|t| t.eliminated).collect();
+    assert_eq!(elim.len(), 1);
+    assert!(elim[0].p_value <= 0.5);
+    assert_eq!(elim[0].value, loser.value);
+    let table = format_race_table(&report);
+    assert!(table.contains("work_saved:"), "{table}");
+    assert!(table.contains("survived"), "{table}");
+    assert!(table.contains("out@r"), "{table}");
+    assert!(table.contains("trace:"), "{table}");
+}
+
+/// Raced and exhaustive coordinator paths agree at `alpha = 0`: same
+/// ranked values in the same order, means and stds equal to the bit —
+/// the `--no-race` escape hatch and the degenerate race are the same
+/// table.
+#[test]
+fn coordinator_alpha_zero_race_matches_exhaustive_report() {
+    let base = "task = \"ridge\"\n\
+                n = 140\n\
+                ks = [5]\n\
+                repetitions = 4\n\
+                seed = 11\n\
+                threads = 2\n\
+                sweep = \"lambda=0.01,0.1,1.0\"\n";
+    let exhaustive =
+        treecv::coordinator::run_sweep(&ExperimentConfig::parse(base).unwrap()).unwrap();
+    let raced = run_race_sweep(
+        &ExperimentConfig::parse(&format!(
+            "{base}race = true\nrace_rounds = 2\nrace_alpha = 0.0\n"
+        ))
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(raced.runs_cancelled, 0);
+    assert_eq!(raced.points.len(), exhaustive.points.len());
+    for (r, s) in raced.points.iter().zip(&exhaustive.points) {
+        assert_eq!(r.value, s.value, "ranking order must match the exhaustive table");
+        assert_eq!(r.mean.to_bits(), s.mean.to_bits());
+        assert_eq!(r.std.to_bits(), s.std.to_bits());
+        assert_eq!(r.eliminated_round, None);
+    }
+}
