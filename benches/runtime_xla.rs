@@ -48,7 +48,8 @@ fn main() {
         })
         .median();
     println!(
-        "update: xla {:.1} kpts/s vs rust {:.1} kpts/s ({:.1}x overhead — interpret-mode pallas + per-block FFI)",
+        "update: xla {:.1} kpts/s vs rust {:.1} kpts/s \
+         ({:.1}x overhead — interpret-mode pallas + per-block FFI)",
         n as f64 / x_upd / 1e3,
         n as f64 / r_upd / 1e3,
         x_upd / r_upd

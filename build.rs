@@ -12,6 +12,10 @@ fn main() {
     // Declare the custom cfg so check-cfg-aware toolchains don't warn;
     // older cargos ignore unknown instructions.
     println!("cargo:rustc-check-cfg=cfg(treecv_pjrt)");
+    // Model-check builds pass `--cfg treecv_model_check` via RUSTFLAGS to
+    // swap crate::sync onto the instrumented scheduler shim; declare the
+    // cfg so check-cfg toolchains accept it everywhere else.
+    println!("cargo:rustc-check-cfg=cfg(treecv_model_check)");
     println!("cargo:rerun-if-env-changed=TREECV_XLA_RUNTIME");
     let feature_on = std::env::var_os("CARGO_FEATURE_XLA").is_some();
     // Compare the value, not mere presence: TREECV_XLA_RUNTIME=0 must

@@ -19,7 +19,8 @@ fn main() {
     println!("distributed CV on a simulated cluster (n = {n}, 100µs / 10Gb/s network)");
     println!(
         "{:>4} | {:>11} | {:>12} | {:>10} | {:>13} | {:>12} | {:>12}",
-        "k", "model msgs", "2k·log2(2k)", "model MB", "naive data MB", "tree net(s)", "naive net(s)"
+        "k", "model msgs", "2k·log2(2k)", "model MB", "naive data MB", "tree net(s)",
+        "naive net(s)"
     );
     for k in [4usize, 8, 16, 32, 64, 128] {
         let folds = Folds::new(n, k, 13);
@@ -40,5 +41,7 @@ fn main() {
         assert!((tree.estimate - naive.estimate).abs() < 0.05);
     }
     println!();
-    println!("model messages grow ~ k·log k; naive data movement grows ~ n·k — the paper's claim.");
+    println!(
+        "model messages grow ~ k·log k; naive data movement grows ~ n·k — the paper's claim."
+    );
 }

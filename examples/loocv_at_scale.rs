@@ -51,7 +51,8 @@ fn main() {
     let ratio = std_res.wall.as_secs_f64() / tree.wall.as_secs_f64().max(1e-9);
     println!();
     println!(
-        "HEADLINE: TreeCV LOOCV at n={n} ran in {:.2}s — {:.1}x {} than standard LOOCV at n={n_std} ({:.2}s)",
+        "HEADLINE: TreeCV LOOCV at n={n} ran in {:.2}s — \
+         {:.1}x {} than standard LOOCV at n={n_std} ({:.2}s)",
         tree.wall.as_secs_f64(),
         ratio.max(1.0 / ratio),
         if ratio >= 1.0 { "faster" } else { "slower" },

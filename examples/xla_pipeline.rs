@@ -23,7 +23,8 @@ fn main() -> treecv::Result<()> {
     }
     let rt = PjrtRuntime::cpu()?;
     let manifest = Manifest::load_default()?;
-    println!("PJRT platform: {} — {} programs in manifest", rt.platform(), manifest.programs.len());
+    let n_programs = manifest.programs.len();
+    println!("PJRT platform: {} — {n_programs} programs in manifest", rt.platform());
 
     // --- PEGASOS task (covertype-like, d=54) -----------------------------
     let n = 4_096;

@@ -1,0 +1,638 @@
+//! Miniature models of the executor's three load-bearing concurrency
+//! protocols, built on the instrumented shim primitives so the
+//! deterministic scheduler can drive them through adversarial
+//! interleavings.
+//!
+//! Each model family carries a *bug* enum: `Correct` is the protocol as
+//! the real executor implements it (`cv/executor.rs`), and every other
+//! variant seeds one realistic defect. The model-check suite asserts both
+//! directions — the correct model survives every explored schedule, and
+//! every seeded bug is caught within the schedule budget. The second half
+//! is what proves the checker itself is live: a detector that has never
+//! seen a failure proves nothing.
+//!
+//! Explicit [`checkpoint`] calls mark the protocol-step boundaries.
+//! Under [`super::sched::Preemption::EveryOp`] they are redundant (every
+//! primitive op already yields); under
+//! [`super::sched::Preemption::ExplicitOnly`] they define the coarse
+//! action granularity that keeps bounded-exhaustive DFS tractable. They
+//! are placed exactly at the handshake windows the protocols exist to
+//! close (e.g. between a failed sweep and registration), so the seeded
+//! bugs stay reachable even at the coarse granularity.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::sched::Model;
+use super::shim::thread::{self, Thread};
+use super::shim::{checkpoint, AtomicBool, AtomicI64, AtomicUsize, Mutex};
+use std::sync::atomic::Ordering;
+
+// ---------------------------------------------------------------------------
+// Protocol 1a: register-before-sweep park/unpark handshake, faithful
+// producer-is-consumer miniature of the executor worker loop.
+// ---------------------------------------------------------------------------
+
+/// Seeded defects for [`ParkChainModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParkChainBug {
+    Correct,
+    /// Skip the done re-check between registering and parking: a worker
+    /// that registers after the final `wake_all` drained the parked list
+    /// sleeps forever.
+    SkipDoneRecheck,
+    /// Issue the completion `wake_all` *before* storing the done flag: a
+    /// woken worker can re-park before the flag is visible, after the
+    /// waker has already drained the list.
+    WakeThenStore,
+}
+
+/// A k-task serial chain (task i pushes task i+1 — the executor's
+/// serial-subtree shape) processed by `workers` symmetric workers using
+/// the executor's exact park protocol: sweep → done-check → register →
+/// verification sweep → done re-check → park.
+///
+/// Invariants: every task processed exactly once, and no deadlock (the
+/// scheduler reports lost wakeups as [`super::sched::Outcome::Deadlock`]).
+pub struct ParkChainModel {
+    k: u32,
+    workers: usize,
+    bug: ParkChainBug,
+    queue: Mutex<VecDeque<u32>>,
+    processed: Mutex<Vec<u32>>,
+    work_done: AtomicUsize,
+    done: AtomicBool,
+    parked: Mutex<Vec<(usize, Thread)>>,
+}
+
+pub fn park_chain(k: u32, workers: usize, bug: ParkChainBug) -> Arc<dyn Model> {
+    let mut queue = VecDeque::new();
+    queue.push_back(0);
+    Arc::new(ParkChainModel {
+        k,
+        workers,
+        bug,
+        queue: Mutex::new(queue),
+        processed: Mutex::new(vec![0; k as usize]),
+        work_done: AtomicUsize::new(0),
+        done: AtomicBool::new(false),
+        parked: Mutex::new(Vec::new()),
+    })
+}
+
+impl ParkChainModel {
+    fn unregister(&self, wid: usize) {
+        self.parked.lock().retain(|(w, _)| *w != wid);
+    }
+
+    fn wake_one(&self) {
+        let target = self.parked.lock().pop();
+        if let Some((_, t)) = target {
+            t.unpark();
+        }
+    }
+
+    fn wake_all(&self) {
+        let drained = std::mem::take(&mut *self.parked.lock());
+        for (_, t) in drained {
+            t.unpark();
+        }
+    }
+}
+
+impl Model for ParkChainModel {
+    fn n_threads(&self) -> usize {
+        self.workers
+    }
+
+    fn thread(&self, tid: usize) {
+        loop {
+            // Sweep.
+            let task = self.queue.lock().pop_front();
+            if let Some(i) = task {
+                checkpoint();
+                self.processed.lock()[i as usize] += 1;
+                if i + 1 < self.k {
+                    self.queue.lock().push_back(i + 1);
+                    self.wake_one();
+                }
+                let d = self.work_done.fetch_add(1, Ordering::AcqRel) + 1;
+                if d == self.k as usize {
+                    match self.bug {
+                        ParkChainBug::WakeThenStore => {
+                            self.wake_all();
+                            checkpoint();
+                            self.done.store(true, Ordering::Release);
+                        }
+                        _ => {
+                            self.done.store(true, Ordering::Release);
+                            checkpoint();
+                            self.wake_all();
+                        }
+                    }
+                }
+                continue;
+            }
+            if self.done.load(Ordering::Acquire) {
+                return;
+            }
+            // The window the handshake closes: work or done can arrive
+            // right here, before we register.
+            checkpoint();
+            self.parked.lock().push((tid, thread::current()));
+            checkpoint();
+            // Verification sweep: work pushed before we registered would
+            // otherwise be missed along with its wake.
+            if !self.queue.lock().is_empty() {
+                self.unregister(tid);
+                continue;
+            }
+            checkpoint();
+            if self.bug != ParkChainBug::SkipDoneRecheck && self.done.load(Ordering::Acquire) {
+                self.unregister(tid);
+                continue;
+            }
+            thread::park();
+            self.unregister(tid);
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let processed = self.processed.lock();
+        for (i, &n) in processed.iter().enumerate() {
+            if n != 1 {
+                return Err(format!("task {i} processed {n} times (want exactly 1)"));
+            }
+        }
+        let d = self.work_done.load(Ordering::Acquire);
+        if d != self.k as usize {
+            return Err(format!("work_done = {d}, want {}", self.k));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 1b: the same handshake against an *external* producer that
+// stops producing — the lost-wakeup litmus for the ROADMAP's streaming
+// direction, where pushers are not consumers and cannot sweep their own
+// work back up.
+// ---------------------------------------------------------------------------
+
+/// Seeded defects for [`HandoffModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HandoffBug {
+    Correct,
+    /// Park without the verification sweep after registering: an item
+    /// pushed (with its wake lost) just before registration strands the
+    /// consumer forever once the producer stops.
+    SkipVerifySweep,
+    /// Register *after* the sweep instead of before: the push+wake can
+    /// land in between, so neither the sweep nor the wake is seen.
+    RegisterAfterSweep,
+    /// Producer wakes before pushing: the woken consumer re-sweeps,
+    /// finds nothing, and re-parks before the item lands.
+    WakeBeforePush,
+}
+
+/// One producer (tid 0) pushes `k` items then exits; `consumers` workers
+/// drain them with the register/verify/park handshake. The consumer that
+/// processes the last item wakes all peers so everyone can observe
+/// completion.
+pub struct HandoffModel {
+    k: usize,
+    consumers: usize,
+    bug: HandoffBug,
+    queue: Mutex<VecDeque<u32>>,
+    consumed: AtomicUsize,
+    parked: Mutex<Vec<(usize, Thread)>>,
+}
+
+pub fn handoff(k: usize, consumers: usize, bug: HandoffBug) -> Arc<dyn Model> {
+    Arc::new(HandoffModel {
+        k,
+        consumers,
+        bug,
+        queue: Mutex::new(VecDeque::new()),
+        consumed: AtomicUsize::new(0),
+        parked: Mutex::new(Vec::new()),
+    })
+}
+
+impl HandoffModel {
+    fn unregister(&self, wid: usize) {
+        self.parked.lock().retain(|(w, _)| *w != wid);
+    }
+
+    fn wake_one(&self) {
+        let target = self.parked.lock().pop();
+        if let Some((_, t)) = target {
+            t.unpark();
+        }
+    }
+
+    fn wake_all(&self) {
+        let drained = std::mem::take(&mut *self.parked.lock());
+        for (_, t) in drained {
+            t.unpark();
+        }
+    }
+
+    fn producer(&self) {
+        for i in 0..self.k {
+            if self.bug == HandoffBug::WakeBeforePush {
+                self.wake_one();
+                checkpoint();
+                self.queue.lock().push_back(i as u32);
+            } else {
+                self.queue.lock().push_back(i as u32);
+                checkpoint();
+                self.wake_one();
+            }
+        }
+    }
+
+    fn consumer(&self, tid: usize) {
+        loop {
+            if self.consumed.load(Ordering::Acquire) == self.k {
+                return;
+            }
+            let item = self.queue.lock().pop_front();
+            if item.is_some() {
+                checkpoint();
+                let c = self.consumed.fetch_add(1, Ordering::AcqRel) + 1;
+                if c == self.k {
+                    self.wake_all();
+                }
+                continue;
+            }
+            // The pre-registration window: a push+wake landing here is
+            // exactly what the verification sweep must recover.
+            checkpoint();
+            if self.bug == HandoffBug::RegisterAfterSweep {
+                if !self.queue.lock().is_empty() {
+                    continue;
+                }
+                checkpoint();
+                self.parked.lock().push((tid, thread::current()));
+            } else {
+                self.parked.lock().push((tid, thread::current()));
+                checkpoint();
+                if self.bug != HandoffBug::SkipVerifySweep && !self.queue.lock().is_empty() {
+                    self.unregister(tid);
+                    continue;
+                }
+            }
+            checkpoint();
+            if self.consumed.load(Ordering::Acquire) == self.k {
+                self.unregister(tid);
+                continue;
+            }
+            thread::park();
+            self.unregister(tid);
+        }
+    }
+}
+
+impl Model for HandoffModel {
+    fn n_threads(&self) -> usize {
+        1 + self.consumers
+    }
+
+    fn thread(&self, tid: usize) {
+        if tid == 0 {
+            self.producer();
+        } else {
+            self.consumer(tid);
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let c = self.consumed.load(Ordering::Acquire);
+        if c != self.k {
+            return Err(format!("consumed {c} of {} items", self.k));
+        }
+        let q = self.queue.lock();
+        if !q.is_empty() {
+            return Err(format!("{} items stranded in queue", q.len()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 2: cancellation at pop/fork points — dropped-task accounting
+// and snapshot-buffer conservation, mirroring the executor's RunOutcome
+// bookkeeping over a binary range tree.
+// ---------------------------------------------------------------------------
+
+/// Seeded defects for [`CancelModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelBug {
+    Correct,
+    /// A leaf that observes cancellation after taking its snapshot buffer
+    /// bails out without returning the buffer to the pool.
+    LeakSnapshotOnCancel,
+    /// A cancelled pop drops the subtree without adding its leaves to the
+    /// dropped count — `leaves_done + leaves_dropped` no longer reaches k.
+    ForgetDropAccounting,
+    /// A cancelled fork pre-accounts the right half as dropped but still
+    /// pushes it, so the eventual pop accounts it a second time.
+    DoubleAccount,
+}
+
+/// `workers` workers process a binary range tree over `k` leaves; a
+/// canceller thread (tid 0) fires the token at a scheduler-chosen moment.
+/// Leaves take a buffer from a conservation-counted pool while working.
+///
+/// Invariants: `leaves_done + leaves_dropped == k` exactly (every leaf
+/// accounted once, whichever side of the cancel it lands on) and every
+/// buffer returned (`outstanding == 0`).
+pub struct CancelModel {
+    k: u32,
+    workers: usize,
+    bug: CancelBug,
+    cancel: AtomicBool,
+    queue: Mutex<Vec<(u32, u32)>>,
+    in_flight: AtomicUsize,
+    outstanding: AtomicUsize,
+    leaves_done: AtomicUsize,
+    leaves_dropped: AtomicUsize,
+    tasks_dropped: AtomicUsize,
+}
+
+pub fn cancel_tree(k: u32, workers: usize, bug: CancelBug) -> Arc<dyn Model> {
+    Arc::new(CancelModel {
+        k,
+        workers,
+        bug,
+        cancel: AtomicBool::new(false),
+        queue: Mutex::new(vec![(0, k)]),
+        in_flight: AtomicUsize::new(1),
+        outstanding: AtomicUsize::new(0),
+        leaves_done: AtomicUsize::new(0),
+        leaves_dropped: AtomicUsize::new(0),
+        tasks_dropped: AtomicUsize::new(0),
+    })
+}
+
+impl CancelModel {
+    /// Handle one popped range task, recursing left and forking right —
+    /// the executor's traversal shape, with its cancel checks at the pop
+    /// and fork points.
+    fn process(&self, lo: u32, hi: u32) {
+        checkpoint();
+        if self.cancel.load(Ordering::Acquire) {
+            // Pop-point cancellation: drop the whole subtree, accounted.
+            if self.bug != CancelBug::ForgetDropAccounting {
+                self.leaves_dropped.fetch_add((hi - lo) as usize, Ordering::AcqRel);
+            }
+            self.tasks_dropped.fetch_add(1, Ordering::AcqRel);
+            return;
+        }
+        if hi - lo == 1 {
+            // Leaf: take a snapshot buffer from the pool while working.
+            self.outstanding.fetch_add(1, Ordering::AcqRel);
+            checkpoint();
+            if self.bug == CancelBug::LeakSnapshotOnCancel && self.cancel.load(Ordering::Acquire)
+            {
+                self.leaves_dropped.fetch_add(1, Ordering::AcqRel);
+                return; // buffer never returned
+            }
+            self.leaves_done.fetch_add(1, Ordering::AcqRel);
+            self.outstanding.fetch_sub(1, Ordering::AcqRel);
+            return;
+        }
+        let mid = lo + (hi - lo) / 2;
+        if self.bug == CancelBug::DoubleAccount && self.cancel.load(Ordering::Acquire) {
+            self.leaves_dropped.fetch_add((hi - mid) as usize, Ordering::AcqRel);
+        }
+        // Fork: right half to the shared queue, recurse left.
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.queue.lock().push((mid, hi));
+        self.process(lo, mid);
+    }
+}
+
+impl Model for CancelModel {
+    fn n_threads(&self) -> usize {
+        1 + self.workers
+    }
+
+    fn thread(&self, tid: usize) {
+        if tid == 0 {
+            // Canceller: fire the token at a scheduler-chosen moment.
+            checkpoint();
+            self.cancel.store(true, Ordering::Release);
+            return;
+        }
+        loop {
+            if self.in_flight.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            let task = self.queue.lock().pop();
+            match task {
+                Some((lo, hi)) => {
+                    self.process(lo, hi);
+                    self.in_flight.fetch_sub(1, Ordering::AcqRel);
+                }
+                // A peer still owns an in-flight subtree; spin through a
+                // decision point until it forks or finishes.
+                None => checkpoint(),
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let done = self.leaves_done.load(Ordering::Acquire);
+        let dropped = self.leaves_dropped.load(Ordering::Acquire);
+        let outstanding = self.outstanding.load(Ordering::Acquire);
+        if outstanding != 0 {
+            return Err(format!("{outstanding} snapshot buffers never returned to the pool"));
+        }
+        if done + dropped != self.k as usize {
+            return Err(format!(
+                "leaf accounting off: done {done} + dropped {dropped} != k {}",
+                self.k
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 3: priority injector — admission order among equal priorities,
+// mirroring the executor's max-by-(priority, oldest-seq) injector pop.
+// ---------------------------------------------------------------------------
+
+/// Seeded defects for [`PriorityModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PriorityBug {
+    Correct,
+    /// Pop newest-first regardless of priority.
+    IgnorePriority,
+    /// Break priority ties newest-first (LIFO) instead of oldest-first.
+    LifoTies,
+}
+
+struct Injected {
+    seq: u64,
+    id: u32,
+    run: usize,
+}
+
+/// A pre-filled injector of items, each belonging to a run with a live
+/// priority cell; `workers` workers drain it concurrently, and (in the
+/// dynamic variant) a steerer thread re-prioritizes one run mid-drain,
+/// like `RunCtrl::set_priority` on a racing sweep.
+///
+/// The removal log is recorded under the injector lock, so "admission
+/// order" is well defined. Invariants: statically, removals come out
+/// exactly sorted by (priority desc, seq asc); dynamically, items of the
+/// same run still leave in seq order, whatever the re-prioritization
+/// timing.
+pub struct PriorityModel {
+    workers: usize,
+    bug: PriorityBug,
+    /// `Some(run, new_priority)` adds a steerer thread (tid 0).
+    steer: Option<(usize, i64)>,
+    run_priority: Vec<AtomicI64>,
+    injector: Mutex<Vec<Injected>>,
+    log: Mutex<Vec<u32>>,
+    /// Immutable copy of the admitted items for `check`:
+    /// (initial priority, seq, id, run).
+    spec: Vec<(i64, u64, u32, usize)>,
+}
+
+/// Static variant: fixed priorities, full sorted-order invariant.
+pub fn priority_static(
+    items: &[(i64, u32)], // (priority, id); seq = position
+    workers: usize,
+    bug: PriorityBug,
+) -> Arc<dyn Model> {
+    build_priority(items, workers, bug, None)
+}
+
+/// Dynamic variant: run 1's priority is bumped mid-drain by a steerer.
+pub fn priority_dynamic(
+    items: &[(i64, u32)],
+    workers: usize,
+    bug: PriorityBug,
+    bump_to: i64,
+) -> Arc<dyn Model> {
+    build_priority(items, workers, bug, Some((1, bump_to)))
+}
+
+fn build_priority(
+    items: &[(i64, u32)],
+    workers: usize,
+    bug: PriorityBug,
+    steer: Option<(usize, i64)>,
+) -> Arc<dyn Model> {
+    // One run per distinct starting priority, in order of appearance.
+    let mut prios: Vec<i64> = Vec::new();
+    let mut injector = Vec::new();
+    let mut spec = Vec::new();
+    for (seq, &(p, id)) in items.iter().enumerate() {
+        let run = match prios.iter().position(|&q| q == p) {
+            Some(r) => r,
+            None => {
+                prios.push(p);
+                prios.len() - 1
+            }
+        };
+        injector.push(Injected { seq: seq as u64, id, run });
+        spec.push((p, seq as u64, id, run));
+    }
+    Arc::new(PriorityModel {
+        workers,
+        bug,
+        steer,
+        run_priority: prios.into_iter().map(AtomicI64::new).collect(),
+        injector: Mutex::new(injector),
+        log: Mutex::new(Vec::new()),
+        spec,
+    })
+}
+
+impl PriorityModel {
+    fn pop(&self) -> bool {
+        let mut inj = self.injector.lock();
+        if inj.is_empty() {
+            return false;
+        }
+        let key = |it: &Injected| {
+            let p = self.run_priority[it.run].load(Ordering::Acquire);
+            match self.bug {
+                PriorityBug::Correct => (p, std::cmp::Reverse(it.seq)),
+                PriorityBug::LifoTies => (p, std::cmp::Reverse(u64::MAX - it.seq)),
+                PriorityBug::IgnorePriority => (0, std::cmp::Reverse(u64::MAX - it.seq)),
+            }
+        };
+        let idx = (0..inj.len())
+            .max_by_key(|&i| key(&inj[i]))
+            // invariant: inj is non-empty, checked above.
+            .expect("non-empty injector");
+        let it = inj.swap_remove(idx);
+        self.log.lock().push(it.id);
+        true
+    }
+}
+
+impl Model for PriorityModel {
+    fn n_threads(&self) -> usize {
+        usize::from(self.steer.is_some()) + self.workers
+    }
+
+    fn thread(&self, tid: usize) {
+        if let Some((run, bump)) = self.steer {
+            if tid == 0 {
+                checkpoint();
+                self.run_priority[run].store(bump, Ordering::Release);
+                return;
+            }
+        }
+        while self.pop() {
+            checkpoint();
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let log = self.log.lock();
+        if log.len() != self.spec.len() {
+            return Err(format!("popped {} of {} items", log.len(), self.spec.len()));
+        }
+        if self.steer.is_none() {
+            // Static priorities: each pop takes the max of what remains,
+            // so the removal log must be *exactly* the sorted order.
+            let mut expected: Vec<(i64, u64, u32)> =
+                self.spec.iter().map(|&(p, seq, id, _)| (p, seq, id)).collect();
+            expected.sort_by_key(|&(p, seq, _)| (std::cmp::Reverse(p), seq));
+            let want: Vec<u32> = expected.iter().map(|&(_, _, id)| id).collect();
+            if *log != want {
+                return Err(format!("admission order {log:?}, want {want:?}"));
+            }
+            return Ok(());
+        }
+        // Dynamic re-prioritization: the global order depends on the
+        // steerer's timing, but items of one run always share a priority
+        // cell, so within a run the seq tie-break must hold whatever the
+        // bump timing — FIFO admission per run.
+        for run in 0..self.run_priority.len() {
+            let run_ids: Vec<u32> = self
+                .spec
+                .iter()
+                .filter(|&&(_, _, _, r)| r == run)
+                .map(|&(_, _, id, _)| id)
+                .collect();
+            let popped: Vec<u32> =
+                log.iter().copied().filter(|id| run_ids.contains(id)).collect();
+            if popped != run_ids {
+                return Err(format!(
+                    "run {run} admitted out of seq order: {popped:?}, want {run_ids:?}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}

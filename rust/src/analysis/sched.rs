@@ -1,0 +1,683 @@
+//! Deterministic interleaving scheduler for model checking.
+//!
+//! Real OS threads are serialized under a single "baton": exactly one
+//! vthread runs at a time, and at every *decision point* (an instrumented
+//! primitive op in [`Preemption::EveryOp`] mode, or an explicit
+//! [`crate::analysis::shim::checkpoint`] / blocking op in
+//! [`Preemption::ExplicitOnly`] mode) the scheduler consults a [`Chooser`]
+//! to pick which runnable vthread goes next. Because every scheduler
+//! interaction happens under one lock and the models themselves are
+//! deterministic, the whole execution is a pure function of the chooser's
+//! decisions — which is what makes seed replay and stateless DFS work.
+//!
+//! The design follows the shuttle/loom family of schedulers (PAPERS.md has
+//! the background; this is the pragmatic randomized-plus-bounded-DFS end
+//! of that spectrum, not a full partial-order-reduction checker).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
+
+use crate::rng::Rng;
+
+/// A concurrent protocol model: `n_threads` bodies sharing state through
+/// the instrumented primitives in [`crate::analysis::shim`], plus a
+/// final-state invariant checked after every thread has finished.
+///
+/// Bodies signal mid-run invariant violations via [`violate`]; liveness
+/// failures surface as [`Outcome::Deadlock`] (no runnable thread) or
+/// [`Outcome::TooLong`] (decision budget exhausted, i.e. livelock).
+pub trait Model: Send + Sync {
+    fn n_threads(&self) -> usize;
+    fn thread(&self, tid: usize);
+    fn check(&self) -> Result<(), String>;
+}
+
+/// Panic payload for a model-invariant violation (suppressed by the quiet
+/// panic hook; converted to [`Outcome::Violation`] by the harness).
+pub struct ModelViolation(pub String);
+
+/// Panic payload used to unwind vthreads out of an aborted schedule
+/// (deadlock detected, violation elsewhere, budget exhausted). Never
+/// reported as a failure itself.
+pub struct ScheduleAborted;
+
+/// Abort the current schedule with a model-invariant violation.
+pub fn violate(msg: impl Into<String>) -> ! {
+    std::panic::panic_any(ModelViolation(msg.into()))
+}
+
+/// Fail the schedule unless `cond` holds.
+pub fn model_assert(cond: bool, msg: &str) {
+    if !cond {
+        violate(msg);
+    }
+}
+
+/// Where decision points occur.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preemption {
+    /// Every instrumented primitive op yields — maximal interleaving,
+    /// for randomized exploration.
+    EveryOp,
+    /// Only explicit `checkpoint()` calls and blocking ops yield —
+    /// coarse action granularity that keeps DFS state spaces tractable.
+    ExplicitOnly,
+}
+
+/// Picks the next runnable vthread (and the condvar waiter for
+/// `notify_one`) at each decision point.
+pub trait Chooser: Send {
+    /// Return an index in `0..n`. `n >= 1`.
+    fn choose(&mut self, n: usize) -> usize;
+}
+
+/// Seeded pseudo-random chooser; same seed → same schedule.
+pub struct RandomChooser {
+    rng: Rng,
+}
+
+impl RandomChooser {
+    pub fn new(seed: u64) -> Self {
+        // Tagged derivation keeps scheduler randomness independent of any
+        // model-internal use of the same seed.
+        Self { rng: Rng::derive(seed, 0x5eed_5c4e_d001) }
+    }
+}
+
+impl Chooser for RandomChooser {
+    fn choose(&mut self, n: usize) -> usize {
+        if n <= 1 {
+            0
+        } else {
+            self.rng.below(n as u64) as usize
+        }
+    }
+}
+
+/// Replays a recorded decision prefix, then always takes choice 0 —
+/// the workhorse of stateless DFS and of exact trace replay.
+pub struct PrefixChooser {
+    prefix: Vec<usize>,
+    pos: usize,
+}
+
+impl PrefixChooser {
+    pub fn new(prefix: Vec<usize>) -> Self {
+        Self { prefix, pos: 0 }
+    }
+}
+
+impl Chooser for PrefixChooser {
+    fn choose(&mut self, n: usize) -> usize {
+        let i = if self.pos < self.prefix.len() {
+            self.prefix[self.pos].min(n - 1)
+        } else {
+            0
+        };
+        self.pos += 1;
+        i
+    }
+}
+
+/// One recorded decision: `idx` of `n` candidates, resolving to vthread
+/// (or condvar-waiter) `tid`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Choice {
+    pub idx: usize,
+    pub n: usize,
+    pub tid: usize,
+}
+
+/// Verdict of one explored schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Ok,
+    /// No runnable vthread, but not all finished: lost wakeup or lock
+    /// cycle. Carries a snapshot of who was blocked on what.
+    Deadlock { blocked: Vec<(usize, String)> },
+    /// Decision budget exhausted — livelock or runaway model.
+    TooLong { steps: usize },
+    /// A model invariant failed (mid-run `violate` or final `check`),
+    /// or a vthread panicked outright.
+    Violation { message: String },
+}
+
+impl Outcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Outcome::Ok)
+    }
+}
+
+/// Result of running one schedule: the verdict plus the full decision
+/// trace (replayable via [`PrefixChooser`]).
+#[derive(Clone, Debug)]
+pub struct ScheduleResult {
+    pub outcome: Outcome,
+    pub trace: Vec<Choice>,
+}
+
+/// Exploration knobs shared by the random and DFS drivers.
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreCfg {
+    pub preemption: Preemption,
+    /// Max decisions per schedule before declaring [`Outcome::TooLong`].
+    pub max_steps: usize,
+}
+
+impl Default for ExploreCfg {
+    fn default() -> Self {
+        Self { preemption: Preemption::EveryOp, max_steps: 20_000 }
+    }
+}
+
+/// What a vthread is blocked on. Addresses identify shim primitives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Block {
+    Park,
+    Mutex(usize),
+    Cond(usize),
+    Join(usize),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum VState {
+    Runnable,
+    Blocked(Block),
+    Finished,
+}
+
+struct SchedState {
+    vstates: Vec<VState>,
+    park_tokens: Vec<bool>,
+    current: Option<usize>,
+    /// Shim-mutex ownership, keyed by the primitive's address.
+    mutex_owner: HashMap<usize, usize>,
+    chooser: Box<dyn Chooser>,
+    trace: Vec<Choice>,
+    aborted: bool,
+    outcome: Option<Outcome>,
+    /// All vthreads finished (normally or via abort unwinding).
+    done: bool,
+    live: usize,
+}
+
+/// The shared scheduler core. Shim primitives reach it through the
+/// thread-local installed around each vthread body.
+pub struct SchedInner {
+    st: Mutex<SchedState>,
+    cv: Condvar,
+    mode: Preemption,
+    max_steps: usize,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<SchedInner>, usize)>> = RefCell::new(None);
+}
+
+/// The scheduler driving this OS thread, if any. `None` means shim
+/// primitives pass through to raw `std` behavior.
+pub(crate) fn current_sched() -> Option<(Arc<SchedInner>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+pub(crate) fn set_current(sched: Arc<SchedInner>, tid: usize) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((sched, tid)));
+}
+
+pub(crate) fn clear_current() {
+    CURRENT.with(|c| *c.borrow_mut() = None);
+}
+
+fn lock_poisonless<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // The scheduler lock is only ever held for short straight-line
+    // bookkeeping; a poisoned guard still holds consistent state because
+    // vthread panics unwind *outside* the critical sections below.
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+impl SchedInner {
+    fn wait_cv<'a>(&self, st: MutexGuard<'a, SchedState>) -> MutexGuard<'a, SchedState> {
+        match self.cv.wait(st) {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Abort the schedule: record `outcome` (first one wins), wake
+    /// everyone so blocked vthreads can unwind via [`ScheduleAborted`].
+    fn do_abort(&self, st: &mut SchedState, outcome: Outcome) {
+        if st.outcome.is_none() {
+            st.outcome = Some(outcome);
+        }
+        st.aborted = true;
+        st.current = None;
+        self.cv.notify_all();
+    }
+
+    /// Pick the next runnable vthread and hand it the baton. Called with
+    /// the caller's claim on the baton already relinquished (blocked,
+    /// finished, or about to re-contend).
+    fn schedule_next(&self, st: &mut SchedState) {
+        st.current = None;
+        if st.aborted {
+            return;
+        }
+        let runnable: Vec<usize> = (0..st.vstates.len())
+            .filter(|&t| st.vstates[t] == VState::Runnable)
+            .collect();
+        if runnable.is_empty() {
+            if st.live == 0 {
+                st.done = true;
+                self.cv.notify_all();
+            } else {
+                let blocked = st
+                    .vstates
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(t, v)| match v {
+                        VState::Blocked(b) => Some((t, format!("{b:?}"))),
+                        _ => None,
+                    })
+                    .collect();
+                self.do_abort(st, Outcome::Deadlock { blocked });
+            }
+            return;
+        }
+        let idx = st.chooser.choose(runnable.len());
+        let tid = runnable[idx];
+        st.trace.push(Choice { idx, n: runnable.len(), tid });
+        if st.trace.len() > self.max_steps {
+            self.do_abort(st, Outcome::TooLong { steps: st.trace.len() });
+            return;
+        }
+        st.current = Some(tid);
+        self.cv.notify_all();
+    }
+
+    /// Block until `me` holds the baton (runnable + chosen). Unwinds with
+    /// [`ScheduleAborted`] if the schedule is aborted meanwhile.
+    fn wait_turn<'a>(
+        &self,
+        me: usize,
+        mut st: MutexGuard<'a, SchedState>,
+    ) -> MutexGuard<'a, SchedState> {
+        loop {
+            if st.aborted {
+                drop(st);
+                std::panic::panic_any(ScheduleAborted);
+            }
+            if st.current == Some(me) && st.vstates[me] == VState::Runnable {
+                return st;
+            }
+            st = self.wait_cv(st);
+        }
+    }
+
+    /// Relinquish the baton, mark `me` blocked on `reason`, and return
+    /// once woken *and* rescheduled.
+    fn block_me<'a>(
+        &self,
+        me: usize,
+        reason: Block,
+        mut st: MutexGuard<'a, SchedState>,
+    ) -> MutexGuard<'a, SchedState> {
+        st.vstates[me] = VState::Blocked(reason);
+        self.schedule_next(&mut st);
+        self.wait_turn(me, st)
+    }
+
+    /// A decision point: offer the baton to any runnable vthread
+    /// (possibly `me` again).
+    pub(crate) fn yield_decision(&self, me: usize) {
+        let mut st = lock_poisonless(&self.st);
+        self.schedule_next(&mut st);
+        let _st = self.wait_turn(me, st);
+    }
+
+    /// Decision point only in [`Preemption::EveryOp`] mode — the per-op
+    /// hook used by the instrumented primitives.
+    pub(crate) fn maybe_yield(&self, me: usize) {
+        if self.mode == Preemption::EveryOp {
+            self.yield_decision(me);
+        }
+    }
+
+    pub(crate) fn park(&self, me: usize) {
+        let mut st = lock_poisonless(&self.st);
+        if st.park_tokens[me] {
+            st.park_tokens[me] = false;
+            // Consuming a banked token is still a decision point.
+            self.schedule_next(&mut st);
+            let _st = self.wait_turn(me, st);
+        } else {
+            let _st = self.block_me(me, Block::Park, st);
+        }
+    }
+
+    pub(crate) fn unpark(&self, target: usize) {
+        let mut st = lock_poisonless(&self.st);
+        match st.vstates[target] {
+            VState::Blocked(Block::Park) => st.vstates[target] = VState::Runnable,
+            VState::Finished => {}
+            // Matches std semantics: unpark of a non-parked thread banks
+            // one token that the next park consumes.
+            _ => st.park_tokens[target] = true,
+        }
+    }
+
+    pub(crate) fn mutex_lock(&self, me: usize, addr: usize) {
+        let mut st = lock_poisonless(&self.st);
+        loop {
+            if !st.mutex_owner.contains_key(&addr) {
+                st.mutex_owner.insert(addr, me);
+                return;
+            }
+            // Woken contenders re-check; the chooser decides who wins.
+            st = self.block_me(me, Block::Mutex(addr), st);
+        }
+    }
+
+    pub(crate) fn mutex_unlock(&self, _me: usize, addr: usize) {
+        let mut st = lock_poisonless(&self.st);
+        st.mutex_owner.remove(&addr);
+        Self::wake_blocked_on(&mut st, Block::Mutex(addr));
+    }
+
+    fn wake_blocked_on(st: &mut SchedState, reason: Block) {
+        for v in st.vstates.iter_mut() {
+            if *v == VState::Blocked(reason) {
+                *v = VState::Runnable;
+            }
+        }
+    }
+
+    pub(crate) fn cond_wait(&self, me: usize, mutex_addr: usize, cond_addr: usize) {
+        let mut st = lock_poisonless(&self.st);
+        // Atomically (under the scheduler lock) release the mutex and
+        // join the condvar's wait set.
+        st.mutex_owner.remove(&mutex_addr);
+        Self::wake_blocked_on(&mut st, Block::Mutex(mutex_addr));
+        st = self.block_me(me, Block::Cond(cond_addr), st);
+        // Notified: re-acquire the mutex before returning, like std.
+        loop {
+            if !st.mutex_owner.contains_key(&mutex_addr) {
+                st.mutex_owner.insert(mutex_addr, me);
+                return;
+            }
+            st = self.block_me(me, Block::Mutex(mutex_addr), st);
+        }
+    }
+
+    pub(crate) fn cond_notify(&self, _me: usize, cond_addr: usize, all: bool) {
+        let mut st = lock_poisonless(&self.st);
+        if all {
+            Self::wake_blocked_on(&mut st, Block::Cond(cond_addr));
+            return;
+        }
+        let waiters: Vec<usize> = (0..st.vstates.len())
+            .filter(|&t| st.vstates[t] == VState::Blocked(Block::Cond(cond_addr)))
+            .collect();
+        if waiters.is_empty() {
+            return;
+        }
+        // Which waiter `notify_one` wakes is itself nondeterministic —
+        // a chooser decision like any other.
+        let idx = st.chooser.choose(waiters.len());
+        let tid = waiters[idx];
+        st.trace.push(Choice { idx, n: waiters.len(), tid });
+        st.vstates[tid] = VState::Runnable;
+    }
+
+    /// Register a dynamically spawned vthread (shim scoped spawn) and
+    /// return its tid. The spawner keeps the baton; the new vthread waits
+    /// its first turn like any other.
+    pub(crate) fn register_vthread(&self) -> usize {
+        let mut st = lock_poisonless(&self.st);
+        let tid = st.vstates.len();
+        st.vstates.push(VState::Runnable);
+        st.park_tokens.push(false);
+        st.live += 1;
+        tid
+    }
+
+    pub(crate) fn join(&self, me: usize, target: usize) {
+        let mut st = lock_poisonless(&self.st);
+        if st.vstates[target] == VState::Finished {
+            return;
+        }
+        let _st = self.block_me(me, Block::Join(target), st);
+    }
+
+    /// First baton wait of a freshly spawned vthread.
+    pub(crate) fn wait_initial(&self, me: usize) {
+        let st = lock_poisonless(&self.st);
+        let _st = self.wait_turn(me, st);
+    }
+
+    pub(crate) fn finish_thread(
+        &self,
+        tid: usize,
+        panic_payload: Option<&(dyn std::any::Any + Send)>,
+    ) {
+        let mut st = lock_poisonless(&self.st);
+        st.vstates[tid] = VState::Finished;
+        st.live -= 1;
+        Self::wake_blocked_on(&mut st, Block::Join(tid));
+        if let Some(p) = panic_payload {
+            if p.is::<ScheduleAborted>() {
+                // Cooperative unwind out of an already-aborted schedule.
+            } else if let Some(v) = p.downcast_ref::<ModelViolation>() {
+                self.do_abort(&mut st, Outcome::Violation { message: v.0.clone() });
+            } else {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "vthread panicked (non-string payload)".into());
+                self.do_abort(&mut st, Outcome::Violation { message: format!("panic: {msg}") });
+            }
+        }
+        if st.aborted {
+            if st.live == 0 {
+                st.done = true;
+            }
+            self.cv.notify_all();
+        } else {
+            self.schedule_next(&mut st);
+        }
+    }
+}
+
+/// Suppress panic-hook noise for the two cooperative payloads; install
+/// once, chain to the previous hook for everything else.
+fn install_quiet_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let p = info.payload();
+            if p.is::<ScheduleAborted>() || p.is::<ModelViolation>() {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Run `model` once under `chooser`, returning the verdict and the
+/// replayable decision trace.
+pub fn run_schedule(
+    model: Arc<dyn Model>,
+    chooser: Box<dyn Chooser>,
+    cfg: &ExploreCfg,
+) -> ScheduleResult {
+    install_quiet_hook();
+    let n = model.n_threads();
+    let inner = Arc::new(SchedInner {
+        st: Mutex::new(SchedState {
+            vstates: vec![VState::Runnable; n],
+            park_tokens: vec![false; n],
+            current: None,
+            mutex_owner: HashMap::new(),
+            chooser,
+            trace: Vec::new(),
+            aborted: false,
+            outcome: None,
+            done: false,
+            live: n,
+        }),
+        cv: Condvar::new(),
+        mode: cfg.preemption,
+        max_steps: cfg.max_steps,
+    });
+    std::thread::scope(|s| {
+        for tid in 0..n {
+            let inner = Arc::clone(&inner);
+            let model = Arc::clone(&model);
+            s.spawn(move || {
+                set_current(Arc::clone(&inner), tid);
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    inner.wait_initial(tid);
+                    model.thread(tid);
+                }));
+                clear_current();
+                inner.finish_thread(tid, r.as_ref().err().map(|b| b.as_ref()));
+            });
+        }
+        let mut st = lock_poisonless(&inner.st);
+        inner.schedule_next(&mut st);
+        while !st.done {
+            st = inner.wait_cv(st);
+        }
+    });
+    let mut st = lock_poisonless(&inner.st);
+    let trace = std::mem::take(&mut st.trace);
+    let outcome = match st.outcome.take() {
+        Some(o) => o,
+        None => match model.check() {
+            Ok(()) => Outcome::Ok,
+            Err(message) => Outcome::Violation { message },
+        },
+    };
+    ScheduleResult { outcome, trace }
+}
+
+/// A failed schedule with everything needed to reproduce it: the seed
+/// (random exploration) and the exact decision trace (always).
+#[derive(Clone, Debug)]
+pub struct FailedSchedule {
+    pub seed: Option<u64>,
+    pub outcome: Outcome,
+    pub trace: Vec<Choice>,
+}
+
+/// Aggregate result of an exploration sweep.
+#[derive(Clone, Debug, Default)]
+pub struct ExplorationReport {
+    pub schedules: usize,
+    pub failures: Vec<FailedSchedule>,
+    /// DFS only: the whole bounded state space was enumerated.
+    pub exhausted: bool,
+}
+
+impl ExplorationReport {
+    pub fn all_ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Stop collecting after this many failing schedules — enough to
+/// diagnose, without flooding the report on a badly broken model.
+const MAX_FAILURES: usize = 3;
+
+/// Randomized exploration: one schedule per seed in `seeds`.
+pub fn explore_random<F>(
+    factory: F,
+    seeds: std::ops::Range<u64>,
+    cfg: &ExploreCfg,
+) -> ExplorationReport
+where
+    F: Fn() -> Arc<dyn Model>,
+{
+    let mut report = ExplorationReport::default();
+    for seed in seeds {
+        let r = run_schedule(factory(), Box::new(RandomChooser::new(seed)), cfg);
+        report.schedules += 1;
+        if !r.outcome.is_ok() {
+            report.failures.push(FailedSchedule {
+                seed: Some(seed),
+                outcome: r.outcome,
+                trace: r.trace,
+            });
+            if report.failures.len() >= MAX_FAILURES {
+                break;
+            }
+        }
+    }
+    report
+}
+
+/// Bounded-exhaustive stateless DFS over decision prefixes: replay the
+/// prefix, extend with first choices, then backtrack the deepest decision
+/// with untried alternatives. Terminates with `exhausted = true` when the
+/// space is fully enumerated within `max_schedules`.
+pub fn explore_dfs<F>(factory: F, max_schedules: usize, cfg: &ExploreCfg) -> ExplorationReport
+where
+    F: Fn() -> Arc<dyn Model>,
+{
+    let mut report = ExplorationReport::default();
+    let mut prefix: Vec<usize> = Vec::new();
+    loop {
+        if report.schedules >= max_schedules {
+            return report;
+        }
+        let r = run_schedule(factory(), Box::new(PrefixChooser::new(prefix.clone())), cfg);
+        report.schedules += 1;
+        if !r.outcome.is_ok() {
+            report.failures.push(FailedSchedule {
+                seed: None,
+                outcome: r.outcome.clone(),
+                trace: r.trace.clone(),
+            });
+            if report.failures.len() >= MAX_FAILURES {
+                return report;
+            }
+        }
+        match next_prefix(&r.trace) {
+            Some(p) => prefix = p,
+            None => {
+                report.exhausted = true;
+                return report;
+            }
+        }
+    }
+}
+
+/// Backtrack: deepest decision with an untried alternative, advanced by
+/// one; `None` when the search tree is exhausted.
+fn next_prefix(trace: &[Choice]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        if trace[i].idx + 1 < trace[i].n {
+            let mut p: Vec<usize> = trace[..i].iter().map(|c| c.idx).collect();
+            p.push(trace[i].idx + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Replay one schedule from a recorded decision trace (`Choice::idx`
+/// values) — exact reproduction of a failure found by either explorer.
+pub fn replay(model: Arc<dyn Model>, prefix: Vec<usize>, cfg: &ExploreCfg) -> ScheduleResult {
+    run_schedule(model, Box::new(PrefixChooser::new(prefix)), cfg)
+}
+
+/// Replay a random-exploration failure from its seed alone.
+pub fn replay_seed(model: Arc<dyn Model>, seed: u64, cfg: &ExploreCfg) -> ScheduleResult {
+    run_schedule(model, Box::new(RandomChooser::new(seed)), cfg)
+}

@@ -1,0 +1,402 @@
+//! Instrumented concurrency primitives for model checking.
+//!
+//! Every type here has *dual behavior*, keyed on whether the calling OS
+//! thread has a scheduler installed (see [`super::sched::current_sched`]):
+//!
+//! - **Scheduled** (inside a vthread of [`super::sched::run_schedule`]):
+//!   each operation is a potential decision point, and blocking behavior
+//!   (mutex contention, condvar waits, park) is *virtualized* — the
+//!   scheduler decides who proceeds, so interleavings are fully
+//!   deterministic and replayable.
+//! - **Passthrough** (no scheduler): the operation delegates to the raw
+//!   `std` primitive with identical semantics. This is what makes a
+//!   `--cfg treecv_model_check` build safe to run the entire ordinary
+//!   test suite: code compiled against these types behaves like `std`
+//!   unless a schedule is actively driving it.
+//!
+//! One hard rule keeps abort handling sound: once a thread is already
+//! unwinding (`std::thread::panicking()`), shim operations never consult
+//! the scheduler and never throw the [`super::sched::ScheduleAborted`]
+//! sentinel — they perform the raw operation (or no-op, for `park`).
+//! Executor cleanup paths (e.g. its panic-signal `Drop`) run during
+//! unwinding; a sentinel panic there would be a double panic and abort
+//! the whole process.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::sched::{clear_current, current_sched, set_current, SchedInner};
+
+/// Scheduler handle for the current op, or `None` for passthrough /
+/// mid-unwind bypass.
+fn op_sched() -> Option<(Arc<SchedInner>, usize)> {
+    if std::thread::panicking() {
+        return None;
+    }
+    current_sched()
+}
+
+/// Decision point before (potentially) touching shared state. No-op in
+/// passthrough mode and in `Preemption::ExplicitOnly` schedules.
+fn sync_point() {
+    if let Some((s, me)) = op_sched() {
+        s.maybe_yield(me);
+    }
+}
+
+/// An *explicit* decision point — yields to the scheduler in every
+/// preemption mode. Models call this to mark the coarse action
+/// boundaries that bounded-exhaustive DFS interleaves. Free (a
+/// thread-local read) when no schedule is active.
+pub fn checkpoint() {
+    if let Some((s, me)) = op_sched() {
+        s.yield_decision(me);
+    }
+}
+
+macro_rules! atomic_shim {
+    ($name:ident, $raw:ty, $t:ty) => {
+        /// Instrumented atomic: raw `std` value semantics, with each op a
+        /// scheduler decision point when a schedule is active.
+        #[derive(Debug, Default)]
+        pub struct $name($raw);
+
+        impl $name {
+            pub const fn new(v: $t) -> Self {
+                Self(<$raw>::new(v))
+            }
+
+            pub fn load(&self, order: Ordering) -> $t {
+                sync_point();
+                self.0.load(order)
+            }
+
+            pub fn store(&self, v: $t, order: Ordering) {
+                sync_point();
+                self.0.store(v, order)
+            }
+
+            pub fn swap(&self, v: $t, order: Ordering) -> $t {
+                sync_point();
+                self.0.swap(v, order)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $t,
+                new: $t,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$t, $t> {
+                sync_point();
+                self.0.compare_exchange(current, new, success, failure)
+            }
+        }
+    };
+}
+
+macro_rules! atomic_shim_arith {
+    ($name:ident, $t:ty) => {
+        impl $name {
+            pub fn fetch_add(&self, v: $t, order: Ordering) -> $t {
+                sync_point();
+                self.0.fetch_add(v, order)
+            }
+
+            pub fn fetch_sub(&self, v: $t, order: Ordering) -> $t {
+                sync_point();
+                self.0.fetch_sub(v, order)
+            }
+        }
+    };
+}
+
+atomic_shim!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+atomic_shim!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+atomic_shim!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+atomic_shim!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+atomic_shim_arith!(AtomicI64, i64);
+atomic_shim_arith!(AtomicU64, u64);
+atomic_shim_arith!(AtomicUsize, usize);
+
+fn lock_raw<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // Poisoning under the model checker is always downstream of a failure
+    // the scheduler has already recorded; never compound it here.
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Instrumented mutex. In scheduled mode, *contention* is resolved by the
+/// scheduler (the OS lock is only ever taken uncontended, after the
+/// scheduler grants ownership), so lock-acquisition order is a replayable
+/// chooser decision.
+#[derive(Debug)]
+pub struct Mutex<T> {
+    raw: std::sync::Mutex<T>,
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Self {
+        Self { raw: std::sync::Mutex::new(value) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as usize
+    }
+
+    pub fn into_inner(self) -> T {
+        match self.raw.into_inner() {
+            Ok(v) => v,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        if let Some((s, me)) = op_sched() {
+            s.maybe_yield(me);
+            s.mutex_lock(me, self.addr());
+            // The scheduler granted ownership: the OS lock is free (any
+            // raw-mode holder is a mid-unwind bypass, which std resolves).
+            let inner = lock_raw(&self.raw);
+            return MutexGuard { lock: self, inner: Some(inner), sched: Some((s, me)) };
+        }
+        MutexGuard { lock: self, inner: Some(lock_raw(&self.raw)), sched: None }
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    /// `None` only transiently inside [`Condvar::wait`], which holds the
+    /// guard by value.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    /// Scheduler ownership to release on drop; `None` in passthrough or
+    /// mid-unwind bypass acquisitions.
+    sched: Option<(Arc<SchedInner>, usize)>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // invariant: `inner` is Some outside Condvar::wait, which owns
+        // the guard by value while it is None.
+        self.inner.as_deref().expect("treecv shim guard empty outside Condvar::wait")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // invariant: see Deref.
+        self.inner.as_deref_mut().expect("treecv shim guard empty outside Condvar::wait")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the OS lock first, then the scheduler-level ownership,
+        // so a scheduler-granted successor finds the OS lock free.
+        self.inner.take();
+        if let Some((s, me)) = self.sched.take() {
+            s.mutex_unlock(me, self.lock.addr());
+        }
+    }
+}
+
+/// Instrumented condvar. In scheduled mode the wait set lives entirely in
+/// the scheduler (the raw condvar is untouched), so which waiter a
+/// `notify_one` wakes is a replayable chooser decision.
+#[derive(Debug, Default)]
+pub struct Condvar {
+    raw: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Self { raw: std::sync::Condvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as usize
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        match guard.sched.clone() {
+            Some((s, me)) if !std::thread::panicking() => {
+                let mutex_addr = guard.lock.addr();
+                // Drop the OS lock; scheduler-level release + wait +
+                // re-acquire happen atomically inside cond_wait.
+                guard.inner.take();
+                s.cond_wait(me, mutex_addr, self.addr());
+                guard.inner = Some(lock_raw(&guard.lock.raw));
+                guard
+            }
+            _ => {
+                // invariant: `inner` is Some — this guard is held by
+                // value and not inside another wait.
+                let inner =
+                    guard.inner.take().expect("treecv shim guard empty outside Condvar::wait");
+                let inner = match self.raw.wait(inner) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                guard.inner = Some(inner);
+                guard
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some((s, me)) = op_sched() {
+            s.maybe_yield(me);
+            s.cond_notify(me, self.addr(), false);
+            return;
+        }
+        self.raw.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((s, me)) = op_sched() {
+            s.maybe_yield(me);
+            s.cond_notify(me, self.addr(), true);
+            return;
+        }
+        self.raw.notify_all();
+    }
+}
+
+/// Scheduler-aware replacements for the `std::thread` services the
+/// library uses (via `crate::sync::thread`).
+pub mod thread {
+    use super::*;
+
+    pub use std::thread::{available_parallelism, panicking};
+
+    #[derive(Clone)]
+    enum Repr {
+        Os(std::thread::Thread),
+        V(Arc<SchedInner>, usize),
+    }
+
+    /// Handle to a thread for `unpark`, mirroring `std::thread::Thread`.
+    #[derive(Clone)]
+    pub struct Thread(Repr);
+
+    impl std::fmt::Debug for Thread {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            match &self.0 {
+                Repr::Os(t) => write!(f, "Thread::Os({:?})", t.id()),
+                Repr::V(_, tid) => write!(f, "Thread::V({tid})"),
+            }
+        }
+    }
+
+    impl Thread {
+        pub fn unpark(&self) {
+            match &self.0 {
+                Repr::Os(t) => t.unpark(),
+                Repr::V(s, tid) => {
+                    sync_point();
+                    s.unpark(*tid);
+                }
+            }
+        }
+    }
+
+    pub fn current() -> Thread {
+        match current_sched() {
+            Some((s, me)) => Thread(Repr::V(s, me)),
+            None => Thread(Repr::Os(std::thread::current())),
+        }
+    }
+
+    pub fn park() {
+        match current_sched() {
+            Some((s, me)) => {
+                if std::thread::panicking() {
+                    // Never real-park mid-unwind under a schedule: no
+                    // vthread would deliver a raw unpark.
+                    return;
+                }
+                s.park(me);
+            }
+            None => std::thread::park(),
+        }
+    }
+
+    /// Scoped-thread shim. In scheduled mode each spawn registers a new
+    /// vthread with the active scheduler, so executor worker threads
+    /// become deterministic schedulable entities.
+    pub struct Scope<'scope, 'env> {
+        inner: &'scope std::thread::Scope<'scope, 'env>,
+        sched: Option<Arc<SchedInner>>,
+    }
+
+    pub struct ScopedJoinHandle<'scope, T> {
+        inner: std::thread::ScopedJoinHandle<'scope, T>,
+        v: Option<(Arc<SchedInner>, usize)>,
+    }
+
+    pub fn scope<'env, F, T>(f: F) -> T
+    where
+        F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> T,
+    {
+        let sched = current_sched().map(|(s, _)| s);
+        std::thread::scope(move |s| f(&Scope { inner: s, sched }))
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce() -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            match &self.sched {
+                None => ScopedJoinHandle { inner: self.inner.spawn(f), v: None },
+                Some(sched) => {
+                    let tid = sched.register_vthread();
+                    let sched2 = Arc::clone(sched);
+                    let inner = self.inner.spawn(move || {
+                        set_current(Arc::clone(&sched2), tid);
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            sched2.wait_initial(tid);
+                            f()
+                        }));
+                        clear_current();
+                        sched2.finish_thread(tid, r.as_ref().err().map(|b| b.as_ref()));
+                        match r {
+                            Ok(v) => v,
+                            // Keep std semantics: the join result carries
+                            // the panic payload.
+                            Err(p) => std::panic::resume_unwind(p),
+                        }
+                    });
+                    ScopedJoinHandle { inner, v: Some((Arc::clone(sched), tid)) }
+                }
+            }
+        }
+    }
+
+    impl<T> ScopedJoinHandle<'_, T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some((sched, tid)) = &self.v {
+                if !std::thread::panicking() {
+                    if let Some((_, me)) = current_sched() {
+                        // Block deterministically until the vthread
+                        // finishes; the OS join below is then immediate.
+                        sched.join(me, *tid);
+                    }
+                }
+            }
+            self.inner.join()
+        }
+    }
+}

@@ -101,7 +101,8 @@ impl Bench {
         let s = Samples { name: name.to_string(), secs };
         println!("{}", s.summary());
         self.results.push(s);
-        self.results.last().unwrap()
+        // invariant: we pushed one element on the line above.
+        self.results.last().expect("results non-empty after push")
     }
 
     /// Record an externally measured duration series (e.g. from an engine's
@@ -113,7 +114,8 @@ impl Bench {
         };
         println!("{}", s.summary());
         self.results.push(s);
-        self.results.last().unwrap()
+        // invariant: we pushed one element on the line above.
+        self.results.last().expect("results non-empty after push")
     }
 
     /// All results as CSV (name, median, mean, std, min, samples).

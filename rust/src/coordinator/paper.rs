@@ -362,7 +362,8 @@ pub fn distributed_report(n: usize, ks: &[usize], seed: u64) -> Result<String> {
     let learner = Pegasos::new(data.d, 1e-6);
     let mut s = String::from(
         "Distributed TreeCV simulation (model moves, data stays)\n\
-         k, model_msgs, bound_2k_log2k, model_MB, naive_data_MB, sim_net_time_s, naive_net_time_s\n",
+         k, model_msgs, bound_2k_log2k, model_MB, naive_data_MB, sim_net_time_s, \
+         naive_net_time_s\n",
     );
     for &k in ks {
         let folds = Folds::new(n, k, seed ^ 0xD157);
@@ -417,7 +418,8 @@ pub fn grid_search(n: usize, k: usize, log_lambdas: &[f64], seed: u64) -> Result
         ));
     }
     s.push_str(&format!(
-        "best: log10(lambda)={} (estimate {:.6}); grid total: treecv {:.3}s vs standard {:.3}s ({:.2}x)\n",
+        "best: log10(lambda)={} (estimate {:.6}); grid total: treecv {:.3}s vs standard \
+         {:.3}s ({:.2}x)\n",
         best.1,
         best.0,
         tree_total,

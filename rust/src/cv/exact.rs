@@ -51,6 +51,7 @@ pub fn ridge_loocv(data: &Dataset, lambda: f64) -> ExactLoocv {
         a[j * d + j] += lambda;
     }
 
+    // invariant: XᵀX is PSD, so XᵀX + λI is SPD for the asserted λ > 0.
     let l = linalg::cholesky(&a, d).expect("XᵀX + λI is SPD");
     let w = linalg::cholesky_solve(&l, d, &b);
     let a_inv = linalg::cholesky_inverse(&l, d);
@@ -106,6 +107,7 @@ pub fn ridge_gcv(data: &Dataset, lambda: f64) -> f64 {
     for j in 0..d {
         a[j * d + j] += lambda;
     }
+    // invariant: XᵀX is PSD, so XᵀX + λI is SPD for the asserted λ > 0.
     let l = linalg::cholesky(&a, d).expect("SPD");
     let w = linalg::cholesky_solve(&l, d, &b);
     let a_inv = linalg::cholesky_inverse(&l, d);

@@ -92,7 +92,8 @@
 //! indexed runs mix freely in one batch.
 //!
 //! **Idle waiting.** A worker whose steal sweep comes up dry parks its
-//! thread (`std::thread::park`) after registering on a sleeper list;
+//! thread (`crate::sync::thread::park`) after registering on a sleeper
+//! list;
 //! task pushes unpark one sleeper and batch completion (or a panic)
 //! unparks all. Compared to the earlier yield-then-100µs-sleep backoff,
 //! idle workers burn zero CPU during long serial phases (e.g. a root
@@ -136,11 +137,12 @@ use crate::data::Dataset;
 use crate::learner::erased::{DynLearner, ErasedLearner};
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
+use crate::sync::thread::{self, Thread};
+use crate::sync::{
+    Arc, AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Mutex, Ordering as MemOrdering,
+};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering as MemOrdering};
-use std::sync::{Arc, Mutex};
-use std::thread::Thread;
 use std::time::Duration;
 
 /// Extra fork levels beyond ⌈log₂ workers⌉: each level doubles the subtree
@@ -448,7 +450,7 @@ struct Shared<'a, L: IncrementalLearner> {
 /// re-sweeps), so a stale entry can delay a wakeup but never lose one:
 /// tasks are only ever consumed by sweeps, not by notifications.
 fn wake_one(parked: &Mutex<Vec<(usize, Thread)>>) {
-    let popped = parked.lock().unwrap().pop();
+    let popped = parked.lock().pop();
     if let Some((_, t)) = popped {
         t.unpark();
     }
@@ -456,7 +458,7 @@ fn wake_one(parked: &Mutex<Vec<(usize, Thread)>>) {
 
 /// Unpark every parked worker (batch done, or a worker panicked).
 fn wake_all(parked: &Mutex<Vec<(usize, Thread)>>) {
-    let drained: Vec<_> = std::mem::take(&mut *parked.lock().unwrap());
+    let drained: Vec<_> = std::mem::take(&mut *parked.lock());
     for (_, t) in drained {
         t.unpark();
     }
@@ -465,7 +467,7 @@ fn wake_all(parked: &Mutex<Vec<(usize, Thread)>>) {
 /// Remove `wid`'s registration (idempotent — the producer that woke us may
 /// already have popped it).
 fn unregister(parked: &Mutex<Vec<(usize, Thread)>>, wid: usize) {
-    parked.lock().unwrap().retain(|(w, _)| *w != wid);
+    parked.lock().retain(|(w, _)| *w != wid);
 }
 
 /// Incremental-delivery callback: called with `(run index, outcome)` on
@@ -477,7 +479,7 @@ pub type OnResult<'cb> = dyn Fn(usize, &RunOutcome) + Sync + 'cb;
 /// the cap, just drop it). Cancelled subtrees recycle through here too,
 /// so cancellation never grows the pool past its cap.
 fn recycle<L: IncrementalLearner>(shared: &Shared<'_, L>, model: L::Model) {
-    let mut pool = shared.pool.lock().unwrap();
+    let mut pool = shared.pool.lock();
     if pool.len() < shared.pool_cap {
         pool.push(model);
     }
@@ -518,7 +520,7 @@ fn account<L: IncrementalLearner>(
         if let Some(cb) = on_result {
             cb(run, &outcome);
         }
-        *rs.outcome.lock().unwrap() = Some(outcome);
+        *rs.outcome.lock() = Some(outcome);
     }
     let done_before = shared.leaves_done.fetch_add(leaves, MemOrdering::AcqRel);
     if done_before + leaves == shared.leaves_total {
@@ -532,8 +534,8 @@ fn account<L: IncrementalLearner>(
 /// before its token landed is `Completed` (cancellation came too late to
 /// save any work, and the result is valid).
 fn finish_run<L: IncrementalLearner>(rs: &RunShared<'_, L>, wall: Duration) -> RunOutcome {
-    *rs.wall.lock().unwrap() = wall;
-    if let Some(error) = rs.failed.lock().unwrap().take() {
+    *rs.wall.lock() = wall;
+    if let Some(error) = rs.failed.lock().take() {
         return RunOutcome::Failed { error };
     }
     let leaves_dropped = rs.leaves_dropped.load(MemOrdering::Acquire);
@@ -544,8 +546,8 @@ fn finish_run<L: IncrementalLearner>(rs: &RunShared<'_, L>, wall: Duration) -> R
             tasks_dropped: rs.tasks_dropped.load(MemOrdering::Acquire),
         };
     }
-    let per_fold = std::mem::take(&mut *rs.per_fold.lock().unwrap());
-    let ops = std::mem::take(&mut *rs.ops.lock().unwrap());
+    let per_fold = std::mem::take(&mut *rs.per_fold.lock());
+    let ops = std::mem::take(&mut *rs.ops.lock());
     RunOutcome::Completed(CvResult::from_folds(per_fold, ops, wall))
 }
 
@@ -560,7 +562,7 @@ fn fail_run<L: IncrementalLearner>(
     on_result: Option<&OnResult<'_>>,
 ) {
     let rs = &shared.runs[run];
-    rs.failed.lock().unwrap().get_or_insert(panic_message(&*payload));
+    rs.failed.lock().get_or_insert(panic_message(&*payload));
     rs.ctrl.cancel();
     account(shared, run, leaves, true, on_result);
 }
@@ -575,7 +577,7 @@ struct PanicSignal<'a> {
 
 impl Drop for PanicSignal<'_> {
     fn drop(&mut self) {
-        if std::thread::panicking() {
+        if thread::panicking() {
             self.done.store(true, MemOrdering::Release);
             wake_all(self.parked);
         }
@@ -605,7 +607,7 @@ impl TreeCvExecutor {
     /// Pool sized to the machine's available parallelism (no rounding to a
     /// power of two — any worker count schedules fully).
     pub fn with_available_parallelism(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
-        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let threads = thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         Self::new(strategy, ordering, seed, threads)
     }
 
@@ -688,7 +690,7 @@ impl TreeCvExecutor {
                 // — this is the only copy a SaveRevert run pays. The
                 // snapshot goes into a pooled buffer (clone_from reuses
                 // its storage) when one is available.
-                let recycled = shared.pool.lock().unwrap().pop();
+                let recycled = shared.pool.lock().pop();
                 let mut sibling = match recycled {
                     Some(mut buf) => {
                         buf.clone_from(&model);
@@ -713,7 +715,7 @@ impl TreeCvExecutor {
                     return;
                 }
             };
-            rs.ops.lock().unwrap().merge(&ops);
+            rs.ops.lock().merge(&ops);
 
             // Fork-point cancellation check: drop both halves instead of
             // queueing them. (The update work above is wasted, but the
@@ -726,7 +728,7 @@ impl TreeCvExecutor {
                 return;
             }
             {
-                let mut dq = shared.deques[wid].lock().unwrap();
+                let mut dq = shared.deques[wid].lock();
                 dq.push_back(Task { run, s, e: m, depth: depth + 1, model: Some(model) });
                 dq.push_back(Task { run, s: m + 1, e, depth: depth + 1, model: Some(sibling) });
             }
@@ -754,10 +756,10 @@ impl TreeCvExecutor {
                 return;
             }
         };
-        rs.per_fold.lock().unwrap()[s..=e].copy_from_slice(&local);
+        rs.per_fold.lock()[s..=e].copy_from_slice(&local);
         // Recycle the model storage for future fork-node snapshots.
         recycle(shared, model);
-        rs.ops.lock().unwrap().merge(&ops);
+        rs.ops.lock().merge(&ops);
         account(shared, run, leaves, false, on_result);
     }
 
@@ -800,7 +802,7 @@ impl TreeCvExecutor {
         // Cancelled runs' roots are popped like any other — `process`
         // drops them with full accounting, never silently.
         let pop_injector = || -> Option<Task<L::Model>> {
-            let mut inj = shared.injector.lock().unwrap();
+            let mut inj = shared.injector.lock();
             let best = inj
                 .iter()
                 .enumerate()
@@ -811,11 +813,11 @@ impl TreeCvExecutor {
             Some(inj.swap_remove(best).1)
         };
         let sweep = || -> Option<Task<L::Model>> {
-            let own = shared.deques[wid].lock().unwrap().pop_back();
+            let own = shared.deques[wid].lock().pop_back();
             own.or_else(|| {
                 (1..n_workers).find_map(|offset| {
                     let victim = (wid + offset) % n_workers;
-                    shared.deques[victim].lock().unwrap().pop_front()
+                    shared.deques[victim].lock().pop_front()
                 })
             })
             .or_else(|| pop_injector())
@@ -831,9 +833,9 @@ impl TreeCvExecutor {
                         break;
                     }
                     {
-                        let mut p = shared.parked.lock().unwrap();
+                        let mut p = shared.parked.lock();
                         p.retain(|(w, _)| *w != wid);
-                        p.push((wid, std::thread::current()));
+                        p.push((wid, thread::current()));
                     }
                     // Verification sweep: anything pushed before our
                     // registration became visible is caught here.
@@ -847,7 +849,7 @@ impl TreeCvExecutor {
                                 unregister(&shared.parked, wid);
                                 break;
                             }
-                            std::thread::park();
+                            thread::park();
                             unregister(&shared.parked, wid);
                             None
                         }
@@ -876,6 +878,7 @@ impl TreeCvExecutor {
             folded: None,
             ctrl: RunCtrl::default(),
         };
+        // invariant: run_many returns exactly one result per input spec.
         self.run_many(data, std::slice::from_ref(&spec))
             .pop()
             .expect("run_many returns one result per run")
@@ -901,6 +904,7 @@ impl TreeCvExecutor {
             folded: Some(folded),
             ctrl: RunCtrl::default(),
         };
+        // invariant: run_many returns exactly one result per input spec.
         self.run_many(data, std::slice::from_ref(&spec))
             .pop()
             .expect("run_many returns one result per run")
@@ -1052,11 +1056,14 @@ impl TreeCvExecutor {
         } else {
             self.spawns.fetch_add(1, MemOrdering::Relaxed);
             let shared_ref = &shared;
-            std::thread::scope(|scope| {
+            thread::scope(|scope| {
                 let handles: Vec<_> = (0..threads)
                     .map(|wid| scope.spawn(move || self.worker(wid, shared_ref, data, on_result)))
                     .collect();
                 for handle in handles {
+                    // invariant: worker panics that escape the per-task
+                    // catch_unwind are unrecoverable harness bugs and are
+                    // deliberately re-propagated to the caller.
                     handle.join().expect("executor worker panicked");
                 }
             });
@@ -1066,9 +1073,11 @@ impl TreeCvExecutor {
             .runs
             .into_iter()
             .map(|rs| {
+                // invariant: the batch only returns once shared.done
+                // flipped, which requires every run's leaves accounted and
+                // its outcome published.
                 rs.outcome
                     .into_inner()
-                    .unwrap()
                     .expect("every run accounts all its leaves before the batch returns")
             })
             .collect()
@@ -1090,6 +1099,7 @@ impl TreeCvExecutor {
             folded: None,
             ctrl: RunCtrl::default(),
         };
+        // invariant: run_many_erased returns one result per input spec.
         self.run_many_erased(data, std::slice::from_ref(&spec))
             .pop()
             .expect("run_many_erased returns one result per run")
@@ -1112,6 +1122,7 @@ impl TreeCvExecutor {
             folded: Some(folded),
             ctrl: RunCtrl::default(),
         };
+        // invariant: run_many_erased returns one result per input spec.
         self.run_many_erased(data, std::slice::from_ref(&spec))
             .pop()
             .expect("run_many_erased returns one result per run")
@@ -1680,10 +1691,10 @@ mod tests {
         };
         let specs = [mk(1), mk(3), mk(2)];
         let order = Mutex::new(Vec::new());
-        let record = |i: usize, _out: &RunOutcome| order.lock().unwrap().push(i);
+        let record = |i: usize, _out: &RunOutcome| order.lock().push(i);
         let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 11, 1);
         let out = exe.run_many_outcomes(&data, &specs, Some(&record));
-        assert_eq!(*order.lock().unwrap(), vec![1, 2, 0], "highest priority starts first");
+        assert_eq!(*order.lock(), vec![1, 2, 0], "highest priority starts first");
         let flat = [mk(0), mk(0), mk(0)];
         let base = exe.run_many_outcomes(&data, &flat, None);
         for (i, (a, b)) in out.iter().zip(&base).enumerate() {

@@ -32,6 +32,7 @@ use super::{CvResult, Strategy};
 use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, Timer};
+use crate::sync::thread;
 
 /// Largest fork depth whose subtree count does not oversubscribe
 /// `threads`: the greatest `d` with `2^d <= threads` (0 for `threads <= 1`).
@@ -73,7 +74,7 @@ impl ParallelTreeCv {
     /// clamp), but the run uses the exact thread count — a 6-core machine
     /// gets 6 workers, not 4.
     pub fn with_available_parallelism(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
-        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let threads = thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         Self {
             strategy,
             ordering,
@@ -127,7 +128,7 @@ impl ScopedForkTreeCv {
     /// Depth fitting the machine's parallelism (same clamp as
     /// [`ParallelTreeCv::with_available_parallelism`]).
     pub fn with_available_parallelism(strategy: Strategy, ordering: Ordering, seed: u64) -> Self {
-        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let threads = thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         Self::new(strategy, ordering, seed, fork_depth_for_threads(threads))
     }
 
@@ -191,7 +192,7 @@ impl ScopedForkTreeCv {
         let mut model_right = model.clone();
         ops.model_copies += 1;
         ops.bytes_copied += learner.model_bytes(&model) as u64;
-        let (ops_a, ops_b) = std::thread::scope(|scope| {
+        let (ops_a, ops_b) = thread::scope(|scope| {
             let handle = scope.spawn(move || {
                 // Right side of the split: model updated with the LEFT
                 // chunk group, recursing on (m+1, e).
@@ -200,6 +201,9 @@ impl ScopedForkTreeCv {
             });
             learner.update(&mut model, data, &right);
             let ops_a = self.recurse(learner, data, folds, model, s, m, depth + 1, pf_left);
+            // invariant: the worker closure contains no panicking
+            // operations of its own; a panic here is a learner bug and
+            // must propagate.
             (ops_a, handle.join().expect("treecv worker panicked"))
         });
         ops.merge(&ops_a);

@@ -55,7 +55,7 @@ use crate::learner::IncrementalLearner;
 use crate::metrics::{OpCounts, RunningStats, Timer};
 use crate::Result;
 use anyhow::bail;
-use std::sync::Mutex;
+use crate::sync::Mutex;
 use std::time::Duration;
 
 /// A racing sweep's axes: the exhaustive sweep's axes plus the racing
@@ -249,7 +249,7 @@ impl<'a> Controller<'a> {
     /// fire every round whose trigger it completes.
     fn record(&self, run_idx: usize, out: &RunOutcome) {
         let (cell, rep) = (run_idx / self.repetitions, run_idx % self.repetitions);
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         match out {
             RunOutcome::Completed(res) => st.estimates[cell][rep] = Some(res.estimate),
             RunOutcome::Failed { error } => {
@@ -291,6 +291,8 @@ impl<'a> Controller<'a> {
             let means: Vec<(usize, f64)> = (0..n_cells)
                 .filter(|&c| st.alive[c])
                 .map(|c| {
+                    // invariant: the round fires only once every counted
+                    // prefix estimate of every alive cell is recorded.
                     let sum: f64 =
                         st.estimates[c][..r].iter().map(|e| e.expect("trigger held")).sum();
                     (c, sum / r as f64)
@@ -298,6 +300,8 @@ impl<'a> Controller<'a> {
                 .collect();
             // Incumbent: lowest mean; `min_by` keeps the first (= lowest
             // cell index) among exact ties.
+            // invariant: the incumbent is never eliminated, so at least
+            // one cell is always alive.
             let &(inc, _) =
                 means.iter().min_by(|a, b| a.1.total_cmp(&b.1)).expect("≥ 1 alive cell");
             for &(c, mean) in &means {
@@ -307,6 +311,8 @@ impl<'a> Controller<'a> {
                     let mut wins = 0;
                     let mut n_eff = 0;
                     for rep in 0..r {
+                        // invariant: same trigger as the means above —
+                        // every counted prefix estimate is recorded.
                         let a = st.estimates[inc][rep].expect("trigger held");
                         let b = st.estimates[c][rep].expect("trigger held");
                         if a < b {
@@ -359,7 +365,7 @@ impl<'a> Controller<'a> {
         threads: usize,
         pool_spawns: u64,
     ) -> Result<RaceOutcome> {
-        let st = self.state.into_inner().unwrap();
+        let st = self.state.into_inner();
         if let Some(error) = st.failed {
             bail!("race aborted: a repetition failed: {error}");
         }
@@ -402,6 +408,8 @@ impl<'a> Controller<'a> {
                     strategy,
                     mean: stats.mean(),
                     std: stats.std(),
+                    // invariant: every round boundary is ≥ 1 repetition,
+                    // so a cell's counted run list is never empty.
                     ops: runs.last().expect("reps_used >= 1").ops.clone(),
                     reps_used,
                     eliminated_round: st.elim_round[c],

@@ -153,6 +153,8 @@ fn collect_cells(results: Vec<CvResult>, n_configs: usize, spec: &SweepSpec) -> 
             for res in &cell_runs {
                 stats.push(res.estimate);
             }
+            // invariant: `validate` rejects specs with 0 repetitions, so
+            // every cell drains at least one run from the stream.
             let ops = cell_runs.last().expect("repetitions >= 1").ops.clone();
             cells.push(SweepCell {
                 config,

@@ -79,6 +79,8 @@ impl OnlineKMeans {
             m.seeded += 1;
             return KMeansUndoOp::Seeded { j };
         }
+        // invariant: `m.seeded == self.k` here (checked above), so every
+        // center is initialized and `nearest` always finds one.
         let j = m.nearest(d, x).expect("seeded model");
         let c = &mut m.centers[j * d..(j + 1) * d];
         let old_center = c.to_vec();

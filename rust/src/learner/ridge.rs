@@ -65,6 +65,8 @@ impl OnlineRidge {
         for j in 0..d {
             reg[j * d + j] += self.lambda;
         }
+        // invariant: A = Σ x xᵀ is PSD, so A + λI is SPD for λ > 0 and
+        // the factorization cannot fail.
         let l = linalg::cholesky(&reg, d).expect("A + λI is SPD for λ > 0");
         linalg::cholesky_solve(&l, d, &m.b)
     }

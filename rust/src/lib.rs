@@ -39,6 +39,7 @@
 //! println!("10-CV misclassification = {:.4}", res.estimate);
 //! ```
 
+pub mod analysis;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;
@@ -51,6 +52,7 @@ pub mod metrics;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod sync;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

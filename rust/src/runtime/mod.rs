@@ -25,18 +25,16 @@
 
 pub mod xla_learner;
 
+use crate::sync::Arc;
 use crate::Result;
 #[cfg(treecv_pjrt)]
 use anyhow::anyhow;
 use anyhow::Context as _;
-use std::path::{Path, PathBuf};
 #[cfg(treecv_pjrt)]
-use std::{
-    collections::HashMap,
-    sync::{Arc, Mutex},
-};
-#[cfg(not(treecv_pjrt))]
-use std::sync::Arc;
+use crate::sync::Mutex;
+#[cfg(treecv_pjrt)]
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 /// Default artifact directory, overridable via `TREECV_ARTIFACTS`.
 pub fn artifacts_dir() -> PathBuf {
@@ -109,13 +107,13 @@ impl PjrtRuntime {
 
     /// Load (or fetch from cache) the artifact `<name>.hlo.txt`.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+        if let Some(exe) = self.cache.lock().get(name) {
             return Ok(exe.clone());
         }
         let path = self.dir.join(format!("{name}.hlo.txt"));
         let exe = self.compile_file(name, &path)?;
         let exe = Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        self.cache.lock().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

@@ -19,8 +19,8 @@ use crate::data::Dataset;
 use crate::learner::IncrementalLearner;
 use crate::loss;
 use crate::Result;
+use crate::sync::Arc;
 use anyhow::anyhow;
-use std::sync::Arc;
 
 /// Gather rows `idx[lo..hi]` into a zero-padded `(block × d)` buffer plus
 /// labels and mask.
@@ -153,6 +153,9 @@ impl IncrementalLearner for XlaPegasos {
     }
 
     fn update(&self, m: &mut XlaPegasosModel, data: &Dataset, idx: &[u32]) {
+        // invariant: the artifact was validated at construction
+        // (`from_manifest` checked shapes and compiled it); a mid-run PJRT
+        // failure is unrecoverable and the trait's `update` is infallible.
         self.run_update(m, data, idx).expect("pegasos_update artifact execution failed");
     }
 
@@ -177,6 +180,8 @@ impl IncrementalLearner for XlaPegasos {
         if idx.is_empty() {
             return 0.0;
         }
+        // invariant: same contract as `update` — the artifact compiled at
+        // construction; mid-run PJRT failure is unrecoverable.
         self.run_eval(m, data, idx).expect("pegasos_eval artifact execution failed")
     }
 
@@ -282,6 +287,9 @@ impl IncrementalLearner for XlaLsqSgd {
     }
 
     fn update(&self, m: &mut XlaLsqSgdModel, data: &Dataset, idx: &[u32]) {
+        // invariant: the artifact was validated at construction
+        // (`from_manifest` checked shapes and compiled it); a mid-run PJRT
+        // failure is unrecoverable and the trait's `update` is infallible.
         self.run_update(m, data, idx).expect("lsqsgd_update artifact execution failed");
     }
 
@@ -308,6 +316,10 @@ impl IncrementalLearner for XlaLsqSgd {
         let mut sse = 0f64;
         for blk in idx.chunks(self.block) {
             let (x, y, mask) = gather_block(data, blk, self.block);
+            // invariant: buffer sizes match the lowered artifact shape by
+            // construction (gather_block pads to `self.block × d`), and a
+            // mid-run PJRT failure is unrecoverable — same contract as
+            // `update` above.
             let inputs = [
                 literal_f32(&m.wavg, &[self.d as i64]).expect("literal"),
                 literal_f32(&x, &[self.block as i64, self.d as i64]).expect("literal"),

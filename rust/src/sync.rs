@@ -1,0 +1,185 @@
+//! The crate's single gateway to concurrency primitives.
+//!
+//! Every atomic, lock, and thread-parking touchpoint in the library goes
+//! through this module instead of `std::sync`/`std::thread` directly —
+//! enforced mechanically by the repo lint (`cargo run -p xtask -- lint`,
+//! rule `sync-gateway`). Centralizing the primitives buys two things:
+//!
+//! 1. **Model checking.** Under `cfg(treecv_model_check)` (set via
+//!    `RUSTFLAGS="--cfg treecv_model_check"`) the re-exports below swap to
+//!    the *instrumented* primitives in [`crate::analysis::shim`], whose
+//!    every operation is a scheduling point for the deterministic
+//!    interleaving explorer in [`crate::analysis::sched`]. That is what
+//!    lets `tests/model_check.rs` drive the real executor through
+//!    adversarial thread schedules. Outside a checked run the instrumented
+//!    types pass straight through to `std`, so the `treecv_model_check`
+//!    build still runs the whole ordinary test suite unchanged.
+//! 2. **Poison policy in one place.** [`Mutex::lock`] returns the guard
+//!    directly and panics on poisoning with one crate-wide message, so
+//!    library code carries no `.lock().unwrap()` noise (and the `no-unwrap`
+//!    lint can stay strict). Poisoning still propagates a peer thread's
+//!    panic rather than silently continuing on inconsistent state.
+//!
+//! The default (non-model-check) build compiles to the exact `std` types
+//! and operations — the newtypes below are single-field wrappers whose
+//! methods forward straight to `std`, so the executor's hot paths are
+//! bit-identical in behavior and indistinguishable in cost from the
+//! pre-shim code.
+
+/// `Arc` is shared ownership, not inter-thread *synchronization order* —
+/// the model checker does not need to interpose on it, so both builds use
+/// `std`'s.
+pub use std::sync::Arc;
+
+/// Memory-ordering tokens are plain data; both builds use `std`'s enum.
+/// (The model checker explores *interleavings* under sequential
+/// consistency, shuttle-style; it does not model weak memory.)
+pub use std::sync::atomic::Ordering;
+
+#[cfg(not(treecv_model_check))]
+mod imp {
+    pub use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize};
+    pub use std::sync::Condvar as StdCondvar;
+    pub use std::sync::MutexGuard;
+
+    /// `std::sync::Mutex` minus the poison plumbing: [`Mutex::lock`]
+    /// yields the guard directly. See the module docs for the policy.
+    #[derive(Debug)]
+    pub struct Mutex<T>(std::sync::Mutex<T>);
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Self {
+            Self::new(T::default())
+        }
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(value: T) -> Self {
+            Self(std::sync::Mutex::new(value))
+        }
+
+        /// Consume the lock and return its data. Panics if a holder
+        /// panicked (same policy as [`Self::lock`]).
+        pub fn into_inner(self) -> T {
+            self.0.into_inner().unwrap_or_else(|_| {
+                // invariant: poisoning means a peer thread panicked while
+                // holding this lock; that panic is the root failure and
+                // must not be absorbed here.
+                panic!("treecv::sync::Mutex poisoned: a thread panicked while holding the lock")
+            })
+        }
+
+        /// Acquire the lock, panicking (not `Err`ing) on poison — a
+        /// poisoned lock means a peer thread already panicked, and that
+        /// failure must propagate, not be handled.
+        pub fn lock(&self) -> MutexGuard<'_, T> {
+            self.0.lock().unwrap_or_else(|_| {
+                // invariant: see into_inner — the panic that poisoned the
+                // lock is the root failure.
+                panic!("treecv::sync::Mutex poisoned: a thread panicked while holding the lock")
+            })
+        }
+    }
+
+    /// `std::sync::Condvar` with the same poison policy as [`Mutex`].
+    #[derive(Debug, Default)]
+    pub struct Condvar(StdCondvar);
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Self(StdCondvar::new())
+        }
+
+        /// Atomically release `guard` and block until notified; the lock
+        /// is re-acquired before returning.
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+            self.0.wait(guard).unwrap_or_else(|_| {
+                // invariant: same poison policy as Mutex::lock.
+                panic!("treecv::sync::Condvar: mutex poisoned while waiting")
+            })
+        }
+
+        pub fn notify_one(&self) {
+            self.0.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            self.0.notify_all();
+        }
+    }
+
+    /// Thread services the library is allowed to touch, re-exported
+    /// verbatim from `std`. The model-check build replaces these with
+    /// scheduler-aware versions (see [`crate::analysis::shim::thread`]).
+    pub mod thread {
+        pub use std::thread::{
+            available_parallelism, current, panicking, park, scope, Scope, ScopedJoinHandle,
+            Thread,
+        };
+    }
+}
+
+#[cfg(treecv_model_check)]
+mod imp {
+    pub use crate::analysis::shim::thread;
+    pub use crate::analysis::shim::{
+        AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard,
+    };
+}
+
+pub use imp::thread;
+pub use imp::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_roundtrip() {
+        let m = Mutex::new(41);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 42);
+        assert_eq!(m.into_inner(), 42);
+    }
+
+    #[test]
+    fn atomics_roundtrip() {
+        let b = AtomicBool::new(false);
+        b.store(true, Ordering::Release);
+        assert!(b.load(Ordering::Acquire));
+        let u = AtomicUsize::new(1);
+        assert_eq!(u.fetch_add(2, Ordering::AcqRel), 1);
+        assert_eq!(u.load(Ordering::Acquire), 3);
+        let i = AtomicI64::new(-7);
+        i.store(9, Ordering::Relaxed);
+        assert_eq!(i.load(Ordering::Relaxed), 9);
+        let c = AtomicU64::new(0);
+        c.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn park_token_banked_by_early_unpark() {
+        // unpark-before-park must bank a token so the park returns
+        // immediately — the property the executor's wake_one relies on.
+        let t = thread::current();
+        t.unpark();
+        thread::park(); // would hang forever if the token were lost
+    }
+
+    #[test]
+    fn condvar_wakes_waiter() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        thread::scope(|s| {
+            s.spawn(|| {
+                *m.lock() = true;
+                cv.notify_all();
+            });
+            let mut g = m.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+        });
+    }
+}

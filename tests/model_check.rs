@@ -1,0 +1,441 @@
+//! Model-checking battery for the executor's concurrency protocols.
+//!
+//! Runs the deterministic scheduler (`treecv::analysis::sched`) over the
+//! protocol models (`treecv::analysis::protocols`) at two granularities:
+//!
+//! - **Seeded random exploration** (`Preemption::EveryOp`): every
+//!   instrumented primitive operation is a preemption point; the
+//!   interleaving is a pure function of the seed. The correct-model
+//!   sweeps below explore 10,100 schedules total (see
+//!   [`budget::TOTAL_RANDOM_SCHEDULES`]), all of which must satisfy the
+//!   protocol invariants.
+//! - **Bounded-exhaustive DFS** (`Preemption::ExplicitOnly`): only
+//!   explicit `checkpoint()` calls and blocking operations yield, making
+//!   the full interleaving space enumerable. The 2-worker park/unpark
+//!   handshake space is exhausted outright.
+//!
+//! Every seeded-bug mutation (10 across the four protocol families) must
+//! be *caught* — the checker reports a deadlock or invariant violation
+//! within the schedule budget. A checker that cannot re-find a seeded bug
+//! has a blind spot, so these tests are as load-bearing as the clean
+//! sweeps.
+//!
+//! Reproducing a failure: every `FailedSchedule` carries its seed (random
+//! mode) and its full decision trace; `replay_seed` / `replay` re-run it
+//! deterministically. See EXPERIMENTS.md § "Model-checker coverage".
+
+use treecv::analysis::protocols::{
+    cancel_tree, handoff, park_chain, priority_dynamic, priority_static, CancelBug, HandoffBug,
+    ParkChainBug, PriorityBug,
+};
+use treecv::analysis::sched::{
+    explore_dfs, explore_random, replay, replay_seed, ExplorationReport, ExploreCfg, Outcome,
+    Preemption,
+};
+
+/// Schedule budgets for the correct-model random sweeps. Kept as named
+/// constants so the documented total is auditable in one place.
+mod budget {
+    /// Seeds per park/unpark handshake configuration (× 4 configs).
+    pub const PARK_SEEDS: u64 = 800;
+    /// Seeds per external-producer handoff configuration (× 3 configs).
+    pub const HANDOFF_SEEDS: u64 = 700;
+    /// Seeds per cancellation-tree configuration (× 3 configs).
+    pub const CANCEL_SEEDS: u64 = 800;
+    /// Seeds per priority-injector variant (× 3 variants).
+    pub const PRIORITY_SEEDS: u64 = 800;
+
+    /// Total correct-model random schedules explored by this suite.
+    pub const TOTAL_RANDOM_SCHEDULES: u64 =
+        PARK_SEEDS * 4 + HANDOFF_SEEDS * 3 + CANCEL_SEEDS * 3 + PRIORITY_SEEDS * 3;
+}
+
+fn every_op() -> ExploreCfg {
+    ExploreCfg { preemption: Preemption::EveryOp, max_steps: 20_000 }
+}
+
+fn explicit_only() -> ExploreCfg {
+    ExploreCfg { preemption: Preemption::ExplicitOnly, max_steps: 20_000 }
+}
+
+fn assert_clean(report: &ExplorationReport, what: &str) {
+    assert!(
+        report.all_ok(),
+        "{what}: {} of {} schedules failed; first: {:?}",
+        report.failures.len(),
+        report.schedules,
+        report.failures.first()
+    );
+}
+
+fn assert_caught(report: &ExplorationReport, what: &str) {
+    assert!(
+        !report.all_ok(),
+        "{what}: seeded bug survived all {} schedules — the checker has a blind spot",
+        report.schedules
+    );
+}
+
+#[test]
+fn schedule_budget_is_at_least_ten_thousand() {
+    // The acceptance bar for this suite: ≥ 10,000 seeded schedules across
+    // the protocol sweeps (before counting DFS or mutation hunts).
+    assert!(
+        budget::TOTAL_RANDOM_SCHEDULES >= 10_000,
+        "random-sweep budget shrank to {}",
+        budget::TOTAL_RANDOM_SCHEDULES
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 1: register-before-sweep park/unpark handshake.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn park_chain_correct_k2_w2() {
+    let r = explore_random(|| park_chain(2, 2, ParkChainBug::Correct), 0..budget::PARK_SEEDS,
+        &every_op());
+    assert_clean(&r, "park_chain k=2 w=2");
+    assert_eq!(r.schedules as u64, budget::PARK_SEEDS);
+}
+
+#[test]
+fn park_chain_correct_k2_w3() {
+    let r = explore_random(|| park_chain(2, 3, ParkChainBug::Correct), 0..budget::PARK_SEEDS,
+        &every_op());
+    assert_clean(&r, "park_chain k=2 w=3");
+}
+
+#[test]
+fn park_chain_correct_k2_w4() {
+    let r = explore_random(|| park_chain(2, 4, ParkChainBug::Correct), 0..budget::PARK_SEEDS,
+        &every_op());
+    assert_clean(&r, "park_chain k=2 w=4");
+}
+
+#[test]
+fn park_chain_correct_k3_w2() {
+    let r = explore_random(|| park_chain(3, 2, ParkChainBug::Correct), 0..budget::PARK_SEEDS,
+        &every_op());
+    assert_clean(&r, "park_chain k=3 w=2");
+}
+
+#[test]
+fn park_chain_dfs_exhausts_two_worker_space() {
+    // The tentpole DFS claim: the 2-worker park/unpark handshake state
+    // space (1-task chain, explicit preemption points) is explored
+    // *exhaustively* — every interleaving of the register → verify →
+    // re-check-done → park window against the finishing worker.
+    let r = explore_dfs(|| park_chain(1, 2, ParkChainBug::Correct), 300_000, &explicit_only());
+    assert!(r.exhausted, "park/unpark DFS space not exhausted in {} schedules", r.schedules);
+    assert_clean(&r, "park_chain DFS k=1 w=2");
+    // The space is non-trivial: the handshake has real branching.
+    assert!(r.schedules > 10, "suspiciously small DFS space: {}", r.schedules);
+}
+
+#[test]
+fn park_chain_skip_done_recheck_caught_by_random() {
+    let r = explore_random(|| park_chain(2, 2, ParkChainBug::SkipDoneRecheck), 0..1500,
+        &every_op());
+    assert_caught(&r, "SkipDoneRecheck (random)");
+}
+
+#[test]
+fn park_chain_skip_done_recheck_caught_by_dfs() {
+    let r = explore_dfs(|| park_chain(1, 2, ParkChainBug::SkipDoneRecheck), 300_000,
+        &explicit_only());
+    assert_caught(&r, "SkipDoneRecheck (DFS)");
+    // The lost-wakeup manifests as a deadlock: a worker parked forever.
+    let deadlocked = r.failures.iter().any(|f| matches!(f.outcome, Outcome::Deadlock { .. }));
+    assert!(deadlocked, "expected a deadlock failure, got {:?}", r.failures.first());
+}
+
+#[test]
+fn park_chain_wake_then_store_caught_by_random() {
+    let r = explore_random(|| park_chain(2, 2, ParkChainBug::WakeThenStore), 0..1500,
+        &every_op());
+    assert_caught(&r, "WakeThenStore (random)");
+}
+
+#[test]
+fn park_chain_wake_then_store_caught_by_dfs() {
+    let r = explore_dfs(|| park_chain(1, 2, ParkChainBug::WakeThenStore), 300_000,
+        &explicit_only());
+    assert_caught(&r, "WakeThenStore (DFS)");
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 1b: external-producer handoff (sweep-after-register window).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn handoff_correct_k1_w1() {
+    let r = explore_random(|| handoff(1, 1, HandoffBug::Correct), 0..budget::HANDOFF_SEEDS,
+        &every_op());
+    assert_clean(&r, "handoff k=1 w=1");
+}
+
+#[test]
+fn handoff_correct_k2_w2() {
+    let r = explore_random(|| handoff(2, 2, HandoffBug::Correct), 0..budget::HANDOFF_SEEDS,
+        &every_op());
+    assert_clean(&r, "handoff k=2 w=2");
+}
+
+#[test]
+fn handoff_correct_k3_w2() {
+    let r = explore_random(|| handoff(3, 2, HandoffBug::Correct), 0..budget::HANDOFF_SEEDS,
+        &every_op());
+    assert_clean(&r, "handoff k=3 w=2");
+}
+
+#[test]
+fn handoff_dfs_exhausts_minimal_space() {
+    let r = explore_dfs(|| handoff(1, 2, HandoffBug::Correct), 200_000, &explicit_only());
+    assert!(r.exhausted, "handoff DFS space not exhausted in {} schedules", r.schedules);
+    assert_clean(&r, "handoff DFS k=1 w=2");
+}
+
+#[test]
+fn handoff_skip_verify_sweep_caught() {
+    // Register-then-verify exists precisely so a push landing between the
+    // failed sweep and the park is re-observed; skipping the verify sweep
+    // deadlocks when the producer's last push races the consumer's park.
+    let dfs = explore_dfs(|| handoff(1, 1, HandoffBug::SkipVerifySweep), 50_000,
+        &explicit_only());
+    assert_caught(&dfs, "SkipVerifySweep (DFS)");
+    let rnd = explore_random(|| handoff(1, 1, HandoffBug::SkipVerifySweep), 0..600,
+        &every_op());
+    assert_caught(&rnd, "SkipVerifySweep (random)");
+}
+
+#[test]
+fn handoff_register_after_sweep_caught() {
+    // Verifying *before* registering re-opens the same window: the push
+    // can land after the verify but before the register, and the wake
+    // finds no one registered.
+    let dfs = explore_dfs(|| handoff(1, 1, HandoffBug::RegisterAfterSweep), 50_000,
+        &explicit_only());
+    assert_caught(&dfs, "RegisterAfterSweep (DFS)");
+}
+
+#[test]
+fn handoff_wake_before_push_caught() {
+    // Producer-side ordering bug: waking before the item is visible lets
+    // the consumer sweep empty, park, and never be woken again.
+    let dfs = explore_dfs(|| handoff(1, 1, HandoffBug::WakeBeforePush), 50_000,
+        &explicit_only());
+    assert_caught(&dfs, "WakeBeforePush (DFS)");
+    let rnd = explore_random(|| handoff(1, 1, HandoffBug::WakeBeforePush), 0..600,
+        &every_op());
+    assert_caught(&rnd, "WakeBeforePush (random)");
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 2: cancellation at pop/fork points — drop accounting and
+// snapshot-buffer conservation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cancel_correct_k4_w2() {
+    let r = explore_random(|| cancel_tree(4, 2, CancelBug::Correct), 0..budget::CANCEL_SEEDS,
+        &every_op());
+    assert_clean(&r, "cancel k=4 w=2");
+}
+
+#[test]
+fn cancel_correct_k6_w2() {
+    let r = explore_random(|| cancel_tree(6, 2, CancelBug::Correct), 0..budget::CANCEL_SEEDS,
+        &every_op());
+    assert_clean(&r, "cancel k=6 w=2");
+}
+
+#[test]
+fn cancel_correct_k6_w3() {
+    let r = explore_random(|| cancel_tree(6, 3, CancelBug::Correct), 0..budget::CANCEL_SEEDS,
+        &every_op());
+    assert_clean(&r, "cancel k=6 w=3");
+}
+
+#[test]
+fn cancel_leak_snapshot_on_cancel_caught() {
+    let r = explore_random(|| cancel_tree(4, 2, CancelBug::LeakSnapshotOnCancel), 0..2000,
+        &every_op());
+    assert_caught(&r, "LeakSnapshotOnCancel");
+}
+
+#[test]
+fn cancel_forget_drop_accounting_caught() {
+    let r = explore_random(|| cancel_tree(4, 2, CancelBug::ForgetDropAccounting), 0..2000,
+        &every_op());
+    assert_caught(&r, "ForgetDropAccounting");
+}
+
+#[test]
+fn cancel_double_account_caught() {
+    let r = explore_random(|| cancel_tree(4, 2, CancelBug::DoubleAccount), 0..2000,
+        &every_op());
+    assert_caught(&r, "DoubleAccount");
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 3: priority injector — admission order among equal priorities.
+// ---------------------------------------------------------------------------
+
+/// Two priority classes with interleaved admission.
+const PRIO_MIXED: [(i64, u32); 6] = [(5, 500), (1, 100), (5, 501), (1, 101), (5, 502), (1, 102)];
+/// One priority class: pure FIFO-admission invariant.
+const PRIO_TIES: [(i64, u32); 4] = [(3, 300), (3, 301), (3, 302), (3, 303)];
+
+#[test]
+fn priority_static_mixed_correct() {
+    let r = explore_random(|| priority_static(&PRIO_MIXED, 2, PriorityBug::Correct),
+        0..budget::PRIORITY_SEEDS, &every_op());
+    assert_clean(&r, "priority static mixed");
+}
+
+#[test]
+fn priority_static_ties_correct() {
+    let r = explore_random(|| priority_static(&PRIO_TIES, 2, PriorityBug::Correct),
+        0..budget::PRIORITY_SEEDS, &every_op());
+    assert_clean(&r, "priority static ties");
+}
+
+#[test]
+fn priority_dynamic_bump_correct() {
+    // A steerer bumps run 1 (the priority-1 run) above run 0 mid-drain;
+    // per-run admission order must still be preserved.
+    let r = explore_random(|| priority_dynamic(&PRIO_MIXED, 2, PriorityBug::Correct, 9),
+        0..budget::PRIORITY_SEEDS, &every_op());
+    assert_clean(&r, "priority dynamic bump");
+}
+
+#[test]
+fn priority_ignore_priority_caught() {
+    let r = explore_random(|| priority_static(&PRIO_MIXED, 2, PriorityBug::IgnorePriority),
+        0..200, &every_op());
+    assert_caught(&r, "IgnorePriority");
+}
+
+#[test]
+fn priority_lifo_ties_caught() {
+    let r = explore_random(|| priority_static(&PRIO_TIES, 2, PriorityBug::LifoTies), 0..200,
+        &every_op());
+    assert_caught(&r, "LifoTies");
+}
+
+// ---------------------------------------------------------------------------
+// Reproducibility: a failure replays identically from its trace AND from
+// its seed alone.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn failures_replay_from_trace_and_seed() {
+    let r = explore_random(|| park_chain(2, 2, ParkChainBug::SkipDoneRecheck), 0..1500,
+        &every_op());
+    assert_caught(&r, "SkipDoneRecheck (replay source)");
+    let fail = &r.failures[0];
+
+    let by_trace = replay(
+        park_chain(2, 2, ParkChainBug::SkipDoneRecheck),
+        fail.trace.iter().map(|c| c.idx).collect(),
+        &every_op(),
+    );
+    assert_eq!(by_trace.outcome, fail.outcome, "trace replay diverged");
+
+    // invariant: random-exploration failures always carry their seed.
+    let seed = fail.seed.expect("random failure has a seed");
+    let by_seed = replay_seed(park_chain(2, 2, ParkChainBug::SkipDoneRecheck), seed,
+        &every_op());
+    assert_eq!(by_seed.outcome, fail.outcome, "seed replay diverged");
+    assert_eq!(by_seed.trace.len(), fail.trace.len(), "seed replay took a different path");
+}
+
+#[test]
+fn dfs_prefix_replay_reproduces_failure() {
+    let r = explore_dfs(|| handoff(1, 1, HandoffBug::SkipVerifySweep), 50_000,
+        &explicit_only());
+    assert_caught(&r, "SkipVerifySweep (DFS replay source)");
+    let fail = &r.failures[0];
+    let by_trace = replay(
+        handoff(1, 1, HandoffBug::SkipVerifySweep),
+        fail.trace.iter().map(|c| c.idx).collect(),
+        &explicit_only(),
+    );
+    assert_eq!(by_trace.outcome, fail.outcome, "DFS trace replay diverged");
+}
+
+// ---------------------------------------------------------------------------
+// Real executor under the scheduler (requires `--cfg treecv_model_check`,
+// which swaps `crate::sync` onto the instrumented shim — the nightly
+// model-check CI job builds this way).
+// ---------------------------------------------------------------------------
+
+#[cfg(treecv_model_check)]
+mod real_executor {
+    use super::*;
+    use treecv::analysis::sched::{run_schedule, Model, RandomChooser};
+    use treecv::cv::executor::TreeCvExecutor;
+    use treecv::cv::folds::{Folds, Ordering as CvOrdering};
+    use treecv::cv::Strategy;
+    use treecv::data::synth::SyntheticMixture1d;
+    use treecv::data::Dataset;
+    use treecv::learner::histdensity::HistogramDensity;
+
+    /// The executor itself as a model: one declared vthread drives a tiny
+    /// 2-worker batch; the shim registers the pool's scoped workers
+    /// dynamically. The invariant is the crate's headline property —
+    /// the parallel estimate equals the sequential one bit for bit.
+    struct ExecutorModel {
+        data: Dataset,
+        expected: Vec<f64>,
+        result: std::sync::Mutex<Option<Vec<f64>>>,
+    }
+
+    impl Model for ExecutorModel {
+        fn n_threads(&self) -> usize {
+            1
+        }
+
+        fn thread(&self, _tid: usize) {
+            let learner = HistogramDensity::new(-8.0, 8.0, 16);
+            let folds = Folds::new(self.data.n, 4, 7);
+            let exec = TreeCvExecutor::new(Strategy::Copy, CvOrdering::Fixed, 5, 2);
+            let res = exec.run(&learner, &self.data, &folds);
+            *self.result.lock().unwrap_or_else(|e| e.into_inner()) = Some(res.per_fold);
+        }
+
+        fn check(&self) -> Result<(), String> {
+            let got = self.result.lock().unwrap_or_else(|e| e.into_inner());
+            match got.as_ref() {
+                Some(pf) if *pf == self.expected => Ok(()),
+                Some(pf) => Err(format!("per-fold diverged: {pf:?} vs {:?}", self.expected)),
+                None => Err("executor never published a result".into()),
+            }
+        }
+    }
+
+    #[test]
+    fn executor_is_schedule_independent() {
+        use treecv::cv::treecv::TreeCv;
+        use treecv::cv::CvEngine;
+        let data = SyntheticMixture1d::new(96, 11).generate();
+        let learner = HistogramDensity::new(-8.0, 8.0, 16);
+        let folds = Folds::new(data.n, 4, 7);
+        let expected =
+            TreeCv::new(Strategy::Copy, CvOrdering::Fixed, 5).run(&learner, &data, &folds);
+        // A handful of seeds: each schedule serializes every shim op, so
+        // these are slow-motion runs; the space is sampled, not swept.
+        for seed in 0..3u64 {
+            let model = std::sync::Arc::new(ExecutorModel {
+                data: data.clone(),
+                expected: expected.per_fold.clone(),
+                result: std::sync::Mutex::new(None),
+            });
+            let cfg =
+                ExploreCfg { preemption: Preemption::EveryOp, max_steps: 2_000_000 };
+            let res = run_schedule(model, Box::new(RandomChooser::new(seed)), &cfg);
+            assert!(res.outcome.is_ok(), "seed {seed}: {:?}", res.outcome);
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Repo lint engine: the project-specific invariants that `rustc`,
+//! `clippy`, and `rustfmt` cannot express. Run as `cargo run -p xtask --
+//! lint` (blocking in CI; see `.github/workflows/ci.yml`).
+//!
+//! Rules (IDs are stable — fixture tests assert them):
+//!
+//! - `sync-gateway` — library code must reach concurrency primitives
+//!   through `crate::sync`, never `std::sync` / `std::thread` directly,
+//!   so the `cfg(treecv_model_check)` build can swap in the instrumented
+//!   shim. Exempt: `rust/src/sync.rs` (the gateway) and
+//!   `rust/src/analysis/` (the layer beneath it).
+//! - `no-unwrap` — no `.unwrap()` / `.expect(` in library code unless a
+//!   `// invariant:` comment within the preceding [`INVARIANT_WINDOW`]
+//!   lines documents why the panic is unreachable. `#[cfg(test)]`
+//!   regions are exempt (the repo convention keeps them at file tails).
+//! - `line-width` — no source line over [`MAX_WIDTH`] characters.
+//! - `opcounts-json` — every field of `metrics::OpCounts` must be
+//!   serialized by the `ToJson` impl in `report.rs` (a silently dropped
+//!   counter corrupts every downstream experiment report).
+//! - `clone-from` — every learner/runtime model struct (`*Model` under
+//!   `rust/src/learner/` or `rust/src/runtime/`) must have a hand-written
+//!   `impl Clone` with a storage-reusing `clone_from` (the CV engines
+//!   recycle snapshot buffers; a derived clone reallocates on every
+//!   snapshot).
+//! - `test-registration` — every `tests/*.rs` file must have a matching
+//!   `[[test]]` entry in `Cargo.toml` (targets are not auto-discovered
+//!   here; an unregistered suite silently never runs).
+
+use std::collections::HashSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Maximum source-line width, in characters.
+pub const MAX_WIDTH: usize = 100;
+
+/// How many lines (including the flagged line) to scan backwards for a
+/// `// invariant:` comment excusing an `.unwrap()` / `.expect(`.
+pub const INVARIANT_WINDOW: usize = 12;
+
+pub const SYNC_GATEWAY: &str = "sync-gateway";
+pub const NO_UNWRAP: &str = "no-unwrap";
+pub const LINE_WIDTH: &str = "line-width";
+pub const OPCOUNTS_JSON: &str = "opcounts-json";
+pub const CLONE_FROM: &str = "clone-from";
+pub const TEST_REGISTRATION: &str = "test-registration";
+
+/// One lint violation: stable rule ID, repo-relative path, 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}:{}: {}", self.rule, self.path, self.line, self.msg)
+    }
+}
+
+fn finding(rule: &'static str, path: &str, line: usize, msg: String) -> Finding {
+    Finding { rule, path: path.to_string(), line, msg }
+}
+
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// `sync-gateway`: flag lines referencing `std::sync` or `std::thread`
+/// outside comments. The caller is responsible for exempting the gateway
+/// itself and `rust/src/analysis/` (see [`lint_repo`]).
+pub fn check_sync_gateway(path: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if is_comment(line) {
+            continue;
+        }
+        for needle in ["std::sync", "std::thread"] {
+            if line.contains(needle) {
+                let msg =
+                    format!("direct `{needle}` use; go through `crate::sync` (gateway lint)");
+                out.push(finding(SYNC_GATEWAY, path, i + 1, msg));
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// `no-unwrap`: flag `.unwrap()` / `.expect(` outside `#[cfg(test)]`
+/// regions unless a `// invariant:` comment appears within the preceding
+/// [`INVARIANT_WINDOW`] lines.
+pub fn check_no_unwrap(path: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    let mut in_tests = false;
+    for (i, line) in lines.iter().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            // Repo convention: unit tests live in a trailing module, so
+            // everything from here down is test code.
+            in_tests = true;
+        }
+        if in_tests || is_comment(line) {
+            continue;
+        }
+        if !(line.contains(".unwrap()") || line.contains(".expect(")) {
+            continue;
+        }
+        let lo = i.saturating_sub(INVARIANT_WINDOW - 1);
+        let excused = lines[lo..=i].iter().any(|l| l.contains("invariant:"));
+        if !excused {
+            let msg = String::from(
+                "`.unwrap()`/`.expect()` in library code without a nearby `// invariant:` \
+                 comment — propagate a Result or document why the panic is unreachable",
+            );
+            out.push(finding(NO_UNWRAP, path, i + 1, msg));
+        }
+    }
+    out
+}
+
+/// `line-width`: flag lines wider than [`MAX_WIDTH`] characters.
+pub fn check_line_width(path: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let w = line.chars().count();
+        if w > MAX_WIDTH {
+            out.push(finding(LINE_WIDTH, path, i + 1, format!("{w} columns (max {MAX_WIDTH})")));
+        }
+    }
+    out
+}
+
+/// `opcounts-json`: every `pub <field>:` of `pub struct OpCounts` in the
+/// metrics source must appear as a `("<field>"` key in the report source.
+pub fn check_opcounts_json(
+    metrics_path: &str,
+    metrics: &str,
+    report_path: &str,
+    report: &str,
+) -> Vec<Finding> {
+    let mut fields: Vec<(usize, String)> = Vec::new();
+    let mut in_struct = false;
+    for (i, line) in metrics.lines().enumerate() {
+        if line.contains("pub struct OpCounts") {
+            in_struct = true;
+            continue;
+        }
+        if in_struct {
+            let t = line.trim();
+            if t.starts_with('}') {
+                in_struct = false;
+                break;
+            }
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if let Some((name, _)) = rest.split_once(':') {
+                    fields.push((i + 1, name.trim().to_string()));
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    if fields.is_empty() {
+        let msg = String::from("no `pub struct OpCounts` fields found — lint misconfigured?");
+        out.push(finding(OPCOUNTS_JSON, metrics_path, 1, msg));
+        return out;
+    }
+    for (line, name) in fields {
+        if !report.contains(&format!("(\"{name}\"")) {
+            let msg = format!(
+                "OpCounts field `{name}` is not serialized by the ToJson impl in {report_path}"
+            );
+            out.push(finding(OPCOUNTS_JSON, metrics_path, line, msg));
+        }
+    }
+    out
+}
+
+/// `clone-from`: every `pub struct <X>Model` declared in the file must
+/// have a hand-written `impl Clone for <X>Model` containing `clone_from`.
+pub fn check_clone_from(path: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("pub struct ") else {
+            continue;
+        };
+        let name: String =
+            rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        if !name.ends_with("Model") {
+            continue;
+        }
+        let imp = format!("impl Clone for {name}");
+        let ok = match text.find(&imp) {
+            Some(pos) => text[pos..].contains("fn clone_from"),
+            None => false,
+        };
+        if !ok {
+            let msg = format!(
+                "model struct `{name}` needs a hand-written `impl Clone` with a \
+                 storage-reusing `clone_from` (snapshot buffers are recycled)"
+            );
+            out.push(finding(CLONE_FROM, path, i + 1, msg));
+        }
+    }
+    out
+}
+
+/// `test-registration`: every entry of `test_files` (repo-relative, e.g.
+/// `tests/integration_cv.rs`) must appear as a `path = "..."` inside a
+/// `[[test]]` section of the manifest.
+pub fn check_test_registration(manifest: &str, test_files: &[String]) -> Vec<Finding> {
+    let mut registered: HashSet<String> = HashSet::new();
+    let mut in_test = false;
+    for line in manifest.lines() {
+        let t = line.trim();
+        if t.starts_with('[') {
+            in_test = t == "[[test]]";
+            continue;
+        }
+        if in_test {
+            if let Some(p) = t.strip_prefix("path = \"").and_then(|r| r.strip_suffix('"')) {
+                registered.insert(p.to_string());
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for f in test_files {
+        if !registered.contains(f) {
+            let msg = format!(
+                "{f} has no [[test]] entry in Cargo.toml — the suite silently never runs"
+            );
+            out.push(finding(TEST_REGISTRATION, f, 1, msg));
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files, skipping `target/`, `vendor/`, and
+/// fixture corpora. Missing directories are tolerated (empty result).
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            let skip = matches!(
+                p.file_name().and_then(|n| n.to_str()),
+                Some("target") | Some("vendor") | Some("fixtures")
+            );
+            if !skip {
+                walk(&p, out)?;
+            }
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+/// Run every rule over the repository rooted at `root`; returns findings
+/// sorted by (path, line, rule).
+pub fn lint_repo(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut out = Vec::new();
+
+    let mut src_files = Vec::new();
+    walk(&root.join("rust/src"), &mut src_files)?;
+    for p in &src_files {
+        let path = rel(root, p);
+        let text = fs::read_to_string(p)?;
+        let gateway_exempt =
+            path == "rust/src/sync.rs" || path.starts_with("rust/src/analysis/");
+        if !gateway_exempt {
+            out.extend(check_sync_gateway(&path, &text));
+        }
+        out.extend(check_no_unwrap(&path, &text));
+        out.extend(check_line_width(&path, &text));
+        if path.starts_with("rust/src/learner/") || path.starts_with("rust/src/runtime/") {
+            out.extend(check_clone_from(&path, &text));
+        }
+    }
+
+    for dir in ["tests", "benches", "examples", "xtask/src", "xtask/tests"] {
+        let mut files = Vec::new();
+        walk(&root.join(dir), &mut files)?;
+        for p in files {
+            let path = rel(root, &p);
+            let text = fs::read_to_string(&p)?;
+            out.extend(check_line_width(&path, &text));
+        }
+    }
+
+    let metrics_path = "rust/src/metrics/mod.rs";
+    let report_path = "rust/src/report.rs";
+    let metrics = fs::read_to_string(root.join(metrics_path))?;
+    let report = fs::read_to_string(root.join(report_path))?;
+    out.extend(check_opcounts_json(metrics_path, &metrics, report_path, &report));
+
+    let manifest = fs::read_to_string(root.join("Cargo.toml"))?;
+    let mut tests: Vec<String> = Vec::new();
+    for entry in fs::read_dir(root.join("tests"))? {
+        let p = entry?.path();
+        if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+                tests.push(format!("tests/{name}"));
+            }
+        }
+    }
+    tests.sort();
+    out.extend(check_test_registration(&manifest, &tests));
+
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(out)
+}

@@ -1,0 +1,49 @@
+//! `cargo run -p xtask -- lint [--root <path>]`
+//!
+//! Exit status 0 when the tree is clean, 1 when any rule fires (findings
+//! are printed one per line as `rule path:line: message`), 2 on usage or
+//! I/O errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn repo_root(args: &[String]) -> Option<PathBuf> {
+    if let Some(i) = args.iter().position(|a| a == "--root") {
+        return args.get(i + 1).map(PathBuf::from);
+    }
+    // xtask lives one level below the workspace root.
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(PathBuf::from)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let Some(root) = repo_root(&args[1..]) else {
+                eprintln!("xtask: could not determine repo root (pass --root <path>)");
+                return ExitCode::from(2);
+            };
+            match xtask::lint_repo(&root) {
+                Ok(findings) if findings.is_empty() => {
+                    println!("xtask lint: clean ({})", root.display());
+                    ExitCode::SUCCESS
+                }
+                Ok(findings) => {
+                    for f in &findings {
+                        println!("{f}");
+                    }
+                    eprintln!("xtask lint: {} finding(s)", findings.len());
+                    ExitCode::FAILURE
+                }
+                Err(e) => {
+                    eprintln!("xtask lint: I/O error: {e}");
+                    ExitCode::from(2)
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [--root <path>]");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Fixture: a file that violates no rule. Comments may mention
+//! std::sync or .unwrap() freely — prose is never flagged.
+
+pub struct CleanModel {
+    pub w: Vec<f32>,
+}
+
+impl Clone for CleanModel {
+    fn clone(&self) -> Self {
+        Self { w: self.w.clone() }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.w.clone_from(&src.w);
+    }
+}
+
+pub fn total(model: &CleanModel) -> f32 {
+    // invariant: documented panics are allowed when excused like this.
+    let first = model.w.first().expect("caller guarantees non-empty");
+    model.w.iter().sum::<f32>() + first - first
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(3u32).unwrap(), 3);
+    }
+}

@@ -1,0 +1,28 @@
+//! Fixture: model structs with and without a hand-written clone_from.
+
+/// Derived Clone only — must be flagged (line 5).
+#[derive(Clone)]
+pub struct BadModel {
+    pub w: Vec<f32>,
+}
+
+/// Hand-written Clone with storage reuse — clean.
+pub struct GoodModel {
+    pub w: Vec<f32>,
+}
+
+impl Clone for GoodModel {
+    fn clone(&self) -> Self {
+        Self { w: self.w.clone() }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.w.clone_from(&src.w);
+    }
+}
+
+/// Not a model struct — never in scope for the rule.
+#[derive(Clone)]
+pub struct Config {
+    pub k: usize,
+}

@@ -1,0 +1,5 @@
+//! Fixture: one over-wide line at line 4 (107 columns).
+
+pub fn fits() {}
+// aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa
+pub fn also_fits() {}

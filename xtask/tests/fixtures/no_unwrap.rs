@@ -1,0 +1,22 @@
+//! Fixture: unwrap/expect in library positions (.unwrap() in prose ok).
+
+pub fn bad_unwrap(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn bad_expect(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn good_expect(v: Option<u32>) -> u32 {
+    // invariant: callers always pass Some here.
+    v.expect("always Some")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(1u32).unwrap(), 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: OpCounts with a field the report serializer forgot.
+
+pub struct OpCounts {
+    pub update_calls: u64,
+    pub missing_field: u64,
+}

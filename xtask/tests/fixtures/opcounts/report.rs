@@ -1,0 +1,6 @@
+//! Fixture report: serializes update_calls but not missing_field.
+
+pub fn to_json() -> String {
+    let fields = [("update_calls", 1u64)];
+    format!("{fields:?}")
+}

@@ -1,0 +1,9 @@
+//! Fixture: direct std::sync / std::thread uses (this line is prose).
+
+use std::sync::Mutex;
+
+pub fn fixture() -> Mutex<u32> {
+    let m = std::sync::Mutex::new(1);
+    let _ = std::thread::current();
+    m
+}

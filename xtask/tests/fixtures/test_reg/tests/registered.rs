@@ -1,0 +1,4 @@
+//! Fixture: this suite IS registered in the fixture Cargo.toml.
+
+#[test]
+fn present() {}

@@ -1,0 +1,4 @@
+//! Fixture: this suite has NO [[test]] entry — must be flagged.
+
+#[test]
+fn absent_from_manifest() {}

@@ -1,0 +1,97 @@
+//! Fixture battery for the repo lint: one known-violation file per rule
+//! (asserting exact rule IDs and line numbers), one clean file that every
+//! rule must pass, and a whole-repo run that doubles as the enforcement
+//! test CI relies on.
+
+use std::fs;
+use std::path::Path;
+use xtask::{
+    check_clone_from, check_line_width, check_no_unwrap, check_opcounts_json,
+    check_sync_gateway, check_test_registration, lint_repo, CLONE_FROM, LINE_WIDTH, NO_UNWRAP,
+    OPCOUNTS_JSON, SYNC_GATEWAY, TEST_REGISTRATION,
+};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+fn ids_and_lines(findings: &[xtask::Finding]) -> Vec<(&'static str, usize)> {
+    findings.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+#[test]
+fn sync_gateway_flags_each_direct_use() {
+    let f = check_sync_gateway("fx.rs", &fixture("sync_gateway.rs"));
+    assert_eq!(
+        ids_and_lines(&f),
+        vec![(SYNC_GATEWAY, 3), (SYNC_GATEWAY, 6), (SYNC_GATEWAY, 7)]
+    );
+}
+
+#[test]
+fn no_unwrap_flags_undocumented_panics_only() {
+    let f = check_no_unwrap("fx.rs", &fixture("no_unwrap.rs"));
+    // Line 4: bare unwrap; line 8: expect without an invariant comment.
+    // Line 13 (invariant-documented) and the cfg(test) unwrap are clean.
+    assert_eq!(ids_and_lines(&f), vec![(NO_UNWRAP, 4), (NO_UNWRAP, 8)]);
+}
+
+#[test]
+fn line_width_flags_the_wide_line() {
+    let f = check_line_width("fx.rs", &fixture("line_width.rs"));
+    assert_eq!(ids_and_lines(&f), vec![(LINE_WIDTH, 4)]);
+    assert!(f[0].msg.contains("107"), "width missing from message: {}", f[0].msg);
+}
+
+#[test]
+fn opcounts_json_flags_the_unserialized_field() {
+    let f = check_opcounts_json(
+        "fx_metrics.rs",
+        &fixture("opcounts/metrics.rs"),
+        "fx_report.rs",
+        &fixture("opcounts/report.rs"),
+    );
+    assert_eq!(ids_and_lines(&f), vec![(OPCOUNTS_JSON, 5)]);
+    assert!(f[0].msg.contains("missing_field"), "{}", f[0].msg);
+}
+
+#[test]
+fn clone_from_flags_the_derived_model_only() {
+    let f = check_clone_from("fx.rs", &fixture("clone_from.rs"));
+    assert_eq!(ids_and_lines(&f), vec![(CLONE_FROM, 5)]);
+    assert!(f[0].msg.contains("BadModel"), "{}", f[0].msg);
+}
+
+#[test]
+fn test_registration_flags_the_unregistered_suite() {
+    let manifest = fixture("test_reg/Cargo.toml");
+    let files =
+        vec!["tests/registered.rs".to_string(), "tests/unregistered.rs".to_string()];
+    let f = check_test_registration(&manifest, &files);
+    assert_eq!(ids_and_lines(&f), vec![(TEST_REGISTRATION, 1)]);
+    assert_eq!(f[0].path, "tests/unregistered.rs");
+}
+
+#[test]
+fn clean_file_passes_every_content_rule() {
+    let text = fixture("clean.rs");
+    assert!(check_sync_gateway("fx.rs", &text).is_empty());
+    assert!(check_no_unwrap("fx.rs", &text).is_empty());
+    assert!(check_line_width("fx.rs", &text).is_empty());
+    assert!(check_clone_from("fx.rs", &text).is_empty());
+}
+
+#[test]
+fn whole_repo_is_clean() {
+    // The enforcement test: the real tree must be lint-clean. CI also
+    // runs `cargo run -p xtask -- lint` as a blocking step; this keeps
+    // plain `cargo test -p xtask` equivalent.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("workspace root");
+    let findings = lint_repo(root).expect("lint walk");
+    assert!(
+        findings.is_empty(),
+        "repo lint findings:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
