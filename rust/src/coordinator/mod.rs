@@ -26,6 +26,9 @@
 
 pub mod paper;
 pub mod registry;
+pub mod serve;
+
+pub use serve::{format_serve_table, run_serve, ServeReport};
 
 use crate::config::{Engine, ExperimentConfig, StrategyCfg, SweepGrid, Task};
 use crate::cv::folds::{Folds, Ordering};

@@ -1,0 +1,507 @@
+//! `repro serve` — the streaming CV service: ROADMAP's "heavy traffic"
+//! scenario in miniature. One persistent executor pool primes a baseline
+//! TreeCV estimate, then a line protocol on stdin appends row batches
+//! ([`crate::data::folded::FoldedDataset::append_rows`]) and keeps the
+//! estimate warm through the O(log k)-per-fold incremental refresh engine
+//! ([`crate::cv::refresh`]) — answering estimate queries at any point and
+//! reporting throughput and estimate-staleness metrics at shutdown.
+//!
+//! ## Line protocol (stdin → stdout)
+//!
+//! | input                 | effect / reply                                |
+//! |-----------------------|-----------------------------------------------|
+//! | `row <y> <x1>..<xd>`  | buffer one row; auto-applies every `--batch`  |
+//! | `flush`               | apply buffered rows now → `applied …` line    |
+//! | `query`               | `estimate <v> pending <p>` (no flush: `p` is  |
+//! |                       | the staleness — buffered rows not yet folded) |
+//! | `retire <count>`      | drop the `count` oldest rows (sliding window) |
+//! |                       | and re-prime → `retired …` line               |
+//! | `stats`               | one-line counter snapshot                     |
+//! | `quit` / `exit`       | stop reading; EOF acts the same               |
+//! | blank / `# …`         | ignored                                       |
+//!
+//! Malformed input never kills the service: it answers `err …` and keeps
+//! reading. Applied batches reply
+//! `applied rows=<b> touched=<t> subtrees=<s> estimate=<v>` so a driving
+//! process can observe refresh cost live. Retiring invalidates every
+//! cached interior model (row ids shift under the fold layout), so the
+//! service re-primes from scratch — the one full-cost operation.
+
+use super::{build_dataset, registry, resolve_single_k};
+use crate::config::{ExperimentConfig, Task};
+use crate::cv::executor::TreeCvExecutor;
+use crate::cv::folds::{Folds, Ordering};
+use crate::cv::refresh::RefreshSession;
+use crate::cv::Strategy;
+use crate::data::folded::FoldedDataset;
+use crate::data::Dataset;
+use crate::learner::erased::DynLearner;
+use crate::metrics::{RunningStats, Timer};
+use crate::Result;
+use anyhow::bail;
+use std::io::{BufRead, Write};
+use std::time::Duration;
+
+/// Final metrics of one `repro serve` session (rendered by
+/// [`format_serve_table`] or as JSON via `ToJson`).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub task: Task,
+    /// Fold count (fixed for the session; chunks grow with appends).
+    pub k: usize,
+    /// Window size when the stream ended.
+    pub n_final: usize,
+    /// Worker-pool size used by prime runs (refreshes are sequential).
+    pub threads: usize,
+    /// Rows accepted over the whole session.
+    pub rows_ingested: u64,
+    /// Rows dropped by `retire` commands.
+    pub rows_retired: u64,
+    /// Applied (non-empty) batches.
+    pub batches_applied: u64,
+    /// Incremental refreshes run (= non-empty applies).
+    pub refreshes: u64,
+    /// From-scratch pooled runs: the initial baseline plus one per retire.
+    pub primes: u64,
+    /// `query` commands answered.
+    pub queries: u64,
+    /// Queries answered while buffered rows were not yet applied.
+    pub stale_queries: u64,
+    /// Mean buffered-row count over the answered queries (staleness).
+    pub mean_pending_at_query: f64,
+    /// Worst-case buffered-row count at any query.
+    pub max_pending_at_query: u64,
+    /// Total wholesale subtree re-runs across all refreshes (the O(log k)
+    /// work the service pays instead of from-scratch runs).
+    pub subtrees_recomputed: u64,
+    /// Wall-clock spent inside incremental refreshes.
+    pub refresh_wall_secs: f64,
+    /// Wall-clock spent inside from-scratch primes.
+    pub prime_wall_secs: f64,
+    /// Whole-session wall-clock.
+    pub total_wall_secs: f64,
+    /// Ingest throughput over the whole session.
+    pub rows_per_sec: f64,
+    /// The k-CV estimate when the stream ended (post final flush).
+    pub estimate: f64,
+}
+
+/// Everything the serve loop mutates, so the command handlers stay small.
+struct ServeState<'a> {
+    exe: TreeCvExecutor,
+    learner: DynLearner<'a>,
+    data: Dataset,
+    folded: FoldedDataset,
+    session: RefreshSession<DynLearner<'a>>,
+    pend_x: Vec<f32>,
+    pend_y: Vec<f32>,
+    estimate: f64,
+    rows_ingested: u64,
+    rows_retired: u64,
+    batches_applied: u64,
+    refreshes: u64,
+    primes: u64,
+    queries: u64,
+    stale_queries: u64,
+    pending_at_query: RunningStats,
+    max_pending: u64,
+    subtrees: u64,
+    refresh_wall: Duration,
+    prime_wall: Duration,
+}
+
+impl ServeState<'_> {
+    /// Fold the buffered rows into the window and refresh the estimate.
+    /// Returns `(rows, touched_folds, subtrees_recomputed)`; `(0, 0, 0)`
+    /// when nothing was buffered.
+    fn apply(&mut self) -> (usize, usize, u64) {
+        let rows = self.pend_y.len();
+        if rows == 0 {
+            return (0, 0, 0);
+        }
+        self.data.push_rows(&self.pend_x, &self.pend_y);
+        let delta = self.folded.append_rows(&self.pend_x, &self.pend_y);
+        self.pend_x.clear();
+        self.pend_y.clear();
+        let res =
+            self.exe.refresh(&mut self.session, &self.learner, &self.data, &self.folded, &delta);
+        self.estimate = res.estimate;
+        self.refresh_wall += res.wall;
+        self.subtrees += res.ops.subtrees_recomputed;
+        self.refreshes += 1;
+        self.batches_applied += 1;
+        (rows, delta.touched.len(), res.ops.subtrees_recomputed)
+    }
+
+    /// From-scratch pooled baseline (startup and after every retire).
+    fn prime(&mut self) {
+        let (session, res) = self.exe.prime(&self.learner, &self.data, &self.folded);
+        self.session = session;
+        self.estimate = res.estimate;
+        self.prime_wall += res.wall;
+        self.primes += 1;
+    }
+
+    /// Slide the window: drop the `count` oldest rows, renumber, and
+    /// re-prime. Rejects (with a protocol-level message, never a panic)
+    /// any retire that would empty the window or a fold chunk.
+    fn retire(&mut self, count: usize) -> std::result::Result<(), String> {
+        if count == 0 {
+            return Ok(());
+        }
+        let Ok(cutoff) = u32::try_from(count) else {
+            return Err(format!("retire count {count} out of range"));
+        };
+        if count >= self.data.n {
+            return Err(format!("retire {count} would empty the window (n = {})", self.data.n));
+        }
+        if !self.folded.folds().can_retire_below(cutoff) {
+            return Err(format!(
+                "retire {count} would empty a fold chunk (k = {})",
+                self.folded.folds().k()
+            ));
+        }
+        self.data.retire_front(count);
+        self.folded.retire_oldest(count);
+        self.session.invalidate();
+        self.rows_retired += count as u64;
+        self.prime();
+        Ok(())
+    }
+}
+
+/// Run the streaming service: read the line protocol from `input`, write
+/// replies to `out`, return the session's final metrics. `batch` is the
+/// auto-apply threshold (rows buffered before a refresh fires); the
+/// config contributes task, initial window (`n`), fold count (single
+/// `ks` entry), strategy, ordering, seed and threads.
+pub fn run_serve<R: BufRead, W: Write>(
+    cfg: &ExperimentConfig,
+    batch: usize,
+    input: R,
+    out: &mut W,
+) -> Result<ServeReport> {
+    if batch == 0 {
+        bail!("serve needs --batch >= 1 (rows per refresh)");
+    }
+    if cfg.ks.len() != 1 {
+        bail!("serve uses a single fold count; got ks = {:?}", cfg.ks);
+    }
+    let timer = Timer::start();
+    let data = build_dataset(cfg)?;
+    let k = resolve_single_k(cfg, &data)?;
+    let learner_box = (registry::entry(cfg.task).build)(cfg, &data)?;
+    let learner = DynLearner(&*learner_box);
+    let folds = Folds::new(data.n, k, cfg.seed);
+    let folded = FoldedDataset::build(&data, &folds);
+    let d = data.d;
+    let mut exe = TreeCvExecutor::with_threads_knob(
+        Strategy::from(cfg.strategy),
+        Ordering::from(cfg.ordering),
+        cfg.threads,
+    );
+    exe.seed = cfg.seed;
+    let threads = exe.threads;
+
+    let mut st = ServeState {
+        exe,
+        learner,
+        data,
+        folded,
+        session: RefreshSession::new(),
+        pend_x: Vec::new(),
+        pend_y: Vec::new(),
+        estimate: 0.0,
+        rows_ingested: 0,
+        rows_retired: 0,
+        batches_applied: 0,
+        refreshes: 0,
+        primes: 0,
+        queries: 0,
+        stale_queries: 0,
+        pending_at_query: RunningStats::default(),
+        max_pending: 0,
+        subtrees: 0,
+        refresh_wall: Duration::ZERO,
+        prime_wall: Duration::ZERO,
+    };
+    st.prime();
+
+    for line in input.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = trimmed.split_whitespace().collect();
+        match parts[0] {
+            "row" => {
+                if parts.len() != d + 2 {
+                    writeln!(out, "err row wants y plus {d} features, got {}", parts.len() - 1)?;
+                    continue;
+                }
+                let mut vals = Vec::with_capacity(d + 1);
+                for p in &parts[1..] {
+                    match p.parse::<f32>() {
+                        Ok(v) => vals.push(v),
+                        Err(_) => break,
+                    }
+                }
+                if vals.len() != d + 1 {
+                    writeln!(out, "err row has an unparsable number: {trimmed}")?;
+                    continue;
+                }
+                st.pend_y.push(vals[0]);
+                st.pend_x.extend_from_slice(&vals[1..]);
+                st.rows_ingested += 1;
+                if st.pend_y.len() >= batch {
+                    let (r, t, s) = st.apply();
+                    writeln!(
+                        out,
+                        "applied rows={r} touched={t} subtrees={s} estimate={:.6}",
+                        st.estimate
+                    )?;
+                }
+            }
+            "flush" => {
+                let (r, t, s) = st.apply();
+                writeln!(
+                    out,
+                    "applied rows={r} touched={t} subtrees={s} estimate={:.6}",
+                    st.estimate
+                )?;
+            }
+            "query" => {
+                let pending = st.pend_y.len() as u64;
+                st.queries += 1;
+                if pending > 0 {
+                    st.stale_queries += 1;
+                }
+                st.pending_at_query.push(pending as f64);
+                st.max_pending = st.max_pending.max(pending);
+                writeln!(out, "estimate {:.6} pending {pending}", st.estimate)?;
+            }
+            "retire" => match parts.get(1).and_then(|p| p.parse::<usize>().ok()) {
+                None => writeln!(out, "err retire wants a row count")?,
+                Some(count) => {
+                    let (r, t, s) = st.apply();
+                    if r > 0 {
+                        writeln!(
+                            out,
+                            "applied rows={r} touched={t} subtrees={s} estimate={:.6}",
+                            st.estimate
+                        )?;
+                    }
+                    match st.retire(count) {
+                        Ok(()) => writeln!(
+                            out,
+                            "retired {count} n={} estimate={:.6}",
+                            st.data.n, st.estimate
+                        )?,
+                        Err(msg) => writeln!(out, "err {msg}")?,
+                    }
+                }
+            },
+            "stats" => writeln!(
+                out,
+                "stats n={} ingested={} retired={} batches={} refreshes={} primes={} \
+                 queries={} stale={} pending={} cached_nodes={} subtrees={}",
+                st.data.n,
+                st.rows_ingested,
+                st.rows_retired,
+                st.batches_applied,
+                st.refreshes,
+                st.primes,
+                st.queries,
+                st.stale_queries,
+                st.pend_y.len(),
+                st.session.cached_nodes(),
+                st.subtrees,
+            )?,
+            "quit" | "exit" => break,
+            other => writeln!(out, "err unknown command `{other}`")?,
+        }
+    }
+    // EOF (or quit): fold any still-buffered rows so the reported
+    // estimate covers everything the stream delivered.
+    let (r, t, s) = st.apply();
+    if r > 0 {
+        writeln!(out, "applied rows={r} touched={t} subtrees={s} estimate={:.6}", st.estimate)?;
+    }
+
+    let total = timer.elapsed().as_secs_f64();
+    Ok(ServeReport {
+        task: cfg.task,
+        k,
+        n_final: st.data.n,
+        threads,
+        rows_ingested: st.rows_ingested,
+        rows_retired: st.rows_retired,
+        batches_applied: st.batches_applied,
+        refreshes: st.refreshes,
+        primes: st.primes,
+        queries: st.queries,
+        stale_queries: st.stale_queries,
+        mean_pending_at_query: st.pending_at_query.mean(),
+        max_pending_at_query: st.max_pending,
+        subtrees_recomputed: st.subtrees,
+        refresh_wall_secs: st.refresh_wall.as_secs_f64(),
+        prime_wall_secs: st.prime_wall.as_secs_f64(),
+        total_wall_secs: total,
+        rows_per_sec: if total > 0.0 { st.rows_ingested as f64 / total } else { 0.0 },
+        estimate: st.estimate,
+    })
+}
+
+/// Pretty-print a serve session's final metrics (the `serve` CLI's
+/// default output; the schema is documented in EXPERIMENTS.md).
+pub fn format_serve_table(report: &ServeReport) -> String {
+    let mut s = format!(
+        "serve task={} k={} n_final={} threads={} total_wall={:.4}s\n",
+        report.task.name(),
+        report.k,
+        report.n_final,
+        report.threads,
+        report.total_wall_secs,
+    );
+    s.push_str(&format!(
+        "ingest: rows={} retired={} batches={} rows_per_sec={:.1}\n",
+        report.rows_ingested, report.rows_retired, report.batches_applied, report.rows_per_sec,
+    ));
+    s.push_str(&format!(
+        "refresh: refreshes={} primes={} subtrees_recomputed={} refresh_wall={:.4}s \
+         prime_wall={:.4}s\n",
+        report.refreshes,
+        report.primes,
+        report.subtrees_recomputed,
+        report.refresh_wall_secs,
+        report.prime_wall_secs,
+    ));
+    s.push_str(&format!(
+        "queries: total={} stale={} mean_pending={:.2} max_pending={}\n",
+        report.queries,
+        report.stale_queries,
+        report.mean_pending_at_query,
+        report.max_pending_at_query,
+    ));
+    s.push_str(&format!("estimate: {:.6}\n", report.estimate));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Task;
+    use crate::cv::treecv::TreeCv;
+    use crate::learner::multiset::MultisetLearner;
+    use std::io::Cursor;
+
+    fn serve_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            task: Task::Multiset,
+            n: 40,
+            ks: vec![4],
+            seed: 9,
+            threads: 1,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    fn run(script: &str, batch: usize) -> (ServeReport, String) {
+        let cfg = serve_cfg();
+        let mut out = Vec::new();
+        let report = run_serve(&cfg, batch, Cursor::new(script.to_string()), &mut out)
+            .expect("serve session");
+        (report, String::from_utf8(out).expect("utf8 output"))
+    }
+
+    #[test]
+    fn rows_auto_apply_at_batch_size_and_queries_track_staleness() {
+        let script = "\
+row 0.5 1.0\n\
+query\n\
+row -0.5 2.0\n\
+query\n\
+stats\n\
+quit\n";
+        let (report, out) = run(script, 2);
+        // First query sees 1 buffered row (stale), second sees 0 (the
+        // second row triggered the batch-of-2 apply).
+        assert_eq!(report.queries, 2);
+        assert_eq!(report.stale_queries, 1);
+        assert_eq!(report.max_pending_at_query, 1);
+        assert_eq!(report.batches_applied, 1);
+        assert_eq!(report.refreshes, 1);
+        assert_eq!(report.primes, 1);
+        assert_eq!(report.rows_ingested, 2);
+        assert_eq!(report.n_final, 42);
+        assert!(report.subtrees_recomputed > 0);
+        assert!(out.contains("applied rows=2"));
+        assert!(out.contains("pending 1"));
+        assert!(out.contains("pending 0"));
+        assert!(out.contains("stats n=42"));
+    }
+
+    #[test]
+    fn served_estimate_matches_library_replay() {
+        let script = "\
+row 0.25 1.5\n\
+row 0.75 -2.0\n\
+row -0.25 0.5\n\
+flush\n\
+quit\n";
+        let (report, _) = run(script, 100);
+        // Replay the stream through the library directly: same config,
+        // same fold seed, same appends — the served estimate must match
+        // a from-scratch folded run on the final window bitwise.
+        let cfg = serve_cfg();
+        let mut data = build_dataset(&cfg).expect("dataset");
+        let folds = Folds::new(data.n, 4, cfg.seed);
+        let mut folded = FoldedDataset::build(&data, &folds);
+        let x = [1.5f32, -2.0, 0.5];
+        let y = [0.25f32, 0.75, -0.25];
+        data.push_rows(&x, &y);
+        folded.append_rows(&x, &y);
+        let learner = MultisetLearner::new(data.d);
+        let want = TreeCv::default().run_folded(&learner, &data, &folded);
+        assert_eq!(report.estimate, want.estimate);
+        assert_eq!(report.n_final, data.n);
+    }
+
+    #[test]
+    fn retire_slides_the_window_and_reprimes() {
+        let script = "\
+row 0.5 1.0\n\
+row 0.5 2.0\n\
+row 0.5 3.0\n\
+row 0.5 4.0\n\
+retire 4\n\
+stats\n\
+quit\n";
+        let (report, out) = run(script, 100);
+        assert_eq!(report.rows_retired, 4);
+        assert_eq!(report.primes, 2, "baseline + post-retire re-prime");
+        assert_eq!(report.n_final, 40, "4 in, 4 out");
+        assert!(out.contains("retired 4 n=40"));
+    }
+
+    #[test]
+    fn bad_input_answers_err_and_keeps_serving() {
+        let script = "\
+bogus\n\
+row 1.0\n\
+row 1.0 nope\n\
+retire notanumber\n\
+retire 1000\n\
+query\n\
+quit\n";
+        let (report, out) = run(script, 100);
+        assert_eq!(report.queries, 1, "service survived every bad line");
+        assert_eq!(report.rows_ingested, 0);
+        assert!(out.contains("err unknown command `bogus`"));
+        assert!(out.contains("err row wants y plus 1 features"));
+        assert!(out.contains("err row has an unparsable number"));
+        assert!(out.contains("err retire wants a row count"));
+        assert!(out.contains("err retire 1000 would empty the window"));
+    }
+}

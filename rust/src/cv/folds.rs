@@ -118,6 +118,70 @@ impl Folds {
             }
         }
     }
+
+    /// Append original index `id` to chunk `c`'s tail (streaming arrivals
+    /// extend a chunk without disturbing the fixed within-chunk order of
+    /// the points already there). Ids must stay dense — the next appended
+    /// id is always the current `n` — so the partition keeps covering
+    /// `0..n` exactly once.
+    pub fn append_to_chunk(&mut self, c: usize, id: u32) {
+        assert_eq!(
+            id as usize, self.n,
+            "appended ids must be dense: expected {}, got {id}",
+            self.n
+        );
+        self.chunks[c].push(id);
+        self.n += 1;
+    }
+
+    /// The chunk a streaming append should land in: the smallest one
+    /// (lowest index on ties). Routing every append through this keeps
+    /// chunk sizes within 1 of each other under any arrival pattern, the
+    /// same near-equal-size invariant [`Folds::new`] establishes.
+    pub fn smallest_chunk(&self) -> usize {
+        let mut best = 0;
+        for (c, chunk) in self.chunks.iter().enumerate().skip(1) {
+            if chunk.len() < self.chunks[best].len() {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Whether [`Self::retire_below`]`(cutoff)` would leave every chunk
+    /// non-empty (a CV partition needs k non-empty folds). Lets a
+    /// long-running caller validate a sliding-window retirement instead of
+    /// panicking mid-service.
+    pub fn can_retire_below(&self, cutoff: u32) -> bool {
+        (cutoff as usize) < self.n
+            && self.chunks.iter().all(|c| c.iter().any(|&id| id >= cutoff))
+    }
+
+    /// Sliding-window retirement: drop every original index below
+    /// `cutoff` and renumber the survivors down by `cutoff`, so the
+    /// partition covers the shifted window `0..n-cutoff` exactly once.
+    /// Panics if any chunk would end up empty (check
+    /// [`Self::can_retire_below`] first in long-running callers).
+    pub fn retire_below(&mut self, cutoff: u32) {
+        assert!(
+            (cutoff as usize) < self.n,
+            "retire_below({cutoff}) must leave at least one row (n = {})",
+            self.n
+        );
+        let mut removed = 0usize;
+        for chunk in self.chunks.iter_mut() {
+            let before = chunk.len();
+            chunk.retain(|&id| id >= cutoff);
+            removed += before - chunk.len();
+            assert!(!chunk.is_empty(), "retire_below({cutoff}) would empty a fold chunk");
+            for id in chunk.iter_mut() {
+                *id -= cutoff;
+            }
+        }
+        // Ids are dense 0..n, so exactly `cutoff` of them sat below it.
+        debug_assert_eq!(removed, cutoff as usize);
+        self.n -= removed;
+    }
 }
 
 /// The `(right, left)` stream tags for TreeCV node `(s, e)` — one per
@@ -334,6 +398,61 @@ mod tests {
         let cap = buf.capacity();
         f.gather_except_into(0, &mut buf);
         assert_eq!(buf.capacity(), cap, "refill must not reallocate");
+    }
+
+    #[test]
+    fn append_routes_to_smallest_and_stays_balanced() {
+        let mut f = Folds::new(103, 10, 3); // 3 chunks of 11, 7 of 10
+        for _ in 0..37 {
+            let c = f.smallest_chunk();
+            let id = f.n() as u32;
+            f.append_to_chunk(c, id);
+        }
+        assert_eq!(f.n(), 140);
+        let sizes: Vec<usize> = (0..10).map(|i| f.chunk(i).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 140);
+        let (lo, hi) = (sizes.iter().min().copied(), sizes.iter().max().copied());
+        assert!(hi.zip(lo).is_some_and(|(h, l)| h - l <= 1), "{sizes:?}");
+        // Still a partition of 0..n.
+        let mut all = f.gather_range(0, 9);
+        all.sort_unstable();
+        assert!(all.iter().enumerate().all(|(i, &p)| p as usize == i));
+    }
+
+    #[test]
+    #[should_panic(expected = "dense")]
+    fn append_rejects_non_dense_id() {
+        let mut f = Folds::new(10, 2, 0);
+        f.append_to_chunk(0, 11);
+    }
+
+    #[test]
+    fn retire_below_renumbers_and_preserves_partition() {
+        let mut f = Folds::contiguous(12, 3); // chunks [0..4),[4..8),[8..12)
+        assert!(f.can_retire_below(3));
+        f.retire_below(3);
+        assert_eq!(f.n(), 9);
+        assert_eq!(f.chunk(0), &[0]); // was [3], shifted down
+        assert_eq!(f.chunk(1), &[1, 2, 3, 4]);
+        assert_eq!(f.chunk(2), &[5, 6, 7, 8]);
+        let mut all = f.gather_range(0, 2);
+        all.sort_unstable();
+        assert!(all.iter().enumerate().all(|(i, &p)| p as usize == i));
+    }
+
+    #[test]
+    fn can_retire_below_detects_emptied_chunk() {
+        let f = Folds::contiguous(12, 3);
+        assert!(f.can_retire_below(3));
+        assert!(!f.can_retire_below(4), "cutoff 4 empties chunk 0");
+        assert!(!f.can_retire_below(12), "must leave at least one row");
+    }
+
+    #[test]
+    #[should_panic(expected = "would empty a fold chunk")]
+    fn retire_below_rejects_emptied_chunk() {
+        let mut f = Folds::contiguous(12, 3);
+        f.retire_below(4);
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //!   round boundaries and cancelling their outstanding runs mid-flight.
 //!   Deterministic given the seed; `alpha = 0` reproduces the exhaustive
 //!   sweep bit for bit.
+//! * [`refresh`] — incremental re-estimation for streams: after
+//!   [`crate::data::folded::FoldedDataset::append_rows`] lands a batch,
+//!   `TreeCvExecutor::refresh` recomputes only the O(log k) subtrees per
+//!   touched fold that the new rows dirtied, reusing cached interior
+//!   models ([`refresh::RefreshSession`]) — bit-identical to a
+//!   from-scratch folded run, pinned by `OpCounts::subtrees_recomputed`.
+//!   The engine behind `repro serve`.
 //! * [`parallel`] — the §4.1 parallel engine facade (delegates to
 //!   [`executor`]) plus the original scoped-thread forking retained as a
 //!   bench baseline; both are strategy-aware.
@@ -55,6 +62,7 @@ pub mod folds;
 pub mod mergecv;
 pub mod parallel;
 pub mod race;
+pub mod refresh;
 pub mod repeated;
 pub mod standard;
 pub mod stats;

@@ -1,0 +1,433 @@
+//! Incremental re-estimation of the TreeCV estimate after the dataset
+//! grows: the streaming half of ROADMAP's "heavy traffic" scenario.
+//!
+//! [`FoldedDataset::append_rows`] lands a batch in fold-balanced tail
+//! chunks and reports which folds it touched ([`AppendDelta`]). Appending
+//! to fold `t` changes fold `t`'s *evaluation* chunk and every **other**
+//! fold's *training* complement, so all `k` per-fold scores legitimately
+//! move — a refresh must rewrite the whole `per_fold` vector. What it does
+//! NOT have to do is re-run the whole tree node by node: along the
+//! root-to-leaf path of a touched fold, the sibling subtree at each level
+//! is clean *inside* but its incoming model absorbed the new rows, so it
+//! is re-run wholesale through the shared recursion
+//! ([`run_subtree`]) — O(log k) such subtree re-runs per touched fold —
+//! while the dirty child's incoming model is either rebuilt by one update
+//! phase or restored from the [`RefreshSession`] cache of interior
+//! snapshots. The new [`OpCounts::subtrees_recomputed`] counter pins that
+//! bound: ≤ ⌈log₂(2k)⌉ per touched fold (the ⌈log₂ k⌉ sibling re-runs
+//! plus the touched leaf's own re-evaluation).
+//!
+//! **Cache contract.** An entry keyed `(a, b)` holds the *incoming* model
+//! of node `(a, b)`: trained on every chunk outside `a..=b` as of
+//! insertion time. It stays valid exactly while every subsequent append
+//! touches only folds inside `[a, b]`; [`TreeCvExecutor::refresh`]
+//! enforces this by purging, at entry, every key that does not contain
+//! the current touched range (inductively sufficient: an earlier refresh
+//! touching outside `[a, b]` purged the entry then). Surviving keys form
+//! a nested chain around the touched folds, so the cache holds O(log k)
+//! models.
+//!
+//! **Bit-identity.** A refresh replays, stream for stream, the exact
+//! update phases (`(seed, node-tag)`-derived, order included) that a
+//! from-scratch [`super::treecv::TreeCv::run_folded`] on the extended
+//! layout would run. Under [`Strategy::Copy`] the refreshed estimate and
+//! per-fold scores are therefore bit-identical for every learner; under
+//! [`Strategy::SaveRevert`] they are bit-identical whenever the learner's
+//! revert is exact (the from-scratch run reaches interior models through
+//! revert cascades, the refresh through clones), and agree to
+//! accumulated-rounding tolerance for the f32-inexact learners —
+//! `tests/integration_serve.rs` asserts both tiers.
+
+use std::collections::HashMap;
+
+use super::executor::TreeCvExecutor;
+use super::folds::node_tags;
+use super::treecv::{run_subtree, NodeCtx, StreamScratch};
+use super::{CvResult, Strategy};
+use crate::data::folded::{AppendDelta, FoldedDataset};
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+use crate::metrics::{OpCounts, Timer};
+
+/// Interior-model snapshots carried between refreshes of one logical
+/// stream. Create with [`TreeCvExecutor::prime`] (or `default()`), feed
+/// every subsequent [`TreeCvExecutor::refresh`] of the same stream, and
+/// [`RefreshSession::invalidate`] after any mutation other than
+/// `append_rows` (e.g. [`FoldedDataset::retire_oldest`], which renumbers
+/// rows under every cached model).
+pub struct RefreshSession<L: IncrementalLearner> {
+    /// Cached *incoming* models keyed by node range `(a, b)` — see the
+    /// module docs for the validity contract.
+    cache: HashMap<(usize, usize), L::Model>,
+}
+
+impl<L: IncrementalLearner> RefreshSession<L> {
+    pub fn new() -> Self {
+        Self { cache: HashMap::new() }
+    }
+
+    /// Drop every cached snapshot. Required after any dataset mutation
+    /// that is not an `append_rows` the next `refresh` will be told about.
+    pub fn invalidate(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Number of interior models currently cached (O(log k) by the purge
+    /// rule; exposed for tests and staleness diagnostics).
+    pub fn cached_nodes(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl<L: IncrementalLearner> Default for RefreshSession<L> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One level of the dirty path: the incoming `model` of node `(s, e)` is
+/// fed the dirty half (`dirty_lo..=dirty_hi` under `dirty_tag`) and the
+/// clean sibling subtree `(sib_lo, sib_hi)` is re-run wholesale —
+/// writing its per-fold scores — after which `model` is restored to the
+/// node's incoming state (snapshot/restore under Copy, log/revert under
+/// SaveRevert, mirroring [`run_subtree`]'s own arms).
+#[allow(clippy::too_many_arguments)]
+fn rerun_sibling<L: IncrementalLearner>(
+    ctx: &NodeCtx<'_, L>,
+    model: &mut L::Model,
+    dirty_lo: usize,
+    dirty_hi: usize,
+    dirty_tag: u64,
+    sib_lo: usize,
+    sib_hi: usize,
+    per_fold: &mut [f64],
+    ops: &mut OpCounts,
+    scratch: &mut Vec<L::Model>,
+    streams: &mut StreamScratch,
+) {
+    match ctx.strategy {
+        Strategy::Copy => {
+            let saved = match scratch.pop() {
+                Some(mut buf) => {
+                    buf.clone_from(model);
+                    buf
+                }
+                None => model.clone(),
+            };
+            ops.model_copies += 1;
+            ops.bytes_copied += ctx.learner.model_bytes(&saved) as u64;
+            ctx.update_phase(model, dirty_lo, dirty_hi, dirty_tag, ops, streams);
+            run_subtree(ctx, model, sib_lo, sib_hi, 0, per_fold, ops, scratch, streams);
+            let spent = std::mem::replace(model, saved);
+            scratch.push(spent);
+        }
+        Strategy::SaveRevert => {
+            let undo = ctx.update_phase_logged(model, dirty_lo, dirty_hi, dirty_tag, ops, streams);
+            run_subtree(ctx, model, sib_lo, sib_hi, 0, per_fold, ops, scratch, streams);
+            ctx.learner.revert(model, ctx.data, undo);
+            ops.model_restores += 1;
+        }
+    }
+    ops.subtrees_recomputed += 1;
+}
+
+/// Advance `model` from node `(s, e)`'s incoming state to the dirty
+/// child's incoming state via the *clean* half's update phase — or skip
+/// the feed entirely when the child's incoming model is cached. On a
+/// cache miss the freshly built model is snapshotted under `key` (the
+/// dirty child's range) so the next refresh down the same path starts
+/// here.
+#[allow(clippy::too_many_arguments)]
+fn chain_feed<L: IncrementalLearner>(
+    ctx: &NodeCtx<'_, L>,
+    model: &mut L::Model,
+    clean_lo: usize,
+    clean_hi: usize,
+    clean_tag: u64,
+    key: (usize, usize),
+    ops: &mut OpCounts,
+    streams: &mut StreamScratch,
+    cache: &mut HashMap<(usize, usize), L::Model>,
+) {
+    if let Some(cached) = cache.get(&key) {
+        model.clone_from(cached);
+        ops.model_copies += 1;
+        ops.bytes_copied += ctx.learner.model_bytes(model) as u64;
+        return;
+    }
+    ctx.update_phase(model, clean_lo, clean_hi, clean_tag, ops, streams);
+    let snap = model.clone();
+    ops.model_copies += 1;
+    ops.bytes_copied += ctx.learner.model_bytes(&snap) as u64;
+    cache.insert(key, snap);
+}
+
+/// The refresh recursion: `model` is node `(s, e)`'s incoming model on
+/// the **extended** dataset, `touched` the (sorted, non-empty) touched
+/// folds inside `s..=e`. Writes every per-fold score in `s..=e` exactly
+/// once: clean sibling subtrees wholesale via [`rerun_sibling`], touched
+/// leaves by direct re-evaluation, straddled nodes by descending both
+/// halves from a snapshot pair (no wholesale re-run, no counter bump —
+/// both children are on dirty paths).
+#[allow(clippy::too_many_arguments)]
+fn refresh_node<L: IncrementalLearner>(
+    ctx: &NodeCtx<'_, L>,
+    model: &mut L::Model,
+    s: usize,
+    e: usize,
+    touched: &[usize],
+    per_fold: &mut [f64],
+    ops: &mut OpCounts,
+    scratch: &mut Vec<L::Model>,
+    streams: &mut StreamScratch,
+    cache: &mut HashMap<(usize, usize), L::Model>,
+) {
+    if s == e {
+        debug_assert_eq!(touched, [s]);
+        per_fold[s] = ctx.eval_leaf(model, s, ops);
+        ops.subtrees_recomputed += 1;
+        return;
+    }
+    let m = (s + e) / 2;
+    let (tag_right, tag_left) = node_tags(s, e);
+    let split = touched.partition_point(|&f| f <= m);
+    let (tl, tr) = touched.split_at(split);
+    if tr.is_empty() {
+        // Dirty left half: right sibling re-runs wholesale, then descend
+        // left from the (cacheable) left-child incoming model.
+        rerun_sibling(ctx, model, s, m, tag_left, m + 1, e, per_fold, ops, scratch, streams);
+        chain_feed(ctx, model, m + 1, e, tag_right, (s, m), ops, streams, cache);
+        refresh_node(ctx, model, s, m, tl, per_fold, ops, scratch, streams, cache);
+    } else if tl.is_empty() {
+        // Dirty right half: mirror image.
+        rerun_sibling(ctx, model, m + 1, e, tag_right, s, m, per_fold, ops, scratch, streams);
+        chain_feed(ctx, model, s, m, tag_left, (m + 1, e), ops, streams, cache);
+        refresh_node(ctx, model, m + 1, e, tr, per_fold, ops, scratch, streams, cache);
+    } else {
+        // Straddle: both halves dirty. Build both children's incoming
+        // models from one snapshot and descend each; neither half is
+        // clean, so nothing re-runs wholesale and nothing is cached.
+        let mut sib = match scratch.pop() {
+            Some(mut buf) => {
+                buf.clone_from(model);
+                buf
+            }
+            None => model.clone(),
+        };
+        ops.model_copies += 1;
+        ops.bytes_copied += ctx.learner.model_bytes(&sib) as u64;
+        ctx.update_phase(&mut sib, s, m, tag_left, ops, streams);
+        ctx.update_phase(model, m + 1, e, tag_right, ops, streams);
+        refresh_node(ctx, model, s, m, tl, per_fold, ops, scratch, streams, cache);
+        refresh_node(ctx, &mut sib, m + 1, e, tr, per_fold, ops, scratch, streams, cache);
+        scratch.push(sib);
+    }
+}
+
+impl TreeCvExecutor {
+    /// Establish the baseline estimate for a stream: one ordinary pooled
+    /// from-scratch folded run plus a fresh (empty) [`RefreshSession`]
+    /// for the appends that follow.
+    pub fn prime<L>(
+        &self,
+        learner: &L,
+        data: &Dataset,
+        folded: &FoldedDataset,
+    ) -> (RefreshSession<L>, CvResult)
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        (RefreshSession::new(), self.run_folded(learner, data, folded))
+    }
+
+    /// Re-estimate after [`FoldedDataset::append_rows`] extended the
+    /// stream's dataset: recompute only the O(log k) subtrees per touched
+    /// fold that the appended rows dirtied (see the module docs), under
+    /// this executor's `strategy`/`ordering`/`seed`. `data` and `folded`
+    /// must already include the appended rows and `delta` must be the
+    /// value `append_rows` returned. Runs sequentially on the calling
+    /// thread — the whole point is that the work is tiny compared to a
+    /// pooled from-scratch run.
+    pub fn refresh<L: IncrementalLearner>(
+        &self,
+        session: &mut RefreshSession<L>,
+        learner: &L,
+        data: &Dataset,
+        folded: &FoldedDataset,
+        delta: &AppendDelta,
+    ) -> CvResult {
+        assert_eq!(folded.n(), data.n, "folded layout built for a different dataset (n)");
+        assert_eq!(folded.d(), data.d, "folded layout built for a different dataset (d)");
+        let k = folded.folds().k();
+        assert!(!delta.touched.is_empty(), "refresh needs a non-empty touched-fold set");
+        assert!(
+            delta.touched.windows(2).all(|w| w[0] < w[1]),
+            "AppendDelta::touched must be sorted ascending and deduplicated"
+        );
+        let fmin = delta.touched[0];
+        let fmax = delta.touched[delta.touched.len() - 1];
+        assert!(fmax < k, "touched fold {fmax} out of range for k = {k}");
+        // Purge every cached node whose range does not contain the whole
+        // touched set: its complement (= its training data) just grew.
+        session.cache.retain(|&(a, b), _| a <= fmin && fmax <= b);
+
+        let timer = Timer::start();
+        let ctx = NodeCtx {
+            learner,
+            data,
+            folds: folded.folds(),
+            folded: Some(folded),
+            strategy: self.strategy,
+            ordering: self.ordering,
+            seed: self.seed,
+        };
+        let mut ops = OpCounts::default();
+        let mut per_fold = vec![0.0; k];
+        let mut model = learner.init();
+        let mut scratch = Vec::new();
+        let mut streams = StreamScratch::new();
+        refresh_node(
+            &ctx,
+            &mut model,
+            0,
+            k - 1,
+            &delta.touched,
+            &mut per_fold,
+            &mut ops,
+            &mut scratch,
+            &mut streams,
+            &mut session.cache,
+        );
+        CvResult::from_folds(per_fold, ops, timer.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::{Folds, Ordering};
+    use crate::cv::treecv::TreeCv;
+    use crate::learner::multiset::MultisetLearner;
+
+    fn dummy(n: usize) -> Dataset {
+        Dataset::new(vec![0.0; n], vec![0.0; n], 1)
+    }
+
+    fn ceil_log2(k: usize) -> u64 {
+        (usize::BITS - (k - 1).leading_zeros()) as u64
+    }
+
+    /// Refresh after each appended batch must reproduce a from-scratch
+    /// folded run on the extended layout bitwise, while staying under the
+    /// ⌈log₂(2k)⌉-per-touched-fold subtree budget.
+    #[test]
+    fn refresh_matches_scratch_and_respects_budget() {
+        for (n, k, batches) in [(40usize, 8usize, 4usize), (43, 8, 3), (30, 5, 5), (12, 12, 3)] {
+            for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+                for ordering in [Ordering::Fixed, Ordering::Randomized] {
+                    let mut data = dummy(n);
+                    let folds = Folds::new(n, k, 21);
+                    let mut folded = FoldedDataset::build(&data, &folds);
+                    let l = MultisetLearner::new(1);
+                    let exe = TreeCvExecutor::new(strategy, ordering, 7, 1);
+                    let (mut session, _) = exe.prime(&l, &data, &folded);
+                    for b in 0..batches {
+                        let rows = b + 1; // growing batch sizes
+                        let x = vec![0.0f32; rows];
+                        data.push_rows(&x, &x);
+                        let delta = folded.append_rows(&x, &x);
+                        let got = exe.refresh(&mut session, &l, &data, &folded, &delta);
+                        let want =
+                            TreeCv::new(strategy, ordering, 7).run_folded(&l, &data, &folded);
+                        assert_eq!(
+                            got.per_fold, want.per_fold,
+                            "n={n} k={k} batch={b} {strategy:?} {ordering:?}"
+                        );
+                        assert_eq!(got.estimate, want.estimate);
+                        let budget = delta.touched.len() as u64 * (ceil_log2(k) + 1);
+                        assert!(
+                            got.ops.subtrees_recomputed <= budget,
+                            "n={n} k={k} batch={b}: {} > {budget}",
+                            got.ops.subtrees_recomputed
+                        );
+                        assert_eq!(want.ops.subtrees_recomputed, 0, "scratch runs never refresh");
+                    }
+                }
+            }
+        }
+    }
+
+    /// A refresh down an already-cached path must reuse the interior
+    /// snapshots: re-running the same delta on the warm session skips
+    /// every chain feed (strictly fewer points updated), reproduces the
+    /// cold result bitwise, and keeps the cache at O(log k) entries.
+    #[test]
+    fn repeated_refresh_reuses_cached_chain() {
+        let n = 64;
+        let k = 8;
+        let mut data = dummy(n);
+        let folds = Folds::new(n, k, 5);
+        let mut folded = FoldedDataset::build(&data, &folds);
+        let l = MultisetLearner::new(1);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 1);
+        let (mut session, _) = exe.prime(&l, &data, &folded);
+
+        let x = vec![0.0f32; 1];
+        data.push_rows(&x, &x);
+        let delta = folded.append_rows(&x, &x);
+        let cold = exe.refresh(&mut session, &l, &data, &folded, &delta);
+        let cached = session.cached_nodes();
+        assert!(cached >= 1, "first refresh must populate the chain");
+        assert!(cached as u64 <= ceil_log2(k) + 1, "cache stays O(log k)");
+
+        let warm = exe.refresh(&mut session, &l, &data, &folded, &delta);
+        assert_eq!(warm.per_fold, cold.per_fold, "cache path must be bit-identical");
+        assert!(
+            warm.ops.points_updated < cold.ops.points_updated,
+            "cached chain must save update work: {} !< {}",
+            warm.ops.points_updated,
+            cold.ops.points_updated
+        );
+        assert_eq!(session.cached_nodes(), cached, "re-refresh adds no new entries");
+    }
+
+    /// `invalidate` empties the cache and the next refresh still agrees
+    /// with a from-scratch run (it just rebuilds the chain).
+    #[test]
+    fn invalidate_then_refresh_still_correct() {
+        let n = 30;
+        let k = 6;
+        let mut data = dummy(n);
+        let folds = Folds::new(n, k, 11);
+        let mut folded = FoldedDataset::build(&data, &folds);
+        let l = MultisetLearner::new(1);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 1);
+        let (mut session, _) = exe.prime(&l, &data, &folded);
+        let x = vec![0.0f32; 3];
+        data.push_rows(&x, &x);
+        let delta = folded.append_rows(&x, &x);
+        let _ = exe.refresh(&mut session, &l, &data, &folded, &delta);
+        session.invalidate();
+        assert_eq!(session.cached_nodes(), 0);
+        let x = vec![0.0f32; 2];
+        data.push_rows(&x, &x);
+        let delta = folded.append_rows(&x, &x);
+        let got = exe.refresh(&mut session, &l, &data, &folded, &delta);
+        let want = TreeCv::default().run_folded(&l, &data, &folded);
+        assert_eq!(got.per_fold, want.per_fold);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty touched-fold set")]
+    fn refresh_rejects_empty_delta() {
+        let data = dummy(20);
+        let folds = Folds::new(20, 4, 1);
+        let folded = FoldedDataset::build(&data, &folds);
+        let l = MultisetLearner::new(1);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 1);
+        let (mut session, _) = exe.prime(&l, &data, &folded);
+        let delta = AppendDelta { appended: vec![], fold_of: vec![], touched: vec![] };
+        let _ = exe.refresh(&mut session, &l, &data, &folded, &delta);
+    }
+}

@@ -63,6 +63,28 @@ impl Dataset {
         Dataset::new(self.x[..n * self.d].to_vec(), self.y[..n].to_vec(), self.d)
     }
 
+    /// Append rows in place (`x` row-major `b × d`, `y` length `b`) —
+    /// streaming arrivals get ids `n..n+b`. The streaming service keeps
+    /// this original dataset in lock-step with its
+    /// [`crate::data::folded::FoldedDataset::append_rows`] window.
+    pub fn push_rows(&mut self, x: &[f32], y: &[f32]) {
+        assert_eq!(x.len() % self.d, 0, "x length {} not a multiple of d {}", x.len(), self.d);
+        assert_eq!(y.len(), x.len() / self.d, "y length {} != row count", y.len());
+        self.x.extend_from_slice(x);
+        self.y.extend_from_slice(y);
+        self.n += y.len();
+    }
+
+    /// Drop the first `count` rows in place (sliding-window retirement);
+    /// surviving rows shift down by `count`, mirroring
+    /// [`crate::data::folded::FoldedDataset::retire_oldest`].
+    pub fn retire_front(&mut self, count: usize) {
+        assert!(count <= self.n, "retire_front({count}) exceeds n = {}", self.n);
+        self.x.drain(..count * self.d);
+        self.y.drain(..count);
+        self.n -= count;
+    }
+
     /// Scale every feature column to unit variance (the paper does this for
     /// Covertype). Returns the per-column scale factors applied.
     pub fn scale_to_unit_variance(&mut self) -> Vec<f32> {
@@ -166,6 +188,33 @@ mod tests {
         let t = d.take(2);
         assert_eq!(t.n, 2);
         assert_eq!(t.x, vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn push_rows_appends_and_retire_front_shifts() {
+        let mut d = toy();
+        d.push_rows(&[7., 8., 9., 10.], &[-1., 1.]);
+        assert_eq!(d.n, 5);
+        assert_eq!(d.row(3), &[7., 8.]);
+        assert_eq!(d.label(4), 1.0);
+        d.retire_front(2);
+        assert_eq!(d.n, 3);
+        assert_eq!(d.row(0), &[5., 6.]);
+        assert_eq!(d.y, vec![1., -1., 1.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn push_rows_rejects_ragged_x() {
+        let mut d = toy();
+        d.push_rows(&[7., 8., 9.], &[1.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds n")]
+    fn retire_front_rejects_overdrain() {
+        let mut d = toy();
+        d.retire_front(4);
     }
 
     #[test]

@@ -176,6 +176,119 @@ impl FoldedDataset {
             && self.folds.n() == folds.n()
             && (0..folds.k()).all(|c| self.folds.chunk(c) == folds.chunk(c))
     }
+
+    /// Append a batch of rows (row-major `b × d` features plus `b`
+    /// outcomes) to the window. Each row is assigned original id
+    /// `old_n + j` and lands at the *tail* of the currently smallest fold
+    /// chunk ([`Folds::smallest_chunk`]) — fold sizes stay within 1 of
+    /// each other and every pre-existing point keeps its id, its fold and
+    /// its within-chunk position. The permuted storage, forward/inverse
+    /// permutations and chunk boundaries are rebuilt in one `O(n·d)` pass,
+    /// bit-identical to [`FoldedDataset::build`] on the extended dataset
+    /// under the mutated folds (the streaming tests pin this).
+    ///
+    /// Returns the [`AppendDelta`] the incremental refresh engine
+    /// ([`crate::cv::refresh`]) consumes.
+    pub fn append_rows(&mut self, x: &[f32], y: &[f32]) -> AppendDelta {
+        let d = self.data.d;
+        assert!(!y.is_empty(), "append_rows needs at least one row");
+        assert_eq!(x.len() % d, 0, "x length {} not a multiple of d {d}", x.len());
+        assert_eq!(y.len(), x.len() / d, "y length {} != row count {}", y.len(), x.len() / d);
+        let b = y.len();
+        let old_n = self.data.n;
+        let mut appended = Vec::with_capacity(b);
+        let mut fold_of = Vec::with_capacity(b);
+        for j in 0..b {
+            let id = (old_n + j) as u32;
+            let c = self.folds.smallest_chunk();
+            self.folds.append_to_chunk(c, id);
+            appended.push(id);
+            fold_of.push(c);
+        }
+        let mut touched = fold_of.clone();
+        touched.sort_unstable();
+        touched.dedup();
+        self.rebuild(x, y, old_n, 0);
+        AppendDelta { appended, fold_of, touched }
+    }
+
+    /// Sliding-window retirement: drop the `count` oldest rows (original
+    /// ids `0..count`) and renumber the survivors down by `count`, in both
+    /// the fold partition ([`Folds::retire_below`]) and the permuted
+    /// storage. Panics if any fold chunk would end up empty — long-running
+    /// callers check [`Folds::can_retire_below`] first.
+    ///
+    /// Retirement changes every fold's *contents*, so it invalidates any
+    /// [`crate::cv::refresh::RefreshSession`] built on this layout; the
+    /// caller re-primes.
+    pub fn retire_oldest(&mut self, count: usize) {
+        if count == 0 {
+            return;
+        }
+        assert!(
+            u32::try_from(count).is_ok(),
+            "retire_oldest({count}) exceeds the u32 id space"
+        );
+        self.folds.retire_below(count as u32);
+        // No fresh rows: every surviving id sources from the old permuted
+        // copy, shifted down by `count`.
+        self.rebuild(&[], &[], self.folds.n(), count);
+    }
+
+    /// Rebuild the permuted storage, forward/inverse permutations and
+    /// chunk boundaries after a fold mutation, in one `O(n·d)` pass.
+    /// Surviving id `i < fresh_base` sources from the *old* permuted copy
+    /// at the old position of id `i + shift`; id `i >= fresh_base` is a
+    /// fresh row, read from `x`/`y` at `i - fresh_base`.
+    fn rebuild(&mut self, x: &[f32], y: &[f32], fresh_base: usize, shift: usize) {
+        let d = self.data.d;
+        let k = self.folds.k();
+        let orig = self.folds.gather_range(0, k - 1);
+        let n = orig.len();
+        let mut starts = Vec::with_capacity(k + 1);
+        starts.push(0usize);
+        let mut off = 0usize;
+        for c in 0..k {
+            off += self.folds.chunk(c).len();
+            starts.push(off);
+        }
+        debug_assert_eq!(off, n);
+        let mut pos = vec![0u32; n];
+        let mut nx = Vec::with_capacity(n * d);
+        let mut ny = Vec::with_capacity(n);
+        for (p, &id) in orig.iter().enumerate() {
+            pos[id as usize] = p as u32;
+            if (id as usize) < fresh_base {
+                let q = self.pos[id as usize + shift] as usize;
+                nx.extend_from_slice(&self.data.x[q * d..(q + 1) * d]);
+                ny.push(self.data.y[q]);
+            } else {
+                let j = id as usize - fresh_base;
+                nx.extend_from_slice(&x[j * d..(j + 1) * d]);
+                ny.push(y[j]);
+            }
+        }
+        self.data = Dataset::new(nx, ny, d);
+        self.orig = orig;
+        self.pos = pos;
+        self.starts = starts;
+    }
+}
+
+/// What one [`FoldedDataset::append_rows`] call changed — the incremental
+/// refresh engine's work order ([`crate::cv::refresh`]).
+#[derive(Debug, Clone)]
+pub struct AppendDelta {
+    /// Original ids assigned to the appended rows (dense `old_n..new_n`,
+    /// in arrival order).
+    pub appended: Vec<u32>,
+    /// Fold chunk each appended row landed in (`fold_of[j]` holds
+    /// `appended[j]`).
+    pub fold_of: Vec<usize>,
+    /// Folds that received at least one appended row — sorted ascending,
+    /// deduped. The refresh engine recomputes exactly the O(log k)
+    /// subtrees along these folds' root-to-leaf paths.
+    pub touched: Vec<usize>,
 }
 
 #[cfg(test)]
@@ -285,5 +398,102 @@ mod tests {
         for i in 0..7 {
             assert_eq!(f.ids(i, i), folds.chunk(i));
         }
+    }
+
+    /// The incremental rebuild after `append_rows` must be bit-identical
+    /// to a from-scratch `build` of the extended dataset under the
+    /// mutated folds — same permuted rows, same permutations, same chunk
+    /// boundaries.
+    #[test]
+    fn append_rebuild_matches_fresh_build() {
+        let mut rng = Rng::new(0xAB5EED);
+        for _ in 0..20 {
+            let n = 6 + rng.below(80) as usize;
+            let k = 1 + rng.below(n as u64 / 2 + 1) as usize;
+            let b = 1 + rng.below(9) as usize;
+            let d = 3;
+            let all = arange_data(n + b, d);
+            let window = all.take(n);
+            let folds = Folds::new(n, k, (n * 7 + k) as u64);
+            let mut f = FoldedDataset::build(&window, &folds);
+
+            let (nx, ny) = (&all.x[n * d..], &all.y[n..]);
+            let delta = f.append_rows(nx, ny);
+            assert_eq!(delta.appended, (n as u32..(n + b) as u32).collect::<Vec<_>>());
+            assert_eq!(delta.fold_of.len(), b);
+            assert!(delta.touched.windows(2).all(|w| w[0] < w[1]));
+
+            let fresh = FoldedDataset::build(&all, f.folds());
+            assert_eq!(f.folded_data().x, fresh.folded_data().x, "n={n} k={k} b={b}");
+            assert_eq!(f.folded_data().y, fresh.folded_data().y);
+            for p in 0..(n + b) as u32 {
+                assert_eq!(f.original_of(p), fresh.original_of(p));
+                assert_eq!(f.position_of(p), fresh.position_of(p));
+            }
+            for c in 0..k {
+                assert_eq!(f.ids(c, c), fresh.ids(c, c), "chunk {c}");
+            }
+        }
+    }
+
+    /// Appended rows land at chunk tails: pre-existing ids keep their
+    /// folds and within-chunk positions.
+    #[test]
+    fn append_preserves_existing_assignment() {
+        let data = arange_data(20, 2);
+        let folds = Folds::new(20, 4, 5);
+        let before: Vec<Vec<u32>> = (0..4).map(|c| folds.chunk(c).to_vec()).collect();
+        let mut f = FoldedDataset::build(&data, &folds);
+        let extra = arange_data(26, 2);
+        f.append_rows(&extra.x[40..], &extra.y[20..]);
+        for (c, old) in before.iter().enumerate() {
+            assert_eq!(&f.folds().chunk(c)[..old.len()], &old[..], "chunk {c} prefix");
+        }
+    }
+
+    /// retire_oldest(c) must equal a fresh build over the shifted window:
+    /// surviving original row `i + c` becomes row `i`.
+    #[test]
+    fn retire_matches_fresh_build_on_shifted_window() {
+        let n = 40;
+        let d = 2;
+        let all = arange_data(n, d);
+        let folds = Folds::new(n, 5, 9);
+        let mut f = FoldedDataset::build(&all, &folds);
+        let c = 6;
+        assert!(f.folds().can_retire_below(c as u32));
+        f.retire_oldest(c);
+        assert_eq!(f.n(), n - c);
+
+        let shifted = Dataset::new(all.x[c * d..].to_vec(), all.y[c..].to_vec(), d);
+        let fresh = FoldedDataset::build(&shifted, f.folds());
+        assert_eq!(f.folded_data().x, fresh.folded_data().x);
+        assert_eq!(f.folded_data().y, fresh.folded_data().y);
+        for p in 0..(n - c) as u32 {
+            assert_eq!(f.original_of(p), fresh.original_of(p));
+            assert_eq!(f.position_of(p), fresh.position_of(p));
+        }
+    }
+
+    /// Retire-then-append round trip: the window slides and the layout
+    /// still matches a from-scratch build at every step.
+    #[test]
+    fn retire_then_append_round_trip() {
+        let n = 30;
+        let d = 3;
+        let all = arange_data(n + 10, d);
+        let window = all.take(n);
+        let folds = Folds::new(n, 6, 17);
+        let mut f = FoldedDataset::build(&window, &folds);
+        f.retire_oldest(4);
+        let delta = f.append_rows(&all.x[n * d..], &all.y[n..]);
+        assert_eq!(f.n(), n - 4 + 10);
+        assert!(!delta.touched.is_empty());
+
+        // Reference: rows 4..n+10 of the stream, ids shifted down by 4.
+        let shifted = Dataset::new(all.x[4 * d..].to_vec(), all.y[4..].to_vec(), d);
+        let fresh = FoldedDataset::build(&shifted, f.folds());
+        assert_eq!(f.folded_data().x, fresh.folded_data().x);
+        assert_eq!(f.folded_data().y, fresh.folded_data().y);
     }
 }

@@ -11,6 +11,8 @@
 //! * `sweep`   — a hyperparameter grid through ONE pooled executor.
 //! * `select`  — model selection across learner families (registry-built,
 //!               heterogeneous batch through ONE pooled executor).
+//! * `serve`   — streaming CV service: append row batches over stdin and
+//!               keep the estimate warm via O(log k) incremental refresh.
 //! * `selfcheck` — verify the PJRT runtime and AOT artifacts end-to-end.
 //!
 //! Argument parsing is in-tree (`--flag value` / `--flag` booleans); run
@@ -84,6 +86,20 @@ COMMANDS
              --learners pegasos:lambda=1e-4,naive_bayes,knn,perceptron
              --k 10  --n 20000  --reps 20  --seed 42
              --threads 0          pool size (0 = all cores)
+             --randomized --save-revert --json --config FILE
+  serve      Streaming CV service: prime a baseline estimate, then read a
+             line protocol on stdin — `row <y> <x1>..<xd>` appends rows
+             (auto-applied every --batch rows through the O(log k)
+             incremental refresh engine), `query` answers
+             `estimate <v> pending <p>`, `flush` applies buffered rows,
+             `retire <count>` slides the window (drops the oldest rows
+             and re-primes), `stats` snapshots counters, `quit`/EOF ends
+             the session and prints throughput + staleness metrics.
+             --task multiset|density|pegasos|...   (any registry task)
+             --batch 32           rows buffered per refresh
+             --k 10  --n 20000  --seed 42
+             --threads 0          pool size for prime runs (0 = all
+                                  cores; refreshes run sequentially)
              --randomized --save-revert --json --config FILE
   selfcheck  Verify PJRT runtime + artifacts.
   help       Show this message.
@@ -348,6 +364,22 @@ fn main() -> Result<()> {
                 println!("{}", report.to_json().render_pretty());
             } else {
                 print!("{}", coordinator::format_select_table(&report));
+            }
+        }
+        "serve" => {
+            let args = Args::parse(rest, &["randomized", "save-revert", "json"])?;
+            let mut cfg = batch_cfg(&args)?;
+            if let Some(t) = args.get("task") {
+                cfg.task = Task::parse(t)?;
+            }
+            let batch = args.get_parse("batch", 32usize)?;
+            let stdin = std::io::stdin();
+            let mut stdout = std::io::stdout();
+            let report = coordinator::run_serve(&cfg, batch, stdin.lock(), &mut stdout)?;
+            if args.has("json") {
+                println!("{}", report.to_json().render_pretty());
+            } else {
+                print!("{}", coordinator::format_serve_table(&report));
             }
         }
         "selfcheck" => paper::selfcheck()?,

@@ -39,6 +39,12 @@ pub struct OpCounts {
     /// ordering — while every other counter in this struct stays
     /// bit-identical across layouts (`tests/integration_layout.rs`).
     pub stream_allocs: u64,
+    /// Wholesale TreeCV subtree re-runs plus touched-leaf re-evaluations
+    /// performed by the incremental refresh engine
+    /// ([`crate::cv::refresh`]). Bounded by ⌈log₂(2k)⌉ per touched fold
+    /// per refresh (the root-to-leaf path of the touched leaf); always 0
+    /// for from-scratch runs.
+    pub subtrees_recomputed: u64,
 }
 
 impl OpCounts {
@@ -53,6 +59,7 @@ impl OpCounts {
         self.points_evaluated += other.points_evaluated;
         self.points_permuted += other.points_permuted;
         self.stream_allocs += other.stream_allocs;
+        self.subtrees_recomputed += other.subtrees_recomputed;
     }
 }
 

@@ -142,6 +142,7 @@ impl ToJson for crate::metrics::OpCounts {
             ("points_evaluated", Json::num(self.points_evaluated as f64)),
             ("points_permuted", Json::num(self.points_permuted as f64)),
             ("stream_allocs", Json::num(self.stream_allocs as f64)),
+            ("subtrees_recomputed", Json::num(self.subtrees_recomputed as f64)),
         ])
     }
 }
@@ -273,6 +274,32 @@ impl ToJson for crate::coordinator::SelectReport {
                         .collect(),
                 ),
             ),
+        ])
+    }
+}
+
+impl ToJson for crate::coordinator::ServeReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::str(self.task.name())),
+            ("k", Json::num(self.k as f64)),
+            ("n_final", Json::num(self.n_final as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("rows_ingested", Json::num(self.rows_ingested as f64)),
+            ("rows_retired", Json::num(self.rows_retired as f64)),
+            ("batches_applied", Json::num(self.batches_applied as f64)),
+            ("refreshes", Json::num(self.refreshes as f64)),
+            ("primes", Json::num(self.primes as f64)),
+            ("queries", Json::num(self.queries as f64)),
+            ("stale_queries", Json::num(self.stale_queries as f64)),
+            ("mean_pending_at_query", Json::Num(self.mean_pending_at_query)),
+            ("max_pending_at_query", Json::num(self.max_pending_at_query as f64)),
+            ("subtrees_recomputed", Json::num(self.subtrees_recomputed as f64)),
+            ("refresh_wall_secs", Json::Num(self.refresh_wall_secs)),
+            ("prime_wall_secs", Json::Num(self.prime_wall_secs)),
+            ("total_wall_secs", Json::Num(self.total_wall_secs)),
+            ("rows_per_sec", Json::Num(self.rows_per_sec)),
+            ("estimate", Json::Num(self.estimate)),
         ])
     }
 }

@@ -21,7 +21,10 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_commands() {
     let text = run_ok(&["help"]);
-    let cmds = ["cv", "table2", "figure2", "loocv", "dist", "grid", "sweep", "select", "selfcheck"];
+    let cmds = [
+        "cv", "table2", "figure2", "loocv", "dist", "grid", "sweep", "select", "serve",
+        "selfcheck",
+    ];
     for cmd in cmds {
         assert!(text.contains(cmd), "missing {cmd}");
     }

@@ -1,0 +1,312 @@
+//! Streaming-refresh integration battery: the incremental re-estimation
+//! engine (`cv::refresh`) against every pure-Rust learner, both
+//! strategies, several worker counts and fold shapes — the tentpole claim
+//! is that an appended-batch refresh reproduces a from-scratch folded run
+//! on the extended dataset while recomputing only O(log k) subtrees per
+//! touched fold (pinned via `OpCounts::subtrees_recomputed`). Plus the
+//! retire-then-append round trip, run-twice determinism, and a `repro
+//! serve` CLI smoke test over the line protocol.
+//!
+//! Equality tiers mirror `tests/integration_cv.rs`: under Copy every
+//! learner is bitwise (refresh replays the exact per-node update streams
+//! a scratch run feeds, reaching interior models through exact clones);
+//! under SaveRevert bitwise holds for exact-revert learners, while the
+//! f32/f64 inexact-revert learners (perceptron, gaussian NB, online
+//! ridge) agree to the usual revert-cascade tolerances — their scratch
+//! runs reach interior models through lossy reverts, the refresh through
+//! clones.
+
+use treecv::cv::executor::TreeCvExecutor;
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::Strategy;
+use treecv::data::folded::FoldedDataset;
+use treecv::data::synth::*;
+use treecv::data::Dataset;
+use treecv::learner::histdensity::HistogramDensity;
+use treecv::learner::kmeans::OnlineKMeans;
+use treecv::learner::knn::KnnClassifier;
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::multiset::MultisetLearner;
+use treecv::learner::naive_bayes::GaussianNb;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::perceptron::Perceptron;
+use treecv::learner::ridge::OnlineRidge;
+use treecv::learner::IncrementalLearner;
+
+fn ceil_log2(k: usize) -> u64 {
+    (usize::BITS - (k - 1).leading_zeros()) as u64
+}
+
+fn dummy(n: usize) -> Dataset {
+    Dataset::new(vec![0.0; n], vec![0.0; n], 1)
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: Option<f64>, ctx: &str) {
+    match tol {
+        None => assert_eq!(a, b, "{ctx}"),
+        Some(t) => {
+            assert_eq!(a.len(), b.len(), "{ctx}");
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!((x - y).abs() <= t, "{ctx} fold {i}: {x} vs {y} (tol {t})");
+            }
+        }
+    }
+}
+
+/// The battery core: prime on the first `n` rows of `full`, stream the
+/// rest in two appended batches through `refresh`, and compare the final
+/// estimate per fold against a from-scratch pooled run on the extended
+/// layout — at worker counts {1, 3, 8} — while pinning the
+/// `subtrees_recomputed ≤ touched · ⌈log₂(2k)⌉` budget on every refresh.
+fn assert_streamed_matches_scratch<L>(
+    learner: &L,
+    full: &Dataset,
+    n: usize,
+    k: usize,
+    strategy: Strategy,
+    ordering: Ordering,
+    tol: Option<f64>,
+) where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    let d = full.d;
+    let extra = full.n - n;
+    assert!(extra >= 2, "need at least two append batches");
+    let cut = n + extra / 2;
+    let batches = [(n, cut), (cut, full.n)];
+    for threads in [1usize, 3, 8] {
+        let exe = TreeCvExecutor::new(strategy, ordering, 5, threads);
+        let mut data = full.take(n);
+        let folds = Folds::new(n, k, 0x5EED);
+        let mut folded = FoldedDataset::build(&data, &folds);
+        let (mut session, baseline) = exe.prime(learner, &data, &folded);
+        assert_eq!(baseline.per_fold.len(), k);
+        let ctx = format!(
+            "{} n={n} k={k} threads={threads} {strategy:?} {ordering:?}",
+            learner.name()
+        );
+        let mut last = baseline;
+        for &(lo, hi) in &batches {
+            let xs = &full.x[lo * d..hi * d];
+            let ys = &full.y[lo..hi];
+            data.push_rows(xs, ys);
+            let delta = folded.append_rows(xs, ys);
+            last = exe.refresh(&mut session, learner, &data, &folded, &delta);
+            let bound = delta.touched.len() as u64 * (ceil_log2(k) + 1);
+            assert!(
+                last.ops.subtrees_recomputed <= bound,
+                "{ctx}: subtrees_recomputed {} > bound {bound}",
+                last.ops.subtrees_recomputed
+            );
+            assert!(last.ops.subtrees_recomputed > 0, "{ctx}: refresh did no work");
+        }
+        let scratch = exe.run_folded(learner, &data, &folded);
+        assert_eq!(scratch.ops.subtrees_recomputed, 0, "{ctx}: scratch runs never refresh");
+        assert_close(&last.per_fold, &scratch.per_fold, tol, &ctx);
+        assert_eq!(data.n, full.n, "{ctx}");
+    }
+}
+
+/// Exact-arithmetic learners: bitwise under BOTH strategies (their revert
+/// is exact, so scratch SaveRevert runs reach the same interior states
+/// the refresh clones).
+#[test]
+fn streamed_refresh_exact_learners_bitwise() {
+    let (n, b) = (120usize, 10usize);
+    let flat = dummy(n + b);
+    let mix = SyntheticMixture1d::new(n + b, 61).generate();
+    let blobs = SyntheticBlobs::new(n + b, 8, 5, 67).generate();
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        let o = Ordering::Fixed;
+        assert_streamed_matches_scratch(&MultisetLearner::new(1), &flat, n, 8, strategy, o, None);
+        let hist = HistogramDensity::new(-8.0, 8.0, 32);
+        assert_streamed_matches_scratch(&hist, &mix, n, 5, strategy, o, None);
+        let km = OnlineKMeans::new(8, 5);
+        assert_streamed_matches_scratch(&km, &blobs, n, 6, strategy, o, None);
+    }
+}
+
+/// Covertype classifiers. k-NN and Pegasos revert exactly (model = the
+/// training set / exact logged weights) → bitwise both strategies. The
+/// f32 perceptron's revert is ulp-inexact and its per-fold loss is a 0/1
+/// error rate, so SaveRevert agreement is up to a few flipped
+/// predictions per fold; gaussian NB's f64 sufficient statistics agree
+/// to rounding.
+#[test]
+fn streamed_refresh_covertype_learners() {
+    let (n, b) = (160usize, 12usize);
+    let cover = SyntheticCovertype::new(n + b, 62).generate();
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        let o = Ordering::Fixed;
+        let knn = KnnClassifier::new(54, 3);
+        assert_streamed_matches_scratch(&knn, &cover, n, 8, strategy, o, None);
+        let pegasos = Pegasos::new(54, 1e-4);
+        assert_streamed_matches_scratch(&pegasos, &cover, n, 8, strategy, o, None);
+        let nb_tol = match strategy {
+            Strategy::Copy => None,
+            Strategy::SaveRevert => Some(1e-9),
+        };
+        assert_streamed_matches_scratch(&GaussianNb::new(54), &cover, n, 8, strategy, o, nb_tol);
+        let p_tol = match strategy {
+            Strategy::Copy => None,
+            Strategy::SaveRevert => Some(0.15),
+        };
+        assert_streamed_matches_scratch(&Perceptron::new(54), &cover, n, 8, strategy, o, p_tol);
+    }
+}
+
+/// Regression learners on the YearMSD family: LsqSgd's logged revert is
+/// exact → bitwise; online ridge's d² sufficient statistics agree to the
+/// usual 1e-6 under SaveRevert.
+#[test]
+fn streamed_refresh_regression_learners() {
+    let (n, b) = (140usize, 10usize);
+    let year = SyntheticYearMsd::new(n + b, 64).generate();
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        let o = Ordering::Fixed;
+        let lsq = LsqSgd::with_paper_step(90, n);
+        assert_streamed_matches_scratch(&lsq, &year, n, 7, strategy, o, None);
+        let ridge_tol = match strategy {
+            Strategy::Copy => None,
+            Strategy::SaveRevert => Some(1e-6),
+        };
+        let ridge = OnlineRidge::new(90, 1.0);
+        assert_streamed_matches_scratch(&ridge, &year, n, 7, strategy, o, ridge_tol);
+    }
+}
+
+/// Remainder folds (k ∤ n) and a LOOCV-shaped session (k = initial n;
+/// appended rows grow the leaf chunks past size 1, which stays a valid
+/// k-fold layout).
+#[test]
+fn streamed_refresh_remainder_and_loocv_shapes() {
+    let b = 6;
+    let odd = dummy(43 + b);
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        let l = MultisetLearner::new(1);
+        assert_streamed_matches_scratch(&l, &odd, 43, 8, strategy, Ordering::Fixed, None);
+    }
+    let tiny = dummy(24 + b);
+    let l = MultisetLearner::new(1);
+    assert_streamed_matches_scratch(&l, &tiny, 24, 24, Strategy::Copy, Ordering::Fixed, None);
+}
+
+/// Randomized feeding order: refresh derives the identical per-node
+/// `(seed, tag)` permutation streams a scratch run derives, so it stays
+/// bitwise — the strongest scheduling-equivalence check.
+#[test]
+fn streamed_refresh_randomized_ordering_bitwise() {
+    let (n, b) = (110usize, 8usize);
+    let flat = dummy(n + b);
+    let mix = SyntheticMixture1d::new(n + b, 44).generate();
+    for strategy in [Strategy::Copy, Strategy::SaveRevert] {
+        let o = Ordering::Randomized;
+        assert_streamed_matches_scratch(&MultisetLearner::new(1), &flat, n, 8, strategy, o, None);
+        let hist = HistogramDensity::new(-8.0, 8.0, 32);
+        assert_streamed_matches_scratch(&hist, &mix, n, 5, strategy, o, None);
+    }
+}
+
+/// Sliding window: retire the oldest rows (invalidate + re-prime, as the
+/// serve loop does), then append and refresh — the result must match a
+/// from-scratch run on the slid-and-extended window.
+#[test]
+fn retire_then_append_round_trip_matches_scratch() {
+    let (n, b, retired) = (60usize, 8usize, 10usize);
+    let full = SyntheticMixture1d::new(n + b, 3).generate();
+    let d = full.d;
+    let l = HistogramDensity::new(-8.0, 8.0, 32);
+    let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, 3);
+    let mut data = full.take(n);
+    let folds = Folds::new(n, 5, 7);
+    let mut folded = FoldedDataset::build(&data, &folds);
+    let (mut session, _) = exe.prime(&l, &data, &folded);
+
+    assert!(folded.folds().can_retire_below(retired as u32));
+    data.retire_front(retired);
+    folded.retire_oldest(retired);
+    session.invalidate();
+    let (fresh_session, _) = exe.prime(&l, &data, &folded);
+    session = fresh_session;
+
+    let xs = &full.x[n * d..];
+    let ys = &full.y[n..];
+    data.push_rows(xs, ys);
+    let delta = folded.append_rows(xs, ys);
+    let got = exe.refresh(&mut session, &l, &data, &folded, &delta);
+    let scratch = exe.run_folded(&l, &data, &folded);
+    assert_eq!(got.per_fold, scratch.per_fold);
+    assert_eq!(got.estimate, scratch.estimate);
+    assert_eq!(data.n, n - retired + b);
+}
+
+/// The whole streaming session — prime, three appended batches, their
+/// refreshed estimates — is a pure function of (data, seeds): running it
+/// twice reproduces every intermediate estimate bitwise, even under
+/// randomized ordering on a pooled executor.
+#[test]
+fn streaming_run_twice_is_deterministic() {
+    let (n, b) = (90usize, 9usize);
+    let full = SyntheticCovertype::new(n + b, 8).generate();
+    let l = Pegasos::new(54, 1e-4);
+    let run_once = || {
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 13, 3);
+        let mut data = full.take(n);
+        let folds = Folds::new(n, 6, 17);
+        let mut folded = FoldedDataset::build(&data, &folds);
+        let (mut session, baseline) = exe.prime(&l, &data, &folded);
+        let mut estimates = vec![baseline.estimate];
+        let mut lo = n;
+        while lo < n + b {
+            let hi = (lo + 3).min(n + b);
+            let xs = &full.x[lo * 54..hi * 54];
+            let ys = &full.y[lo..hi];
+            data.push_rows(xs, ys);
+            let delta = folded.append_rows(xs, ys);
+            estimates.push(exe.refresh(&mut session, &l, &data, &folded, &delta).estimate);
+            lo = hi;
+        }
+        estimates
+    };
+    let first = run_once();
+    let second = run_once();
+    assert_eq!(first, second);
+    assert_eq!(first.len(), 4, "baseline + three refreshed estimates");
+}
+
+/// `repro serve` end to end over the line protocol: rows auto-apply at
+/// the batch size, queries report staleness, and the final report renders
+/// the throughput/staleness schema.
+#[test]
+fn serve_cli_smoke() {
+    use std::io::Write as _;
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "serve", "--task", "multiset", "--n", "60", "--k", "4", "--batch", "2", "--seed",
+            "3", "--threads", "1",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro serve");
+    {
+        // invariant: stdin was piped three lines above, so it is present.
+        let stdin = child.stdin.as_mut().expect("stdin piped");
+        stdin
+            .write_all(b"row 0.5 1.0\nquery\nrow -0.5 2.0\nquery\nstats\nquit\n")
+            .expect("write protocol");
+    }
+    let out = child.wait_with_output().expect("serve run");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).expect("utf8 stdout");
+    assert!(text.contains("applied rows=2"), "{text}");
+    assert!(text.contains("pending 1"), "{text}");
+    assert!(text.contains("pending 0"), "{text}");
+    assert!(text.contains("stats n=62"), "{text}");
+    assert!(text.contains("serve task=multiset"), "{text}");
+    assert!(text.contains("rows_per_sec"), "{text}");
+    assert!(text.contains("subtrees_recomputed"), "{text}");
+}
