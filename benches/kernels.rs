@@ -1,0 +1,198 @@
+//! Kernel-layer micro-benchmarks: the folded hot loop's building blocks
+//! (blocked row sweeps, rank-B sufficient-stats accumulation, center
+//! assignment) measured in points/s and GB/s, with the dispatched SIMD
+//! backend recorded per scenario.
+//!
+//! Every auto-vs-scalar pair asserts **bit-identity** in-bench before any
+//! number is reported — the kernel layer's equivalence contract
+//! (`rust/src/learner/linalg.rs`) made load-bearing. Forced-scalar
+//! scenarios use `force_backend` and restore the detected backend after;
+//! this is safe mid-process precisely because the backends agree bitwise.
+//!
+//! Run: `cargo bench --bench kernels` (env `KERNELS_D`, `KERNELS_ROWS`,
+//! `KERNELS_K` for sizes, `KERNELS_JSON` for the output path;
+//! `BENCH_SAMPLES` / `BENCH_WARMUP` as usual). Committed output
+//! (`BENCH_kernels.json`) is the perf baseline later PRs diff against.
+
+use treecv::benchkit::{Bench, JsonReport};
+use treecv::learner::linalg;
+use treecv::rng::Rng;
+
+fn gen_rows(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+/// points/s and GB/s metric pair for a sweep touching `rows` rows of
+/// `bytes_per_row` bytes per call.
+fn throughput(median_s: f64, rows: usize, bytes_per_row: usize) -> [(&'static str, f64); 2] {
+    let t = median_s.max(1e-12);
+    [
+        ("points_per_s", rows as f64 / t),
+        ("gb_per_s", (rows * bytes_per_row) as f64 / t / 1e9),
+    ]
+}
+
+fn main() {
+    let d: usize = std::env::var("KERNELS_D").ok().and_then(|v| v.parse().ok()).unwrap_or(90);
+    let rows: usize =
+        std::env::var("KERNELS_ROWS").ok().and_then(|v| v.parse().ok()).unwrap_or(65_536);
+    let kc: usize = std::env::var("KERNELS_K").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    let json_path =
+        std::env::var("KERNELS_JSON").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+
+    let detected = linalg::kernel_backend();
+    println!(
+        "== kernel layer (d = {d}, rows = {rows}, k = {kc}, backend = {}) ==",
+        detected.name()
+    );
+
+    let mut rng = Rng::new(0x6b65726e);
+    let xs = gen_rows(&mut rng, rows * d);
+    let w: Vec<f32> = gen_rows(&mut rng, d);
+    let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+    let centers = gen_rows(&mut rng, kc * d);
+    let x0 = &xs[..d];
+
+    // In-bench equivalence checks: scalar vs dispatched, blocked vs
+    // row-wise. A mismatch aborts before any number is written.
+    let mut out_auto = vec![0f32; rows];
+    let mut out_scalar = vec![0f32; rows];
+    linalg::dot_block(&w, &xs, d, &mut out_auto);
+    linalg::force_backend(linalg::KernelBackend::Scalar);
+    linalg::dot_block(&w, &xs, d, &mut out_scalar);
+    linalg::force_backend(detected);
+    for (a, b) in out_auto.iter().zip(&out_scalar) {
+        assert_eq!(a.to_bits(), b.to_bits(), "dot_block: scalar vs dispatched diverged");
+    }
+    let rowwise: Vec<f32> = xs.chunks_exact(d).map(|r| linalg::dot(&w, r)).collect();
+    for (a, b) in out_auto.iter().zip(&rowwise) {
+        assert_eq!(a.to_bits(), b.to_bits(), "dot_block: blocked vs row-wise diverged");
+    }
+    let syrk_rows = rows.min(4096);
+    let mut a_blocked = vec![0f64; d * d];
+    let mut a_rowwise = vec![0f64; d * d];
+    linalg::syrk_accumulate(&mut a_blocked, d, &xs[..syrk_rows * d]);
+    linalg::syrk_accumulate_blocked(&mut a_rowwise, d, &xs[..syrk_rows * d], 1);
+    for (a, b) in a_blocked.iter().zip(&a_rowwise) {
+        assert_eq!(a.to_bits(), b.to_bits(), "syrk: blocked vs rank-one diverged");
+    }
+
+    let mut bench = Bench::default();
+    let mut report = JsonReport::new("kernels");
+    report.env("d", d as f64);
+    report.env("rows", rows as f64);
+    report.env("k", kc as f64);
+    report.env("syrk_rows", syrk_rows as f64);
+    report.env("syrk_block_rows", linalg::SYRK_BLOCK_ROWS as f64);
+    report.env("eval_block_rows", linalg::EVAL_BLOCK_ROWS as f64);
+    report.env("assign_block_centers", linalg::ASSIGN_BLOCK_CENTERS as f64);
+    report.env_str("detected_backend", detected.name());
+
+    let row_bytes = d * std::mem::size_of::<f32>();
+
+    // Blocked row sweep (the evaluate_rows shape), dispatched vs forced
+    // scalar.
+    let s = bench.run("kernels/dot_block/auto", || {
+        linalg::dot_block(&w, &xs, d, &mut out_auto);
+        std::hint::black_box(&out_auto);
+    });
+    let s = s.clone();
+    report.push_samples(&s, &throughput(s.median(), rows, row_bytes));
+    let auto_median = s.median();
+
+    linalg::force_backend(linalg::KernelBackend::Scalar);
+    let s = bench.run("kernels/dot_block/scalar", || {
+        linalg::dot_block(&w, &xs, d, &mut out_scalar);
+        std::hint::black_box(&out_scalar);
+    });
+    let s = s.clone();
+    linalg::force_backend(detected);
+    let mut m = throughput(s.median(), rows, row_bytes).to_vec();
+    m.push(("speedup_auto_vs_scalar", s.median() / auto_median.max(1e-12)));
+    report.push_samples_tagged(&s, &m, &[("kernel_backend", "scalar")]);
+
+    // Row-at-a-time dots: what evaluate_rows did before blocking.
+    let mut acc = 0f32;
+    let s = bench.run("kernels/dot_rowwise/auto", || {
+        for r in xs.chunks_exact(d) {
+            acc += linalg::dot(&w, r);
+        }
+        std::hint::black_box(acc);
+    });
+    let s = s.clone();
+    report.push_samples(&s, &throughput(s.median(), rows, row_bytes));
+
+    // Ridge's f64-accumulator sweep.
+    let mut out64 = vec![0f64; rows];
+    let s = bench.run("kernels/dot_block_f64f32/auto", || {
+        linalg::dot_block_f64f32(&w64, &xs, d, &mut out64);
+        std::hint::black_box(&out64);
+    });
+    let s = s.clone();
+    report.push_samples(&s, &throughput(s.median(), rows, row_bytes));
+
+    // Rank-B sufficient statistics (ridge A += XᵀX): cache-blocked vs
+    // the rank-one sequence it replaced. Each point touches d rows of A.
+    let syrk_bytes = row_bytes + d * std::mem::size_of::<f64>();
+    let s = bench.run("kernels/syrk_blocked/auto", || {
+        a_blocked.fill(0.0);
+        linalg::syrk_accumulate(&mut a_blocked, d, &xs[..syrk_rows * d]);
+        std::hint::black_box(&a_blocked);
+    });
+    let s = s.clone();
+    report.push_samples(&s, &throughput(s.median(), syrk_rows, syrk_bytes));
+    let blocked_median = s.median();
+
+    let s = bench.run("kernels/syrk_rowwise/auto", || {
+        a_rowwise.fill(0.0);
+        linalg::syrk_accumulate_blocked(&mut a_rowwise, d, &xs[..syrk_rows * d], 1);
+        std::hint::black_box(&a_rowwise);
+    });
+    let s = s.clone();
+    let mut m = throughput(s.median(), syrk_rows, syrk_bytes).to_vec();
+    m.push(("speedup_blocked_vs_rowwise", s.median() / blocked_median.max(1e-12)));
+    report.push_samples(&s, &m);
+
+    // K-means assignment: one query against all centers, blocked.
+    let mut dists = vec![0f64; kc];
+    let s = bench.run("kernels/sq_dist_block/auto", || {
+        for _ in 0..rows / kc {
+            linalg::sq_dist_block(x0, &centers, d, &mut dists);
+        }
+        std::hint::black_box(&dists);
+    });
+    let s = s.clone();
+    report.push_samples(&s, &throughput(s.median(), rows, row_bytes));
+
+    linalg::force_backend(linalg::KernelBackend::Scalar);
+    let s = bench.run("kernels/sq_dist_block/scalar", || {
+        for _ in 0..rows / kc {
+            linalg::sq_dist_block(x0, &centers, d, &mut dists);
+        }
+        std::hint::black_box(&dists);
+    });
+    let s = s.clone();
+    linalg::force_backend(detected);
+    report.push_samples_tagged(
+        &s,
+        &throughput(s.median(), rows, row_bytes),
+        &[("kernel_backend", "scalar")],
+    );
+
+    // Elementwise axpy (the SGD update shape — bitwise backend-independent).
+    let mut y = vec![0f32; d];
+    let s = bench.run("kernels/axpy/auto", || {
+        for r in xs.chunks_exact(d) {
+            linalg::axpy(1e-7, r, &mut y);
+        }
+        std::hint::black_box(&y);
+    });
+    let s = s.clone();
+    report.push_samples(&s, &throughput(s.median(), rows, 2 * row_bytes));
+
+    println!("\nCSV summary:\n{}", bench.csv());
+    match report.write(&json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

@@ -158,9 +158,14 @@ impl Bench {
 /// schema, wall-clock fields null, op-count-derived metrics only) —
 /// rerunning the bench on a real machine overwrites it with measured
 /// numbers and `measured: true`.
+///
+/// Schema 2 adds provenance: every scenario carries a `kernel_backend`
+/// string tag (appended automatically by [`JsonReport::push_samples`]
+/// unless the caller supplies its own), and `env` admits string values
+/// (e.g. blocking-parameter names) alongside numeric knobs.
 pub struct JsonReport {
     bench: String,
-    env: Vec<(String, f64)>,
+    env: Vec<(String, Json)>,
     scenarios: Vec<Json>,
 }
 
@@ -171,13 +176,33 @@ impl JsonReport {
 
     /// Record a run-configuration knob (shown once, under `"env"`).
     pub fn env(&mut self, key: &str, value: f64) -> &mut Self {
-        self.env.push((key.to_string(), value));
+        self.env.push((key.to_string(), Json::Num(value)));
+        self
+    }
+
+    /// Record a string-valued configuration knob under `"env"`.
+    pub fn env_str(&mut self, key: &str, value: &str) -> &mut Self {
+        self.env.push((key.to_string(), Json::str(value)));
         self
     }
 
     /// Add a scenario from measured [`Samples`] plus extra numeric
-    /// metrics (op counts, ratios).
+    /// metrics (op counts, ratios). The scenario is tagged with the
+    /// process-wide kernel backend.
     pub fn push_samples(&mut self, s: &Samples, metrics: &[(&str, f64)]) {
+        self.push_samples_tagged(s, metrics, &[]);
+    }
+
+    /// Like [`push_samples`](Self::push_samples), with extra string tags
+    /// (e.g. a forced-backend label). A `kernel_backend` tag recording the
+    /// dispatched SIMD backend is appended automatically unless `tags`
+    /// already provides one.
+    pub fn push_samples_tagged(
+        &mut self,
+        s: &Samples,
+        metrics: &[(&str, f64)],
+        tags: &[(&str, &str)],
+    ) {
         let mut pairs = vec![
             ("name", Json::str(s.name.clone())),
             ("median_s", Json::Num(s.median())),
@@ -189,6 +214,12 @@ impl JsonReport {
         for &(k, v) in metrics {
             pairs.push((k, Json::Num(v)));
         }
+        for &(k, v) in tags {
+            pairs.push((k, Json::str(v)));
+        }
+        if !tags.iter().any(|&(k, _)| k == "kernel_backend") {
+            pairs.push(("kernel_backend", Json::str(crate::learner::linalg::backend_name())));
+        }
         self.scenarios.push(Json::obj(pairs));
     }
 
@@ -198,11 +229,11 @@ impl JsonReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("bench", Json::str(self.bench.clone())),
-            ("schema", Json::num(1.0)),
+            ("schema", Json::num(2.0)),
             ("measured", Json::Bool(true)),
             (
                 "env",
-                Json::Obj(self.env.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+                Json::Obj(self.env.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
             ),
             ("scenarios", Json::Arr(self.scenarios.clone())),
         ])
@@ -248,13 +279,28 @@ mod tests {
     fn json_report_schema() {
         let mut r = JsonReport::new("layout");
         r.env("n", 16.0);
+        r.env_str("block", "syrk=16");
         let s = Samples { name: "a/b".into(), secs: vec![1.0, 3.0] };
         r.push_samples(&s, &[("stream_allocs", 0.0)]);
         let out = r.to_json().render();
         assert!(out.contains("\"bench\":\"layout\""), "{out}");
+        assert!(out.contains("\"schema\":2"), "{out}");
         assert!(out.contains("\"measured\":true"), "{out}");
         assert!(out.contains("\"median_s\":2"), "{out}");
         assert!(out.contains("\"stream_allocs\":0"), "{out}");
         assert!(out.contains("\"n\":16"), "{out}");
+        assert!(out.contains("\"block\":\"syrk=16\""), "{out}");
+        let backend = crate::learner::linalg::backend_name();
+        assert!(out.contains(&format!("\"kernel_backend\":\"{backend}\"")), "{out}");
+    }
+
+    #[test]
+    fn explicit_backend_tag_wins() {
+        let mut r = JsonReport::new("kernels");
+        let s = Samples { name: "k/forced".into(), secs: vec![1.0] };
+        r.push_samples_tagged(&s, &[], &[("kernel_backend", "scalar")]);
+        let out = r.to_json().render();
+        assert!(out.contains("\"kernel_backend\":\"scalar\""), "{out}");
+        assert_eq!(out.matches("kernel_backend").count(), 1, "{out}");
     }
 }

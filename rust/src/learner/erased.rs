@@ -31,7 +31,10 @@
 //!   arithmetic operation an erased run performs is the concrete
 //!   learner's own, in the same order, so per-run results are
 //!   **bit-identical** to the generic path (`tests/integration_erased.rs`
-//!   pins this for every learner in the crate).
+//!   pins this for every learner in the crate). That includes the
+//!   [`super::linalg`] kernel-layer dispatch: erased forwarding reaches
+//!   the very same `update_rows`/`evaluate_rows` bodies, so the selected
+//!   SIMD backend is identical (and identically invisible) on both paths.
 
 use super::IncrementalLearner;
 use crate::data::Dataset;

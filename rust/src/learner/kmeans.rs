@@ -46,11 +46,34 @@ impl Clone for KMeansModel {
 
 impl KMeansModel {
     /// Index of the nearest seeded center, or None if unseeded.
+    ///
+    /// Blocked assignment through the kernel layer: the query point stays
+    /// resident while [`linalg::ASSIGN_BLOCK_CENTERS`]-sized center blocks
+    /// stream through. Each distance is bitwise equal to the per-center
+    /// [`linalg::dist_sq`] path, and ties keep the lowest index (strict `<`
+    /// replacement) — exactly the historical `min_by(total_cmp)`
+    /// first-minimum semantics.
     pub fn nearest(&self, d: usize, x: &[f32]) -> Option<usize> {
-        (0..self.seeded)
-            .map(|j| (j, linalg::dist_sq(x, &self.centers[j * d..(j + 1) * d])))
-            .min_by(|a, b| a.1.total_cmp(&b.1))
-            .map(|(j, _)| j)
+        if self.seeded == 0 {
+            return None;
+        }
+        if d == 0 {
+            return Some(0);
+        }
+        let mut dists = [0f64; linalg::ASSIGN_BLOCK_CENTERS];
+        let (mut best_j, mut best) = (0usize, f64::INFINITY);
+        let cb = self.centers[..self.seeded * d].chunks(linalg::ASSIGN_BLOCK_CENTERS * d);
+        for (bi, block) in cb.enumerate() {
+            let out = &mut dists[..block.len() / d];
+            linalg::sq_dist_block(x, block, d, out);
+            for (r, &dist) in out.iter().enumerate() {
+                if dist.total_cmp(&best).is_lt() {
+                    best = dist;
+                    best_j = bi * linalg::ASSIGN_BLOCK_CENTERS + r;
+                }
+            }
+        }
+        Some(best_j)
     }
 }
 
@@ -86,9 +109,7 @@ impl OnlineKMeans {
         let old_center = c.to_vec();
         m.counts[j] += 1;
         let inv = 1.0 / m.counts[j] as f32;
-        for t in 0..d {
-            c[t] += inv * (x[t] - c[t]);
-        }
+        linalg::avg_update(inv, x, c);
         KMeansUndoOp::Moved { j, old_center }
     }
 }

@@ -1,94 +1,913 @@
-//! Small dense linear-algebra kernels shared by the pure-Rust learners and
-//! the exact-LOOCV comparator. These are the L3 hot path for the large-`n`
-//! experiments (the XLA artifacts cover the L1/L2 path), so they are kept
-//! allocation-free and auto-vectorizable.
+//! The kernel layer: small dense linear-algebra kernels shared by the
+//! pure-Rust learners and the exact-LOOCV comparator, with runtime backend
+//! dispatch. These are the L3 hot path for the large-`n` experiments (the
+//! XLA artifacts cover the L1/L2 path), so they are allocation-free and run
+//! either as explicit AVX2 SIMD or as lane-structured scalar code.
+//!
+//! # Dispatch
+//!
+//! Every public kernel is a thin wrapper that consults a process-wide
+//! backend cache ([`kernel_backend`], a one-time `is_x86_feature_detected!`
+//! probe stored in an atomic) and forwards to one of two implementations:
+//!
+//! | backend  | module     | where                                        |
+//! |----------|------------|----------------------------------------------|
+//! | `avx2`   | [`avx2`]   | x86-64 with AVX2+FMA, detected at runtime    |
+//! | `scalar` | [`scalar`] | everywhere else (and `TREECV_KERNEL_BACKEND=scalar`) |
+//!
+//! The `TREECV_KERNEL_BACKEND=scalar` environment variable (read once, at
+//! first dispatch) forces the scalar backend; [`force_backend`] does the
+//! same programmatically for tests and benches. The selected backend is
+//! surfaced in every report via `OpCounts::kernel_backend`.
+//!
+//! # Equivalence contract
+//!
+//! The two backends are **bit-identical**: for every kernel, the AVX2 path
+//! keeps its per-lane accumulators in the same lane structure as the scalar
+//! path (eight f32 lanes for [`dot`], four f64 lanes for the widening
+//! kernels), spills them to an array, and applies the exact same scalar
+//! reduction tree and sequential remainder loop. Multiplies and adds stay
+//! separate instructions (never FMA-contracted) because the scalar path
+//! cannot contract. The block kernels ([`dot_block`], [`sq_dist_block`],
+//! [`syrk_accumulate`]) are bitwise equal to their row-at-a-time
+//! counterparts for every block size: blocking only reorders *independent*
+//! rows/centers, never the additions inside one accumulator. The unit
+//! battery below pins all of this across remainder-lane dimensions, and
+//! `tests/integration_layout.rs` pins that dispatch is invisible to every
+//! engine × strategy × ordering result.
+//!
+//! # Blocking parameters
+//!
+//! [`SYRK_BLOCK_ROWS`], [`EVAL_BLOCK_ROWS`] and [`ASSIGN_BLOCK_CENTERS`]
+//! are the cache-blocking sizes the learners use; `benches/kernels.rs`
+//! records them (plus the active backend) in `BENCH_kernels.json`.
 
-/// Dot product `⟨a, b⟩` in f32.
-///
-/// Eight independent accumulators break the serial FP dependency chain so
-/// LLVM can vectorize (strict FP semantics forbid reassociating a single
-/// `s += a[i]*b[i]` chain). This is the single hottest operation in the
-/// whole system (PEGASOS margin checks + all evaluations) — see
-/// EXPERIMENTS.md §Perf for the measured effect.
-#[inline(always)]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f32; 8];
-    let ca = a.chunks_exact(8);
-    let cb = b.chunks_exact(8);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (xa, xb) in ca.zip(cb) {
-        // Eight independent lanes → one SIMD FMA per iteration.
-        for l in 0..8 {
-            acc[l] += xa[l] * xb[l];
+use crate::sync::{AtomicU64, Ordering};
+
+/// Row-block size for [`syrk_accumulate`]: ridge's `A += XᵀX` sweeps each
+/// row of `A` once per block of this many points instead of once per point.
+pub const SYRK_BLOCK_ROWS: usize = 16;
+
+/// Row-block size the dense learners use when staging `evaluate_rows`
+/// through [`dot_block`] (scores buffer lives on the stack).
+pub const EVAL_BLOCK_ROWS: usize = 64;
+
+/// Center-block size for kmeans assignment via [`sq_dist_block`] (distance
+/// buffer lives on the stack; the query point stays register/L1-resident).
+pub const ASSIGN_BLOCK_CENTERS: usize = 32;
+
+/// The kernel backend in effect (process-wide, resolved once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Lane-structured portable kernels — the bit-exactness specification.
+    Scalar,
+    /// Explicit AVX2 kernels (x86-64 only, runtime-detected), bit-identical
+    /// to [`KernelBackend::Scalar`] by the equivalence contract above.
+    Avx2,
+}
+
+impl KernelBackend {
+    /// Stable lowercase name used in reports and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
         }
     }
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
-        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    for (xa, xb) in ra.iter().zip(rb) {
-        s += xa * xb;
+}
+
+const BACKEND_UNRESOLVED: u64 = 0;
+const BACKEND_SCALAR: u64 = 1;
+const BACKEND_AVX2: u64 = 2;
+
+/// One-time backend cache. 0 = unresolved; the first [`kernel_backend`]
+/// call runs feature detection (+ env override) and stores the result.
+static BACKEND: AtomicU64 = AtomicU64::new(BACKEND_UNRESOLVED);
+
+/// The backend every kernel wrapper dispatches on. Resolves (feature probe
+/// + `TREECV_KERNEL_BACKEND` override) on first call, then a relaxed load.
+#[inline]
+pub fn kernel_backend() -> KernelBackend {
+    match BACKEND.load(Ordering::Relaxed) {
+        BACKEND_SCALAR => KernelBackend::Scalar,
+        BACKEND_AVX2 => KernelBackend::Avx2,
+        _ => resolve_backend(),
     }
-    s
+}
+
+/// Name of the backend in effect (resolving it on first call).
+pub fn backend_name() -> &'static str {
+    kernel_backend().name()
+}
+
+#[cold]
+fn resolve_backend() -> KernelBackend {
+    let over = std::env::var("TREECV_KERNEL_BACKEND").ok();
+    let b = backend_from_override(over.as_deref(), avx2_available());
+    force_backend(b);
+    b
+}
+
+/// Pure override-resolution rule (unit-tested): `Some("scalar")` forces the
+/// scalar backend; any other value (or none) selects AVX2 iff the CPU
+/// supports it.
+pub fn backend_from_override(over: Option<&str>, avx2: bool) -> KernelBackend {
+    if over == Some("scalar") || !avx2 {
+        KernelBackend::Scalar
+    } else {
+        KernelBackend::Avx2
+    }
+}
+
+/// Whether the AVX2 kernels can run on this CPU (AVX2 + FMA probe; FMA is
+/// required by the dispatch contract even though the kernels never contract,
+/// so a future fused variant cannot silently change the detection story).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Force the kernel backend (tests / benches / CI legs). Safe to call at
+/// any point mid-run because the backends are bit-identical — flipping the
+/// backend can never change a result. Callers selecting
+/// [`KernelBackend::Avx2`] must have checked [`avx2_available`] first.
+pub fn force_backend(b: KernelBackend) {
+    let code = match b {
+        KernelBackend::Scalar => BACKEND_SCALAR,
+        KernelBackend::Avx2 => BACKEND_AVX2,
+    };
+    BACKEND.store(code, Ordering::Relaxed);
+}
+
+/// Dot product `⟨a, b⟩` in f32 — the single hottest operation in the whole
+/// system (PEGASOS margin checks + all evaluations); see EXPERIMENTS.md
+/// §Kernel layer.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    scalar::dot(a, b)
 }
 
 /// `y += alpha * x`.
-#[inline(always)]
+#[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::axpy(alpha, x, y) };
+        }
     }
+    scalar::axpy(alpha, x, y)
 }
 
 /// `y *= alpha`.
-#[inline(always)]
+#[inline]
 pub fn scale(alpha: f32, y: &mut [f32]) {
-    for v in y.iter_mut() {
-        *v *= alpha;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::scale(alpha, y) };
+        }
     }
+    scalar::scale(alpha, y)
 }
 
 /// Squared l2 norm, f64 accumulator (used for projections and regularizers
-/// where drift matters). Four independent lanes break the FP chain (same
-/// reasoning as [`dot`]).
-#[inline(always)]
+/// where drift matters).
+#[inline]
 pub fn norm_sq(a: &[f32]) -> f64 {
-    let mut acc = [0f64; 4];
-    let ca = a.chunks_exact(4);
-    let r = ca.remainder();
-    for xa in ca {
-        for l in 0..4 {
-            let v = xa[l] as f64;
-            acc[l] += v * v;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::norm_sq(a) };
         }
     }
-    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
-    for &v in r {
-        s += (v as f64) * (v as f64);
-    }
-    s
+    scalar::norm_sq(a)
 }
 
-/// Squared euclidean distance `||a - b||²` (four-lane, as [`norm_sq`]).
-#[inline(always)]
+/// Squared euclidean distance `||a - b||²`, f64 accumulator (subtraction in
+/// f32, then widened — see the scalar kernel for the exact structure).
+#[inline]
 pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f64; 4];
-    let ca = a.chunks_exact(4);
-    let cb = b.chunks_exact(4);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (xa, xb) in ca.zip(cb) {
-        for l in 0..4 {
-            let d = (xa[l] - xb[l]) as f64;
-            acc[l] += d * d;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::dist_sq(a, b) };
         }
     }
-    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
-    for (xa, xb) in ra.iter().zip(rb) {
-        let d = (xa - xb) as f64;
-        s += d * d;
+    scalar::dist_sq(a, b)
+}
+
+/// Mixed-precision dot `Σ w[j] · (x[j] as f64)` — ridge predictions (f64
+/// weights against f32 rows).
+#[inline]
+pub fn dot_f64f32(w: &[f64], x: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::dot_f64f32(w, x) };
+        }
     }
-    s
+    scalar::dot_f64f32(w, x)
+}
+
+/// Mixed-precision axpy `y[j] += alpha * (x[j] as f64)` — ridge
+/// sufficient-stats rows (f64 accumulators fed by f32 points).
+#[inline]
+pub fn axpy_f64f32(alpha: f64, x: &[f32], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::axpy_f64f32(alpha, x, y) };
+        }
+    }
+    scalar::axpy_f64f32(alpha, x, y)
+}
+
+/// Running-average relaxation `y[j] += alpha * (x[j] - y[j])` — lsqsgd's
+/// iterate averaging and kmeans' center update share this form.
+#[inline]
+pub fn avg_update(alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::avg_update(alpha, x, y) };
+        }
+    }
+    scalar::avg_update(alpha, x, y)
+}
+
+/// Signed per-feature moment accumulation for naive Bayes:
+/// `sum[j] += sign·v` and `sumsq[j] += sign·(v·v)` with `v = x[j] as f64`.
+/// `sign` is ±1.0, so add and subtract (`a − b ≡ a + (−b)` exactly) share
+/// one kernel.
+#[inline]
+pub fn accumulate_stats(sign: f64, x: &[f32], sum: &mut [f64], sumsq: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::accumulate_stats(sign, x, sum, sumsq) };
+        }
+    }
+    scalar::accumulate_stats(sign, x, sum, sumsq)
+}
+
+/// Fused block dot: `out[r] = ⟨w, xs[r·d .. (r+1)·d]⟩` for each row of a
+/// contiguous row-major block — the weight vector is loaded once per block
+/// of rows instead of once per row. Bitwise equal to calling [`dot`] per
+/// row.
+#[inline]
+pub fn dot_block(w: &[f32], xs: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), d);
+    debug_assert_eq!(xs.len(), d * out.len());
+    if d == 0 {
+        out.fill(0.0);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::dot_block(w, xs, d, out) };
+        }
+    }
+    scalar::dot_block(w, xs, d, out)
+}
+
+/// Mixed-precision block dot (`out[r] = Σ_j w[j]·(xs[r·d+j] as f64)`) for
+/// ridge's `evaluate_rows`. Bitwise equal to [`dot_f64f32`] per row.
+#[inline]
+pub fn dot_block_f64f32(w: &[f64], xs: &[f32], d: usize, out: &mut [f64]) {
+    debug_assert_eq!(w.len(), d);
+    debug_assert_eq!(xs.len(), d * out.len());
+    if d == 0 {
+        out.fill(0.0);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::dot_block_f64f32(w, xs, d, out) };
+        }
+    }
+    scalar::dot_block_f64f32(w, xs, d, out)
+}
+
+/// Fused assignment distances: `out[c] = ||x − centers[c·d..(c+1)·d]||²`
+/// for a contiguous block of centers; the query point stays resident while
+/// the center block streams through. Bitwise equal to [`dist_sq`] per
+/// center.
+#[inline]
+pub fn sq_dist_block(x: &[f32], centers: &[f32], d: usize, out: &mut [f64]) {
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(centers.len(), d * out.len());
+    if d == 0 {
+        out.fill(0.0);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel_backend() == KernelBackend::Avx2 {
+            // SAFETY: Avx2 is only selected after runtime feature detection.
+            return unsafe { avx2::sq_dist_block(x, centers, d, out) };
+        }
+    }
+    scalar::sq_dist_block(x, centers, d, out)
+}
+
+/// Cache-blocked rank-B update `A += Σ_r x_r x_rᵀ` over the row-major point
+/// block `xs` (each row length `d`, `A` dense `d × d` f64) with the default
+/// [`SYRK_BLOCK_ROWS`] blocking. Bitwise equal to the per-point rank-one
+/// sequence in row order — see [`syrk_accumulate_blocked`].
+#[inline]
+pub fn syrk_accumulate(a: &mut [f64], d: usize, xs: &[f32]) {
+    syrk_accumulate_blocked(a, d, xs, SYRK_BLOCK_ROWS);
+}
+
+/// [`syrk_accumulate`] with an explicit block size (exposed so the unit
+/// battery and benches can pin blocked ≡ unblocked).
+///
+/// Bit-identity for every `block_rows`: element `a[i][j]` receives exactly
+/// the additions `(x_r[i] as f64) · (x_r[j] as f64)` in globally ascending
+/// row order `r` — the loop nest (block → i → row-in-block → j) never
+/// reorders the adds landing on any single accumulator, it only reorders
+/// *between* accumulators. Blocking wins because each row of `A` is swept
+/// once per block of points instead of once per point.
+pub fn syrk_accumulate_blocked(a: &mut [f64], d: usize, xs: &[f32], block_rows: usize) {
+    debug_assert_eq!(a.len(), d * d);
+    debug_assert!(block_rows > 0);
+    if d == 0 || xs.is_empty() {
+        return;
+    }
+    debug_assert_eq!(xs.len() % d, 0);
+    for block in xs.chunks(block_rows * d) {
+        for i in 0..d {
+            let arow = &mut a[i * d..(i + 1) * d];
+            for row in block.chunks_exact(d) {
+                axpy_f64f32(row[i] as f64, row, arow);
+            }
+        }
+    }
+}
+
+/// Lane-structured portable kernels — the bit-exactness specification every
+/// other backend must match. The reduction kernels keep N independent
+/// accumulator lanes (breaking the serial FP dependency chain so LLVM can
+/// autovectorize under strict FP semantics), then combine them with a fixed
+/// reduction tree and run the remainder sequentially; the elementwise
+/// kernels are chunked the same way so the fallback autovectorizes too.
+pub mod scalar {
+    /// Eight-lane f32 dot; lanes reduce as `((0+4)+(1+5)) + ((2+6)+(3+7))`.
+    #[inline(always)]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0f32; 8];
+        let ca = a.chunks_exact(8);
+        let cb = b.chunks_exact(8);
+        let (ra, rb) = (ca.remainder(), cb.remainder());
+        for (xa, xb) in ca.zip(cb) {
+            for l in 0..8 {
+                acc[l] += xa[l] * xb[l];
+            }
+        }
+        let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+            + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+        for (xa, xb) in ra.iter().zip(rb) {
+            s += xa * xb;
+        }
+        s
+    }
+
+    /// `y += alpha * x`, eight-wide chunks (elementwise, so bitwise equal
+    /// to the naive loop at any chunking).
+    #[inline(always)]
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let mut cy = y.chunks_exact_mut(8);
+        let mut cx = x.chunks_exact(8);
+        for (ya, xa) in (&mut cy).zip(&mut cx) {
+            for l in 0..8 {
+                ya[l] += alpha * xa[l];
+            }
+        }
+        for (yv, xv) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+            *yv += alpha * xv;
+        }
+    }
+
+    /// `y *= alpha`, eight-wide chunks.
+    #[inline(always)]
+    pub fn scale(alpha: f32, y: &mut [f32]) {
+        let mut cy = y.chunks_exact_mut(8);
+        for ya in &mut cy {
+            for v in ya.iter_mut() {
+                *v *= alpha;
+            }
+        }
+        for v in cy.into_remainder() {
+            *v *= alpha;
+        }
+    }
+
+    /// Four-lane f64 squared norm; lanes reduce as `(0+2) + (1+3)`.
+    #[inline(always)]
+    pub fn norm_sq(a: &[f32]) -> f64 {
+        let mut acc = [0f64; 4];
+        let ca = a.chunks_exact(4);
+        let r = ca.remainder();
+        for xa in ca {
+            for l in 0..4 {
+                let v = xa[l] as f64;
+                acc[l] += v * v;
+            }
+        }
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        for &v in r {
+            s += (v as f64) * (v as f64);
+        }
+        s
+    }
+
+    /// Four-lane f64 squared distance: subtract in f32, then widen (the
+    /// widening point is part of the bit contract).
+    #[inline(always)]
+    pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0f64; 4];
+        let ca = a.chunks_exact(4);
+        let cb = b.chunks_exact(4);
+        let (ra, rb) = (ca.remainder(), cb.remainder());
+        for (xa, xb) in ca.zip(cb) {
+            for l in 0..4 {
+                let d = (xa[l] - xb[l]) as f64;
+                acc[l] += d * d;
+            }
+        }
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        for (xa, xb) in ra.iter().zip(rb) {
+            let d = (xa - xb) as f64;
+            s += d * d;
+        }
+        s
+    }
+
+    /// Four-lane mixed-precision dot; lanes reduce as `(0+2) + (1+3)`.
+    #[inline(always)]
+    pub fn dot_f64f32(w: &[f64], x: &[f32]) -> f64 {
+        debug_assert_eq!(w.len(), x.len());
+        let mut acc = [0f64; 4];
+        let cw = w.chunks_exact(4);
+        let cx = x.chunks_exact(4);
+        let (rw, rx) = (cw.remainder(), cx.remainder());
+        for (wa, xa) in cw.zip(cx) {
+            for l in 0..4 {
+                acc[l] += wa[l] * (xa[l] as f64);
+            }
+        }
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        for (wv, &xv) in rw.iter().zip(rx) {
+            s += wv * (xv as f64);
+        }
+        s
+    }
+
+    /// Mixed-precision axpy, four-wide chunks (elementwise).
+    #[inline(always)]
+    pub fn axpy_f64f32(alpha: f64, x: &[f32], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let mut cy = y.chunks_exact_mut(4);
+        let mut cx = x.chunks_exact(4);
+        for (ya, xa) in (&mut cy).zip(&mut cx) {
+            for l in 0..4 {
+                ya[l] += alpha * (xa[l] as f64);
+            }
+        }
+        for (yv, &xv) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+            *yv += alpha * (xv as f64);
+        }
+    }
+
+    /// `y[j] += alpha * (x[j] - y[j])`, eight-wide chunks (elementwise).
+    #[inline(always)]
+    pub fn avg_update(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let mut cy = y.chunks_exact_mut(8);
+        let mut cx = x.chunks_exact(8);
+        for (ya, xa) in (&mut cy).zip(&mut cx) {
+            for l in 0..8 {
+                ya[l] += alpha * (xa[l] - ya[l]);
+            }
+        }
+        for (yv, &xv) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+            *yv += alpha * (xv - *yv);
+        }
+    }
+
+    /// Signed moment accumulation, four-wide chunks (elementwise).
+    #[inline(always)]
+    pub fn accumulate_stats(sign: f64, x: &[f32], sum: &mut [f64], sumsq: &mut [f64]) {
+        debug_assert_eq!(x.len(), sum.len());
+        debug_assert_eq!(x.len(), sumsq.len());
+        let mut cs = sum.chunks_exact_mut(4);
+        let mut cq = sumsq.chunks_exact_mut(4);
+        let mut cx = x.chunks_exact(4);
+        for ((sa, qa), xa) in (&mut cs).zip(&mut cq).zip(&mut cx) {
+            for l in 0..4 {
+                let v = xa[l] as f64;
+                sa[l] += sign * v;
+                qa[l] += sign * (v * v);
+            }
+        }
+        let sr = cs.into_remainder().iter_mut();
+        let qr = cq.into_remainder().iter_mut();
+        for ((sv, qv), &xv) in sr.zip(qr).zip(cx.remainder()) {
+            let v = xv as f64;
+            *sv += sign * v;
+            *qv += sign * (v * v);
+        }
+    }
+
+    /// Row-at-a-time block dot (the blocked AVX2 variant must match this
+    /// bitwise).
+    #[inline(always)]
+    pub fn dot_block(w: &[f32], xs: &[f32], d: usize, out: &mut [f32]) {
+        for (row, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
+            *o = dot(w, row);
+        }
+    }
+
+    /// Row-at-a-time mixed-precision block dot.
+    #[inline(always)]
+    pub fn dot_block_f64f32(w: &[f64], xs: &[f32], d: usize, out: &mut [f64]) {
+        for (row, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
+            *o = dot_f64f32(w, row);
+        }
+    }
+
+    /// Center-at-a-time block distances.
+    #[inline(always)]
+    pub fn sq_dist_block(x: &[f32], centers: &[f32], d: usize, out: &mut [f64]) {
+        for (c, o) in centers.chunks_exact(d).zip(out.iter_mut()) {
+            *o = dist_sq(x, c);
+        }
+    }
+}
+
+/// Explicit AVX2 kernels. Every function here carries
+/// `#[target_feature(enable = "avx2")]` and is only reachable through the
+/// dispatch wrappers after a runtime feature probe. Bit-identity with
+/// [`scalar`] is maintained by construction: separate multiply and add
+/// instructions (no FMA contraction), vector lanes mirroring the scalar
+/// accumulator arrays, lane spills reduced with the scalar reduction trees,
+/// and sequential scalar remainder loops.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Spill the eight f32 lanes and apply [`super::scalar::dot`]'s tree.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce8(v: __m256) -> f32 {
+        let mut l = [0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), v);
+        ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+    }
+
+    /// Spill the four f64 lanes and apply the `(0+2) + (1+3)` tree.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce4(v: __m256d) -> f64 {
+        let mut l = [0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), v);
+        (l[0] + l[2]) + (l[1] + l[3])
+    }
+
+    /// Eight-lane dot, bitwise equal to [`super::scalar::dot`].
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n8 = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let xa = _mm256_loadu_ps(a.as_ptr().add(i));
+            let xb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(xa, xb));
+            i += 8;
+        }
+        let mut s = reduce8(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// `y += alpha * x` (elementwise — trivially bitwise equal).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let n8 = n - n % 8;
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i < n8 {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            let r = _mm256_add_ps(yv, _mm256_mul_ps(av, xv));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// `y *= alpha` (elementwise).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(alpha: f32, y: &mut [f32]) {
+        let n = y.len();
+        let n8 = n - n % 8;
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i < n8 {
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_mul_ps(yv, av));
+            i += 8;
+        }
+        while i < n {
+            y[i] *= alpha;
+            i += 1;
+        }
+    }
+
+    /// Four-lane f64 squared norm, bitwise equal to
+    /// [`super::scalar::norm_sq`].
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn norm_sq(a: &[f32]) -> f64 {
+        let n = a.len();
+        let n4 = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < n4 {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+            i += 4;
+        }
+        let mut s = reduce4(acc);
+        while i < n {
+            let v = a[i] as f64;
+            s += v * v;
+            i += 1;
+        }
+        s
+    }
+
+    /// Four-lane squared distance: f32 subtract, then widen (exactly the
+    /// scalar structure — `_mm_sub_ps` then `_mm256_cvtps_pd`).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n4 = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < n4 {
+            let xa = _mm_loadu_ps(a.as_ptr().add(i));
+            let xb = _mm_loadu_ps(b.as_ptr().add(i));
+            let d = _mm256_cvtps_pd(_mm_sub_ps(xa, xb));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+            i += 4;
+        }
+        let mut s = reduce4(acc);
+        while i < n {
+            let d = (a[i] - b[i]) as f64;
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// Four-lane mixed-precision dot, bitwise equal to
+    /// [`super::scalar::dot_f64f32`].
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f64f32(w: &[f64], x: &[f32]) -> f64 {
+        debug_assert_eq!(w.len(), x.len());
+        let n = x.len();
+        let n4 = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < n4 {
+            let wv = _mm256_loadu_pd(w.as_ptr().add(i));
+            let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(wv, xv));
+            i += 4;
+        }
+        let mut s = reduce4(acc);
+        while i < n {
+            s += w[i] * (x[i] as f64);
+            i += 1;
+        }
+        s
+    }
+
+    /// Mixed-precision axpy (elementwise).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f64f32(alpha: f64, x: &[f32], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let n4 = n - n % 4;
+        let av = _mm256_set1_pd(alpha);
+        let mut i = 0;
+        while i < n4 {
+            let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            let r = _mm256_add_pd(yv, _mm256_mul_pd(av, xv));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * (x[i] as f64);
+            i += 1;
+        }
+    }
+
+    /// `y[j] += alpha * (x[j] - y[j])` (elementwise).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn avg_update(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let n8 = n - n % 8;
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i < n8 {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            let dv = _mm256_sub_ps(xv, yv);
+            let r = _mm256_add_ps(yv, _mm256_mul_ps(av, dv));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * (x[i] - y[i]);
+            i += 1;
+        }
+    }
+
+    /// Signed moment accumulation (elementwise).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accumulate_stats(sign: f64, x: &[f32], sum: &mut [f64], sumsq: &mut [f64]) {
+        debug_assert_eq!(x.len(), sum.len());
+        debug_assert_eq!(x.len(), sumsq.len());
+        let n = x.len();
+        let n4 = n - n % 4;
+        let sv = _mm256_set1_pd(sign);
+        let mut i = 0;
+        while i < n4 {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+            let s0 = _mm256_loadu_pd(sum.as_ptr().add(i));
+            let s1 = _mm256_add_pd(s0, _mm256_mul_pd(sv, v));
+            _mm256_storeu_pd(sum.as_mut_ptr().add(i), s1);
+            let q0 = _mm256_loadu_pd(sumsq.as_ptr().add(i));
+            let q1 = _mm256_add_pd(q0, _mm256_mul_pd(sv, _mm256_mul_pd(v, v)));
+            _mm256_storeu_pd(sumsq.as_mut_ptr().add(i), q1);
+            i += 4;
+        }
+        while i < n {
+            let v = x[i] as f64;
+            sum[i] += sign * v;
+            sumsq[i] += sign * (v * v);
+            i += 1;
+        }
+    }
+
+    /// Blocked dot: four rows share each loaded `w` chunk (the fused win —
+    /// `w` streams from registers instead of being re-read per row). Each
+    /// row keeps its own accumulator register with exactly the single-row
+    /// lane structure, so every `out[r]` is bitwise equal to
+    /// [`dot`]/[`super::scalar::dot`] on that row.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_block(w: &[f32], xs: &[f32], d: usize, out: &mut [f32]) {
+        debug_assert_eq!(w.len(), d);
+        debug_assert_eq!(xs.len(), d * out.len());
+        let rows = out.len();
+        let wp = w.as_ptr();
+        let d8 = d - d % 8;
+        let mut r = 0;
+        while r + 4 <= rows {
+            let p0 = xs.as_ptr().add(r * d);
+            let p1 = xs.as_ptr().add((r + 1) * d);
+            let p2 = xs.as_ptr().add((r + 2) * d);
+            let p3 = xs.as_ptr().add((r + 3) * d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut c = 0;
+            while c < d8 {
+                let wv = _mm256_loadu_ps(wp.add(c));
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(wv, _mm256_loadu_ps(p0.add(c))));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(wv, _mm256_loadu_ps(p1.add(c))));
+                a2 = _mm256_add_ps(a2, _mm256_mul_ps(wv, _mm256_loadu_ps(p2.add(c))));
+                a3 = _mm256_add_ps(a3, _mm256_mul_ps(wv, _mm256_loadu_ps(p3.add(c))));
+                c += 8;
+            }
+            let mut s = [reduce8(a0), reduce8(a1), reduce8(a2), reduce8(a3)];
+            for (k, sv) in s.iter_mut().enumerate() {
+                let p = xs.as_ptr().add((r + k) * d);
+                let mut j = d8;
+                while j < d {
+                    *sv += *wp.add(j) * *p.add(j);
+                    j += 1;
+                }
+            }
+            out[r..r + 4].copy_from_slice(&s);
+            r += 4;
+        }
+        while r < rows {
+            out[r] = dot(w, &xs[r * d..(r + 1) * d]);
+            r += 1;
+        }
+    }
+
+    /// Row-at-a-time mixed-precision block dot (the fused win here is the
+    /// resident `w`; rows already stream once).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_block_f64f32(w: &[f64], xs: &[f32], d: usize, out: &mut [f64]) {
+        debug_assert_eq!(w.len(), d);
+        debug_assert_eq!(xs.len(), d * out.len());
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot_f64f32(w, &xs[r * d..(r + 1) * d]);
+        }
+    }
+
+    /// Center-at-a-time block distances (query point stays resident).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers go through the runtime-detected dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sq_dist_block(x: &[f32], centers: &[f32], d: usize, out: &mut [f64]) {
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(centers.len(), d * out.len());
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = dist_sq(x, &centers[c * d..(c + 1) * d]);
+        }
+    }
 }
 
 /// Cholesky factorization of a symmetric positive-definite matrix stored
@@ -161,6 +980,27 @@ pub fn cholesky_inverse(l: &[f64], n: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
+
+    /// Remainder-lane battery: one below/at/above each lane width plus two
+    /// larger sizes (64 = clean multiple, 257 = prime).
+    const DIMS: [usize; 6] = [1, 7, 8, 9, 64, 257];
+
+    fn gen(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    fn gen64(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.next_gaussian() as f64).collect()
+    }
+
+    fn bits32(x: &[f32]) -> Vec<u32> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    fn bits64(x: &[f64]) -> Vec<u64> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
 
     #[test]
     fn dot_axpy_scale() {
@@ -178,6 +1018,260 @@ mod tests {
     fn norms() {
         assert!((norm_sq(&[3., 4.]) - 25.0).abs() < 1e-12);
         assert!((dist_sq(&[1., 1.], &[4., 5.]) - 25.0).abs() < 1e-12);
+    }
+
+    /// The lane-structured elementwise kernels are bitwise equal to their
+    /// naive per-element loops at every remainder-lane dimension.
+    #[test]
+    fn scalar_elementwise_kernels_match_naive_references() {
+        let mut rng = Rng::new(901);
+        for &n in &DIMS {
+            let x = gen(&mut rng, n);
+            let y0 = gen(&mut rng, n);
+
+            let mut y = y0.clone();
+            let mut want = y0.clone();
+            scalar::axpy(0.37, &x, &mut y);
+            for i in 0..n {
+                want[i] += 0.37 * x[i];
+            }
+            assert_eq!(bits32(&y), bits32(&want), "axpy n={n}");
+
+            let mut y = y0.clone();
+            let mut want = y0.clone();
+            scalar::scale(-1.25, &mut y);
+            for v in want.iter_mut() {
+                *v *= -1.25;
+            }
+            assert_eq!(bits32(&y), bits32(&want), "scale n={n}");
+
+            let mut y = y0.clone();
+            let mut want = y0.clone();
+            scalar::avg_update(0.11, &x, &mut y);
+            for i in 0..n {
+                want[i] += 0.11 * (x[i] - want[i]);
+            }
+            assert_eq!(bits32(&y), bits32(&want), "avg_update n={n}");
+
+            let y64 = gen64(&mut rng, n);
+            let mut y = y64.clone();
+            let mut want = y64.clone();
+            scalar::axpy_f64f32(0.61, &x, &mut y);
+            for i in 0..n {
+                want[i] += 0.61 * (x[i] as f64);
+            }
+            assert_eq!(bits64(&y), bits64(&want), "axpy_f64f32 n={n}");
+
+            for sign in [1.0f64, -1.0] {
+                let s0 = gen64(&mut rng, n);
+                let q0 = gen64(&mut rng, n);
+                let (mut s, mut q) = (s0.clone(), q0.clone());
+                let (mut ws, mut wq) = (s0, q0);
+                scalar::accumulate_stats(sign, &x, &mut s, &mut q);
+                for i in 0..n {
+                    let v = x[i] as f64;
+                    ws[i] += sign * v;
+                    wq[i] += sign * (v * v);
+                }
+                assert_eq!(bits64(&s), bits64(&ws), "stats sum n={n}");
+                assert_eq!(bits64(&q), bits64(&wq), "stats sumsq n={n}");
+            }
+        }
+    }
+
+    /// Every AVX2 kernel is bitwise equal to its scalar counterpart across
+    /// the remainder-lane dimension battery. Skips (trivially passes) off
+    /// x86-64 or when the CPU lacks AVX2+FMA — CI's `-C target-cpu=native`
+    /// leg exercises the real comparison.
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn avx2_kernels_match_scalar_bitwise() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Rng::new(902);
+        for &n in &DIMS {
+            let a = gen(&mut rng, n);
+            let b = gen(&mut rng, n);
+            let w64 = gen64(&mut rng, n);
+
+            // SAFETY: guarded by avx2_available() above.
+            unsafe {
+                assert_eq!(avx2::dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits());
+                assert_eq!(avx2::norm_sq(&a).to_bits(), scalar::norm_sq(&a).to_bits());
+                assert_eq!(
+                    avx2::dist_sq(&a, &b).to_bits(),
+                    scalar::dist_sq(&a, &b).to_bits()
+                );
+                assert_eq!(
+                    avx2::dot_f64f32(&w64, &a).to_bits(),
+                    scalar::dot_f64f32(&w64, &a).to_bits()
+                );
+
+                let (mut y1, mut y2) = (b.clone(), b.clone());
+                avx2::axpy(0.42, &a, &mut y1);
+                scalar::axpy(0.42, &a, &mut y2);
+                assert_eq!(bits32(&y1), bits32(&y2), "axpy n={n}");
+
+                let (mut y1, mut y2) = (b.clone(), b.clone());
+                avx2::scale(1.73, &mut y1);
+                scalar::scale(1.73, &mut y2);
+                assert_eq!(bits32(&y1), bits32(&y2), "scale n={n}");
+
+                let (mut y1, mut y2) = (b.clone(), b.clone());
+                avx2::avg_update(0.09, &a, &mut y1);
+                scalar::avg_update(0.09, &a, &mut y2);
+                assert_eq!(bits32(&y1), bits32(&y2), "avg_update n={n}");
+
+                let (mut y1, mut y2) = (w64.clone(), w64.clone());
+                avx2::axpy_f64f32(-0.8, &a, &mut y1);
+                scalar::axpy_f64f32(-0.8, &a, &mut y2);
+                assert_eq!(bits64(&y1), bits64(&y2), "axpy_f64f32 n={n}");
+
+                let q64 = gen64(&mut rng, n);
+                let (mut s1, mut q1) = (w64.clone(), q64.clone());
+                let (mut s2, mut q2) = (w64.clone(), q64.clone());
+                avx2::accumulate_stats(-1.0, &a, &mut s1, &mut q1);
+                scalar::accumulate_stats(-1.0, &a, &mut s2, &mut q2);
+                assert_eq!(bits64(&s1), bits64(&s2), "stats sum n={n}");
+                assert_eq!(bits64(&q1), bits64(&q2), "stats sumsq n={n}");
+
+                // Block kernels: rows 1..=9 cover the 4-row main loop and
+                // every remainder-row count.
+                for rows in 1..=9usize {
+                    let xs = gen(&mut rng, rows * n);
+                    let (mut o1, mut o2) = (vec![0f32; rows], vec![0f32; rows]);
+                    avx2::dot_block(&a, &xs, n, &mut o1);
+                    scalar::dot_block(&a, &xs, n, &mut o2);
+                    assert_eq!(bits32(&o1), bits32(&o2), "dot_block n={n} rows={rows}");
+
+                    let (mut o1, mut o2) = (vec![0f64; rows], vec![0f64; rows]);
+                    avx2::dot_block_f64f32(&w64, &xs, n, &mut o1);
+                    scalar::dot_block_f64f32(&w64, &xs, n, &mut o2);
+                    assert_eq!(bits64(&o1), bits64(&o2), "dot_block_f64f32 n={n}");
+
+                    let (mut o1, mut o2) = (vec![0f64; rows], vec![0f64; rows]);
+                    avx2::sq_dist_block(&a, &xs, n, &mut o1);
+                    scalar::sq_dist_block(&a, &xs, n, &mut o2);
+                    assert_eq!(bits64(&o1), bits64(&o2), "sq_dist_block n={n}");
+                }
+            }
+        }
+    }
+
+    /// The public block kernels (whatever backend is live) are bitwise
+    /// equal to their row-at-a-time counterparts, including d = 0.
+    #[test]
+    fn block_kernels_match_rowwise() {
+        let mut rng = Rng::new(903);
+        for &n in &DIMS {
+            for rows in [1usize, 2, 3, 4, 5, 9] {
+                let w = gen(&mut rng, n);
+                let w64 = gen64(&mut rng, n);
+                let xs = gen(&mut rng, rows * n);
+
+                let mut out = vec![0f32; rows];
+                dot_block(&w, &xs, n, &mut out);
+                for r in 0..rows {
+                    let want = dot(&w, &xs[r * n..(r + 1) * n]);
+                    assert_eq!(out[r].to_bits(), want.to_bits(), "dot n={n} r={r}");
+                }
+
+                let mut out = vec![0f64; rows];
+                dot_block_f64f32(&w64, &xs, n, &mut out);
+                for r in 0..rows {
+                    let want = dot_f64f32(&w64, &xs[r * n..(r + 1) * n]);
+                    assert_eq!(out[r].to_bits(), want.to_bits(), "dotf64 n={n} r={r}");
+                }
+
+                let mut out = vec![0f64; rows];
+                sq_dist_block(&w, &xs, n, &mut out);
+                for r in 0..rows {
+                    let want = dist_sq(&w, &xs[r * n..(r + 1) * n]);
+                    assert_eq!(out[r].to_bits(), want.to_bits(), "dist n={n} r={r}");
+                }
+            }
+        }
+        // d = 0: defined as all-zeros output, no panic.
+        let mut out = vec![1f32; 3];
+        dot_block(&[], &[], 0, &mut out);
+        assert_eq!(out, [0.0; 3]);
+        let mut out = vec![1f64; 3];
+        sq_dist_block(&[], &[], 0, &mut out);
+        assert_eq!(out, [0.0; 3]);
+    }
+
+    /// `syrk_accumulate_blocked` is bitwise equal to the per-point rank-one
+    /// sequence for every block size (1, small odd, default, larger than
+    /// the point count).
+    #[test]
+    fn syrk_blocked_matches_rank_one_sequence() {
+        let mut rng = Rng::new(904);
+        for &d in &[1usize, 3, 7, 9] {
+            let points = 37;
+            let xs = gen(&mut rng, points * d);
+            let a0 = gen64(&mut rng, d * d);
+
+            let mut want = a0.clone();
+            for row in xs.chunks_exact(d) {
+                for i in 0..d {
+                    let xi = row[i] as f64;
+                    for j in 0..d {
+                        want[i * d + j] += xi * (row[j] as f64);
+                    }
+                }
+            }
+
+            for block_rows in [1usize, 3, SYRK_BLOCK_ROWS, 1000] {
+                let mut a = a0.clone();
+                syrk_accumulate_blocked(&mut a, d, &xs, block_rows);
+                assert_eq!(bits64(&a), bits64(&want), "syrk d={d} B={block_rows}");
+            }
+            let mut a = a0.clone();
+            syrk_accumulate(&mut a, d, &xs);
+            assert_eq!(bits64(&a), bits64(&want), "syrk default d={d}");
+        }
+        // Degenerate shapes are no-ops.
+        syrk_accumulate(&mut [], 0, &[]);
+        let mut a = [5.0f64];
+        syrk_accumulate(&mut a, 1, &[]);
+        assert_eq!(a, [5.0]);
+    }
+
+    #[test]
+    fn backend_override_rules() {
+        use KernelBackend::{Avx2, Scalar};
+        assert_eq!(backend_from_override(Some("scalar"), true), Scalar);
+        assert_eq!(backend_from_override(Some("scalar"), false), Scalar);
+        assert_eq!(backend_from_override(None, true), Avx2);
+        assert_eq!(backend_from_override(None, false), Scalar);
+        assert_eq!(backend_from_override(Some("avx2"), false), Scalar);
+        assert_eq!(backend_from_override(Some("anything"), true), Avx2);
+        assert_eq!(Scalar.name(), "scalar");
+        assert_eq!(Avx2.name(), "avx2");
+    }
+
+    /// Forcing the backend through the public dispatch never changes a
+    /// result (the property that makes `force_backend` safe mid-run).
+    #[test]
+    fn forced_backend_dispatch_is_bit_identical() {
+        let initial = kernel_backend();
+        let mut rng = Rng::new(905);
+        let a = gen(&mut rng, 257);
+        let b = gen(&mut rng, 257);
+
+        force_backend(KernelBackend::Scalar);
+        assert_eq!(kernel_backend(), KernelBackend::Scalar);
+        assert_eq!(backend_name(), "scalar");
+        let d_scalar = dot(&a, &b);
+        let n_scalar = norm_sq(&a);
+
+        let detected = backend_from_override(None, avx2_available());
+        force_backend(detected);
+        assert_eq!(d_scalar.to_bits(), dot(&a, &b).to_bits());
+        assert_eq!(n_scalar.to_bits(), norm_sq(&a).to_bits());
+
+        force_backend(initial);
     }
 
     #[test]

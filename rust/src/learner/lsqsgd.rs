@@ -78,11 +78,9 @@ impl LsqSgd {
         if nsq > 1.0 {
             linalg::scale((1.0 / nsq.sqrt()) as f32, &mut m.w);
         }
-        // Running average: w̄ += (w - w̄)/t.
+        // Running average: w̄ += (w - w̄)/t, through the kernel layer.
         let inv_t = (1.0 / m.t as f64) as f32;
-        for j in 0..m.w.len() {
-            m.wavg[j] += inv_t * (m.w[j] - m.wavg[j]);
-        }
+        linalg::avg_update(inv_t, &m.w, &mut m.wavg);
     }
 }
 
@@ -151,9 +149,17 @@ impl IncrementalLearner for LsqSgd {
         if y.is_empty() {
             return 0.0;
         }
+        // Blocked sweep through the kernel layer (dot_block ≡ dot per row,
+        // so each prediction is bitwise equal to `m.predict(row)`).
         let mut s = 0f64;
-        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
-            s += loss::squared_error(m.predict(row), yi);
+        let mut preds = [0f32; linalg::EVAL_BLOCK_ROWS];
+        let xc = x.chunks(self.d * linalg::EVAL_BLOCK_ROWS);
+        for (xb, yb) in xc.zip(y.chunks(linalg::EVAL_BLOCK_ROWS)) {
+            let out = &mut preds[..yb.len()];
+            linalg::dot_block(&m.wavg, xb, self.d, out);
+            for (&p, &yi) in out.iter().zip(yb) {
+                s += loss::squared_error(p, yi);
+            }
         }
         s / y.len() as f64
     }

@@ -10,7 +10,10 @@
 //! (`update_rows` / `evaluate_rows`) let the engines stream the
 //! fold-contiguous layout ([`crate::data::folded::FoldedDataset`])
 //! without per-node index vectors; the dense learners override them,
-//! everything else inherits the (bit-identical) indexed defaults.
+//! everything else inherits the (bit-identical) indexed defaults. All
+//! dense per-point math routes through the [`linalg`] kernel layer
+//! (runtime-dispatched SIMD with a bit-identical scalar fallback —
+//! enforced by `xtask lint`'s `kernel-layer` rule).
 //!
 //! Implementations:
 //! * [`pegasos::Pegasos`] — linear PEGASOS SVM (paper §5, Table 2 top).

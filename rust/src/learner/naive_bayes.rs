@@ -11,7 +11,7 @@
 //!    so TreeCV and standard CV agree to ~1e-12 — a strong near-exactness
 //!    check on the tree recursion with a "real" learner.
 
-use super::{IncrementalLearner, MergeableLearner};
+use super::{linalg, IncrementalLearner, MergeableLearner};
 use crate::data::Dataset;
 use crate::loss;
 
@@ -50,20 +50,17 @@ impl NbClassStats {
         Self { count: 0, sum: vec![0.0; d], sumsq: vec![0.0; d] }
     }
 
+    // Add/subtract share one signed kernel: `±1·v` is exact and
+    // `a − b ≡ a + (−b)` bitwise, so both directions route through
+    // `linalg::accumulate_stats` bitwise-unchanged.
     fn add_point(&mut self, x: &[f32]) {
         self.count += 1;
-        for (j, &v) in x.iter().enumerate() {
-            self.sum[j] += v as f64;
-            self.sumsq[j] += (v as f64) * (v as f64);
-        }
+        linalg::accumulate_stats(1.0, x, &mut self.sum, &mut self.sumsq);
     }
 
     fn sub_point(&mut self, x: &[f32]) {
         self.count -= 1;
-        for (j, &v) in x.iter().enumerate() {
-            self.sum[j] -= v as f64;
-            self.sumsq[j] -= (v as f64) * (v as f64);
-        }
+        linalg::accumulate_stats(-1.0, x, &mut self.sum, &mut self.sumsq);
     }
 
     fn add(&mut self, other: &Self) {

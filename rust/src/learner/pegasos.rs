@@ -176,9 +176,18 @@ impl IncrementalLearner for Pegasos {
         if y.is_empty() {
             return 0.0;
         }
+        // Blocked sweep through the kernel layer: `v` is loaded once per
+        // block of rows instead of once per row. Each blocked score is
+        // bitwise equal to `m.score(row)` (dot_block ≡ dot per row).
         let mut s = 0f64;
-        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
-            s += loss::misclassification(m.score(row), yi);
+        let mut scores = [0f32; linalg::EVAL_BLOCK_ROWS];
+        let xc = x.chunks(self.d * linalg::EVAL_BLOCK_ROWS);
+        for (xb, yb) in xc.zip(y.chunks(linalg::EVAL_BLOCK_ROWS)) {
+            let out = &mut scores[..yb.len()];
+            linalg::dot_block(&m.v, xb, self.d, out);
+            for (&sc, &yi) in out.iter().zip(yb) {
+                s += loss::misclassification((m.scale * sc as f64) as f32, yi);
+            }
         }
         s / y.len() as f64
     }

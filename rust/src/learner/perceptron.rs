@@ -159,9 +159,17 @@ impl IncrementalLearner for Perceptron {
         if y.is_empty() {
             return 0.0;
         }
+        // Blocked sweep through the kernel layer (dot_block ≡ dot per row,
+        // so each score is bitwise equal to the per-row path).
         let mut s = 0f64;
-        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
-            s += loss::misclassification(linalg::dot(&m.w, row) + m.bias, yi);
+        let mut scores = [0f32; linalg::EVAL_BLOCK_ROWS];
+        let xc = x.chunks(self.d * linalg::EVAL_BLOCK_ROWS);
+        for (xb, yb) in xc.zip(y.chunks(linalg::EVAL_BLOCK_ROWS)) {
+            let out = &mut scores[..yb.len()];
+            linalg::dot_block(&m.w, xb, self.d, out);
+            for (&sc, &yi) in out.iter().zip(yb) {
+                s += loss::misclassification(sc + m.bias, yi);
+            }
         }
         s / y.len() as f64
     }

@@ -72,13 +72,14 @@ impl OnlineRidge {
     }
 
     fn rank_one(&self, m: &mut RidgeModel, x: &[f32], y: f32, sign: f64) {
+        // `sign` is ±1, so `sign·y` and `sign·xi` are exact and the
+        // historical `sign·xi·y` / `sign·xi·xj` accumulations route
+        // through the mixed-precision axpy kernel bitwise unchanged
+        // (exact negation + bitwise-commutative multiply).
         let d = self.d;
+        linalg::axpy_f64f32(sign * y as f64, x, &mut m.b);
         for i in 0..d {
-            let xi = x[i] as f64;
-            m.b[i] += sign * xi * y as f64;
-            for j in 0..d {
-                m.a[i * d + j] += sign * xi * (x[j] as f64);
-            }
+            linalg::axpy_f64f32(sign * x[i] as f64, x, &mut m.a[i * d..(i + 1) * d]);
         }
     }
 }
@@ -106,9 +107,12 @@ impl IncrementalLearner for OnlineRidge {
         }
     }
 
-    /// Contiguous fast path: the same rank-one accumulation swept over a
-    /// row-major slice (bit-identical; the d² Gram update is the hot
-    /// loop, so the linear read pattern matters most here).
+    /// Contiguous fast path: `b` in one linear pass, then the d² Gram
+    /// update through the cache-blocked rank-B syrk kernel — each row of
+    /// `A` is swept once per [`linalg::SYRK_BLOCK_ROWS`] points instead of
+    /// once per point. Bitwise equal to the per-point rank-one sequence
+    /// (the stats are order-insensitive per accumulator; see
+    /// [`linalg::syrk_accumulate_blocked`]).
     fn update_rows(
         &self,
         m: &mut RidgeModel,
@@ -119,9 +123,10 @@ impl IncrementalLearner for OnlineRidge {
     ) {
         debug_assert_eq!(x.len(), y.len() * self.d);
         for (row, &yi) in x.chunks_exact(self.d).zip(y) {
-            self.rank_one(m, row, yi, 1.0);
-            m.n += 1;
+            linalg::axpy_f64f32(yi as f64, row, &mut m.b);
         }
+        linalg::syrk_accumulate(&mut m.a, self.d, x);
+        m.n += y.len() as u64;
     }
 
     fn update_logged(&self, m: &mut RidgeModel, data: &Dataset, idx: &[u32]) -> RidgeUndo {
@@ -140,8 +145,7 @@ impl IncrementalLearner for OnlineRidge {
         // Single-point path (solves per call — see `evaluate` for the
         // amortized chunk path the CV engines actually hit).
         let w = self.solve(m);
-        let x = data.row(i);
-        let pred: f64 = (0..self.d).map(|j| w[j] * x[j] as f64).sum();
+        let pred = linalg::dot_f64f32(&w, data.row(i));
         loss::squared_error(pred as f32, data.label(i))
     }
 
@@ -153,8 +157,7 @@ impl IncrementalLearner for OnlineRidge {
         let w = self.solve(m);
         let mut s = 0f64;
         for &i in idx {
-            let x = data.row(i);
-            let pred: f64 = (0..self.d).map(|j| w[j] * x[j] as f64).sum();
+            let pred = linalg::dot_f64f32(&w, data.row(i));
             s += loss::squared_error(pred as f32, data.label(i));
         }
         s / idx.len() as f64
@@ -173,11 +176,18 @@ impl IncrementalLearner for OnlineRidge {
         if y.is_empty() {
             return 0.0;
         }
+        // One solve, then a blocked mixed-precision sweep (each blocked
+        // prediction is bitwise equal to `dot_f64f32` on that row).
         let w = self.solve(m);
         let mut s = 0f64;
-        for (row, &yi) in x.chunks_exact(self.d).zip(y) {
-            let pred: f64 = (0..self.d).map(|j| w[j] * row[j] as f64).sum();
-            s += loss::squared_error(pred as f32, yi);
+        let mut preds = [0f64; linalg::EVAL_BLOCK_ROWS];
+        let xc = x.chunks(self.d * linalg::EVAL_BLOCK_ROWS);
+        for (xb, yb) in xc.zip(y.chunks(linalg::EVAL_BLOCK_ROWS)) {
+            let out = &mut preds[..yb.len()];
+            linalg::dot_block_f64f32(&w, xb, self.d, out);
+            for (&p, &yi) in out.iter().zip(yb) {
+                s += loss::squared_error(p as f32, yi);
+            }
         }
         s / y.len() as f64
     }

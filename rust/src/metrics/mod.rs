@@ -4,13 +4,14 @@
 //! communications distributed).
 //!
 //! Counters are plain `u64`s carried through the engines (no atomics on the
-//! sequential hot path); the parallel engine keeps per-thread counters and
-//! merges them on join.
+//! sequential hot path) plus one static string — the selected kernel
+//! backend — stamped at construction; the parallel engine keeps per-thread
+//! counters and merges them on join.
 
 use std::time::{Duration, Instant};
 
 /// Work counters for one CV computation.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct OpCounts {
     /// Calls into `IncrementalLearner::update` / `update_logged`.
     pub update_calls: u64,
@@ -45,10 +46,37 @@ pub struct OpCounts {
     /// per refresh (the root-to-leaf path of the touched leaf); always 0
     /// for from-scratch runs.
     pub subtrees_recomputed: u64,
+    /// Kernel backend the dense learners dispatched to for this run
+    /// (`"scalar"` or `"avx2"` — [`crate::learner::linalg::backend_name`]).
+    /// Provenance only: backends are bit-identical, so this never affects a
+    /// result, and the layout equivalence batteries deliberately exclude it
+    /// from their comparisons.
+    pub kernel_backend: &'static str,
+}
+
+// Hand-written (instead of derived) so the backend is stamped at
+// construction; all numeric counters start at zero as before.
+impl Default for OpCounts {
+    fn default() -> Self {
+        Self {
+            update_calls: 0,
+            points_updated: 0,
+            model_copies: 0,
+            bytes_copied: 0,
+            model_restores: 0,
+            evals: 0,
+            points_evaluated: 0,
+            points_permuted: 0,
+            stream_allocs: 0,
+            subtrees_recomputed: 0,
+            kernel_backend: crate::learner::linalg::backend_name(),
+        }
+    }
 }
 
 impl OpCounts {
-    /// Merge counters from another (sub)computation.
+    /// Merge counters from another (sub)computation. The backend tag is
+    /// process-wide, so `self`'s is kept.
     pub fn merge(&mut self, other: &OpCounts) {
         self.update_calls += other.update_calls;
         self.points_updated += other.points_updated;

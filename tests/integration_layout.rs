@@ -272,3 +272,54 @@ fn folded_runs_are_run_twice_deterministic() {
     let b = exe.run_folded(&l, &data, &folded);
     assert_bit_identical(&a, &b, "run-twice");
 }
+
+#[test]
+fn kernel_dispatch_is_invisible() {
+    // The kernel layer's equivalence contract at full system scale: pin
+    // the backend to scalar, run the engine batteries, then rerun on the
+    // machine-detected backend — every engine × strategy × ordering ×
+    // worker-count result must be bit-identical. This is the regression
+    // gate that lets `linalg` grow new SIMD paths without ever moving a
+    // published number.
+    use treecv::learner::linalg;
+
+    let initial = linalg::kernel_backend();
+    let detected = linalg::backend_from_override(None, linalg::avx2_available());
+    let cells: [(&str, Dataset, usize); 3] = [
+        ("pegasos", covertype(150), 6),
+        ("online-ridge", SyntheticYearMsd::new(120, 615).generate(), 5),
+        ("online-kmeans", SyntheticBlobs::new(150, 8, 5, 616).generate(), 6),
+    ];
+
+    linalg::force_backend(linalg::KernelBackend::Scalar);
+    let scalar: Vec<CvResult> = cells
+        .iter()
+        .map(|(name, data, k)| run_cell(name, data, *k))
+        .collect();
+    linalg::force_backend(detected);
+    let auto: Vec<CvResult> = cells
+        .iter()
+        .map(|(name, data, k)| run_cell(name, data, *k))
+        .collect();
+    linalg::force_backend(initial);
+
+    for (i, (a, b)) in scalar.iter().zip(&auto).enumerate() {
+        let ctx = format!("kernel-dispatch {} ({})", cells[i].0, detected.name());
+        assert_bit_identical(a, b, &ctx);
+    }
+}
+
+/// One representative engine run per learner family for the dispatch
+/// battery (the exhaustive grid is `check_learner`'s job — and that whole
+/// battery itself runs under whichever backend the machine detects).
+fn run_cell(name: &str, data: &Dataset, k: usize) -> CvResult {
+    let folds = Folds::new(data.n, k, 0xD15B + k as u64);
+    let folded = FoldedDataset::build(data, &folds);
+    let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Randomized, 3, 4);
+    match name {
+        "pegasos" => exe.run_folded(&Pegasos::new(data.d, 1e-3), data, &folded),
+        "online-ridge" => exe.run_folded(&OnlineRidge::new(data.d, 0.7), data, &folded),
+        "online-kmeans" => exe.run_folded(&OnlineKMeans::new(data.d, 5), data, &folded),
+        _ => unreachable!("unknown cell {name}"),
+    }
+}

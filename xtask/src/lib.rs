@@ -25,6 +25,10 @@
 //! - `test-registration` — every `tests/*.rs` file must have a matching
 //!   `[[test]]` entry in `Cargo.toml` (targets are not auto-discovered
 //!   here; an unregistered suite silently never runs).
+//! - `kernel-layer` — dense learner files must not contain inline
+//!   dot/axpy-style per-feature loops; hot math routes through the
+//!   SIMD-dispatched kernel layer in `rust/src/learner/linalg.rs` (which
+//!   is itself exempt, as are `#[cfg(test)]` tails).
 
 use std::collections::HashSet;
 use std::fmt;
@@ -45,6 +49,7 @@ pub const LINE_WIDTH: &str = "line-width";
 pub const OPCOUNTS_JSON: &str = "opcounts-json";
 pub const CLONE_FROM: &str = "clone-from";
 pub const TEST_REGISTRATION: &str = "test-registration";
+pub const KERNEL_LAYER: &str = "kernel-layer";
 
 /// One lint violation: stable rule ID, repo-relative path, 1-based line.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -209,6 +214,44 @@ pub fn check_clone_from(path: &str, text: &str) -> Vec<Finding> {
     out
 }
 
+/// `kernel-layer`: dense learner files must not hand-roll dot/axpy-style
+/// per-feature arithmetic — the hot math routes through the
+/// SIMD-dispatched kernel layer (`rust/src/learner/linalg.rs`), and an
+/// inline scalar loop silently bypasses both the dispatch and its
+/// bit-identity test battery. Heuristic: a non-comment, non-test line that
+/// compound-adds (`+=` / `-=`) a product into an indexed accumulator
+/// (`y[i] += a * x[i]`) or accumulates an indexed product
+/// (`s += x[i] * y[i]`). The caller exempts `linalg.rs` itself.
+pub fn check_kernel_layer(path: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut in_tests = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            // Same tail convention as `no-unwrap`: unit tests live in a
+            // trailing module, exempt from the hot-path rule.
+            in_tests = true;
+        }
+        if in_tests || is_comment(line) {
+            continue;
+        }
+        let Some((lhs, rhs)) = line.split_once("+=").or_else(|| line.split_once("-=")) else {
+            continue;
+        };
+        if !rhs.contains('*') {
+            continue;
+        }
+        if lhs.contains('[') || rhs.matches('[').count() >= 2 {
+            let msg = String::from(
+                "inline dot/axpy-style arithmetic in a dense learner — route the hot \
+                 math through the `linalg` kernel layer (SIMD dispatch + bit-identity \
+                 battery)",
+            );
+            out.push(finding(KERNEL_LAYER, path, i + 1, msg));
+        }
+    }
+    out
+}
+
 /// `test-registration`: every entry of `test_files` (repo-relative, e.g.
 /// `tests/integration_cv.rs`) must appear as a `path = "..."` inside a
 /// `[[test]]` section of the manifest.
@@ -289,6 +332,9 @@ pub fn lint_repo(root: &Path) -> io::Result<Vec<Finding>> {
         out.extend(check_line_width(&path, &text));
         if path.starts_with("rust/src/learner/") || path.starts_with("rust/src/runtime/") {
             out.extend(check_clone_from(&path, &text));
+        }
+        if path.starts_with("rust/src/learner/") && path != "rust/src/learner/linalg.rs" {
+            out.extend(check_kernel_layer(&path, &text));
         }
     }
 

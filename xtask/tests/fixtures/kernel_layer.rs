@@ -1,0 +1,27 @@
+pub fn bad(y: &mut [f32], x: &[f32], a: f32) {
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        s += x[i] * x[i];
+    }
+    y[0] -= a * x[0];
+}
+
+pub fn clean(t: &mut u64, bias: &mut f32, eta: f32, y: f32) {
+    *t += 1;
+    *bias += eta * y;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn exempt_inline_math() {
+        let (mut y, x) = ([0f32; 4], [1f32; 4]);
+        for i in 0..4 {
+            y[i] += 2.0 * x[i];
+        }
+        assert_eq!(y[0], 2.0);
+    }
+}

@@ -6,9 +6,9 @@
 use std::fs;
 use std::path::Path;
 use xtask::{
-    check_clone_from, check_line_width, check_no_unwrap, check_opcounts_json,
-    check_sync_gateway, check_test_registration, lint_repo, CLONE_FROM, LINE_WIDTH, NO_UNWRAP,
-    OPCOUNTS_JSON, SYNC_GATEWAY, TEST_REGISTRATION,
+    check_clone_from, check_kernel_layer, check_line_width, check_no_unwrap,
+    check_opcounts_json, check_sync_gateway, check_test_registration, lint_repo, CLONE_FROM,
+    KERNEL_LAYER, LINE_WIDTH, NO_UNWRAP, OPCOUNTS_JSON, SYNC_GATEWAY, TEST_REGISTRATION,
 };
 
 fn fixture(name: &str) -> String {
@@ -74,12 +74,24 @@ fn test_registration_flags_the_unregistered_suite() {
 }
 
 #[test]
+fn kernel_layer_flags_inline_hot_math_only() {
+    let f = check_kernel_layer("fx.rs", &fixture("kernel_layer.rs"));
+    // Lines 3/7/9: axpy-, dot- and negated-axpy-shaped inline loops.
+    // Line 14 (scalar `bias += eta * y`) and the cfg(test) tail are clean.
+    assert_eq!(
+        ids_and_lines(&f),
+        vec![(KERNEL_LAYER, 3), (KERNEL_LAYER, 7), (KERNEL_LAYER, 9)]
+    );
+}
+
+#[test]
 fn clean_file_passes_every_content_rule() {
     let text = fixture("clean.rs");
     assert!(check_sync_gateway("fx.rs", &text).is_empty());
     assert!(check_no_unwrap("fx.rs", &text).is_empty());
     assert!(check_line_width("fx.rs", &text).is_empty());
     assert!(check_clone_from("fx.rs", &text).is_empty());
+    assert!(check_kernel_layer("fx.rs", &text).is_empty());
 }
 
 #[test]
