@@ -1,0 +1,143 @@
+//! Approximate-CV macro-benchmarks: the k = n regime the engine exists
+//! for. Per (n, k) cell the one-step-correction engine
+//! (`treecv::cv::approx`) runs LOOCV-style ridge CV and is compared
+//! against exact sequential TreeCV — on measured counters AND estimates
+//! where exact is affordable, on the Theorem-3 analytic update floor
+//! where it is not.
+//!
+//! In-bench assertions (a failure aborts before any number is written):
+//! * approx row-update work is exactly n and corrections exactly k;
+//! * at k = n the exact engine's row-update work is ≥ 10× approx's
+//!   (measured when exact ran, else the `n·(log₂(2k) − 1)` floor);
+//! * wherever exact ran, the largest per-fold |approx − exact| is within
+//!   `1e-6·(1 + |exact|)` — ridge's downdate is exact up to rounding.
+//!
+//! Run: `cargo bench --bench approx` (env `APPROX_NS` for the n sweep,
+//! `APPROX_EXACT_MAX` for the largest n the exact oracle runs at every k,
+//! `APPROX_JSON` for the output path; `BENCH_SAMPLES` / `BENCH_WARMUP`
+//! as usual). d is fixed at 8 so the per-fold ridge re-solve stays O(1)
+//! against the row sweep. Committed output (`BENCH_approx.json`) is the
+//! perf baseline later PRs diff against.
+
+use treecv::benchkit::{Bench, JsonReport};
+use treecv::cv::approx::{max_fold_gap, ApproxCv};
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::{CvEngine, Strategy};
+use treecv::data::Dataset;
+use treecv::learner::ridge::OnlineRidge;
+use treecv::rng::Rng;
+
+const D: usize = 8;
+const LAMBDA: f64 = 1.0;
+const SEED: u64 = 0xA11A;
+
+/// Well-conditioned d = 8 regression data (Gaussian features, linear
+/// teacher + noise) — the `cv::exact` small-d pattern, generated directly
+/// so the n = 10⁶ cells never materialize a d = 90 intermediate.
+fn gen_data(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let teacher: Vec<f32> = (0..D).map(|_| rng.next_gaussian()).collect();
+    let mut x = Vec::with_capacity(n * D);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut dot = 0f32;
+        for t in teacher.iter().take(D) {
+            let v = rng.next_gaussian();
+            x.push(v);
+            dot += t * v;
+        }
+        y.push(dot + 0.1 * rng.next_gaussian());
+    }
+    Dataset::new(x, y, D)
+}
+
+fn main() {
+    let ns: Vec<usize> = std::env::var("APPROX_NS")
+        .ok()
+        .map(|v| v.split(',').map(|p| p.trim().parse().expect("APPROX_NS entry")).collect())
+        .unwrap_or_else(|| vec![10_000, 100_000, 1_000_000]);
+    let exact_max: usize = std::env::var("APPROX_EXACT_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    let json_path =
+        std::env::var("APPROX_JSON").unwrap_or_else(|_| "BENCH_approx.json".to_string());
+
+    println!("== approximate CV (ridge, d = {D}, λ = {LAMBDA}, exact_max = {exact_max}) ==");
+
+    let mut bench = Bench::default();
+    let mut report = JsonReport::new("approx");
+    report.env("d", D as f64);
+    report.env("lambda", LAMBDA);
+    report.env("exact_max", exact_max as f64);
+
+    for &n in &ns {
+        let data = gen_data(n, SEED ^ n as u64);
+        let learner = OnlineRidge::new(D, LAMBDA);
+        let sqrt_k = (n as f64).sqrt().round() as usize;
+        for (label, k) in [("k10", 10usize), ("ksqrt", sqrt_k), ("kn", n)] {
+            let folds = if k == n { Folds::loocv(n) } else { Folds::new(n, k, 7) };
+            let engine = ApproxCv::new(Ordering::Fixed, 11);
+            let approx = engine.run(&learner, &data, &folds);
+            assert_eq!(approx.ops.points_updated, n as u64, "approx trains each row once");
+            assert_eq!(approx.ops.corrections, k as u64, "one correction per fold");
+
+            // Exact oracle where affordable; elsewhere the Theorem-3
+            // analytic floor on TreeCV's row-update work stands in (the
+            // real count is Θ(n log₂(2k)); subtracting 1 keeps the
+            // stand-in a conservative lower bound).
+            let run_exact = n <= exact_max || k <= 32;
+            let (exact_updates, gap) = if run_exact {
+                let exact =
+                    TreeCv::new(Strategy::Copy, Ordering::Fixed, 11).run(&learner, &data, &folds);
+                let g = max_fold_gap(&approx, &exact);
+                assert!(
+                    g <= 1e-6 * (1.0 + exact.estimate.abs()),
+                    "n={n} k={k}: approx drifted from exact by {g:e}"
+                );
+                (exact.ops.points_updated as f64, Some(g))
+            } else {
+                ((n as f64) * (((2 * k) as f64).log2() - 1.0), None)
+            };
+            let ratio = exact_updates / approx.ops.points_updated.max(1) as f64;
+            if k == n {
+                assert!(
+                    ratio >= 10.0,
+                    "n={n} LOOCV: exact/approx update ratio {ratio:.1} below the 10x floor"
+                );
+            }
+            println!(
+                "n={n} {label}: estimate {:.6}, update ratio {ratio:.1}{}",
+                approx.estimate,
+                match gap {
+                    Some(g) => format!(", gap vs exact {g:.2e}"),
+                    None => String::from(", exact skipped (analytic floor)"),
+                }
+            );
+
+            let name = format!("approx/ridge/n{n}/{label}");
+            let s = bench.run(&name, || {
+                let r = engine.run(&learner, &data, &folds);
+                std::hint::black_box(r.estimate);
+            });
+            let s = s.clone();
+            let mut m = vec![
+                ("points_updated", approx.ops.points_updated as f64),
+                ("corrections", approx.ops.corrections as f64),
+                ("update_ratio_vs_exact", ratio),
+                ("rows_per_s", n as f64 / s.median().max(1e-12)),
+            ];
+            if let Some(g) = gap {
+                m.push(("gap_vs_exact", g));
+            }
+            report.push_samples(&s, &m);
+        }
+    }
+
+    println!("\nCSV summary:\n{}", bench.csv());
+    match report.write(&json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

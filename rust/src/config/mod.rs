@@ -109,6 +109,11 @@ pub enum Engine {
     ParallelTreecv,
     /// Izbicki fold-merging (mergeable learners only).
     Merge,
+    /// Approximate CV via one-step corrections ([`crate::cv::approx`]):
+    /// train once, correct per fold. Convex correctable learners only
+    /// (pegasos, lsqsgd, ridge) — other tasks are a hard error, never a
+    /// silent fallback to exact.
+    Approx,
 }
 
 impl Engine {
@@ -122,6 +127,7 @@ impl Engine {
                 Engine::ParallelTreecv
             }
             "merge" => Engine::Merge,
+            "approx" => Engine::Approx,
             other => bail!("unknown engine `{other}`"),
         })
     }
@@ -132,6 +138,7 @@ impl Engine {
             Engine::Standard => "standard",
             Engine::ParallelTreecv => "parallel_treecv",
             Engine::Merge => "merge",
+            Engine::Approx => "approx",
         }
     }
 }
@@ -398,6 +405,11 @@ pub struct ExperimentConfig {
     /// Significance level of the race's per-round sign test; `0.0` never
     /// eliminates (the exhaustive sweep, bit for bit).
     pub race_alpha: f64,
+    /// Run the exact TreeCV engine alongside each `approx` repetition and
+    /// record the largest per-fold deviation in `OpCounts::exact_gap_max`
+    /// (`repro cv --engine approx --approx-check`). Ignored by the exact
+    /// engines.
+    pub approx_check: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -421,6 +433,7 @@ impl Default for ExperimentConfig {
             race: false,
             race_rounds: 4,
             race_alpha: 0.05,
+            approx_check: false,
         }
     }
 }
@@ -456,6 +469,7 @@ impl ExperimentConfig {
                 "race" => cfg.race = value.as_bool()?,
                 "race_rounds" => cfg.race_rounds = value.as_usize()?,
                 "race_alpha" => cfg.race_alpha = value.as_f64()?,
+                "approx_check" => cfg.approx_check = value.as_bool()?,
                 "sweep" => sweep_str = Some(SweepGrid::parse(value.as_str()?)?),
                 "sweep_param" => sweep_param = Some(value.as_str()?.to_string()),
                 "sweep_values" => sweep_values = Some(value.as_f64_array()?),
@@ -509,6 +523,9 @@ impl ExperimentConfig {
         }
         if self.race_alpha != 0.05 {
             s.push_str(&format!("race_alpha = {}\n", self.race_alpha));
+        }
+        if self.approx_check {
+            s.push_str("approx_check = true\n");
         }
         if let Some(g) = &self.sweep {
             s.push_str(&format!("sweep = \"{}\"\n", g.to_grid_string()));
@@ -651,10 +668,31 @@ mod tests {
             assert_eq!(Task::parse(t.name()).unwrap(), t, "{t:?}");
         }
         assert_eq!(Task::all().len(), 11);
-        for e in ["treecv", "standard", "parallel_treecv", "executor", "pooled", "merge"] {
+        let engines =
+            ["treecv", "standard", "parallel_treecv", "executor", "pooled", "merge", "approx"];
+        for e in engines {
             assert!(Engine::parse(e).is_ok(), "{e}");
         }
         assert_eq!(Engine::parse("executor").unwrap(), Engine::ParallelTreecv);
+        assert_eq!(Engine::parse("approx").unwrap(), Engine::Approx);
+        assert_eq!(Engine::Approx.name(), "approx");
+    }
+
+    #[test]
+    fn approx_check_key_parses_defaults_and_roundtrips() {
+        let cfg = ExperimentConfig::parse("task = \"ridge\"\n").unwrap();
+        assert!(!cfg.approx_check);
+        // Off-by-default knobs are not emitted: dumped configs stay
+        // byte-stable.
+        assert!(!cfg.to_text().contains("approx_check"));
+        let cfg =
+            ExperimentConfig::parse("engine = \"approx\"\napprox_check = true\n").unwrap();
+        assert_eq!(cfg.engine, Engine::Approx);
+        assert!(cfg.approx_check);
+        let back = ExperimentConfig::parse(&cfg.to_text()).unwrap();
+        assert_eq!(back.engine, Engine::Approx);
+        assert!(back.approx_check);
+        assert!(ExperimentConfig::parse("approx_check = 1\n").is_err());
     }
 
     #[test]

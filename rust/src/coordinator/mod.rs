@@ -86,6 +86,7 @@ fn engine_kind(engine: Engine) -> Result<EngineKind> {
         Engine::Treecv => EngineKind::TreeCv,
         Engine::Standard => EngineKind::Standard,
         Engine::ParallelTreecv => EngineKind::ParallelTreeCv,
+        Engine::Approx => EngineKind::Approx,
         Engine::Merge => bail!("merge engine is dispatched separately"),
     })
 }
@@ -118,6 +119,7 @@ fn run_cells(
             repetitions: cfg.repetitions,
             seed: cfg.seed,
             threads: cfg.threads,
+            approx_check: cfg.approx_check,
         };
         let rep = run_repetitions(&dyn_learner, data, &spec)?;
         out.push(CellReport::from_rep(cfg.task, cfg.engine, data.n, &rep));
@@ -781,6 +783,7 @@ mod tests {
             race: false,
             race_rounds: 4,
             race_alpha: 0.05,
+            approx_check: false,
         }
     }
 
@@ -816,6 +819,30 @@ mod tests {
             let reports = run_experiment(&cfg).unwrap();
             assert!(reports[0].mean.is_finite(), "{task:?}");
         }
+    }
+
+    #[test]
+    fn approx_engine_runs_convex_tasks_and_rejects_the_rest() {
+        for task in [Task::Ridge, Task::Pegasos, Task::Lsqsgd] {
+            let mut cfg = tiny_cfg(task, Engine::Approx);
+            cfg.lambda = Some(1.0);
+            cfg.approx_check = true;
+            let reports = run_experiment(&cfg).unwrap();
+            assert!(reports[0].mean.is_finite(), "{task:?}");
+            assert_eq!(reports[0].ops.corrections, 5, "{task:?}");
+            assert!(reports[0].ops.exact_gap_max.is_finite(), "{task:?}");
+        }
+        // Ridge's correction is exact up to rounding, so its checked gap
+        // is pinned tight end to end (λ from the config, default 1.0).
+        let mut cfg = tiny_cfg(Task::Ridge, Engine::Approx);
+        cfg.lambda = Some(1.0);
+        cfg.approx_check = true;
+        let reports = run_experiment(&cfg).unwrap();
+        assert!(reports[0].ops.exact_gap_max <= 1e-8, "{:e}", reports[0].ops.exact_gap_max);
+        // Non-convex tasks are a hard error naming the capability.
+        let cfg = tiny_cfg(Task::Knn, Engine::Approx);
+        let err = run_experiment(&cfg).unwrap_err();
+        assert!(format!("{err}").contains("one-step held-out correction"), "{err}");
     }
 
     #[test]

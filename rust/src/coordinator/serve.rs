@@ -13,7 +13,10 @@
 //! | `row <y> <x1>..<xd>`  | buffer one row; auto-applies every `--batch`  |
 //! | `flush`               | apply buffered rows now → `applied …` line    |
 //! | `query`               | `estimate <v> pending <p>` (no flush: `p` is  |
-//! |                       | the staleness — buffered rows not yet folded) |
+//! |                       | the staleness — buffered rows not yet folded; |
+//! |                       | with `--engine approx` a stale query folds    |
+//! |                       | the pending rows into a one-step-corrected    |
+//! |                       | quick estimate instead of ignoring them)      |
 //! | `retire <count>`      | drop the `count` oldest rows (sliding window) |
 //! |                       | and re-prime → `retired …` line               |
 //! | `stats`               | one-line counter snapshot                     |
@@ -28,7 +31,8 @@
 //! service re-primes from scratch — the one full-cost operation.
 
 use super::{build_dataset, registry, resolve_single_k};
-use crate::config::{ExperimentConfig, Task};
+use crate::config::{Engine, ExperimentConfig, Task};
+use crate::cv::approx::ApproxCv;
 use crate::cv::executor::TreeCvExecutor;
 use crate::cv::folds::{Folds, Ordering};
 use crate::cv::refresh::RefreshSession;
@@ -108,6 +112,9 @@ struct ServeState<'a> {
     subtrees: u64,
     refresh_wall: Duration,
     prime_wall: Duration,
+    /// `--engine approx`: stale queries answer a one-step-corrected quick
+    /// estimate over window + pending instead of the last refresh alone.
+    approx: bool,
 }
 
 impl ServeState<'_> {
@@ -140,6 +147,21 @@ impl ServeState<'_> {
         self.estimate = res.estimate;
         self.prime_wall += res.wall;
         self.primes += 1;
+    }
+
+    /// Approx-engine quick estimate for a stale query: clone the window,
+    /// append the pending buffer (the window itself stays untouched — the
+    /// refresh engine still owns it), and run the one-step-correction
+    /// engine over a fresh assignment of the combined rows. Sequential
+    /// and O(n + k·correction) — bounded staleness without paying a
+    /// refresh on the query path.
+    fn quick_estimate(&self) -> f64 {
+        let mut combined = self.data.clone();
+        combined.push_rows(&self.pend_x, &self.pend_y);
+        let folds = Folds::new(combined.n, self.folded.folds().k(), self.exe.seed);
+        ApproxCv::new(self.exe.ordering, self.exe.seed)
+            .run(&self.learner, &combined, &folds)
+            .estimate
     }
 
     /// Slide the window: drop the `count` oldest rows, renumber, and
@@ -192,6 +214,15 @@ pub fn run_serve<R: BufRead, W: Write>(
     let k = resolve_single_k(cfg, &data)?;
     let learner_box = (registry::entry(cfg.task).build)(cfg, &data)?;
     let learner = DynLearner(&*learner_box);
+    let approx = cfg.engine == Engine::Approx;
+    if approx && !learner_box.correctable() {
+        bail!(
+            "serve --engine approx requires a learner with a one-step held-out correction \
+             (ConvexCorrectable), which task `{}` does not provide — drop --engine approx or \
+             use a convex task (pegasos, lsqsgd, ridge)",
+            cfg.task.name()
+        );
+    }
     let folds = Folds::new(data.n, k, cfg.seed);
     let folded = FoldedDataset::build(&data, &folds);
     let d = data.d;
@@ -224,6 +255,7 @@ pub fn run_serve<R: BufRead, W: Write>(
         subtrees: 0,
         refresh_wall: Duration::ZERO,
         prime_wall: Duration::ZERO,
+        approx,
     };
     st.prime();
 
@@ -279,7 +311,9 @@ pub fn run_serve<R: BufRead, W: Write>(
                 }
                 st.pending_at_query.push(pending as f64);
                 st.max_pending = st.max_pending.max(pending);
-                writeln!(out, "estimate {:.6} pending {pending}", st.estimate)?;
+                let est =
+                    if st.approx && pending > 0 { st.quick_estimate() } else { st.estimate };
+                writeln!(out, "estimate {est:.6} pending {pending}")?;
             }
             "retire" => match parts.get(1).and_then(|p| p.parse::<usize>().ok()) {
                 None => writeln!(out, "err retire wants a row count")?,
@@ -483,6 +517,64 @@ quit\n";
         assert_eq!(report.primes, 2, "baseline + post-retire re-prime");
         assert_eq!(report.n_final, 40, "4 in, 4 out");
         assert!(out.contains("retired 4 n=40"));
+    }
+
+    #[test]
+    fn approx_engine_folds_pending_rows_into_stale_queries() {
+        let cfg = ExperimentConfig {
+            task: Task::Ridge,
+            engine: Engine::Approx,
+            n: 40,
+            ks: vec![4],
+            seed: 9,
+            threads: 1,
+            lambda: Some(1.0),
+            ..ExperimentConfig::default()
+        };
+        // One ridge row (d = 90 features), queried before any flush.
+        let mut row = String::from("row 0.5");
+        for j in 0..90 {
+            row.push_str(&format!(" {}", 0.01 * (j as f32 + 1.0)));
+        }
+        let script = format!("{row}\nquery\nflush\nquery\nquit\n");
+        let mut out = Vec::new();
+        let report = run_serve(&cfg, 100, Cursor::new(script), &mut out)
+            .expect("approx serve session");
+        let out = String::from_utf8(out).expect("utf8 output");
+        assert_eq!(report.stale_queries, 1);
+
+        // The stale query's reply is the one-step-corrected estimate over
+        // window + pending (independently recomputed here), not the
+        // baseline estimate of the 40-row window.
+        let data = build_dataset(&cfg).expect("dataset");
+        let mut combined = data.clone();
+        let (y, x) = (vec![0.5f32], {
+            let mut x = Vec::new();
+            for j in 0..90 {
+                x.push(0.01 * (j as f32 + 1.0));
+            }
+            x
+        });
+        combined.push_rows(&x, &y);
+        let learner_box =
+            (registry::entry(Task::Ridge).build)(&cfg, &data).expect("ridge learner");
+        let learner = DynLearner(&*learner_box);
+        let folds = Folds::new(combined.n, 4, cfg.seed);
+        let quick = ApproxCv::new(Ordering::Fixed, cfg.seed)
+            .run(&learner, &combined, &folds)
+            .estimate;
+        assert!(out.contains(&format!("estimate {quick:.6} pending 1")), "{out}");
+        // Post-flush queries answer the refreshed exact estimate again.
+        assert!(out.contains(&format!("estimate {:.6} pending 0", report.estimate)), "{out}");
+    }
+
+    #[test]
+    fn approx_engine_rejects_non_correctable_serve_task() {
+        let cfg =
+            ExperimentConfig { engine: Engine::Approx, ..serve_cfg() };
+        let mut out = Vec::new();
+        let err = run_serve(&cfg, 32, Cursor::new("quit\n".to_string()), &mut out).unwrap_err();
+        assert!(format!("{err}").contains("one-step held-out correction"), "{err}");
     }
 
     #[test]

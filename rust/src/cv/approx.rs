@@ -1,0 +1,169 @@
+//! Approximate cross-validation via one-step corrections (the k = n
+//! engine).
+//!
+//! Exact TreeCV spends Θ(n log₂(2k)) row updates per run; at the LOOCV
+//! extreme (k = n) that log factor is ~21 at n = 10⁶. This engine trains
+//! **once** on the full dataset (n row updates) and then derives each
+//! fold's held-out estimate from the full-data model by a *one-step
+//! correction* — a closed-form or first-order approximation of "the model
+//! trained without this fold":
+//!
+//! * ridge — exact Sherman–Morrison block *downdate* of the sufficient
+//!   statistics (only f64 rounding separates it from a re-train);
+//! * pegasos / lsqsgd — a single re-weighted gradient step removing the
+//!   held-out block's contribution (first-order accurate).
+//!
+//! The capability is opt-in per learner via
+//! [`crate::learner::ConvexCorrectable`] and probed at runtime through
+//! [`crate::learner::IncrementalLearner::correctable`]; non-convex
+//! learners (knn, histdensity, kmeans, ...) have no meaningful one-step
+//! correction and are rejected with a hard error.
+//!
+//! Cost model: n row updates + k corrections + k evaluations, and the
+//! corrections sum to Θ(n) row-sized operations across all folds. Work is
+//! counted in [`OpCounts::corrections`]; `--approx-check` additionally
+//! runs the exact engine and records the largest per-fold deviation in
+//! [`OpCounts::exact_gap_max`].
+//!
+//! Determinism: the full-data training pass is a single sequential stream
+//! (tagged [`APPROX_FULL_TAG`]-style inside the executor), and each
+//! fold's correction starts from an identical clone of that model — so
+//! per-fold results are **bitwise independent of the worker count**. The
+//! parallel dispatch lives in [`super::executor`]
+//! ([`TreeCvExecutor::run_many_approx`]); this module is the
+//! single-threaded facade plus the gap helper shared by the repetition
+//! harness and the test batteries.
+//!
+//! [`OpCounts::corrections`]: crate::metrics::OpCounts::corrections
+//! [`OpCounts::exact_gap_max`]: crate::metrics::OpCounts::exact_gap_max
+//! [`APPROX_FULL_TAG`]: super::executor
+
+use super::executor::TreeCvExecutor;
+use super::folds::{Folds, Ordering};
+use super::{CvResult, Strategy};
+use crate::data::Dataset;
+use crate::learner::IncrementalLearner;
+
+/// Single-threaded approximate-CV engine: train once, correct per fold.
+///
+/// Strategy-free: the approx sweep neither forks interior nodes nor
+/// reverts updates, so there is no Copy-vs-SaveRevert axis. `ordering`
+/// and `seed` control the full-data training stream exactly as they do
+/// for the exact engines (Fixed feeds rows in index order; Randomized
+/// shuffles the gathered sequence with the run's derived RNG stream).
+#[derive(Debug, Clone, Copy)]
+pub struct ApproxCv {
+    pub ordering: Ordering,
+    pub seed: u64,
+}
+
+impl ApproxCv {
+    pub fn new(ordering: Ordering, seed: u64) -> Self {
+        Self { ordering, seed }
+    }
+
+    /// Engine name for reports (mirrors [`super::CvEngine::engine_name`]).
+    pub fn engine_name(&self) -> &'static str {
+        "approx"
+    }
+
+    /// Compute the approximate k-CV estimate of `learner` on `data`.
+    ///
+    /// Not part of the [`super::CvEngine`] trait because the executor
+    /// path needs `L: Sync` / `L::Model: Send` bounds the trait doesn't
+    /// impose (same precedent as `TreeCvExecutor::run`). Panics if the
+    /// learner does not advertise a one-step correction
+    /// ([`crate::learner::IncrementalLearner::correctable`]).
+    pub fn run<L>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        // Strategy::Copy is carried but never consulted on the approx
+        // path (see run_many_approx docs).
+        TreeCvExecutor::new(Strategy::Copy, self.ordering, self.seed, 1)
+            .run_approx(learner, data, folds)
+    }
+}
+
+/// Largest per-fold absolute deviation between two CV results — the
+/// quantity recorded in `OpCounts::exact_gap_max` under `--approx-check`
+/// and pinned by the bounded-error batteries.
+///
+/// Panics if the fold counts differ: comparing results from different
+/// fold assignments is a caller bug, not a gap of ∞.
+pub fn max_fold_gap(a: &CvResult, b: &CvResult) -> f64 {
+    assert_eq!(
+        a.per_fold.len(),
+        b.per_fold.len(),
+        "max_fold_gap: fold-count mismatch — results come from different assignments"
+    );
+    a.per_fold
+        .iter()
+        .zip(&b.per_fold)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0_f64, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::treecv::TreeCv;
+    use crate::cv::CvEngine;
+    use crate::data::synth::SyntheticYearMsd;
+    use crate::learner::ridge::OnlineRidge;
+
+    #[test]
+    fn facade_matches_executor_and_counts_work() {
+        let data = SyntheticYearMsd::new(240, 11).generate();
+        let learner = OnlineRidge::new(SyntheticYearMsd::D, 1.0);
+        let folds = Folds::new(240, 12, 7);
+        let engine = ApproxCv::new(Ordering::Fixed, 5);
+        let r = engine.run(&learner, &data, &folds);
+        assert_eq!(engine.engine_name(), "approx");
+        assert_eq!(r.ops.update_calls, 1);
+        assert_eq!(r.ops.points_updated, 240);
+        assert_eq!(r.ops.corrections, 12);
+        assert_eq!(r.ops.evals, 12);
+        // Same knobs through the executor directly: bitwise identical.
+        let ex = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, 1)
+            .run_approx(&learner, &data, &folds);
+        assert_eq!(r.estimate.to_bits(), ex.estimate.to_bits());
+        for (a, b) in r.per_fold.iter().zip(&ex.per_fold) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn ridge_downdate_tracks_exact_treecv() {
+        let data = SyntheticYearMsd::new(160, 3).generate();
+        let learner = OnlineRidge::new(SyntheticYearMsd::D, 1.0);
+        let folds = Folds::loocv(160);
+        let approx = ApproxCv::new(Ordering::Fixed, 9).run(&learner, &data, &folds);
+        let exact = TreeCv::new(Strategy::Copy, Ordering::Fixed, 9).run(&learner, &data, &folds);
+        let gap = max_fold_gap(&approx, &exact);
+        assert!(gap <= 1e-8, "ridge downdate drifted from exact: gap {gap:e}");
+        // LOOCV work: n updates + n corrections vs Θ(n log 2n) updates.
+        assert!(approx.ops.points_updated < exact.ops.points_updated / 4);
+    }
+
+    #[test]
+    fn max_fold_gap_is_the_sup_norm() {
+        let ops = crate::metrics::OpCounts::default;
+        let wall = std::time::Duration::ZERO;
+        let a = CvResult::from_folds(vec![1.0, 2.0, 3.0], ops(), wall);
+        let b = CvResult::from_folds(vec![1.5, 2.0, 2.0], ops(), wall);
+        assert_eq!(max_fold_gap(&a, &b), 1.0);
+        assert_eq!(max_fold_gap(&a, &a), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fold-count mismatch")]
+    fn max_fold_gap_rejects_mismatched_assignments() {
+        let ops = crate::metrics::OpCounts::default;
+        let wall = std::time::Duration::ZERO;
+        let a = CvResult::from_folds(vec![1.0], ops(), wall);
+        let b = CvResult::from_folds(vec![1.0, 2.0], ops(), wall);
+        let _ = max_fold_gap(&a, &b);
+    }
+}

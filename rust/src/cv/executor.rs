@@ -348,13 +348,16 @@ pub struct ErasedRunSpec<'a> {
     pub ctrl: RunCtrl,
 }
 
-/// One unit of executor work: the TreeCV subtree of run `run` rooted at
-/// `(s, e)` plus the model trained on every chunk outside `s..=e`.
-/// `depth` decides whether the node forks (above the run's snapshot
-/// cutoff) or runs inline. Root tasks carry `None` and init their model
-/// lazily on the worker that pops them — a batch of R runs would
-/// otherwise materialize R full models up front (ruinous for
-/// training-set-sized models like k-NN's on a wide sweep).
+/// One unit of executor work. Under [`RunMode::Tree`]: the TreeCV subtree
+/// of run `run` rooted at `(s, e)` plus the model trained on every chunk
+/// outside `s..=e`; `depth` decides whether the node forks (above the
+/// run's snapshot cutoff) or runs inline. Under [`RunMode::Approx`]: the
+/// fold range `s..=e` to correct-and-evaluate, carrying the *full-data*
+/// model (`depth` 0 marks the training root, ≥ 1 a fold-range task).
+/// Root tasks carry `None` and init their model lazily on the worker
+/// that pops them — a batch of R runs would otherwise materialize R full
+/// models up front (ruinous for training-set-sized models like k-NN's on
+/// a wide sweep).
 struct Task<M> {
     run: usize,
     s: usize,
@@ -362,6 +365,25 @@ struct Task<M> {
     depth: usize,
     model: Option<M>,
 }
+
+/// Which per-task algorithm a batch's workers execute: the exact TreeCV
+/// recursion, or the approximate-CV one-step-correction sweep
+/// ([`TreeCvExecutor::run_many_approx`]). Batches are mode-homogeneous —
+/// the mode lives on the batch's [`Shared`] state, so [`RunSpec`] is
+/// unchanged and exact and approx batches share every other line of the
+/// scheduling machinery (deques, injector, cancellation, accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RunMode {
+    Tree,
+    Approx,
+}
+
+/// Node-stream tag for the approx engine's single full-data training
+/// phase. Outside [`super::folds::node_tags`]'s image (tags there encode
+/// `(s, e)` in the low 2·33 bits with `s ≤ e < 2³²`, so all-ones is
+/// unreachable), keeping approx randomized streams disjoint from any
+/// exact tree node's.
+const APPROX_FULL_TAG: u64 = u64::MAX;
 
 /// Per-run shared state: the run's inputs plus its output slots.
 struct RunShared<'a, L: IncrementalLearner> {
@@ -422,6 +444,9 @@ struct Shared<'a, L: IncrementalLearner> {
     /// levels' steady-state demand, doubled when several runs are in
     /// flight); excess buffers are dropped instead.
     pool_cap: usize,
+    /// Per-task algorithm for this batch (exact tree vs approx
+    /// correction); see [`RunMode`].
+    mode: RunMode,
     /// The batch's runs, indexed by [`Task::run`].
     runs: Vec<RunShared<'a, L>>,
     /// Total leaf count across all runs.
@@ -650,6 +675,10 @@ impl TreeCvExecutor {
     ) where
         L: IncrementalLearner + Sync,
     {
+        if shared.mode == RunMode::Approx {
+            self.process_approx(wid, task, shared, data, scratch, streams, on_result);
+            return;
+        }
         let Task { run, s, e, depth, model } = task;
         let rs = &shared.runs[run];
         let leaves = e - s + 1;
@@ -759,6 +788,160 @@ impl TreeCvExecutor {
         rs.per_fold.lock()[s..=e].copy_from_slice(&local);
         // Recycle the model storage for future fork-node snapshots.
         recycle(shared, model);
+        rs.ops.lock().merge(&ops);
+        account(shared, run, leaves, false, on_result);
+    }
+
+    /// Process one approximate-CV task. The root (depth 0) trains the
+    /// full-data model with ONE update phase over every chunk — the same
+    /// node-stream machinery as an exact run, under a reserved tag
+    /// ([`APPROX_FULL_TAG`]), so the trained model is a pure function of
+    /// `(learner, data, folds, ordering, seed)` and independent of pool
+    /// size — then partitions the folds into ~2 contiguous ranges per
+    /// worker and queues each range with its own snapshot of the model
+    /// (the last range inherits the original, so distribution costs
+    /// `ranges − 1` copies). A fold-range task (depth ≥ 1) then, per
+    /// fold: copies the full model into a worker-local scratch buffer,
+    /// applies the learner's one-step correction
+    /// ([`IncrementalLearner::try_correct_heldout`]) for the held-out
+    /// chunk, and evaluates that chunk on the corrected model. Total
+    /// update work is Θ(n) row updates + k corrections — no tree descent
+    /// — and per-fold results are bitwise independent of the range
+    /// partition, hence of the worker count.
+    ///
+    /// A learner without the correction capability panics here (caught
+    /// and reported as [`RunOutcome::Failed`]); engines are expected to
+    /// capability-check with [`IncrementalLearner::correctable`] first.
+    fn process_approx<L>(
+        &self,
+        wid: usize,
+        task: Task<L::Model>,
+        shared: &Shared<'_, L>,
+        data: &Dataset,
+        scratch: &mut Vec<L::Model>,
+        streams: &mut StreamScratch,
+        on_result: Option<&OnResult<'_>>,
+    ) where
+        L: IncrementalLearner + Sync,
+    {
+        let Task { run, s, e, depth, model } = task;
+        let rs = &shared.runs[run];
+        let leaves = e - s + 1;
+        if rs.ctrl.is_cancelled() {
+            if let Some(m) = model {
+                recycle(shared, m);
+            }
+            rs.tasks_dropped.fetch_add(1, MemOrdering::AcqRel);
+            account(shared, run, leaves, true, on_result);
+            return;
+        }
+        let ctx = NodeCtx {
+            learner: rs.learner,
+            data,
+            folds: rs.folds,
+            folded: rs.folded,
+            strategy: rs.strategy,
+            ordering: self.ordering,
+            seed: rs.seed,
+        };
+        let mut ops = OpCounts::default();
+        if depth == 0 {
+            // Training root: one update phase over all k chunks.
+            let mut model = model.unwrap_or_else(|| rs.learner.init());
+            let trained = catch_unwind(AssertUnwindSafe(|| {
+                ctx.update_phase(&mut model, 0, rs.k - 1, APPROX_FULL_TAG, &mut ops, streams);
+            }));
+            if let Err(payload) = trained {
+                fail_run(shared, run, leaves, payload, on_result);
+                return;
+            }
+            if rs.ctrl.is_cancelled() {
+                recycle(shared, model);
+                rs.ops.lock().merge(&ops);
+                rs.tasks_dropped.fetch_add(1, MemOrdering::AcqRel);
+                account(shared, run, leaves, true, on_result);
+                return;
+            }
+            // Distribute: ~2 contiguous fold ranges per worker (capped at
+            // k), each with its own pooled snapshot of the full model.
+            let ranges = (shared.deques.len() * 2).min(leaves).max(1);
+            let built = catch_unwind(AssertUnwindSafe(|| {
+                let mut tasks: Vec<Task<L::Model>> = Vec::with_capacity(ranges);
+                for r in 0..ranges - 1 {
+                    let lo = s + leaves * r / ranges;
+                    let hi = s + leaves * (r + 1) / ranges - 1;
+                    let recycled = shared.pool.lock().pop();
+                    let buf = match recycled {
+                        Some(mut b) => {
+                            b.clone_from(&model);
+                            b
+                        }
+                        None => model.clone(),
+                    };
+                    ops.model_copies += 1;
+                    ops.bytes_copied += rs.learner.model_bytes(&model) as u64;
+                    tasks.push(Task { run, s: lo, e: hi, depth: 1, model: Some(buf) });
+                }
+                let lo = s + leaves * (ranges - 1) / ranges;
+                tasks.push(Task { run, s: lo, e, depth: 1, model: Some(model) });
+                tasks
+            }));
+            let tasks = match built {
+                Ok(tasks) => tasks,
+                Err(payload) => {
+                    fail_run(shared, run, leaves, payload, on_result);
+                    return;
+                }
+            };
+            rs.ops.lock().merge(&ops);
+            let stealable = tasks.len() - 1;
+            {
+                let mut dq = shared.deques[wid].lock();
+                for t in tasks {
+                    dq.push_back(t);
+                }
+            }
+            // This worker pops one range itself; the rest are stealable.
+            for _ in 0..stealable {
+                wake_one(&shared.parked);
+            }
+            return;
+        }
+
+        // Fold-range task: per fold, correct a scratch copy of the full
+        // model and evaluate the held-out chunk on it.
+        // invariant: approx fold-range tasks are always queued with the
+        // trained full-data model attached (see the root branch above).
+        let full = model.expect("approx fold task carries the full-data model");
+        let work = catch_unwind(AssertUnwindSafe(|| {
+            let mut local = vec![0.0; leaves];
+            let mut buf = scratch.pop().unwrap_or_else(|| rs.learner.init());
+            for f in s..=e {
+                buf.clone_from(&full);
+                ops.model_copies += 1;
+                ops.bytes_copied += rs.learner.model_bytes(&full) as u64;
+                let corrected = rs.learner.try_correct_heldout(&mut buf, data, rs.folds.chunk(f));
+                assert!(
+                    corrected,
+                    "learner `{}` has no one-step correction (ConvexCorrectable); \
+                     the approx engine requires it — use an exact engine instead",
+                    rs.learner.name()
+                );
+                ops.corrections += 1;
+                local[f - s] = ctx.eval_leaf(&buf, f, &mut ops);
+            }
+            scratch.push(buf);
+            local
+        }));
+        let local = match work {
+            Ok(local) => local,
+            Err(payload) => {
+                fail_run(shared, run, leaves, payload, on_result);
+                return;
+            }
+        };
+        rs.per_fold.lock()[s..=e].copy_from_slice(&local);
+        recycle(shared, full);
         rs.ops.lock().merge(&ops);
         account(shared, run, leaves, false, on_result);
     }
@@ -936,6 +1119,46 @@ impl TreeCvExecutor {
         L: IncrementalLearner + Sync,
         L::Model: Send,
     {
+        self.run_many_mode(data, runs, RunMode::Tree)
+    }
+
+    /// Approximate-CV batch (`--engine approx`): every run trains its
+    /// full-data model ONCE (Θ(n) row updates) and produces each fold's
+    /// held-out estimate by one-step-correcting a copy of that model
+    /// ([`crate::learner::ConvexCorrectable`]) instead of descending the
+    /// tree — see [`Self::process_approx`]. Fold ranges parallelize
+    /// through the same pool, deques, and cancellation machinery as exact
+    /// batches, and per-fold estimates are bitwise independent of the
+    /// worker count (the full model is trained by one deterministic
+    /// update phase; corrections are per-fold independent).
+    ///
+    /// Specs are ordinary [`RunSpec`]s: `seed`/`folded` behave exactly as
+    /// in exact batches; `strategy` is carried but never consulted (the
+    /// approx sweep neither forks nor reverts). Every learner in the
+    /// batch must advertise [`IncrementalLearner::correctable`] — a
+    /// non-correctable learner fails its run (strict form: panics).
+    pub fn run_many_approx<L>(&self, data: &Dataset, runs: &[RunSpec<'_, L>]) -> Vec<CvResult>
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        self.run_many_mode(data, runs, RunMode::Approx)
+    }
+
+    /// Strict facade shared by [`Self::run_many`] (exact) and
+    /// [`Self::run_many_approx`]: first failure cancels all siblings and
+    /// re-panics; caller-cancelled runs panic with a pointer to the
+    /// outcome-reporting form.
+    fn run_many_mode<L>(
+        &self,
+        data: &Dataset,
+        runs: &[RunSpec<'_, L>],
+        mode: RunMode,
+    ) -> Vec<CvResult>
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
         let abort_siblings = |_idx: usize, out: &RunOutcome| {
             if matches!(out, RunOutcome::Failed { .. }) {
                 for r in runs {
@@ -943,7 +1166,7 @@ impl TreeCvExecutor {
                 }
             }
         };
-        let outcomes = self.run_many_outcomes(data, runs, Some(&abort_siblings));
+        let outcomes = self.run_batch_outcomes(data, runs, mode, Some(&abort_siblings));
         for out in &outcomes {
             if let RunOutcome::Failed { error } = out {
                 panic!("executor worker panicked: {error}");
@@ -974,6 +1197,23 @@ impl TreeCvExecutor {
         &self,
         data: &Dataset,
         runs: &[RunSpec<'_, L>],
+        on_result: Option<&OnResult<'_>>,
+    ) -> Vec<RunOutcome>
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        self.run_batch_outcomes(data, runs, RunMode::Tree, on_result)
+    }
+
+    /// Mode-parameterized batch execution body (see
+    /// [`Self::run_many_outcomes`] for the exact-tree contract and
+    /// [`Self::run_many_approx`] for the approx one).
+    fn run_batch_outcomes<L>(
+        &self,
+        data: &Dataset,
+        runs: &[RunSpec<'_, L>],
+        mode: RunMode,
         on_result: Option<&OnResult<'_>>,
     ) -> Vec<RunOutcome>
     where
@@ -1020,6 +1260,7 @@ impl TreeCvExecutor {
             ),
             pool: Mutex::new(Vec::new()),
             pool_cap,
+            mode,
             runs: runs
                 .iter()
                 .map(|r| RunShared {
@@ -1143,6 +1384,41 @@ impl TreeCvExecutor {
         let wrapped: Vec<DynLearner<'_>> = runs.iter().map(|r| DynLearner(r.learner)).collect();
         let specs = Self::erased_specs(&wrapped, runs);
         self.run_many(data, &specs)
+    }
+
+    /// Single approximate-CV run (see [`Self::run_many_approx`] for the
+    /// batch form and contract).
+    pub fn run_approx<L>(&self, learner: &L, data: &Dataset, folds: &Folds) -> CvResult
+    where
+        L: IncrementalLearner + Sync,
+        L::Model: Send,
+    {
+        let spec = RunSpec {
+            learner,
+            folds,
+            seed: self.seed,
+            strategy: self.strategy,
+            folded: None,
+            ctrl: RunCtrl::default(),
+        };
+        // invariant: run_many_approx returns one result per input spec.
+        self.run_many_approx(data, std::slice::from_ref(&spec))
+            .pop()
+            .expect("run_many_approx returns one result per run")
+    }
+
+    /// Heterogeneous approximate-CV batch: [`Self::run_many_approx`] over
+    /// the type-erased learner layer, forwarding the correction capability
+    /// through [`DynLearner`]. Every spec's learner must advertise
+    /// [`ErasedLearner::correctable`].
+    pub fn run_many_approx_erased(
+        &self,
+        data: &Dataset,
+        runs: &[ErasedRunSpec<'_>],
+    ) -> Vec<CvResult> {
+        let wrapped: Vec<DynLearner<'_>> = runs.iter().map(|r| DynLearner(r.learner)).collect();
+        let specs = Self::erased_specs(&wrapped, runs);
+        self.run_many_approx(data, &specs)
     }
 
     /// Cancellation-aware heterogeneous batch: [`Self::run_many_outcomes`]
@@ -1780,6 +2056,90 @@ mod tests {
         };
         let _ = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 2)
             .run_many(&data, std::slice::from_ref(&spec));
+    }
+
+    #[test]
+    fn approx_per_fold_identical_across_worker_counts() {
+        // The full model comes from ONE deterministic update phase and
+        // each fold's correction is independent, so per-fold estimates
+        // are bitwise invariant under the range partition (worker count).
+        use crate::data::synth::SyntheticYearMsd;
+        use crate::learner::ridge::OnlineRidge;
+        let data = SyntheticYearMsd::new(480, 140).generate();
+        let l = OnlineRidge::new(90, 1.0);
+        let folds = Folds::new(480, 16, 141);
+        let base = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 9, 1)
+            .run_approx(&l, &data, &folds);
+        assert_eq!(base.ops.update_calls, 1, "one full-data training phase");
+        assert_eq!(base.ops.points_updated, 480, "Θ(n) row updates, no tree");
+        assert_eq!(base.ops.corrections, 16, "one correction per fold");
+        assert_eq!(base.ops.evals, 16);
+        for threads in [2usize, 3, 8] {
+            let got = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 9, threads)
+                .run_approx(&l, &data, &folds);
+            for (a, b) in base.per_fold.iter().zip(&got.per_fold) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+            assert_eq!(base.ops.corrections, got.ops.corrections, "threads={threads}");
+            assert_eq!(base.ops.points_updated, got.ops.points_updated, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn approx_ridge_tracks_exact_treecv_tightly() {
+        // Ridge's correction is an exact stats downdate, so approx LOOCV
+        // per-fold estimates match the exact engine to f64 rounding.
+        use crate::data::synth::SyntheticYearMsd;
+        use crate::learner::ridge::OnlineRidge;
+        let data = SyntheticYearMsd::new(200, 142).generate();
+        let l = OnlineRidge::new(90, 1.0);
+        let folds = Folds::loocv(200);
+        let exact = TreeCv::new(Strategy::Copy, Ordering::Fixed, 0).run(&l, &data, &folds);
+        let approx = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 4)
+            .run_approx(&l, &data, &folds);
+        for (f, (a, b)) in approx.per_fold.iter().zip(&exact.per_fold).enumerate() {
+            assert!((a - b).abs() <= 1e-8 * (1.0 + b.abs()), "fold {f}: {a} vs {b}");
+        }
+        assert!(approx.ops.points_updated < exact.ops.points_updated / 4);
+    }
+
+    #[test]
+    fn approx_erased_matches_generic_bitwise() {
+        use crate::data::synth::SyntheticYearMsd;
+        use crate::learner::erased::{Erased, ErasedLearner};
+        use crate::learner::ridge::OnlineRidge;
+        let data = SyntheticYearMsd::new(240, 143).generate();
+        let l = OnlineRidge::new(90, 0.5);
+        let folds = Folds::new(240, 12, 144);
+        let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 5, 3);
+        let generic = exe.run_approx(&l, &data, &folds);
+        let erased: Box<dyn ErasedLearner> = Erased::boxed(l);
+        let spec = ErasedRunSpec {
+            learner: &*erased,
+            folds: &folds,
+            seed: 5,
+            strategy: Strategy::Copy,
+            folded: None,
+            ctrl: RunCtrl::default(),
+        };
+        let got = exe
+            .run_many_approx_erased(&data, std::slice::from_ref(&spec))
+            .pop()
+            // invariant: one spec in, one result out.
+            .expect("one result per spec");
+        assert_eq!(generic.per_fold, got.per_fold);
+        assert_eq!(generic.estimate.to_bits(), got.estimate.to_bits());
+        assert_eq!(generic.ops.corrections, got.ops.corrections);
+    }
+
+    #[test]
+    #[should_panic(expected = "one-step correction")]
+    fn approx_rejects_non_correctable_learner() {
+        let data = SyntheticMixture1d::new(80, 145).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 16);
+        let folds = Folds::new(80, 4, 146);
+        let _ = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 0, 2)
+            .run_approx(&l, &data, &folds);
     }
 
     #[test]

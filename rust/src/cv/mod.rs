@@ -1,5 +1,12 @@
 //! Cross-validation engines.
 //!
+//! * [`approx`] — approximate CV for the k = n regime: train once on the
+//!   full dataset, then derive each fold's held-out estimate by a
+//!   one-step correction ([`crate::learner::ConvexCorrectable`] — exact
+//!   Sherman–Morrison downdates for ridge, a single re-weighted gradient
+//!   step for pegasos/lsqsgd). n row updates + k corrections instead of
+//!   TreeCV's Θ(n log₂(2k)); per-fold results bitwise independent of the
+//!   worker count. Opt-in per learner; non-convex tasks are a hard error.
 //! * [`treecv`] — the paper's contribution (Algorithm 1): recursive
 //!   tree-structured CV in `O(log k)`-times single-training time. Its
 //!   recursion (`run_subtree`) is *the* sequential implementation, shared
@@ -56,6 +63,7 @@
 //! * [`stats`] — the repetition harness producing Table-2-style
 //!   `mean ± std` rows.
 
+pub mod approx;
 pub mod exact;
 pub mod executor;
 pub mod folds;

@@ -5,6 +5,7 @@
 //! permutations), runs an engine, and the harness accumulates mean ± std
 //! of the resulting estimates plus aggregate work counters.
 
+use super::approx::max_fold_gap;
 use super::executor::{RunCtrl, RunSpec, TreeCvExecutor};
 use super::folds::{Folds, Ordering};
 use super::standard::StandardCv;
@@ -35,12 +36,14 @@ pub fn repetition_engine_seed(seed: u64, r: usize) -> u64 {
 
 /// Which engine a repetition run uses. `ParallelTreeCv` executes on the
 /// pooled work-stealing executor ([`TreeCvExecutor`]) sized to the
-/// machine's available parallelism.
+/// machine's available parallelism; `Approx` runs the one-step-correction
+/// engine ([`super::approx`]) on the same pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     TreeCv,
     Standard,
     ParallelTreeCv,
+    Approx,
 }
 
 /// Configuration of one Table-2-style cell.
@@ -52,9 +55,15 @@ pub struct RepetitionSpec {
     pub k: usize,
     pub repetitions: usize,
     pub seed: u64,
-    /// Worker-pool size for `EngineKind::ParallelTreeCv` (`0` = machine
-    /// parallelism); ignored by the sequential engines.
+    /// Worker-pool size for `EngineKind::ParallelTreeCv` and
+    /// `EngineKind::Approx` (`0` = machine parallelism); ignored by the
+    /// sequential engines.
     pub threads: usize,
+    /// For `EngineKind::Approx`: also run the exact TreeCV engine on each
+    /// repetition's partitioning and record the largest per-fold
+    /// |approx − exact| in `OpCounts::exact_gap_max`. Ignored by the
+    /// exact engines.
+    pub approx_check: bool,
 }
 
 /// Aggregated outcome of the repetitions.
@@ -92,6 +101,16 @@ pub struct RepetitionResult {
 /// repetition; seeds and folds derive identically either way, so the
 /// estimates are bit-identical to per-repetition dispatch — only the
 /// `repetitions − 1` pool spawns and cold starts disappear.
+///
+/// `EngineKind::Approx` batches the same way through
+/// [`TreeCvExecutor::run_many_approx`]. It requires a learner advertising
+/// a one-step correction ([`IncrementalLearner::correctable`]) and has no
+/// Copy-vs-SaveRevert axis (it neither forks interior nodes nor rewinds
+/// updates), so SaveRevert is rejected like `standard` rejects it. With
+/// `spec.approx_check` each repetition also runs the exact sequential
+/// TreeCV on the same partitioning and records the largest per-fold
+/// deviation in `OpCounts::exact_gap_max` (the reported ops carry the
+/// sup over repetitions).
 pub fn run_repetitions<L>(
     learner: &L,
     data: &Dataset,
@@ -107,6 +126,24 @@ where
              from scratch and never rewinds an update); refusing to silently run Copy instead — \
              use --engine treecv or parallel_treecv"
         );
+    }
+    if spec.engine == EngineKind::Approx {
+        if spec.strategy == Strategy::SaveRevert {
+            bail!(
+                "engine `approx` cannot honor the save/revert strategy (it trains once and \
+                 corrects per fold — it neither forks interior nodes nor rewinds an update); \
+                 use --strategy copy or an exact engine"
+            );
+        }
+        if !learner.correctable() {
+            bail!(
+                "engine `approx` requires a learner with a one-step held-out correction \
+                 (ConvexCorrectable), which `{}` does not provide — use a convex task \
+                 (pegasos, lsqsgd, ridge) or an exact engine (treecv, parallel_treecv, \
+                 standard)",
+                learner.name()
+            );
+        }
     }
     let timer = Timer::start();
     let results: Vec<CvResult> = match spec.engine {
@@ -135,6 +172,38 @@ where
             TreeCvExecutor::with_threads_knob(spec.strategy, spec.ordering, spec.threads)
                 .run_many(data, &runs)
         }
+        EngineKind::Approx => {
+            let folds: Vec<Folds> = (0..spec.repetitions)
+                .map(|r| Folds::new(data.n, spec.k, repetition_fold_seed(spec.seed, r)))
+                .collect();
+            let batch_ctrl = RunCtrl::new();
+            let runs: Vec<RunSpec<'_, L>> = folds
+                .iter()
+                .enumerate()
+                .map(|(r, f)| RunSpec {
+                    learner,
+                    folds: f,
+                    seed: repetition_engine_seed(spec.seed, r),
+                    strategy: spec.strategy,
+                    folded: None,
+                    ctrl: batch_ctrl.clone(),
+                })
+                .collect();
+            let mut results =
+                TreeCvExecutor::with_threads_knob(spec.strategy, spec.ordering, spec.threads)
+                    .run_many_approx(data, &runs);
+            if spec.approx_check {
+                // Exact oracle on the SAME partitioning and permutation
+                // seed, so the correction error is the only difference.
+                for (r, f) in folds.iter().enumerate() {
+                    let seed = repetition_engine_seed(spec.seed, r);
+                    let exact =
+                        TreeCv::new(Strategy::Copy, spec.ordering, seed).run(learner, data, f);
+                    results[r].ops.exact_gap_max = max_fold_gap(&results[r], &exact);
+                }
+            }
+            results
+        }
         EngineKind::TreeCv | EngineKind::Standard => (0..spec.repetitions)
             .map(|r| {
                 let folds = Folds::new(data.n, spec.k, repetition_fold_seed(spec.seed, r));
@@ -146,7 +215,9 @@ where
                     EngineKind::Standard => {
                         StandardCv::new(spec.ordering, seed).run(learner, data, &folds)
                     }
-                    EngineKind::ParallelTreeCv => unreachable!("batched above"),
+                    EngineKind::ParallelTreeCv | EngineKind::Approx => {
+                        unreachable!("batched above")
+                    }
                 }
             })
             .collect(),
@@ -159,7 +230,12 @@ where
     // elapsed; for the sequential engines the two notions agree up to
     // loop overhead.
     let total_wall = timer.elapsed();
-    let last_ops = results.last().map(|r| r.ops.clone()).unwrap_or_default();
+    let mut last_ops = results.last().map(|r| r.ops.clone()).unwrap_or_default();
+    // Work counters are identical across repetitions, but an approx-check
+    // gap varies with the partitioning — report the sup over the batch.
+    for res in &results {
+        last_ops.exact_gap_max = last_ops.exact_gap_max.max(res.ops.exact_gap_max);
+    }
     Ok(RepetitionResult {
         spec: spec.clone(),
         mean: stats.mean(),
@@ -185,6 +261,7 @@ mod tests {
             repetitions: reps,
             seed: 7,
             threads: 0,
+            approx_check: false,
         }
     }
 
@@ -317,6 +394,40 @@ mod tests {
         // would silently re-partition every harness.
         assert_eq!(repetition_fold_seed(7, 0), 7u64.wrapping_mul(0x9E3779B97F4A7C15));
         assert_eq!(repetition_engine_seed(7, 2), repetition_fold_seed(7, 2) ^ 0xA5A5);
+    }
+
+    #[test]
+    fn approx_repetitions_record_corrections_and_checked_gap() {
+        let data = crate::data::synth::SyntheticYearMsd::new(240, 129).generate();
+        let l = crate::learner::ridge::OnlineRidge::new(90, 1.0);
+        let k = 12usize;
+        let s = RepetitionSpec { approx_check: true, ..spec(EngineKind::Approx, k, 4) };
+        let res = run_repetitions(&l, &data, &s).unwrap();
+        assert!(res.mean.is_finite());
+        assert_eq!(res.ops.corrections, k as u64);
+        assert_eq!(res.ops.update_calls, 1);
+        // Ridge's downdate is exact up to rounding; the checked gap must
+        // be tiny but (having run) is recorded, not left at the default.
+        assert!(res.ops.exact_gap_max <= 1e-8, "gap {:e}", res.ops.exact_gap_max);
+        // Without the check the gap field stays at its 0.0 default.
+        let unchecked = run_repetitions(&l, &data, &spec(EngineKind::Approx, k, 4)).unwrap();
+        assert_eq!(unchecked.ops.exact_gap_max, 0.0);
+        assert_eq!(unchecked.mean.to_bits(), res.mean.to_bits());
+    }
+
+    #[test]
+    fn approx_rejects_non_correctable_learner_and_save_revert() {
+        let data = SyntheticMixture1d::new(120, 130).generate();
+        let l = HistogramDensity::new(-8.0, 8.0, 32);
+        let err = run_repetitions(&l, &data, &spec(EngineKind::Approx, 5, 2)).unwrap_err();
+        assert!(format!("{err}").contains("one-step held-out correction"), "{err}");
+        let err = run_repetitions(
+            &l,
+            &data,
+            &spec_with_strategy(EngineKind::Approx, Strategy::SaveRevert, 5),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("save/revert"), "{err}");
     }
 
     #[test]

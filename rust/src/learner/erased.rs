@@ -192,6 +192,15 @@ pub trait ErasedLearner: Send + Sync {
 
     /// Approximate model size in bytes.
     fn model_bytes(&self, model: &ErasedModel) -> usize;
+
+    /// Whether the wrapped learner supports the approximate-CV one-step
+    /// correction (see [`IncrementalLearner::correctable`]).
+    fn correctable(&self) -> bool;
+
+    /// Probe-and-apply correction forwarding (see
+    /// [`IncrementalLearner::try_correct_heldout`]): `false` leaves the
+    /// model untouched.
+    fn try_correct_heldout(&self, model: &mut ErasedModel, data: &Dataset, idx: &[u32]) -> bool;
 }
 
 /// Blanket adapter from the generic trait to the erased one: wrap any
@@ -294,6 +303,14 @@ where
     fn model_bytes(&self, model: &ErasedModel) -> usize {
         self.0.model_bytes(self.model_ref(model))
     }
+
+    fn correctable(&self) -> bool {
+        self.0.correctable()
+    }
+
+    fn try_correct_heldout(&self, model: &mut ErasedModel, data: &Dataset, idx: &[u32]) -> bool {
+        self.0.try_correct_heldout(concrete::<L>(model, self.0.name()), data, idx)
+    }
 }
 
 impl<L> Erased<L>
@@ -385,6 +402,14 @@ impl IncrementalLearner for DynLearner<'_> {
 
     fn model_bytes(&self, model: &ErasedModel) -> usize {
         self.0.model_bytes(model)
+    }
+
+    fn correctable(&self) -> bool {
+        self.0.correctable()
+    }
+
+    fn try_correct_heldout(&self, model: &mut ErasedModel, data: &Dataset, idx: &[u32]) -> bool {
+        self.0.try_correct_heldout(model, data, idx)
     }
 }
 
@@ -493,6 +518,36 @@ mod tests {
         let got = e.evaluate_rows(&em, &hb.x, &hb.y, &data, &held);
         assert_eq!(want.to_bits(), got.to_bits());
         assert_eq!(want.to_bits(), l.evaluate(&gm, &data, &held).to_bits());
+    }
+
+    #[test]
+    fn correction_capability_forwards_through_erasure() {
+        // Convex learners advertise the capability through every layer of
+        // the erasure chain; non-convex ones decline without touching the
+        // model.
+        let data = SyntheticYearMsd::new(60, 68).generate();
+        let ridge = OnlineRidge::new(90, 1.0);
+        let e: Box<dyn ErasedLearner> = Erased::boxed(ridge.clone());
+        assert!(e.correctable());
+        let dynl = DynLearner(&*e);
+        assert!(IncrementalLearner::correctable(&dynl));
+        let mut gm = ridge.init();
+        ridge.update(&mut gm, &data, &(0..60).collect::<Vec<_>>());
+        let mut em = e.init();
+        e.update(&mut em, &data, &(0..60).collect::<Vec<_>>());
+        let held: Vec<u32> = (10..20).collect();
+        assert!(IncrementalLearner::try_correct_heldout(&ridge, &mut gm, &data, &held));
+        assert!(IncrementalLearner::try_correct_heldout(&dynl, &mut em, &data, &held));
+        assert_eq!(
+            ridge.evaluate(&gm, &data, &held).to_bits(),
+            e.evaluate(&em, &data, &held).to_bits()
+        );
+        let hist: Box<dyn ErasedLearner> = Erased::boxed(HistogramDensity::new(-8.0, 8.0, 8));
+        assert!(!hist.correctable());
+        let d1 = crate::data::synth::SyntheticMixture1d::new(20, 69).generate();
+        let mut hm = hist.init();
+        hist.update(&mut hm, &d1, &(0..20).collect::<Vec<_>>());
+        assert!(!hist.try_correct_heldout(&mut hm, &d1, &[0, 1]));
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! risk, so by the paper's Theorem 2 it is incrementally stable with
 //! g(n, b) = O(1/√n).
 
-use super::{linalg, IncrementalLearner};
+use super::{linalg, ConvexCorrectable, IncrementalLearner};
 use crate::data::Dataset;
 use crate::loss;
 
@@ -167,6 +167,43 @@ impl IncrementalLearner for LsqSgd {
     fn model_bytes(&self, m: &LsqSgdModel) -> usize {
         (m.w.len() + m.wavg.len()) * 4 + 8
     }
+
+    fn correctable(&self) -> bool {
+        true
+    }
+
+    fn try_correct_heldout(&self, m: &mut LsqSgdModel, data: &Dataset, idx: &[u32]) -> bool {
+        ConvexCorrectable::correct_heldout(self, m, data, idx);
+        true
+    }
+}
+
+/// One-step gradient correction on the *averaged* hypothesis (the one
+/// predictions use): removing a held-out block's influence is one ascent
+/// step along its squared-loss gradient at the full-data model,
+/// `w̄ ← Π_{‖·‖≤1}(w̄ + α Σ_{i∈f} 2(⟨w̄,x_i⟩ − y_i) x_i)`, followed by the
+/// same unit-ball projection the forward pass applies. The current
+/// iterate `w` and step count are left untouched — the corrected model is
+/// an evaluation-only approximation, which is all the approx engine reads.
+impl ConvexCorrectable for LsqSgd {
+    fn correct_heldout(&self, m: &mut LsqSgdModel, data: &Dataset, idx: &[u32]) {
+        if idx.is_empty() {
+            return;
+        }
+        // Pass 1: residuals at the original averaged hypothesis.
+        let mut resid = Vec::with_capacity(idx.len());
+        for &i in idx {
+            resid.push((m.predict(data.row(i)) - data.label(i)) as f64);
+        }
+        // Pass 2: one ascent step per held-out point, then re-project.
+        for (&r, &i) in resid.iter().zip(idx) {
+            linalg::axpy((2.0 * self.alpha * r) as f32, data.row(i), &mut m.wavg);
+        }
+        let nsq = linalg::norm_sq(&m.wavg);
+        if nsq > 1.0 {
+            linalg::scale((1.0 / nsq.sqrt()) as f32, &mut m.wavg);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +297,28 @@ mod tests {
         let hb = data.subset(&held);
         let fast = l.evaluate_rows(&a, &hb.x, &hb.y, &data, &held);
         assert_eq!(l.evaluate(&a, &data, &held).to_bits(), fast.to_bits());
+    }
+
+    #[test]
+    fn correct_heldout_tracks_retrain_without_block() {
+        // First-order correction: the corrected averaged hypothesis must
+        // score the held-out block within the documented loose bound of
+        // the from-scratch model trained without it.
+        let data = SyntheticYearMsd::new(500, 27).generate();
+        let l = LsqSgd::with_paper_step(90, 500);
+        let all: Vec<u32> = (0..500).collect();
+        let held: Vec<u32> = (200..250).collect();
+        let kept: Vec<u32> = (0..200).chain(250..500).collect();
+        let mut full = l.init();
+        l.update(&mut full, &data, &all);
+        assert!(IncrementalLearner::try_correct_heldout(&l, &mut full, &data, &held));
+        assert!(linalg::norm_sq(&full.wavg) <= 1.0 + 1e-5);
+        let mut oracle = l.init();
+        l.update(&mut oracle, &data, &kept);
+        let fast = l.evaluate(&full, &data, &held);
+        let slow = l.evaluate(&oracle, &data, &held);
+        assert!((fast - slow).abs() <= 0.5 * (1.0 + slow.abs()), "{fast} vs {slow}");
+        assert!(IncrementalLearner::correctable(&l));
     }
 
     #[test]

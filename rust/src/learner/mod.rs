@@ -177,6 +177,45 @@ pub trait IncrementalLearner {
     /// Approximate model size in bytes (drives the copy-cost metrics and
     /// the distributed simulation's communication accounting).
     fn model_bytes(&self, model: &Self::Model) -> usize;
+
+    /// Whether this learner supports the approximate-CV one-step
+    /// correction ([`ConvexCorrectable`]). The default is `false`; convex
+    /// learners that implement [`ConvexCorrectable`] override this to
+    /// `true` so engines (and the erased layer) can probe the capability
+    /// without specialization.
+    fn correctable(&self) -> bool {
+        false
+    }
+
+    /// Probe-and-apply form of [`ConvexCorrectable::correct_heldout`]:
+    /// returns `false` (leaving `model` untouched) when the learner has no
+    /// correction, `true` after applying it. Convex learners override both
+    /// this and [`correctable`](Self::correctable); the pair must agree.
+    fn try_correct_heldout(&self, model: &mut Self::Model, data: &Dataset, idx: &[u32]) -> bool {
+        let _ = (model, data, idx);
+        false
+    }
+}
+
+/// Convex learners whose full-data model can be *corrected* into an
+/// approximation of the model trained without a held-out block — the
+/// one-step Newton/gradient correction of iterative approximate CV
+/// (Luo, Ren & Barber; PAPERS.md).
+///
+/// Contract: `correct_heldout(m, data, idx)` mutates `m`, which was
+/// trained on **all** rows of `data`, into an approximation of the model
+/// trained on all rows *except* `idx`. Each implementation documents its
+/// correction formula and error bound in EXPERIMENTS.md ("Approximate
+/// CV"); exact learners over sufficient statistics (ridge) have an
+/// *exact* downdate, SGD learners (pegasos, lsqsgd) a first-order one.
+/// Implementors must also override the two probe methods on
+/// [`IncrementalLearner`] (`correctable` → `true`, `try_correct_heldout`
+/// → delegate here) so generic engine code and the erased layer reach
+/// the capability without specialization.
+pub trait ConvexCorrectable: IncrementalLearner {
+    /// Turn the full-data `model` into an approximation of the model
+    /// trained without the rows `idx`.
+    fn correct_heldout(&self, model: &mut Self::Model, data: &Dataset, idx: &[u32]);
 }
 
 /// Learners whose models can be *merged*: `merge(f(A), f(B)) == f(A ∪ B)`.

@@ -16,7 +16,7 @@
 //! lazily. A point update is then O(1) for the shrink plus O(d) only on
 //! margin violations, and the hot loop does a single fused dot product.
 
-use super::{linalg, IncrementalLearner};
+use super::{linalg, ConvexCorrectable, IncrementalLearner};
 use crate::data::Dataset;
 use crate::loss;
 
@@ -195,6 +195,48 @@ impl IncrementalLearner for Pegasos {
     fn model_bytes(&self, m: &PegasosModel) -> usize {
         m.v.len() * 4 + 16
     }
+
+    fn correctable(&self) -> bool {
+        true
+    }
+
+    fn try_correct_heldout(&self, m: &mut PegasosModel, data: &Dataset, idx: &[u32]) -> bool {
+        ConvexCorrectable::correct_heldout(self, m, data, idx);
+        true
+    }
+}
+
+/// One-step subgradient correction. PEGASOS's last hypothesis telescopes
+/// to `w_t = (1/(λt)) Σ_{τ active} y_τ x_τ`, so dropping a held-out block
+/// of h points gives the first-order estimate
+/// `w_{-f} ≈ w_t · t/(t−h) − (1/(λ(t−h))) Σ_{i∈f, margin<1} y_i x_i`,
+/// with margin activity judged at the *full-data* model (the one-step
+/// approximation — the exact run would judge margins at intermediate
+/// hypotheses). Degenerate folds with `t ≤ h` are left uncorrected.
+impl ConvexCorrectable for Pegasos {
+    fn correct_heldout(&self, m: &mut PegasosModel, data: &Dataset, idx: &[u32]) {
+        let held = idx.len() as u64;
+        if held == 0 || m.t <= held {
+            return;
+        }
+        let keep = (m.t - held) as f64;
+        // Pass 1: subgradient activity at the original model.
+        let mut coeff = Vec::with_capacity(idx.len());
+        for &i in idx {
+            let y = data.label(i);
+            let active = (y as f64) * (m.score(data.row(i)) as f64) < 1.0;
+            coeff.push(if active { y as f64 } else { 0.0 });
+        }
+        // Pass 2: rescale, then subtract the held-out active terms.
+        m.scale *= m.t as f64 / keep;
+        let eta = 1.0 / (self.lambda * keep);
+        for (&c, &i) in coeff.iter().zip(idx) {
+            if c != 0.0 {
+                linalg::axpy(((-c * eta) / m.scale) as f32, data.row(i), &mut m.v);
+            }
+        }
+        m.t -= held;
+    }
 }
 
 #[cfg(test)]
@@ -315,6 +357,34 @@ mod tests {
         l.update_rows(&mut b, &[], &[], &data, &[]);
         assert_eq!(a.t, b.t);
         assert_eq!(l.evaluate_rows(&a, &[], &[], &data, &[]), 0.0);
+    }
+
+    #[test]
+    fn correct_heldout_tracks_retrain_without_block() {
+        // First-order correction: not exact, but the corrected model's
+        // held-out error must stay within the documented loose bound of
+        // the from-scratch model trained without the block.
+        let data = SyntheticCovertype::new(400, 18).generate();
+        let l = Pegasos::new(54, 1e-3);
+        let all: Vec<u32> = (0..400).collect();
+        let held: Vec<u32> = (100..140).collect();
+        let kept: Vec<u32> = (0..100).chain(140..400).collect();
+        let mut full = l.init();
+        l.update(&mut full, &data, &all);
+        assert!(IncrementalLearner::try_correct_heldout(&l, &mut full, &data, &held));
+        assert_eq!(full.t, kept.len() as u64);
+        let mut oracle = l.init();
+        l.update(&mut oracle, &data, &kept);
+        let fast = l.evaluate(&full, &data, &held);
+        let slow = l.evaluate(&oracle, &data, &held);
+        assert!((fast - slow).abs() <= 0.5 * (1.0 + slow.abs()), "{fast} vs {slow}");
+        assert!(full.v.iter().all(|v| v.is_finite()));
+        // Degenerate fold (held ≥ t): a no-op, not a panic.
+        let mut tiny = l.init();
+        l.update(&mut tiny, &data, &all[..10]);
+        let snap = tiny.clone();
+        assert!(IncrementalLearner::try_correct_heldout(&l, &mut tiny, &data, &all[..10]));
+        assert_eq!(snap.t, tiny.t);
     }
 
     #[test]

@@ -35,9 +35,12 @@ COMMANDS
              reachable; xla_* tasks need the PJRT runtime + artifacts.
              --task pegasos|lsqsgd|kmeans|density|naive_bayes|ridge|
                     knn|perceptron|multiset|xla_pegasos|xla_lsqsgd
-             --engine treecv|standard|parallel_treecv|merge
+             --engine treecv|standard|parallel_treecv|merge|approx
                                   (parallel_treecv — alias: executor — runs
-                                   on the pooled work-stealing executor)
+                                   on the pooled work-stealing executor;
+                                   approx trains ONCE and derives each
+                                   fold by a one-step correction — convex
+                                   tasks only: pegasos, lsqsgd, ridge)
              --ks 5,10,100        fold counts (0 = LOOCV)
              --n 20000  --reps 20  --seed 42
              --randomized          randomized feeding order
@@ -47,7 +50,10 @@ COMMANDS
                                    fork frontier); a hard error on
                                    standard/merge, never silently copy
              --threads 0           worker-pool size for parallel_treecv
-                                   (0 = all cores)
+                                   and approx (0 = all cores)
+             --approx-check        (approx only) also run exact TreeCV per
+                                   repetition and report the largest
+                                   per-fold deviation as exact_gap_max
              --lambda L            regularizer (default: pegasos 1e-6,
                                    ridge 1.0)
              --alpha 0  --data FILE.libsvm
@@ -95,6 +101,9 @@ COMMANDS
              `retire <count>` slides the window (drops the oldest rows
              and re-primes), `stats` snapshots counters, `quit`/EOF ends
              the session and prints throughput + staleness metrics.
+             With --engine approx (convex tasks only), `query` folds the
+             pending buffer into a one-step-corrected estimate instead of
+             answering from the last refresh alone.
              --task multiset|density|pegasos|...   (any registry task)
              --batch 32           rows buffered per refresh
              --k 10  --n 20000  --seed 42
@@ -231,7 +240,8 @@ fn main() -> Result<()> {
     let rest = &argv[1..];
     match cmd {
         "cv" => {
-            let args = Args::parse(rest, &["randomized", "save-revert", "json"])?;
+            let args =
+                Args::parse(rest, &["randomized", "save-revert", "json", "approx-check"])?;
             let mut cfg = match args.get("config") {
                 Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
                 None => ExperimentConfig::default(),
@@ -252,6 +262,9 @@ fn main() -> Result<()> {
             }
             if args.has("save-revert") {
                 cfg.strategy = StrategyCfg::SaveRevert;
+            }
+            if args.has("approx-check") {
+                cfg.approx_check = true;
             }
             if let Some(v) = args.get("lambda") {
                 cfg.lambda =

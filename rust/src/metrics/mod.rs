@@ -46,6 +46,16 @@ pub struct OpCounts {
     /// per refresh (the root-to-leaf path of the touched leaf); always 0
     /// for from-scratch runs.
     pub subtrees_recomputed: u64,
+    /// One-step held-out corrections applied by the approximate-CV engine
+    /// ([`crate::cv::approx`]): exactly k per approx run (one per fold),
+    /// always 0 for the exact engines. Together with `points_updated`
+    /// (n for approx vs Θ(n log₂(2k)) for TreeCV) this is the counter the
+    /// k = n speedup claim is asserted against.
+    pub corrections: u64,
+    /// Largest per-fold |approx − exact| observed when an exact oracle
+    /// was run alongside the approximate engine (`--approx-check`); 0.0
+    /// when no check ran. Merged by `max`, not `+`.
+    pub exact_gap_max: f64,
     /// Kernel backend the dense learners dispatched to for this run
     /// (`"scalar"` or `"avx2"` — [`crate::learner::linalg::backend_name`]).
     /// Provenance only: backends are bit-identical, so this never affects a
@@ -69,6 +79,8 @@ impl Default for OpCounts {
             points_permuted: 0,
             stream_allocs: 0,
             subtrees_recomputed: 0,
+            corrections: 0,
+            exact_gap_max: 0.0,
             kernel_backend: crate::learner::linalg::backend_name(),
         }
     }
@@ -88,6 +100,9 @@ impl OpCounts {
         self.points_permuted += other.points_permuted;
         self.stream_allocs += other.stream_allocs;
         self.subtrees_recomputed += other.subtrees_recomputed;
+        self.corrections += other.corrections;
+        // A gap is a sup-norm over folds, not additive work.
+        self.exact_gap_max = self.exact_gap_max.max(other.exact_gap_max);
     }
 }
 
@@ -161,6 +176,18 @@ mod tests {
         assert_eq!(a.points_updated, 30);
         assert_eq!(a.evals, 3);
         assert_eq!(a.stream_allocs, 4);
+    }
+
+    #[test]
+    fn opcounts_merge_takes_max_gap_and_adds_corrections() {
+        let mut a = OpCounts { corrections: 2, exact_gap_max: 1e-9, ..Default::default() };
+        let b = OpCounts { corrections: 5, exact_gap_max: 3e-10, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.corrections, 7);
+        assert_eq!(a.exact_gap_max, 1e-9);
+        let c = OpCounts { exact_gap_max: 2e-8, ..Default::default() };
+        a.merge(&c);
+        assert_eq!(a.exact_gap_max, 2e-8);
     }
 
     #[test]

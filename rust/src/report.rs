@@ -143,6 +143,8 @@ impl ToJson for crate::metrics::OpCounts {
             ("points_permuted", Json::num(self.points_permuted as f64)),
             ("stream_allocs", Json::num(self.stream_allocs as f64)),
             ("subtrees_recomputed", Json::num(self.subtrees_recomputed as f64)),
+            ("corrections", Json::num(self.corrections as f64)),
+            ("exact_gap_max", Json::Num(self.exact_gap_max)),
             ("kernel_backend", Json::str(self.kernel_backend)),
         ])
     }

@@ -1,0 +1,196 @@
+//! Bounded-error battery for the approximate-CV engine: one full-data
+//! training pass plus a one-step held-out correction per fold must track
+//! the exact engines (sequential TreeCV, standard k-fold retraining, and
+//! — for ridge — the closed-form hat-matrix LOOCV) within the documented
+//! error contract:
+//!
+//! * ridge: the Sherman–Morrison block downdate is algebraically exact,
+//!   so only f64 rounding separates approx from exact — pinned at 1e-8
+//!   relative (λ = 1);
+//! * pegasos / lsqsgd: the correction is first-order, so the contract is
+//!   a loose bound (0.5 relative on the estimate), not bit-tracking;
+//! * per-fold results are bitwise independent of the worker count, and a
+//!   rerun is bitwise identical (work stealing never changes values);
+//! * the erased registry path computes the generic path's exact bits.
+//!
+//! Seeded fixed shapes stand in for proptest (unavailable offline),
+//! mirroring `tests/integration_executor.rs`.
+
+use treecv::cv::approx::{max_fold_gap, ApproxCv};
+use treecv::cv::exact::ridge_loocv;
+use treecv::cv::executor::{ErasedRunSpec, RunCtrl, TreeCvExecutor};
+use treecv::cv::folds::{Folds, Ordering};
+use treecv::cv::standard::StandardCv;
+use treecv::cv::treecv::TreeCv;
+use treecv::cv::{CvEngine, CvResult, Strategy};
+use treecv::data::synth::{SyntheticCovertype, SyntheticYearMsd};
+use treecv::data::Dataset;
+use treecv::learner::erased::Erased;
+use treecv::learner::lsqsgd::LsqSgd;
+use treecv::learner::pegasos::Pegasos;
+use treecv::learner::ridge::OnlineRidge;
+use treecv::learner::IncrementalLearner;
+
+/// Worker counts the battery sweeps: inline, odd, and oversubscribed.
+const WORKER_COUNTS: [usize; 3] = [1, 3, 8];
+
+/// Small-d regression data (the `cv::exact` pattern): slice the YearMSD
+/// generator's rows to d = 8 so closed-form oracles stay cheap.
+fn small_data(n: usize, seed: u64) -> Dataset {
+    let full = SyntheticYearMsd::new(n, seed).generate();
+    let d = 8;
+    let mut x = Vec::with_capacity(n * d);
+    for i in 0..n {
+        x.extend_from_slice(&full.row(i as u32)[..d]);
+    }
+    Dataset::new(x, full.y.clone(), d)
+}
+
+fn approx_run<L>(l: &L, data: &Dataset, folds: &Folds, threads: usize) -> CvResult
+where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 11, threads).run_approx(l, data, folds)
+}
+
+/// The shared battery: counter shape, bounded error against both exact
+/// engines, and bitwise worker-count independence, across k ∈ {5, 32, n}.
+/// `est_tol` is the relative estimate bound; `fold_tol` (where given) the
+/// relative bound on the per-fold sup-norm gap vs exact TreeCV.
+fn battery<L>(l: &L, data: &Dataset, est_tol: f64, fold_tol: Option<f64>, name: &str)
+where
+    L: IncrementalLearner + Sync,
+    L::Model: Send,
+{
+    let n = data.n;
+    for k in [5usize, 32, n] {
+        let folds = if k == n { Folds::loocv(n) } else { Folds::new(n, k, 3) };
+        let exact = TreeCv::new(Strategy::Copy, Ordering::Fixed, 11).run(l, data, &folds);
+        let std_res = StandardCv::new(Ordering::Fixed, 11).run(l, data, &folds);
+        let base = approx_run(l, data, &folds, 1);
+
+        // The engine's cost shape: one training pass over n rows, one
+        // correction and one evaluation per fold — never a retrain.
+        assert_eq!(base.ops.update_calls, 1, "{name} k={k}");
+        assert_eq!(base.ops.points_updated, n as u64, "{name} k={k}");
+        assert_eq!(base.ops.corrections, k as u64, "{name} k={k}");
+        assert_eq!(base.ops.evals, k as u64, "{name} k={k}");
+
+        // Bounded error against both exact oracles.
+        for (oracle, res) in [("treecv", &exact), ("standard", &std_res)] {
+            let gap = (base.estimate - res.estimate).abs();
+            assert!(
+                gap <= est_tol * (1.0 + res.estimate.abs()),
+                "{name} k={k} vs {oracle}: |{} - {}| = {gap:e}",
+                base.estimate,
+                res.estimate
+            );
+        }
+        if let Some(tol) = fold_tol {
+            let g = max_fold_gap(&base, &exact);
+            assert!(
+                g <= tol * (1.0 + exact.estimate.abs()),
+                "{name} k={k}: per-fold sup gap {g:e}"
+            );
+        }
+
+        // Per-fold results must not depend on the pool size, bit for bit.
+        for threads in WORKER_COUNTS {
+            let r = approx_run(l, data, &folds, threads);
+            assert_eq!(base.per_fold, r.per_fold, "{name} k={k} threads={threads}");
+            assert_eq!(
+                base.estimate.to_bits(),
+                r.estimate.to_bits(),
+                "{name} k={k} threads={threads}"
+            );
+            assert_eq!(base.ops.corrections, r.ops.corrections, "{name} k={k}");
+            assert_eq!(base.ops.points_updated, r.ops.points_updated, "{name} k={k}");
+        }
+    }
+}
+
+/// Ridge: the downdate is exact modulo rounding — 1e-8 relative at λ = 1,
+/// on the estimate AND the per-fold sup-norm.
+#[test]
+fn ridge_tracks_exact_engines_to_rounding() {
+    let data = small_data(160, 41);
+    battery(&OnlineRidge::new(8, 1.0), &data, 1e-8, Some(1e-8), "ridge");
+}
+
+/// PEGASOS: first-order correction, loose contract on the estimate.
+#[test]
+fn pegasos_bounded_error_vs_exact() {
+    let data = SyntheticCovertype::new(200, 42).generate();
+    battery(&Pegasos::new(54, 1e-3), &data, 0.5, None, "pegasos");
+}
+
+/// Least-squares SGD: first-order correction on the averaged iterate,
+/// loose contract on the estimate.
+#[test]
+fn lsqsgd_bounded_error_vs_exact() {
+    let data = small_data(160, 43);
+    battery(&LsqSgd::new(8, 1e-3), &data, 0.5, None, "lsqsgd");
+}
+
+/// The headline k = n validation: approx LOOCV for ridge agrees with the
+/// closed-form hat-matrix oracle (independent mathematics, no incremental
+/// code path shared) to the same tolerance the exact engine does, while
+/// paying a fraction of its row updates.
+#[test]
+fn ridge_loocv_matches_closed_form_oracle() {
+    let data = small_data(200, 44);
+    let lambda = 1.0;
+    let l = OnlineRidge::new(8, lambda);
+    let folds = Folds::loocv(data.n);
+    let closed = ridge_loocv(&data, lambda);
+    let approx = ApproxCv::new(Ordering::Fixed, 11).run(&l, &data, &folds);
+    assert!(
+        (approx.estimate - closed.estimate).abs() < 1e-7 * (1.0 + closed.estimate),
+        "approx {} vs closed form {}",
+        approx.estimate,
+        closed.estimate
+    );
+    // And the op-count advantage the engine exists for: exact TreeCV pays
+    // Θ(n log₂(2n)) row updates at LOOCV, approx exactly n.
+    let exact = TreeCv::new(Strategy::Copy, Ordering::Fixed, 11).run(&l, &data, &folds);
+    assert_eq!(approx.ops.points_updated, data.n as u64);
+    assert!(
+        exact.ops.points_updated > 4 * approx.ops.points_updated,
+        "exact {} vs approx {} row updates",
+        exact.ops.points_updated,
+        approx.ops.points_updated
+    );
+}
+
+/// Rerunning the same engine is bitwise identical (estimates, per-fold
+/// values, and counters), and the type-erased registry path computes the
+/// generic path's exact bits.
+#[test]
+fn rerun_and_erased_path_are_bitwise_identical() {
+    let data = small_data(120, 45);
+    let l = OnlineRidge::new(8, 1.0);
+    let folds = Folds::new(data.n, 8, 6);
+    let exe = TreeCvExecutor::new(Strategy::Copy, Ordering::Fixed, 11, 3);
+    let a = exe.run_approx(&l, &data, &folds);
+    let b = exe.run_approx(&l, &data, &folds);
+    assert_eq!(a.per_fold, b.per_fold);
+    assert_eq!(a.estimate.to_bits(), b.estimate.to_bits());
+    assert_eq!(a.ops.points_updated, b.ops.points_updated);
+    assert_eq!(a.ops.corrections, b.ops.corrections);
+    assert_eq!(a.ops.model_copies, b.ops.model_copies);
+
+    let boxed = Erased::boxed(OnlineRidge::new(8, 1.0));
+    let specs = [ErasedRunSpec {
+        learner: &*boxed,
+        folds: &folds,
+        seed: 11,
+        strategy: Strategy::Copy,
+        folded: None,
+        ctrl: RunCtrl::default(),
+    }];
+    let erased = exe.run_many_approx_erased(&data, &specs);
+    assert_eq!(erased.len(), 1);
+    assert_eq!(a.per_fold, erased[0].per_fold, "erased path must match generic bits");
+    assert_eq!(a.ops.corrections, erased[0].ops.corrections);
+}

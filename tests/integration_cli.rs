@@ -146,6 +146,32 @@ fn cv_save_revert_on_standard_engine_is_an_error() {
 }
 
 #[test]
+fn cv_approx_engine_rejects_non_convex_task() {
+    // The approx engine needs a one-step correction (ConvexCorrectable);
+    // tasks without one must hard-error, never silently fall back.
+    let out = repro()
+        .args(["cv", "--task", "knn", "--n", "200", "--ks", "4", "--engine", "approx"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("one-step held-out correction"), "stderr: {err}");
+}
+
+#[test]
+fn cv_approx_check_reports_gap_in_json() {
+    // `--approx-check` runs the exact oracle alongside and surfaces the
+    // per-fold sup gap through the ops block of the JSON report.
+    let text = run_ok(&[
+        "cv", "--task", "ridge", "--n", "200", "--ks", "5", "--reps", "1", "--engine",
+        "approx", "--approx-check", "--json",
+    ]);
+    assert!(text.contains("\"engine\": \"approx\""), "{text}");
+    assert!(text.contains("\"corrections\": 5"), "{text}");
+    assert!(text.contains("\"exact_gap_max\""), "{text}");
+}
+
+#[test]
 fn cv_rejects_bad_flags() {
     let out = repro().args(["cv", "--task", "nope"]).output().unwrap();
     assert!(!out.status.success());

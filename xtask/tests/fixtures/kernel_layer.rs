@@ -9,6 +9,12 @@ pub fn bad(y: &mut [f32], x: &[f32], a: f32) {
     y[0] -= a * x[0];
 }
 
+pub fn bad_downdate(w: &mut [f64], g: f64, x: &[f32]) {
+    for i in 0..x.len() {
+        w[i] -= g * x[i] as f64;
+    }
+}
+
 pub fn clean(t: &mut u64, bias: &mut f32, eta: f32, y: f32) {
     *t += 1;
     *bias += eta * y;

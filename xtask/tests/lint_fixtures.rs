@@ -76,11 +76,12 @@ fn test_registration_flags_the_unregistered_suite() {
 #[test]
 fn kernel_layer_flags_inline_hot_math_only() {
     let f = check_kernel_layer("fx.rs", &fixture("kernel_layer.rs"));
-    // Lines 3/7/9: axpy-, dot- and negated-axpy-shaped inline loops.
-    // Line 14 (scalar `bias += eta * y`) and the cfg(test) tail are clean.
+    // Lines 3/7/9: axpy-, dot- and negated-axpy-shaped inline loops;
+    // line 14: an approx-path downdate sweep (mixed f64/f32). Line 20
+    // (scalar `bias += eta * y`) and the cfg(test) tail are clean.
     assert_eq!(
         ids_and_lines(&f),
-        vec![(KERNEL_LAYER, 3), (KERNEL_LAYER, 7), (KERNEL_LAYER, 9)]
+        vec![(KERNEL_LAYER, 3), (KERNEL_LAYER, 7), (KERNEL_LAYER, 9), (KERNEL_LAYER, 14)]
     );
 }
 
